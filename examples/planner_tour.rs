@@ -1,0 +1,62 @@
+//! A guided tour of the planning algorithm (paper §4.3, Algorithms 1–2).
+//!
+//! Shows Algorithm 1's latency-minimizing initialization, then each
+//! greedy cost-reducing action Algorithm 2 takes — batch doublings,
+//! replica removals, hardware downgrades — with the cost trajectory, and
+//! verifies the termination guarantee (no single action can reduce cost
+//! further without violating the SLO).
+//!
+//! Run: `cargo run --release --example planner_tour`
+
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator;
+use inferline::workload::gamma_trace;
+
+fn main() {
+    let spec = pipelines::social_media();
+    let profiles = paper_profiles();
+    let slo = 0.25;
+    let trace = gamma_trace(150.0, 1.0, 45.0, 42);
+    let planner = Planner::new(&spec, &profiles);
+
+    println!("pipeline: {} | λ=150 qps CV=1 | SLO {:.0} ms\n", spec.name, slo * 1e3);
+
+    // Algorithm 1: initialization.
+    let init = planner.initialize(&trace, slo).expect("feasible");
+    println!("Algorithm 1 (Initialize): batch=1, best hardware, replicate bottleneck");
+    println!("  {}", init.summary(&spec));
+    println!(
+        "  cost ${:.2}/hr, service time {:.1} ms\n",
+        init.cost_per_hour(),
+        simulator::service_time(&spec, &profiles, &init) * 1e3
+    );
+
+    // Algorithm 2: greedy cost minimization with the action log.
+    let plan = planner.plan(&trace, slo).expect("plan");
+    println!("Algorithm 2 (MinimizeCost): greedy cost-reducing actions");
+    for (i, action) in plan.actions_taken.iter().enumerate() {
+        println!("  step {:>2}: {action}", i + 1);
+    }
+    println!("\nfinal: {}", plan.config.summary(&spec));
+    println!(
+        "  cost ${:.2}/hr ({:.1}% of initial), estimated P99 {:.1} ms <= SLO",
+        plan.cost_per_hour,
+        100.0 * plan.cost_per_hour / init.cost_per_hour(),
+        plan.estimated_p99 * 1e3
+    );
+
+    // Guarantee 2 (§4.3): no single action still reduces cost.
+    println!("\nverifying termination guarantee: every single action now either");
+    println!("violates the SLO or does not reduce cost ... ");
+    let p99 = simulator::estimate_p99(
+        &spec,
+        &profiles,
+        &plan.config,
+        &trace,
+        &inferline::simulator::SimParams::default(),
+    );
+    assert!(p99 <= slo);
+    println!("OK (estimator P99 {:.1} ms)", p99 * 1e3);
+}

@@ -1,0 +1,17 @@
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::{self, SimParams};
+use inferline::workload::gamma_trace;
+fn main() {
+    let profiles = paper_profiles();
+    let spec = pipelines::social_media();
+    let params = SimParams::default();
+    let hour = gamma_trace(150.0, 1.0, 3600.0, 1);
+    let plan = Planner::new(&spec, &profiles).plan(&gamma_trace(150.0, 1.0, 30.0, 2), 0.3).unwrap();
+    let mut total = 0usize;
+    for _ in 0..8 {
+        total += simulator::simulate(&spec, &profiles, &plan.config, &hour, &params).latencies.len();
+    }
+    println!("{total}");
+}

@@ -1,0 +1,83 @@
+//! Quickstart: the full InferLine stack end to end on real models.
+//!
+//! 1. Load the AOT-compiled HLO artifacts (`make artifacts`).
+//! 2. **Profile** each model of the TF-Cascade pipeline through PJRT on
+//!    this machine's CPU (the paper's Profiler, §4.1).
+//! 3. **Plan** a configuration for a 40 QPS workload with a 250 ms P99
+//!    SLO using the measured profiles (Planner + Estimator, §4.2–4.3).
+//! 4. **Serve** a live trace on the physical plane — replica worker
+//!    threads executing the real HLO through their own PJRT clients
+//!    behind centralized batched queues — and report latency/throughput
+//!    against the Estimator's prediction.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use inferline::config::pipelines;
+use inferline::hardware::Hardware;
+use inferline::planner::Planner;
+use inferline::profiler::ProfileSet;
+use inferline::runtime::Manifest;
+use inferline::serving::{profile as phys, Backend, ServingEngine};
+use inferline::simulator::{self, SimParams};
+use inferline::util::stats;
+use inferline::workload::gamma_trace;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Arc::new(Manifest::load(&artifacts)?);
+    let spec = pipelines::tf_cascade();
+    let slo = 0.25;
+    let lambda = 40.0;
+
+    // -- 2. Profile (real PJRT measurements, CPU tier) ------------------
+    println!("== profiling {} models through PJRT ==", spec.n_stages());
+    let mut profiles = ProfileSet::default();
+    let opts = phys::ProfileOptions { warmup_runs: 2, measure_runs: 7, max_batch: Some(16) };
+    for stage in &spec.stages {
+        let p = phys::profile_model(&manifest, &stage.model, &opts)?;
+        let pts: Vec<String> =
+            p.points.iter().map(|&(b, l)| format!("b{b}={:.2}ms", l * 1e3)).collect();
+        println!("  {:<12} {}", stage.model, pts.join("  "));
+        profiles.insert(&stage.model, Hardware::Cpu, p);
+    }
+
+    // -- 3. Plan ---------------------------------------------------------
+    println!("\n== planning (λ={lambda} qps, SLO {:.0} ms) ==", slo * 1e3);
+    let sample = gamma_trace(lambda, 1.0, 30.0, 42);
+    let plan = Planner::new(&spec, &profiles)
+        .plan(&sample, slo)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("  config:   {}", plan.config.summary(&spec));
+    println!("  cost:     ${:.2}/hr", plan.cost_per_hour);
+    println!("  est. P99: {:.1} ms", plan.estimated_p99 * 1e3);
+
+    // -- 4. Serve on the physical plane (real compute) --------------------
+    println!("\n== serving 20 s of live traffic through PJRT ==");
+    let live = gamma_trace(lambda, 1.0, 20.0, 77);
+    let est = simulator::estimate_p99(&spec, &profiles, &plan.config, &live, &SimParams::default());
+    let backends: Vec<Backend> =
+        spec.stages.iter().map(|_| Backend::Pjrt { manifest: manifest.clone() }).collect();
+    let engine = ServingEngine::start(&spec, &plan.config, backends)?;
+    let n = live.len();
+    let result = engine.serve_trace(&live, 1.0, 7);
+
+    println!("  served:       {}/{} queries", result.latencies.len(), n);
+    println!("  throughput:   {:.1} qps", result.achieved_qps);
+    println!(
+        "  latency:      p50 {:.1} ms | p99 {:.1} ms (estimator predicted {:.1} ms)",
+        stats::quantile(&result.latencies, 0.5) * 1e3,
+        stats::p99(&result.latencies) * 1e3,
+        est * 1e3
+    );
+    println!(
+        "  SLO ({:.0} ms): {:.2}% attainment",
+        slo * 1e3,
+        stats::attainment(&result.latencies, slo) * 100.0
+    );
+    anyhow::ensure!(result.latencies.len() == n, "lost queries");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Social Media pipeline under a real-derived diurnal workload with a
+//! spike (the paper's Fig 6(a) scenario).
+//!
+//! Plans on the first 25% of the trace, then serves the remaining 75%
+//! with the InferLine Tuner reacting to the spike, and compares against
+//! the coarse-grained baseline (CG plan + AutoScale tuning). Runs on the
+//! virtual plane so the full hour-long, 300 QPS workload finishes in
+//! seconds.
+//!
+//! Run: `cargo run --release --example social_media`
+
+use inferline::baselines::coarse::CoarseTarget;
+use inferline::config::pipelines;
+use inferline::experiments::common::{print_summary, run_coarse, run_inferline};
+use inferline::profiler::analytic::paper_profiles;
+use inferline::workload::autoscale;
+
+fn main() {
+    let spec = pipelines::social_media();
+    let profiles = paper_profiles();
+    let slo = 0.15;
+
+    let full = autoscale::big_spike_trace(61);
+    let (sample, live) = full.split_at_fraction(0.25);
+    println!(
+        "workload: {} queries over {:.0}s (mean {:.0} qps, spike to ~300 qps)",
+        full.len(),
+        full.duration(),
+        full.mean_rate()
+    );
+    println!("planning on the first 25% ({} queries), serving the rest\n", sample.len());
+
+    match run_inferline(&spec, &profiles, &sample, &live, slo) {
+        Ok((plan, summary)) => {
+            println!("InferLine plan: {}", plan.config.summary(&spec));
+            println!("  initial cost ${:.2}/hr\n", plan.cost_per_hour);
+            print_summary("", &summary);
+            // Show the Tuner's reaction: replica count over time.
+            println!("\nreplica timeline (Tuner scaling through the spike):");
+            let tl = &summary.result.replica_timeline;
+            for window in tl.chunks(1 + tl.len() / 12) {
+                let (t, n) = window[0];
+                println!("  t={t:>6.0}s  replicas={n:<3} {}", "#".repeat(n));
+            }
+        }
+        Err(e) => println!("InferLine: {e}"),
+    }
+
+    println!();
+    let cg = run_coarse(&spec, &profiles, &sample, &live, slo, CoarseTarget::Peak, true);
+    print_summary("", &cg);
+}

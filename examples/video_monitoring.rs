@@ -1,0 +1,67 @@
+//! Video Monitoring: conditional control flow and the planner's
+//! hardware/batch/replica trade-offs across SLOs.
+//!
+//! The detector feeds two conditional branches (vehicle identification
+//! s=0.4, license plates s=0.25). The example plans the pipeline across a
+//! range of SLOs, showing the cost cliff as the deadline loosens and the
+//! planner downgrades hardware (paper Fig 9's phenomenon), then serves
+//! one configuration on the physical threaded plane with calibrated
+//! backends to verify the plan end to end.
+//!
+//! Run: `cargo run --release --example video_monitoring`
+
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::serving::{Backend, ServingEngine};
+use inferline::util::stats;
+use inferline::workload::gamma_trace;
+
+fn main() {
+    let spec = pipelines::video_monitoring();
+    let profiles = paper_profiles();
+    let lambda = 120.0;
+    let sample = gamma_trace(lambda, 1.0, 45.0, 42);
+
+    println!("== planner sweep across SLOs (λ={lambda} qps, CV=1) ==");
+    let mut chosen = None;
+    for slo in [0.1, 0.15, 0.2, 0.3, 0.5] {
+        match Planner::new(&spec, &profiles).plan(&sample, slo) {
+            Ok(plan) => {
+                println!(
+                    "  SLO {:>4.0} ms: ${:>6.2}/hr  {}",
+                    slo * 1e3,
+                    plan.cost_per_hour,
+                    plan.config.summary(&spec)
+                );
+                if slo == 0.3 {
+                    chosen = Some(plan);
+                }
+            }
+            Err(e) => println!("  SLO {:>4.0} ms: {e}", slo * 1e3),
+        }
+    }
+
+    let Some(plan) = chosen else { return };
+    println!("\n== serving the 300 ms plan on the physical plane ==");
+    let live = gamma_trace(lambda, 1.0, 10.0, 7);
+    let backends: Vec<Backend> = spec
+        .stages
+        .iter()
+        .zip(&plan.config.stages)
+        .map(|(s, c)| Backend::Calibrated {
+            profile: profiles.get(&s.model).get(c.hw).unwrap().clone(),
+        })
+        .collect();
+    let engine = ServingEngine::start(&spec, &plan.config, backends).unwrap();
+    let n = live.len();
+    let result = engine.serve_trace(&live, 1.0, 9);
+    println!(
+        "  served {}/{} queries: p50 {:.1} ms  p99 {:.1} ms  attainment(300ms) {:.2}%",
+        result.latencies.len(),
+        n,
+        stats::quantile(&result.latencies, 0.5) * 1e3,
+        stats::p99(&result.latencies) * 1e3,
+        stats::attainment(&result.latencies, 0.3) * 100.0
+    );
+}

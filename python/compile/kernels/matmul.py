@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation.
+
+This is the dense compute hot-spot shared by every model in the InferLine
+model zoo (classifier backbones, language models, cascade models). It is
+authored TPU-style:
+
+  * the grid tiles (M, N, K) into MXU-aligned blocks (128x128 where the
+    operand shapes allow it) so each program instance streams one
+    ``(bm, bk) @ (bk, bn)`` product through the MXU;
+  * ``BlockSpec`` index maps express the HBM->VMEM schedule explicitly --
+    the k axis is the innermost (minormost) grid dimension so partial
+    products accumulate in the output block, which Pallas keeps resident
+    in VMEM across the k steps;
+  * accumulation is f32 regardless of input dtype (bf16 inputs hit the
+    MXU's native bf16 x bf16 -> f32 path on real hardware).
+
+On this image the kernel must run with ``interpret=True`` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls); correctness is checked against
+the pure-jnp oracle in ``ref.py`` and the VMEM/MXU structural analysis
+lives in ``vmem_footprint_bytes`` / ``mxu_utilization`` below, which
+DESIGN.md Section-Perf consumes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array native tile (128 x 128). Block shapes are chosen as
+# the largest divisor of the dim not exceeding these.
+MXU_DIM = 128
+# VMEM is ~16 MiB/core on current TPUs; keep the working set comfortably
+# under half of it to allow double-buffering of input blocks.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps grids exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _apply_act(x, act: str):
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "tanh":
+        return jnp.tanh(x)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, nk: int):
+    """One (i, j, k) program: o[i, j] += x[i, k] @ w[k, j].
+
+    The k grid axis is innermost, so o_ref stays in VMEM while the k
+    blocks stream through. Bias + activation are fused into the final
+    k step to avoid a second pass over the output block.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...].astype(jnp.float32), act)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret"))
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool = True,
+):
+    """``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      act: ``"relu" | "tanh" | "none"``.
+      bm/bn/bk: block-shape overrides (defaults: MXU-aligned divisors).
+      interpret: must stay True on CPU-PJRT images (see module docstring).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = bm or _block(m, MXU_DIM)
+    bn = bn or _block(n, MXU_DIM)
+    bk = bk or _block(k, MXU_DIM * 4)  # deeper k blocks amortize o writes
+    grid = (m // bm, n // bn, k // bk)
+
+    kernel = functools.partial(_matmul_kernel, act=act, nk=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+    return out.astype(x.dtype) if x.dtype != jnp.float32 else out
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, dtype_bytes: int = 4,
+                         bm: int | None = None, bn: int | None = None,
+                         bk: int | None = None) -> int:
+    """Resident VMEM bytes for one program instance (x, w, bias, o blocks).
+
+    Used by the Section-Perf structural analysis: the footprint must fit the
+    VMEM budget with room for double buffering of the streamed x/w blocks.
+    """
+    bm = bm or _block(m, MXU_DIM)
+    bn = bn or _block(n, MXU_DIM)
+    bk = bk or _block(k, MXU_DIM * 4)
+    x_blk = bm * bk * dtype_bytes
+    w_blk = bk * bn * dtype_bytes
+    o_blk = bm * bn * 4  # f32 accumulator
+    bias = bn * 4
+    # x/w stream, so they are double-buffered; o and bias are resident.
+    return 2 * (x_blk + w_blk) + o_blk + bias
+
+
+def mxu_utilization(m: int, n: int, k: int,
+                    bm: int | None = None, bn: int | None = None,
+                    bk: int | None = None) -> float:
+    """Fraction of MXU lanes busy for the chosen tiling (structural estimate).
+
+    The 128x128 systolic array is fully fed only when the (bm, bn) tile
+    covers it; partial tiles (e.g. batch-1 inference) idle (128-bm) rows.
+    """
+    bm = bm or _block(m, MXU_DIM)
+    bn = bn or _block(n, MXU_DIM)
+    return (min(bm, MXU_DIM) / MXU_DIM) * (min(bn, MXU_DIM) / MXU_DIM)

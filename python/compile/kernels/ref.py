@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with nothing but ``jax.numpy`` ops. The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-driven shape and
+dtype sweeps; the AOT pipeline refuses to emit artifacts if any kernel
+diverges from its oracle (see ``aot.py --check``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, act: str = "relu"):
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "tanh":
+        out = jnp.tanh(out)
+    elif act != "none":
+        raise ValueError(act)
+    return out.astype(x.dtype) if x.dtype != jnp.float32 else out
+
+
+def attention(q, k, v):
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bsd,btd->bst", qf, kf) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bst,btd->bsd", probs, vf)
+    return out.astype(q.dtype) if q.dtype != jnp.float32 else out
+
+
+def conv2d_bias_relu(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.maximum(out + b.astype(jnp.float32), 0.0)

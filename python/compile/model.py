@@ -1,0 +1,191 @@
+"""L2 JAX model zoo for the four InferLine pipelines (paper Fig 2).
+
+Each model is a pure jax function ``f(x) -> y`` over f32 arrays whose
+dense/attention/conv hot loops run through the L1 Pallas kernels, so the
+AOT-lowered HLO exercises the same code path end to end. Weights are
+deterministic pseudo-random constants (seeded per model) baked into the
+HLO at lowering time -- the rust runtime therefore feeds a single input
+tensor and receives a single output tensor per model, which keeps the
+serving ABI uniform across the zoo.
+
+Zoo -> paper mapping
+--------------------
+preprocess    image crop/resize/normalize stage (no internal parallelism,
+              hence the flat batching profile of paper Fig 3 left)
+resnet_lite   ResNet152 analog: deep stack of dense residual blocks
+langid        language-identification model (Social Media pipeline)
+nmt_lite      TF-NMT analog: attention block + dense head
+yolo_lite     object detector (Video Monitoring root)
+idmodel_lite  vehicle/person identification branch
+alpr_lite     license-plate extraction branch (OpenALPR analog)
+tf_fast       cheap first-stage model of the TF Cascade
+tf_slow       expensive second-stage model of the TF Cascade
+
+Input convention: every model takes a flattened ``[batch, IN_DIM]`` f32
+tensor and returns ``[batch, OUT_DIM]`` f32 (internal reshapes are free in
+XLA). ``SPECS`` is the single source of truth consumed by ``aot.py`` and
+mirrored into ``artifacts/manifest.json`` for the rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_k
+from .kernels import conv as conv_k
+from .kernels import matmul as mm_k
+
+INTERPRET = True  # CPU-PJRT image: Pallas must lower via interpret mode.
+
+
+def _weights(seed: int, *shape: int, scale: float | None = None) -> jnp.ndarray:
+    """Deterministic pseudo-random weights, He-scaled by fan-in."""
+    rng = np.random.RandomState(seed)
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else 1
+        scale = (2.0 / max(fan_in, 1)) ** 0.5
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+def _dense(x, seed: int, n_out: int, act: str = "relu"):
+    n_in = x.shape[-1]
+    w = _weights(seed, n_in, n_out)
+    b = _weights(seed + 1, n_out, scale=0.01)
+    return mm_k.matmul_bias_act(x, w, b, act=act, interpret=INTERPRET)
+
+
+# --------------------------------------------------------------------------
+# Models
+# --------------------------------------------------------------------------
+
+def preprocess(x):
+    """Crop/resize/normalize analog: pure element-wise work, no GEMMs.
+
+    Mirrors the paper's 'preprocess' stage, which has no internal
+    parallelism and gains nothing from batching on an accelerator.
+    """
+    img = x.reshape(x.shape[0], 32, 32, 3)
+    img = img[:, 2:30, 2:30, :]                       # crop
+    img = (img - jnp.mean(img, axis=(1, 2, 3), keepdims=True)) / (
+        jnp.std(img, axis=(1, 2, 3), keepdims=True) + 1e-5
+    )                                                  # normalize
+    img = jnp.clip(img, -3.0, 3.0)
+    img = jax.image.resize(img, (x.shape[0], 32, 32, 3), "bilinear")
+    return img.reshape(x.shape[0], 3072)
+
+
+def resnet_lite(x):
+    """ResNet152 analog: dense stem + 6 residual blocks + classifier head."""
+    h = _dense(x, 100, 256)
+    for i in range(6):
+        r = _dense(h, 110 + 10 * i, 256)
+        r = _dense(r, 115 + 10 * i, 256, act="none")
+        h = jnp.maximum(h + r, 0.0)
+    return _dense(h, 190, 128, act="none")
+
+
+def langid(x):
+    """Language identification: small 2-layer classifier over text features."""
+    h = _dense(x, 200, 128)
+    return _dense(h, 210, 32, act="none")
+
+
+def nmt_lite(x):
+    """TF-NMT analog: single-head attention over a 32x128 sequence + head."""
+    b = x.shape[0]
+    seq = x.reshape(b, 32, 128)
+    q = _dense(seq.reshape(b * 32, 128), 300, 128, act="none").reshape(b, 32, 128)
+    k = _dense(seq.reshape(b * 32, 128), 310, 128, act="none").reshape(b, 32, 128)
+    v = _dense(seq.reshape(b * 32, 128), 320, 128, act="none").reshape(b, 32, 128)
+    ctx = attn_k.attention(q, k, v, interpret=INTERPRET)
+    h = _dense(ctx.reshape(b * 32, 128), 330, 128)
+    out = h.reshape(b, 32, 128).mean(axis=1)
+    return _dense(out, 340, 256, act="none")
+
+
+def yolo_lite(x):
+    """Object detector analog: conv feature extractor + box/class head."""
+    img = x.reshape(x.shape[0], 16, 16, 12)
+    w = _weights(400, 3, 3, 12, 32)
+    bias = _weights(401, 32, scale=0.01)
+    feat = conv_k.conv2d_bias_relu(img, w, bias, interpret=INTERPRET)  # [B,14,14,32]
+    flat = feat.reshape(x.shape[0], 14 * 14 * 32)
+    h = _dense(flat, 410, 256)
+    return _dense(h, 420, 40, act="none")  # 8 boxes x (4 + cls)
+
+
+def idmodel_lite(x):
+    """Vehicle/person identification branch: mid-size dense tower."""
+    h = _dense(x, 500, 256)
+    h = _dense(h, 510, 256)
+    return _dense(h, 520, 64, act="none")
+
+
+def alpr_lite(x):
+    """License-plate extraction analog: conv + per-character head."""
+    img = x.reshape(x.shape[0], 16, 16, 12)
+    w = _weights(600, 3, 3, 12, 16)
+    bias = _weights(601, 16, scale=0.01)
+    feat = conv_k.conv2d_bias_relu(img, w, bias, interpret=INTERPRET)
+    flat = feat.reshape(x.shape[0], 14 * 14 * 16)
+    h = _dense(flat, 610, 128)
+    return _dense(h, 620, 36, act="none")  # 36-way character logits
+
+
+def tf_fast(x):
+    """Cheap cascade stage: one dense layer + confidence head."""
+    h = _dense(x, 700, 128)
+    return _dense(h, 710, 16, act="none")
+
+
+def tf_slow(x):
+    """Expensive cascade stage: deep dense tower (invoked conditionally)."""
+    h = _dense(x, 800, 512)
+    for i in range(8):
+        h = _dense(h, 810 + 10 * i, 512)
+    return _dense(h, 890, 16, act="none")
+
+
+# --------------------------------------------------------------------------
+# Specs (single source of truth for aot.py / manifest.json / rust runtime)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    fn: Callable
+    in_dim: int
+    out_dim: int
+    description: str
+
+
+SPECS: dict[str, ModelSpec] = {
+    s.name: s
+    for s in [
+        ModelSpec("preprocess", preprocess, 3072, 3072,
+                  "image crop/resize/normalize (no internal parallelism)"),
+        ModelSpec("resnet_lite", resnet_lite, 3072, 128,
+                  "ResNet152 analog image classifier"),
+        ModelSpec("langid", langid, 256, 32,
+                  "language identification"),
+        ModelSpec("nmt_lite", nmt_lite, 4096, 256,
+                  "TF-NMT analog: Pallas fused attention + dense"),
+        ModelSpec("yolo_lite", yolo_lite, 3072, 40,
+                  "object detector analog (Pallas im2col conv)"),
+        ModelSpec("idmodel_lite", idmodel_lite, 3072, 64,
+                  "vehicle/person identification branch"),
+        ModelSpec("alpr_lite", alpr_lite, 3072, 36,
+                  "license plate extraction analog"),
+        ModelSpec("tf_fast", tf_fast, 1024, 16,
+                  "cascade fast model"),
+        ModelSpec("tf_slow", tf_slow, 1024, 16,
+                  "cascade slow model (conditional)"),
+    ]
+}
+
+BATCH_SIZES = [1, 2, 4, 8, 16, 32]

@@ -1,0 +1,67 @@
+"""AOT pipeline checks: lowering, manifest integrity, HLO-text properties."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as zoo
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_model_emits_hlo_text():
+    text = aot.lower_model(zoo.SPECS["langid"], 2)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # f32[2,256] parameter must appear (batch baked into the artifact).
+    assert "f32[2,256]" in text
+
+
+def test_lowered_output_is_tuple():
+    """return_tuple=True => ROOT is a tuple (rust unwraps with to_tuple1)."""
+    text = aot.lower_model(zoo.SPECS["tf_fast"], 1)
+    root_lines = [l for l in text.splitlines() if "ROOT" in l]
+    assert any("tuple" in l or "(f32" in l for l in root_lines), root_lines
+
+
+def test_check_model_catches_shape_lies():
+    bad = zoo.ModelSpec("bad", zoo.tf_fast, 1024, 99, "wrong out_dim")
+    with pytest.raises(AssertionError):
+        aot.check_model(bad, 2)
+
+
+def test_lowering_is_deterministic():
+    a = aot.lower_model(zoo.SPECS["tf_fast"], 4)
+    b = aot.lower_model(zoo.SPECS["tf_fast"], 4)
+    assert a == b
+
+
+def test_emit_subset(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path), "--models", "langid",
+                   "--batches", "1,2"])
+    assert rc == 0
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(man["models"]) == {"langid"}
+    assert set(man["models"]["langid"]["batches"]) == {"1", "2"}
+    for meta in man["models"]["langid"]["batches"].values():
+        f = tmp_path / meta["file"]
+        assert f.exists() and f.stat().st_size == meta["bytes"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_built_manifest_is_complete():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    assert set(man["models"]) == set(zoo.SPECS)
+    for name, entry in man["models"].items():
+        assert entry["in_dim"] == zoo.SPECS[name].in_dim
+        assert entry["out_dim"] == zoo.SPECS[name].out_dim
+        for b in zoo.BATCH_SIZES:
+            meta = entry["batches"][str(b)]
+            path = os.path.join(ART_DIR, meta["file"])
+            assert os.path.exists(path), meta["file"]

@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+``kernels.ref``. This is the core correctness signal for the compute layer:
+if these pass, the HLO artifacts rust serves were lowered from a numerically
+validated graph.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, conv, matmul, ref
+
+_DIMS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def _arr(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.randn(*shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from(_DIMS),
+    k=st.sampled_from(_DIMS),
+    n=st.sampled_from(_DIMS),
+    act=st.sampled_from(["relu", "tanh", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    rng = np.random.RandomState(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    got = matmul.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    npt.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bf16_inputs(m, seed):
+    """bf16 inputs accumulate in f32 and return bf16 (MXU-native path)."""
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, m, 128).astype(jnp.bfloat16)
+    w = _arr(rng, 128, 128).astype(jnp.bfloat16)
+    b = _arr(rng, 128).astype(jnp.bfloat16)
+    got = matmul.matmul_bias_act(x, w, b, act="none")
+    want = ref.matmul_bias_act(x, w, b, act="none")
+    assert got.dtype == jnp.bfloat16
+    npt.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=5e-2, atol=5e-1,
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(1, 128, 128), (8, 64, 256), (2, 32, 512)])
+def test_matmul_block_overrides(bm, bn, bk):
+    """Explicit BlockSpec overrides give identical numerics."""
+    rng = np.random.RandomState(0)
+    x, w, b = _arr(rng, 8, 512), _arr(rng, 512, 128), _arr(rng, 128)
+    got = matmul.matmul_bias_act(x, w, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_bias_act(x, w, b)
+    npt.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    rng = np.random.RandomState(0)
+    with pytest.raises(AssertionError):
+        matmul.matmul_bias_act(_arr(rng, 4, 8), _arr(rng, 16, 4), _arr(rng, 4))
+
+
+def test_matmul_rejects_bad_act():
+    rng = np.random.RandomState(0)
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(
+            _arr(rng, 4, 8), _arr(rng, 8, 4), _arr(rng, 4), act="gelu")
+
+
+def test_vmem_footprint_within_budget():
+    """Default tilings for every zoo-sized GEMM fit the VMEM budget."""
+    for (m, k, n) in [(32, 3072, 256), (32, 256, 256), (32, 512, 512),
+                      (1, 3072, 256), (32, 6272, 256)]:
+        fp = matmul.vmem_footprint_bytes(m, n, k)
+        assert fp <= matmul.VMEM_BUDGET_BYTES, (m, k, n, fp)
+
+
+def test_mxu_utilization_monotone_in_batch():
+    """Bigger batch tiles feed more MXU rows (until the 128 cap)."""
+    utils = [matmul.mxu_utilization(b, 128, 256) for b in [1, 8, 32, 128]]
+    assert all(a <= b for a, b in zip(utils, utils[1:]))
+    assert utils[-1] == 1.0
+
+
+# ------------------------------------------------------------- attention
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    s=st.sampled_from([4, 16, 32, 64]),
+    d=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, s, d, seed):
+    rng = np.random.RandomState(seed)
+    q, k, v = _arr(rng, b, s, d), _arr(rng, b, s, d), _arr(rng, b, s, d)
+    got = attention.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    npt.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_attention_softmax_stability():
+    """Large-magnitude scores must not produce NaN/Inf (stable softmax)."""
+    rng = np.random.RandomState(0)
+    q = _arr(rng, 2, 16, 64) * 100.0
+    out = attention.attention(q, q, q)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_attention_is_convex_combination():
+    """Each output row lies within the row-wise min/max envelope of V."""
+    rng = np.random.RandomState(1)
+    q, k, v = (_arr(rng, 1, 8, 16) for _ in range(3))
+    out = np.asarray(attention.attention(q, k, v))
+    vmin = np.asarray(v).min(axis=1, keepdims=True) - 1e-5
+    vmax = np.asarray(v).max(axis=1, keepdims=True) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+# ------------------------------------------------------------------ conv
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    hw=st.sampled_from([8, 12, 16]),
+    c=st.sampled_from([3, 12]),
+    f=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref(b, hw, c, f, seed):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, b, hw, hw, c)
+    w = _arr(rng, 3, 3, c, f) * 0.1
+    bias = _arr(rng, f) * 0.01
+    got = conv.conv2d_bias_relu(x, w, bias)
+    want = ref.conv2d_bias_relu(x, w, bias)
+    npt.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_shape_and_content():
+    rng = np.random.RandomState(0)
+    x = _arr(rng, 2, 5, 5, 3)
+    cols = conv.im2col(x, 3, 3)
+    assert cols.shape == (2 * 3 * 3, 27)
+    # First patch of first image == flattened top-left 3x3 window.
+    want = np.asarray(x)[0, 0:3, 0:3, :].transpose(0, 1, 2).reshape(-1)
+    # im2col stacks (ki,kj) then channel: [kh*kw, C] ordering.
+    got = np.asarray(cols)[0].reshape(9, 3)
+    want2 = np.asarray(x)[0, 0:3, 0:3, :].reshape(9, 3)
+    npt.assert_allclose(got, want2)

@@ -1,0 +1,74 @@
+"""L2 model zoo checks: shapes, determinism, finiteness, batch invariance."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+
+from compile import model as zoo
+
+
+@pytest.mark.parametrize("name", sorted(zoo.SPECS))
+@pytest.mark.parametrize("batch", [1, 2, 8])
+def test_output_shape(name, batch):
+    spec = zoo.SPECS[name]
+    x = jnp.asarray(np.random.RandomState(0).randn(batch, spec.in_dim).astype(np.float32))
+    y = spec.fn(x)
+    assert y.shape == (batch, spec.out_dim)
+    assert y.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", sorted(zoo.SPECS))
+def test_deterministic(name):
+    """Weights are baked constants: same input -> identical output."""
+    spec = zoo.SPECS[name]
+    x = jnp.asarray(np.random.RandomState(1).randn(2, spec.in_dim).astype(np.float32))
+    npt.assert_array_equal(np.asarray(spec.fn(x)), np.asarray(spec.fn(x)))
+
+
+@pytest.mark.parametrize("name", sorted(zoo.SPECS))
+def test_finite_outputs(name):
+    spec = zoo.SPECS[name]
+    x = jnp.asarray(np.random.RandomState(2).randn(4, spec.in_dim).astype(np.float32) * 5)
+    assert np.isfinite(np.asarray(spec.fn(x))).all()
+
+
+@pytest.mark.parametrize("name", ["resnet_lite", "langid", "tf_fast", "tf_slow",
+                                  "idmodel_lite", "nmt_lite"])
+def test_batch_invariance(name):
+    """Row i of a batched call equals the single-query call on row i.
+
+    This is the property that makes per-model profiling sound: a batch is
+    semantically just a stack of independent queries (paper Section 4.1).
+    (Models with cross-batch normalization, like preprocess, normalize per
+    image and are also invariant; conv models are covered implicitly.)
+    """
+    spec = zoo.SPECS[name]
+    rng = np.random.RandomState(3)
+    xs = jnp.asarray(rng.randn(4, spec.in_dim).astype(np.float32))
+    batched = np.asarray(spec.fn(xs))
+    for i in range(4):
+        single = np.asarray(spec.fn(xs[i:i + 1]))[0]
+        npt.assert_allclose(batched[i], single, rtol=2e-4, atol=2e-4)
+
+
+def test_zoo_covers_all_pipeline_stages():
+    needed = {"preprocess", "resnet_lite", "langid", "nmt_lite", "yolo_lite",
+              "idmodel_lite", "alpr_lite", "tf_fast", "tf_slow"}
+    assert needed <= set(zoo.SPECS)
+
+
+def test_cascade_cost_ordering():
+    """tf_slow must be meaningfully heavier than tf_fast (cascade premise)."""
+    import jax
+    fast = jax.jit(zoo.tf_fast).lower(
+        jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile()
+    slow = jax.jit(zoo.tf_slow).lower(
+        jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile()
+    fa = fast.cost_analysis()
+    sa = slow.cost_analysis()
+    if isinstance(fa, list):
+        fa, sa = fa[0], sa[0]
+    assert sa["flops"] > 5 * fa["flops"]

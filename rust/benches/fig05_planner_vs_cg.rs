@@ -1,0 +1,9 @@
+//! Bench target for paper fig5: regenerates the figure rows (quick
+//! mode) and reports the wall time of one full regeneration.
+//! Full-scale data: `inferline experiment fig5`.
+
+fn main() {
+    inferline::util::bench::bench("fig5 regeneration (quick)", 0, 1, || {
+        assert!(inferline::experiments::run_by_name("fig5", true));
+    });
+}

@@ -1,0 +1,9 @@
+//! Bench target for paper fig8: regenerates the figure rows (quick
+//! mode) and reports the wall time of one full regeneration.
+//! Full-scale data: `inferline experiment fig8`.
+
+fn main() {
+    inferline::util::bench::bench("fig8 regeneration (quick)", 0, 1, || {
+        assert!(inferline::experiments::run_by_name("fig8", true));
+    });
+}

@@ -1,0 +1,9 @@
+//! Bench target for paper fig10: regenerates the figure rows (quick
+//! mode) and reports the wall time of one full regeneration.
+//! Full-scale data: `inferline experiment fig10`.
+
+fn main() {
+    inferline::util::bench::bench("fig10 regeneration (quick)", 0, 1, || {
+        assert!(inferline::experiments::run_by_name("fig10", true));
+    });
+}

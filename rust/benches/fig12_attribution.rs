@@ -1,0 +1,9 @@
+//! Bench target for paper fig12: regenerates the figure rows (quick
+//! mode) and reports the wall time of one full regeneration.
+//! Full-scale data: `inferline experiment fig12`.
+
+fn main() {
+    inferline::util::bench::bench("fig12 regeneration (quick)", 0, 1, || {
+        assert!(inferline::experiments::run_by_name("fig12", true));
+    });
+}

@@ -1,0 +1,9 @@
+//! Bench target for paper fig14: regenerates the figure rows (quick
+//! mode) and reports the wall time of one full regeneration.
+//! Full-scale data: `inferline experiment fig14`.
+
+fn main() {
+    inferline::util::bench::bench("fig14 regeneration (quick)", 0, 1, || {
+        assert!(inferline::experiments::run_by_name("fig14", true));
+    });
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmarks of the hot paths (§Perf in EXPERIMENTS.md):
+//!
+//! * the discrete-event Estimator — the planner invokes it for every
+//!   candidate configuration, and the paper claims hours of trace
+//!   simulate in hundreds of milliseconds (§4.2);
+//! * traffic-envelope construction + live rate monitoring — the Tuner's
+//!   per-arrival / per-tick work;
+//! * a full planner run — the end-to-end low-frequency path;
+//! * workload generation (Gamma sampling).
+
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::{self, SimParams};
+use inferline::tuner::envelope::{RateMonitor, TrafficEnvelope};
+use inferline::util::bench::{bench, black_box};
+use inferline::workload::gamma_trace;
+
+fn main() {
+    let profiles = paper_profiles();
+    let spec = pipelines::social_media();
+    let params = SimParams::default();
+
+    // --- Estimator throughput: one hour of 150 QPS trace. -----------------
+    let hour_trace = gamma_trace(150.0, 1.0, 3600.0, 1);
+    let plan = Planner::new(&spec, &profiles)
+        .plan(&gamma_trace(150.0, 1.0, 30.0, 2), 0.3)
+        .expect("plan");
+    let queries = hour_trace.len();
+    let r = bench("estimator: 1h @150qps social-media", 1, 5, || {
+        let result = simulator::simulate(&spec, &profiles, &plan.config, &hour_trace, &params);
+        black_box(result.latencies.len());
+    });
+    println!(
+        "  -> {:.2} M queries/sec simulated ({} queries/run; paper: 'hours in hundreds of ms')",
+        queries as f64 / r.mean_s / 1e6,
+        queries
+    );
+
+    // --- Estimator on the short planning trace (the inner-loop call). -----
+    let plan_trace = gamma_trace(150.0, 1.0, 60.0, 3);
+    bench("estimator: 60s planning trace (planner inner loop)", 3, 20, || {
+        black_box(simulator::estimate_p99(&spec, &profiles, &plan.config, &plan_trace, &params));
+    });
+
+    // --- Full planner run. -------------------------------------------------
+    bench("planner: full plan, social-media @150qps slo=0.3", 1, 5, || {
+        black_box(Planner::new(&spec, &profiles).plan(&plan_trace, 0.3).unwrap().cost_per_hour);
+    });
+
+    // --- Envelope construction over a full hour trace. ---------------------
+    let windows = inferline::tuner::envelope::window_ladder(0.1);
+    bench("envelope: build from 1h @150qps trace (all windows)", 1, 10, || {
+        black_box(TrafficEnvelope::from_arrivals(&hour_trace.arrivals, &windows).rates());
+    });
+
+    // --- Live monitor: per-arrival cost + per-tick rates. -------------------
+    bench("monitor: 540k arrivals + 3.6k rate queries", 1, 5, || {
+        let mut mon = RateMonitor::new(windows.clone());
+        let mut next_tick = 1.0;
+        let mut acc = 0.0;
+        for &t in &hour_trace.arrivals {
+            mon.on_arrival(t);
+            if t >= next_tick {
+                acc += mon.rates(t)[0];
+                next_tick += 1.0;
+            }
+        }
+        black_box(acc);
+    });
+
+    // --- Workload generation. ----------------------------------------------
+    bench("workload: generate 1h @150qps CV=4 gamma trace", 1, 10, || {
+        black_box(gamma_trace(150.0, 4.0, 3600.0, 7).len());
+    });
+}

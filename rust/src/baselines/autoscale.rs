@@ -1,0 +1,194 @@
+//! AutoScale-style coarse-grained reactive tuner (paper §6: "the
+//! coarse-grained tuning mechanism scales the number of pipeline replicas
+//! using the scaling algorithm introduced in [12]").
+//!
+//! The mechanism watches the *mean* request rate over a trailing window
+//! and re-provisions whole pipeline units to match it — bit-at-a-time
+//! capacity management without any notion of burstiness or batching. Two
+//! properties make it slower than InferLine's Tuner (Fig 7, Fig 12):
+//! its detection statistic is a trailing mean (bursts are smoothed away
+//! until the pipeline is already overloaded), and it scales the entire
+//! pipeline as a unit (every stage together, on a slower decision epoch).
+
+use crate::simulator::control::{ControlAction, ControlState, Controller};
+use crate::tuner::envelope::RateMonitor;
+
+/// How targets are derived from the observed rate.
+enum Mode {
+    /// Whole-pipeline units: every stage gets `units` replicas.
+    Units { unit_throughput: f64 },
+    /// Proportional: scale a base per-stage allocation by rate/base_rate
+    /// (used when the baseline tuner manages an InferLine-planned config,
+    /// paper Fig 12 "InferLine Plan + Baseline Tune").
+    Proportional { base: Vec<usize>, base_rate: f64 },
+}
+
+/// Reactive whole-pipeline scaler.
+pub struct AutoScaleTuner {
+    mode: Mode,
+    /// Current unit multiplier (units, or proportional numerator).
+    units: usize,
+    monitor: RateMonitor,
+    /// Trailing window for the rate estimate (seconds).
+    pub rate_window: f64,
+    /// Decision epoch (seconds) — whole-pipeline reconfiguration is slow.
+    pub epoch: f64,
+    /// Scale-down stabilization delay (15 s in [12]).
+    pub downscale_delay: f64,
+    last_decision: f64,
+    last_change: f64,
+    first_arrival: Option<f64>,
+    /// Headroom factor on the rate estimate (capacity target utilization).
+    pub headroom: f64,
+}
+
+impl AutoScaleTuner {
+    pub fn new(unit_throughput: f64, initial_units: usize) -> Self {
+        Self::with_mode(Mode::Units { unit_throughput }, initial_units)
+    }
+
+    /// Proportional variant: scale `base` per-stage replicas linearly in
+    /// observed-rate / `base_rate`.
+    pub fn proportional(base: Vec<usize>, base_rate: f64) -> Self {
+        Self::with_mode(Mode::Proportional { base, base_rate }, 1)
+    }
+
+    fn with_mode(mode: Mode, initial_units: usize) -> Self {
+        AutoScaleTuner {
+            mode,
+            units: initial_units,
+            monitor: RateMonitor::new(vec![60.0]),
+            rate_window: 15.0,
+            epoch: 10.0,
+            downscale_delay: 15.0,
+            last_decision: f64::NEG_INFINITY,
+            last_change: f64::NEG_INFINITY,
+            first_arrival: None,
+            headroom: 1.1,
+        }
+    }
+}
+
+impl Controller for AutoScaleTuner {
+    fn on_arrival(&mut self, t: f64) {
+        self.first_arrival.get_or_insert(t);
+        self.monitor.on_arrival(t);
+    }
+
+    fn on_tick(&mut self, now: f64, state: &ControlState) -> Vec<ControlAction> {
+        // Wait for a full rate window before acting (cold-start guard).
+        let warm = self.first_arrival.map_or(false, |t0| now - t0 >= self.rate_window);
+        if !warm || now - self.last_decision < self.epoch {
+            return Vec::new();
+        }
+        self.last_decision = now;
+        // Capacity management per [12]: hold capacity for the recent peak
+        // demand (max 10 s-bucket rate over the trailing window), releasing
+        // it only after the stabilization delay. A trailing *mean* would
+        // oscillate and shed the spike capacity instantly.
+        let rate = self
+            .monitor
+            .max_bucket_rate(now, self.rate_window.max(60.0), 10.0);
+        let targets: Vec<usize> = match &self.mode {
+            Mode::Units { unit_throughput } => {
+                let units =
+                    ((rate * self.headroom) / unit_throughput).ceil().max(1.0) as usize;
+                vec![units; state.provisioned.len()]
+            }
+            Mode::Proportional { base, base_rate } => {
+                let factor = (rate * self.headroom / base_rate).max(0.0);
+                base.iter()
+                    .map(|&b| ((b as f64 * factor).ceil() as usize).max(1))
+                    .collect()
+            }
+        };
+        let total: usize = targets.iter().sum();
+        let current: usize = state.provisioned.iter().sum();
+        let mut actions = Vec::new();
+        let scale_now = total > current
+            || (total < current && now - self.last_change >= self.downscale_delay);
+        if scale_now && targets != state.provisioned {
+            self.units = total;
+            self.last_change = now;
+            for (stage, &replicas) in targets.iter().enumerate() {
+                if replicas != state.provisioned[stage] {
+                    actions.push(ControlAction::SetReplicas { stage, replicas });
+                }
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::coarse::{self, CoarseTarget};
+    use crate::config::pipelines;
+    use crate::profiler::analytic::paper_profiles;
+    use crate::simulator::{control::simulate_controlled, SimParams};
+    use crate::workload::{gamma_trace, varying_trace, Phase};
+
+    #[test]
+    fn scales_whole_pipeline_units() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(50.0, 1.0, 30.0, 1);
+        let cg = coarse::plan(&spec, &profiles, &sample, 0.3, CoarseTarget::Mean);
+        let live = varying_trace(
+            &[
+                Phase { lambda: 50.0, cv: 1.0, duration: 40.0, ramp: false },
+                Phase { lambda: 150.0, cv: 1.0, duration: 120.0, ramp: false },
+            ],
+            9,
+        );
+        let mut tuner = AutoScaleTuner::new(cg.unit_throughput, cg.units);
+        let result = simulate_controlled(
+            &spec, &profiles, &cg.config, &live, &SimParams::default(), &mut tuner,
+        );
+        // It must eventually scale up, and every stage together.
+        let max_seen = result.replica_timeline.iter().map(|&(_, n)| n).max().unwrap();
+        let initial: usize = cg.config.stages.iter().map(|s| s.replicas).sum();
+        assert!(max_seen > initial, "never scaled: {initial} -> {max_seen}");
+    }
+
+    #[test]
+    fn reacts_slower_than_inferline_tuner() {
+        // The Fig 7 phenomenon: trailing-mean detection + slow epoch means
+        // the CG tuner accumulates more SLO misses on a rate ramp.
+        let slo = 0.3;
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(100.0, 1.0, 30.0, 21);
+        let live = varying_trace(
+            &[
+                Phase { lambda: 100.0, cv: 1.0, duration: 60.0, ramp: false },
+                Phase { lambda: 230.0, cv: 1.0, duration: 20.0, ramp: true },
+                Phase { lambda: 230.0, cv: 1.0, duration: 120.0, ramp: false },
+            ],
+            23,
+        );
+        // InferLine side.
+        let il_plan = crate::planner::plan(&spec, &profiles, &sample, slo).unwrap();
+        let st = crate::simulator::service_time(&spec, &profiles, &il_plan.config);
+        let inputs = crate::tuner::TunerInputs::from_plan(
+            &spec, &profiles, &il_plan.config, &sample, st,
+        );
+        let mut il_tuner = crate::tuner::Tuner::new(inputs);
+        let il = simulate_controlled(
+            &spec, &profiles, &il_plan.config, &live, &SimParams::default(), &mut il_tuner,
+        );
+        // Coarse-grained side.
+        let cg = coarse::plan(&spec, &profiles, &sample, slo, CoarseTarget::Mean);
+        let mut cg_tuner = AutoScaleTuner::new(cg.unit_throughput, cg.units);
+        let cgr = simulate_controlled(
+            &spec, &profiles, &cg.config, &live, &SimParams::default(), &mut cg_tuner,
+        );
+        assert!(
+            il.miss_rate(slo) <= cgr.miss_rate(slo) + 1e-9,
+            "InferLine {} vs CG {}",
+            il.miss_rate(slo),
+            cgr.miss_rate(slo)
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Coarse-grained baseline planner (paper §6 "Coarse-Grained Baseline
+//! Comparison").
+//!
+//! Current serving systems treat the pipeline as one black-box service:
+//! (1) profile the *whole pipeline* to find the single maximum batch size
+//! that meets the SLO, (2) replicate the entire pipeline as a unit until
+//! it sustains the target throughput. The target is either the mean
+//! arrival rate of the sample trace (CG-Mean) or the peak rate over a
+//! sliding window equal to the SLO (CG-Peak).
+
+use crate::config::{PipelineConfig, PipelineSpec, StageConfig};
+use crate::profiler::{ProfileSet, BATCH_CANDIDATES};
+use crate::simulator::{self, SimParams};
+use crate::workload::Trace;
+
+/// Which statistic of the sample trace to provision for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoarseTarget {
+    Mean,
+    Peak,
+}
+
+/// Outcome of coarse-grained planning.
+#[derive(Debug, Clone)]
+pub struct CoarsePlan {
+    pub config: PipelineConfig,
+    /// Uniform black-box batch size.
+    pub batch: usize,
+    /// Pipeline-unit replication factor.
+    pub units: usize,
+    /// Single-unit pipeline throughput (QPS).
+    pub unit_throughput: f64,
+    pub cost_per_hour: f64,
+}
+
+/// The hardware a CG pipeline unit places a stage on. The baseline has no
+/// per-stage hardware reasoning (that is InferLine's contribution): the
+/// whole pipeline replica is deployed to GPU serving nodes, as in the
+/// paper's EC2 testbed (p2.8xlarge K80 nodes). Models without a GPU
+/// profile fall back to CPU.
+fn unit_hw(profiles: &ProfileSet, model: &str) -> crate::hardware::Hardware {
+    use crate::hardware::Hardware;
+    if profiles.get(model).get(Hardware::GpuK80).is_some() {
+        Hardware::GpuK80
+    } else {
+        Hardware::Cpu
+    }
+}
+
+/// One pipeline unit at batch `b`, replicated `units` times.
+fn unit_config(spec: &PipelineSpec, profiles: &ProfileSet, batch: usize, units: usize) -> PipelineConfig {
+    PipelineConfig {
+        stages: spec
+            .stages
+            .iter()
+            .map(|s| {
+                let hw = unit_hw(profiles, &s.model);
+                let cap = profiles.get(&s.model).get(hw).unwrap().max_batch();
+                StageConfig { hw, batch: batch.min(cap), replicas: units }
+            })
+            .collect(),
+    }
+}
+
+/// Throughput of a single pipeline unit at batch `b`: the bottleneck
+/// stage's throughput normalized by its traffic share.
+fn unit_throughput(spec: &PipelineSpec, profiles: &ProfileSet, batch: usize) -> f64 {
+    spec.stages
+        .iter()
+        .map(|s| {
+            let prof = profiles.get(&s.model).get(unit_hw(profiles, &s.model)).unwrap();
+            let b = batch.min(prof.max_batch());
+            prof.throughput(b) / s.scale_factor
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Black-box profiling: the largest batch size whose end-to-end pipeline
+/// processing latency at *full* batches fits within half the SLO. The
+/// baseline has no Estimator; when operators tune a black-box service
+/// they must leave the other half of the latency budget for queueing —
+/// without that headroom the deployed pipeline would miss P99 under any
+/// non-trivial load (and the paper reports CG-Peak *does* meet SLOs,
+/// just expensively).
+pub fn max_feasible_batch(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    slo: f64,
+    _params: &SimParams,
+) -> usize {
+    let mut best = 1usize;
+    for &b in BATCH_CANDIDATES.iter() {
+        let config = unit_config(spec, profiles, b, 1);
+        if simulator::service_time(spec, profiles, &config) <= slo * 0.5 {
+            best = b;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// CG-Mean / CG-Peak planning (paper §6).
+pub fn plan(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    sample: &Trace,
+    slo: f64,
+    target: CoarseTarget,
+) -> CoarsePlan {
+    let params = SimParams::default();
+    let batch = max_feasible_batch(spec, profiles, slo, &params);
+    let unit_thru = unit_throughput(spec, profiles, batch);
+    let rate = match target {
+        CoarseTarget::Mean => sample.mean_rate(),
+        // Peak over a window the size of the SLO (paper §6).
+        CoarseTarget::Peak => sample.peak_rate(slo),
+    };
+    let units = (rate / unit_thru).ceil().max(1.0) as usize;
+    let config = unit_config(spec, profiles, batch, units);
+    CoarsePlan {
+        cost_per_hour: config.cost_per_hour(),
+        config,
+        batch,
+        units,
+        unit_throughput: unit_thru,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pipelines;
+    use crate::planner;
+    use crate::profiler::analytic::paper_profiles;
+    use crate::workload::gamma_trace;
+
+    #[test]
+    fn peak_provisions_at_least_mean() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(150.0, 4.0, 60.0, 3);
+        let mean = plan(&spec, &profiles, &sample, 0.3, CoarseTarget::Mean);
+        let peak = plan(&spec, &profiles, &sample, 0.3, CoarseTarget::Peak);
+        assert!(peak.units >= mean.units, "peak {} < mean {}", peak.units, mean.units);
+        assert!(peak.cost_per_hour >= mean.cost_per_hour);
+    }
+
+    #[test]
+    fn batch_shrinks_with_tighter_slo() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let params = SimParams::default();
+        let tight = max_feasible_batch(&spec, &profiles, 0.15, &params);
+        let loose = max_feasible_batch(&spec, &profiles, 1.0, &params);
+        assert!(loose >= tight, "loose {loose} < tight {tight}");
+        assert!(tight >= 1);
+    }
+
+    #[test]
+    fn inferline_planner_is_cheaper_than_cg_peak() {
+        // The paper's headline: fine-grained per-stage planning beats
+        // whole-pipeline replication on cost (up to 7.6x, Fig 5).
+        let spec = pipelines::video_monitoring();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(100.0, 1.0, 30.0, 11);
+        let slo = 0.3;
+        let il = planner::plan(&spec, &profiles, &sample, slo).unwrap();
+        let cg = plan(&spec, &profiles, &sample, slo, CoarseTarget::Peak);
+        assert!(
+            il.cost_per_hour < cg.cost_per_hour,
+            "InferLine {} vs CG-Peak {}",
+            il.cost_per_hour,
+            cg.cost_per_hour
+        );
+    }
+
+    #[test]
+    fn cg_mean_underprovisions_bursty_workloads() {
+        // CG-Mean ignores burstiness: under CV=4 it should miss SLOs
+        // (paper Fig 5 bottom row).
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(150.0, 4.0, 60.0, 7);
+        let slo = 0.15;
+        let cg = plan(&spec, &profiles, &sample, slo, CoarseTarget::Mean);
+        let live = gamma_trace(150.0, 4.0, 120.0, 8);
+        let result = simulator::simulate(
+            &spec, &profiles, &cg.config, &live, &SimParams::default(),
+        );
+        assert!(
+            result.miss_rate(slo) > 0.01,
+            "CG-Mean unexpectedly fine: {}",
+            result.miss_rate(slo)
+        );
+    }
+
+    #[test]
+    fn unit_throughput_accounts_for_scale_factors() {
+        let spec = pipelines::tf_cascade();
+        let profiles = paper_profiles();
+        // tf_slow has s=0.3: its effective per-unit throughput triples.
+        let t = unit_throughput(&spec, &profiles, 1);
+        let slow_prof = profiles.get("tf_slow");
+        let raw = slow_prof.get(slow_prof.best_hardware()).unwrap().throughput(1);
+        assert!(t >= raw, "scale factor should relax the bottleneck");
+    }
+}

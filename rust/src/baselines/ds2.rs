@@ -1,0 +1,202 @@
+//! DS2 [17] baseline: rate-based streaming autoscaler (paper §8, Fig 14).
+//!
+//! DS2 instruments each operator to estimate its *true* (useful-time)
+//! processing rate, combines the rates with the dataflow topology, and
+//! jumps directly to the estimated optimal parallelism for every operator
+//! at once. Two properties the paper highlights:
+//!
+//! * it provisions for the observed (average) rate and ignores
+//!   burstiness — under CV=4 traffic transient bursts overload it;
+//! * reconfiguration on Apache Flink requires halting the pipeline,
+//!   taking a savepoint and restarting — queues build during every
+//!   rescale ("requiring Apache Flink to halt processing and save state
+//!   before migrating to the new configuration").
+//!
+//! The deployment is batch-less (batch = 1), matching the paper's DS2
+//! setup ("deployed ... in DS2 running on Apache Flink without any
+//! batching").
+
+use crate::config::PipelineSpec;
+use crate::simulator::control::{ControlAction, ControlState, Controller};
+use crate::tuner::envelope::RateMonitor;
+
+/// DS2-style controller.
+pub struct Ds2Controller {
+    /// Per-stage true processing rate of one replica (1 / service time).
+    true_rates: Vec<f64>,
+    /// Per-stage traffic share (scale factors).
+    scale_factors: Vec<f64>,
+    monitor: RateMonitor,
+    /// Metrics aggregation window (seconds).
+    pub window: f64,
+    /// Decision epoch.
+    pub epoch: f64,
+    /// Pipeline halt duration per reconfiguration (savepoint + restore).
+    pub restart_penalty: f64,
+    /// Target operator utilization (DS2 provisions to the observed rate;
+    /// a mild margin avoids flapping).
+    pub target_utilization: f64,
+    /// Relative rate change needed to trigger a reconfiguration (DS2's
+    /// activation threshold — without it the estimator noise would cause
+    /// a halt every epoch).
+    pub rate_threshold: f64,
+    last_decision: f64,
+    last_planned_rate: f64,
+    first_arrival: Option<f64>,
+}
+
+impl Ds2Controller {
+    /// Build from the pipeline spec and per-stage batch-1 service times.
+    pub fn new(spec: &PipelineSpec, service_times: &[f64]) -> Self {
+        assert_eq!(spec.stages.len(), service_times.len());
+        Ds2Controller {
+            true_rates: service_times.iter().map(|&s| 1.0 / s).collect(),
+            scale_factors: spec.stages.iter().map(|s| s.scale_factor).collect(),
+            monitor: RateMonitor::new(vec![60.0]),
+            window: 10.0,
+            epoch: 10.0,
+            restart_penalty: 2.0,
+            target_utilization: 0.9,
+            rate_threshold: 0.10,
+            last_decision: f64::NEG_INFINITY,
+            last_planned_rate: f64::NAN,
+            first_arrival: None,
+        }
+    }
+}
+
+impl Controller for Ds2Controller {
+    fn on_arrival(&mut self, t: f64) {
+        self.first_arrival.get_or_insert(t);
+        self.monitor.on_arrival(t);
+    }
+
+    fn on_tick(&mut self, now: f64, state: &ControlState) -> Vec<ControlAction> {
+        // Metrics window must be full before the rate estimate means
+        // anything (a cold estimator would tear the pipeline down at t=0).
+        let warm = self.first_arrival.map_or(false, |t0| now - t0 >= self.window);
+        if !warm || now - self.last_decision < self.epoch {
+            return Vec::new();
+        }
+        self.last_decision = now;
+        let rate = self.monitor.count_in(now, self.window) as f64 / self.window;
+        // Activation threshold: ignore small fluctuations of the rate
+        // estimate (otherwise the controller would halt every epoch).
+        if self.last_planned_rate.is_finite()
+            && (rate - self.last_planned_rate).abs()
+                <= self.rate_threshold * self.last_planned_rate
+        {
+            return Vec::new();
+        }
+        // Optimal parallelism for all operators at once (DS2's one-shot
+        // estimate from observed rates + topology).
+        let targets: Vec<usize> = self
+            .true_rates
+            .iter()
+            .zip(&self.scale_factors)
+            .map(|(&mu, &s)| ((rate * s) / (mu * self.target_utilization)).ceil().max(1.0) as usize)
+            .collect();
+        if targets == state.provisioned {
+            self.last_planned_rate = rate;
+            return Vec::new();
+        }
+        self.last_planned_rate = rate;
+        // Flink-style reconfiguration: halt, then apply the new plan.
+        let mut actions = vec![ControlAction::Halt { duration: self.restart_penalty }];
+        for (stage, &replicas) in targets.iter().enumerate() {
+            if replicas != state.provisioned[stage] {
+                actions.push(ControlAction::SetReplicas { stage, replicas });
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{pipelines, PipelineConfig, StageConfig};
+    use crate::hardware::Hardware;
+    use crate::profiler::analytic::paper_profiles;
+    use crate::simulator::{control::simulate_controlled, SimParams};
+    use crate::workload::{gamma_trace, varying_trace, Phase};
+
+    fn ds2_setup() -> (crate::config::PipelineSpec, crate::profiler::ProfileSet, PipelineConfig, Vec<f64>) {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        // Batch-less deployment on best hardware, provisioned for 50 qps.
+        let service_times: Vec<f64> = spec
+            .stages
+            .iter()
+            .map(|s| {
+                let mp = profiles.get(&s.model);
+                mp.get(mp.best_hardware()).unwrap().latency(1)
+            })
+            .collect();
+        let config = PipelineConfig {
+            stages: spec
+                .stages
+                .iter()
+                .zip(&service_times)
+                .map(|(s, &st)| StageConfig {
+                    hw: {
+                        let mp = profiles.get(&s.model);
+                        mp.best_hardware()
+                    },
+                    batch: 1,
+                    replicas: ((50.0 * s.scale_factor * st) / 0.9).ceil().max(1.0) as usize,
+                })
+                .collect(),
+        };
+        let _ = Hardware::Cpu;
+        (spec, profiles, config, service_times)
+    }
+
+    #[test]
+    fn handles_uniform_load() {
+        // Fig 14(a) CV=1 case: provisioning for the average rate works.
+        let (spec, profiles, config, sts) = ds2_setup();
+        let live = gamma_trace(50.0, 1.0, 180.0, 41);
+        let mut ds2 = Ds2Controller::new(&spec, &sts);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut ds2,
+        );
+        assert!(result.miss_rate(0.3) < 0.05, "miss {}", result.miss_rate(0.3));
+    }
+
+    #[test]
+    fn misses_slo_under_bursty_load() {
+        // Fig 14(a) CV=4 case: average-rate provisioning + halts => misses.
+        let (spec, profiles, config, sts) = ds2_setup();
+        let live = gamma_trace(50.0, 4.0, 180.0, 43);
+        let mut ds2 = Ds2Controller::new(&spec, &sts);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut ds2,
+        );
+        assert!(result.miss_rate(0.3) > 0.02, "miss {}", result.miss_rate(0.3));
+    }
+
+    #[test]
+    fn reconfiguration_halts_hurt_under_rate_ramp() {
+        // Fig 14(b): rate 50 -> 100 over 60 s; repeated halts delay
+        // recovery relative to InferLine's tuner.
+        let (spec, profiles, config, sts) = ds2_setup();
+        let live = varying_trace(
+            &[
+                Phase { lambda: 50.0, cv: 1.0, duration: 60.0, ramp: false },
+                Phase { lambda: 100.0, cv: 1.0, duration: 60.0, ramp: true },
+                Phase { lambda: 100.0, cv: 1.0, duration: 120.0, ramp: false },
+            ],
+            47,
+        );
+        let mut ds2 = Ds2Controller::new(&spec, &sts);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut ds2,
+        );
+        // There must be at least one reconfiguration (replica changes).
+        assert!(result.replica_timeline.len() > 1, "never reconfigured");
+        // And some queries incur elevated latency during halts.
+        let p99 = crate::util::stats::p99(&result.latencies);
+        assert!(p99 > 0.15, "p99 {p99} suspiciously low for halting baseline");
+    }
+}

@@ -1,0 +1,17 @@
+//! Baseline planners and tuners the paper compares against (§6, §7, §8):
+//!
+//! * [`coarse`] — the Coarse-Grained baseline: the pipeline is treated as
+//!   a single black-box service, profiled end to end, and replicated as a
+//!   unit; provisioning targets either the mean (CG-Mean) or the peak
+//!   (CG-Peak) rate of the sample trace.
+//! * [`autoscale`] — the AutoScale [12] reactive tuner used to scale the
+//!   coarse-grained pipelines at runtime.
+//! * [`ds2`] — the DS2 [17] rate-based streaming autoscaler with
+//!   Flink-style halt-and-restart reconfiguration (Fig 14).
+//! * [`oracle`] — the Planner given full knowledge of the live trace
+//!   (Fig 10's "oracle planner" comparison point).
+
+pub mod autoscale;
+pub mod coarse;
+pub mod ds2;
+pub mod oracle;

@@ -1,0 +1,82 @@
+//! Oracle planner baseline (paper Fig 10): the InferLine Planner given
+//! full knowledge of the live trace it will serve. It configures once —
+//! perfectly for the whole trace — but cannot react online, so it pays
+//! peak cost for the entire duration (the trade-off Fig 10 illustrates).
+
+use crate::config::{PipelineSpec, PipelineConfig};
+use crate::planner::{Plan, PlanError, Planner};
+use crate::profiler::ProfileSet;
+use crate::workload::Trace;
+
+/// Plan with oracle knowledge: the "sample" trace *is* the live trace.
+pub fn plan_with_oracle(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    live_trace: &Trace,
+    slo: f64,
+) -> Result<Plan, PlanError> {
+    Planner::new(spec, profiles).plan(live_trace, slo)
+}
+
+/// Convenience: the oracle's static config.
+pub fn oracle_config(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    live_trace: &Trace,
+    slo: f64,
+) -> Result<PipelineConfig, PlanError> {
+    plan_with_oracle(spec, profiles, live_trace, slo).map(|p| p.config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pipelines;
+    use crate::profiler::analytic::paper_profiles;
+    use crate::simulator::{self, SimParams};
+    use crate::workload::{varying_trace, Phase};
+
+    #[test]
+    fn oracle_meets_slo_on_rate_change_it_knows_about() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let slo = 0.3;
+        let live = varying_trace(
+            &[
+                Phase { lambda: 100.0, cv: 1.0, duration: 60.0, ramp: false },
+                Phase { lambda: 200.0, cv: 1.0, duration: 60.0, ramp: false },
+            ],
+            55,
+        );
+        let plan = plan_with_oracle(&spec, &profiles, &live, slo).unwrap();
+        let result = simulator::simulate(
+            &spec, &profiles, &plan.config, &live, &SimParams::default(),
+        );
+        assert!(result.miss_rate(slo) < 0.011, "miss {}", result.miss_rate(slo));
+    }
+
+    #[test]
+    fn oracle_costs_more_than_it_needs_before_the_spike() {
+        // The oracle pays for peak capacity the whole time; a plan for the
+        // pre-spike segment alone is cheaper.
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let slo = 0.3;
+        let quiet = varying_trace(
+            &[Phase { lambda: 100.0, cv: 1.0, duration: 60.0, ramp: false }],
+            57,
+        );
+        let spiky = quiet.concat(&varying_trace(
+            &[Phase { lambda: 250.0, cv: 1.0, duration: 60.0, ramp: false }],
+            58,
+        ));
+        let oracle = plan_with_oracle(&spec, &profiles, &spiky, slo).unwrap();
+        let quiet_plan = plan_with_oracle(&spec, &profiles, &quiet, slo).unwrap();
+        assert!(
+            oracle.cost_per_hour > quiet_plan.cost_per_hour,
+            "oracle {} should exceed quiet {}",
+            oracle.cost_per_hour,
+            quiet_plan.cost_per_hour
+        );
+    }
+}

@@ -1,0 +1,354 @@
+//! Pipeline specifications and per-stage configurations.
+//!
+//! A prediction pipeline is a DAG of stages (paper §2): each vertex is a
+//! model (served by the underlying prediction-serving framework), each
+//! edge is dataflow. Conditional control flow is captured by per-stage
+//! *scale factors* s_m — the unconditional probability that a query
+//! entering the pipeline visits stage m (paper §4.1).
+//!
+//! A [`PipelineConfig`] assigns the planner's three control dimensions to
+//! every stage: hardware type, maximum batch size, replication factor.
+
+use crate::hardware::Hardware;
+use crate::util::json::Json;
+
+/// The underlying prediction-serving framework personality (paper §7.4).
+/// InferLine composes with any framework meeting its three requirements;
+/// the personalities differ only in per-hop RPC/serialization overhead
+/// (the paper observes TFS costs slightly more "due to some additional
+/// RPC serialization overheads not present in Clipper").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    Clipper,
+    TfServing,
+}
+
+impl Framework {
+    /// Per stage-to-stage hop overhead (seconds) added to query transfer.
+    pub fn rpc_overhead(self) -> f64 {
+        match self {
+            Framework::Clipper => 0.0010,
+            Framework::TfServing => 0.0028,
+        }
+    }
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Framework::Clipper => "clipper",
+            Framework::TfServing => "tf-serving",
+        }
+    }
+}
+
+/// One vertex of the pipeline DAG.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    /// Human-readable stage name (unique within the pipeline).
+    pub name: String,
+    /// Model-zoo name: keys profiles and HLO artifacts (`<model>_b<B>`).
+    pub model: String,
+    /// Unconditional probability a pipeline query visits this stage.
+    pub scale_factor: f64,
+    /// Indices of downstream stages fed by this stage's output.
+    pub children: Vec<usize>,
+}
+
+/// A prediction pipeline DAG.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+    /// Entry stages (every query visits all roots; roots have s = 1).
+    pub roots: Vec<usize>,
+    pub framework: Framework,
+}
+
+impl PipelineSpec {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Validate DAG shape and scale-factor coherence. Called by
+    /// constructors and by config loading.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("pipeline has no stages".into());
+        }
+        if self.roots.is_empty() {
+            return Err("pipeline has no roots".into());
+        }
+        for &r in &self.roots {
+            if r >= self.stages.len() {
+                return Err(format!("root {r} out of range"));
+            }
+            if (self.stages[r].scale_factor - 1.0).abs() > 1e-9 {
+                return Err(format!("root stage {} must have s = 1", self.stages[r].name));
+            }
+        }
+        let mut indegree = vec![0usize; self.stages.len()];
+        for (i, s) in self.stages.iter().enumerate() {
+            if !(0.0..=1.0).contains(&s.scale_factor) || s.scale_factor == 0.0 {
+                return Err(format!("stage {} scale factor {} out of (0,1]", s.name, s.scale_factor));
+            }
+            for &c in &s.children {
+                if c >= self.stages.len() {
+                    return Err(format!("stage {} child {c} out of range", s.name));
+                }
+                if c == i {
+                    return Err(format!("stage {} is its own child", s.name));
+                }
+                indegree[c] += 1;
+                if self.stages[c].scale_factor > s.scale_factor + 1e-9 {
+                    return Err(format!(
+                        "child {} scale factor exceeds parent {}",
+                        self.stages[c].name, s.name
+                    ));
+                }
+            }
+        }
+        for &r in &self.roots {
+            if indegree[r] != 0 {
+                return Err(format!("root {} has a parent", self.stages[r].name));
+            }
+        }
+        // Tree-shaped conditional DAGs: at most one parent per stage keeps
+        // branch probabilities well-defined (s_child / s_parent).
+        for (i, d) in indegree.iter().enumerate() {
+            if *d > 1 {
+                return Err(format!("stage {} has {d} parents (tree DAGs only)", self.stages[i].name));
+            }
+            if *d == 0 && !self.roots.contains(&i) {
+                return Err(format!("stage {} unreachable", self.stages[i].name));
+            }
+        }
+        // Acyclicity: BFS from roots must visit every stage exactly once
+        // (guaranteed by tree shape + reachability above, but verify).
+        let mut seen = vec![false; self.stages.len()];
+        let mut work: Vec<usize> = self.roots.clone();
+        while let Some(i) = work.pop() {
+            if seen[i] {
+                return Err(format!("cycle through stage {}", self.stages[i].name));
+            }
+            seen[i] = true;
+            work.extend(&self.stages[i].children);
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("disconnected stages".into());
+        }
+        Ok(())
+    }
+
+    /// Conditional probability of traversing the edge parent -> child,
+    /// i.e. P(visit child | visit parent) = s_child / s_parent.
+    pub fn edge_probability(&self, parent: usize, child: usize) -> f64 {
+        (self.stages[child].scale_factor / self.stages[parent].scale_factor).min(1.0)
+    }
+
+    /// All root-to-leaf paths (stage index sequences). Used for the
+    /// worst-case service time of Algorithm 1.
+    pub fn paths(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for &r in &self.roots {
+            let mut stack = vec![(r, vec![r])];
+            while let Some((i, path)) = stack.pop() {
+                if self.stages[i].children.is_empty() {
+                    out.push(path);
+                } else {
+                    for &c in &self.stages[i].children {
+                        let mut p = path.clone();
+                        p.push(c);
+                        stack.push((c, p));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.stages.iter().position(|s| s.name == name)
+    }
+}
+
+/// Control parameters for one stage: the planner's three dimensions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageConfig {
+    pub hw: Hardware,
+    /// Maximum batch size the centralized queue hands one replica.
+    pub batch: usize,
+    pub replicas: usize,
+}
+
+/// A full pipeline configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    pub stages: Vec<StageConfig>,
+}
+
+impl PipelineConfig {
+    /// Uniform starting configuration.
+    pub fn uniform(n: usize, hw: Hardware, batch: usize, replicas: usize) -> Self {
+        PipelineConfig { stages: vec![StageConfig { hw, batch, replicas }; n] }
+    }
+
+    /// $/hour of the configuration: Σ replicas × device cost (paper §4.3 —
+    /// batch size does not affect cost).
+    pub fn cost_per_hour(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| s.replicas as f64 * s.hw.cost_per_hour())
+            .sum()
+    }
+
+    pub fn total_replicas(&self) -> usize {
+        self.stages.iter().map(|s| s.replicas).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.stages
+                .iter()
+                .map(|s| {
+                    let mut o = Json::obj();
+                    o.set("hw", s.hw.id())
+                        .set("batch", s.batch)
+                        .set("replicas", s.replicas);
+                    o
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let arr = v.as_arr().ok_or("config must be an array")?;
+        let stages = arr
+            .iter()
+            .map(|s| {
+                Ok(StageConfig {
+                    hw: Hardware::from_id(s.req("hw").as_str().ok_or("hw")?)
+                        .ok_or("unknown hw")?,
+                    batch: s.req("batch").as_usize().ok_or("batch")?,
+                    replicas: s.req("replicas").as_usize().ok_or("replicas")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(PipelineConfig { stages })
+    }
+
+    /// Compact single-line description for logs and experiment output.
+    pub fn summary(&self, spec: &PipelineSpec) -> String {
+        self.stages
+            .iter()
+            .zip(&spec.stages)
+            .map(|(c, s)| format!("{}[{} b{} x{}]", s.name, c.hw, c.batch, c.replicas))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+pub mod pipelines;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_spec() -> PipelineSpec {
+        PipelineSpec {
+            name: "lin".into(),
+            stages: vec![
+                StageSpec { name: "a".into(), model: "m0".into(), scale_factor: 1.0, children: vec![1] },
+                StageSpec { name: "b".into(), model: "m1".into(), scale_factor: 0.5, children: vec![] },
+            ],
+            roots: vec![0],
+            framework: Framework::Clipper,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_linear() {
+        linear_spec().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_root_scale() {
+        let mut s = linear_spec();
+        s.stages[0].scale_factor = 0.9;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_child_scale_above_parent() {
+        let mut s = linear_spec();
+        s.stages[1].scale_factor = 1.0;
+        s.stages[0].scale_factor = 1.0;
+        s.validate().unwrap(); // equal is fine
+        s.stages[0].children = vec![1];
+        s.stages[1].scale_factor = 1.1;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cycles() {
+        let mut s = linear_spec();
+        s.stages[1].children = vec![0];
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unreachable() {
+        let mut s = linear_spec();
+        s.stages.push(StageSpec {
+            name: "z".into(),
+            model: "m2".into(),
+            scale_factor: 0.5,
+            children: vec![],
+        });
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn edge_probability_is_conditional() {
+        let s = linear_spec();
+        assert!((s.edge_probability(0, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paths_enumeration() {
+        let spec = pipelines::video_monitoring();
+        let mut paths = spec.paths();
+        paths.sort();
+        assert_eq!(paths.len(), 2);
+        assert!(paths.iter().all(|p| p[0] == 0 && p.len() == 2));
+    }
+
+    #[test]
+    fn cost_model() {
+        let c = PipelineConfig {
+            stages: vec![
+                StageConfig { hw: Hardware::Cpu, batch: 1, replicas: 2 },
+                StageConfig { hw: Hardware::GpuK80, batch: 8, replicas: 3 },
+            ],
+        };
+        assert!((c.cost_per_hour() - (2.0 * 0.05 + 3.0 * 0.70)).abs() < 1e-12);
+        assert_eq!(c.total_replicas(), 5);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = PipelineConfig::uniform(3, Hardware::GpuK80, 4, 2);
+        let j = c.to_json();
+        assert_eq!(PipelineConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn all_paper_pipelines_validate() {
+        for spec in [
+            pipelines::image_processing(),
+            pipelines::video_monitoring(),
+            pipelines::social_media(),
+            pipelines::tf_cascade(),
+        ] {
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! The four paper pipelines (Fig 2), expressed over the model zoo.
+//!
+//! Scale factors follow the paper's conditional-evaluation pattern: in
+//! Video Monitoring, Social Media and TF Cascade a subset of models is
+//! invoked based on earlier models' outputs (paper §2).
+
+use super::{Framework, PipelineSpec, StageSpec};
+
+fn stage(name: &str, model: &str, s: f64, children: Vec<usize>) -> StageSpec {
+    StageSpec { name: name.into(), model: model.into(), scale_factor: s, children }
+}
+
+/// Fig 2(a): basic image pre-processing followed by DNN classification.
+pub fn image_processing() -> PipelineSpec {
+    PipelineSpec {
+        name: "image-processing".into(),
+        stages: vec![
+            stage("preprocess", "preprocess", 1.0, vec![1]),
+            stage("classify", "resnet_lite", 1.0, vec![]),
+        ],
+        roots: vec![0],
+        framework: Framework::Clipper,
+    }
+}
+
+/// Fig 2(b): object detection feeding conditional vehicle/person
+/// identification and license-plate extraction branches (inspired by
+/// VideoStorm workloads).
+pub fn video_monitoring() -> PipelineSpec {
+    PipelineSpec {
+        name: "video-monitoring".into(),
+        stages: vec![
+            stage("detect", "yolo_lite", 1.0, vec![1, 2]),
+            stage("identify", "idmodel_lite", 0.4, vec![]),
+            stage("alpr", "alpr_lite", 0.25, vec![]),
+        ],
+        roots: vec![0],
+        framework: Framework::Clipper,
+    }
+}
+
+/// Fig 2(c): translate + categorize posts from text and linked images;
+/// translation runs only for non-English posts, the vision model only for
+/// posts with images.
+pub fn social_media() -> PipelineSpec {
+    PipelineSpec {
+        name: "social-media".into(),
+        stages: vec![
+            stage("langid", "langid", 1.0, vec![1, 3]),
+            stage("translate", "nmt_lite", 0.4, vec![2]),
+            stage("categorize", "tf_fast", 0.4, vec![]),
+            stage("image-class", "resnet_lite", 0.5, vec![]),
+        ],
+        roots: vec![0],
+        framework: Framework::Clipper,
+    }
+}
+
+/// Fig 2(d): fast model always; slow model invoked only on low-confidence
+/// queries (cascade pattern).
+pub fn tf_cascade() -> PipelineSpec {
+    PipelineSpec {
+        name: "tf-cascade".into(),
+        stages: vec![
+            stage("fast", "tf_fast", 1.0, vec![1]),
+            stage("slow", "tf_slow", 0.3, vec![]),
+        ],
+        roots: vec![0],
+        framework: Framework::Clipper,
+    }
+}
+
+/// All four, for sweep drivers.
+pub fn all() -> Vec<PipelineSpec> {
+    vec![image_processing(), video_monitoring(), social_media(), tf_cascade()]
+}
+
+/// Look up a pipeline by CLI name.
+pub fn by_name(name: &str) -> Option<PipelineSpec> {
+    all().into_iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_finds_all() {
+        for p in all() {
+            assert_eq!(by_name(&p.name).unwrap().name, p.name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn conditional_pipelines_have_sub_unity_branches() {
+        for p in [video_monitoring(), social_media(), tf_cascade()] {
+            assert!(
+                p.stages.iter().any(|s| s.scale_factor < 1.0),
+                "{} should have conditional stages",
+                p.name
+            );
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Shared plumbing for the figure-regeneration experiments: row/CSV
+//! emission, standard system setups (InferLine plan+tune, CG plan+tune),
+//! and controlled-run summaries.
+
+use std::path::PathBuf;
+
+use crate::baselines::autoscale::AutoScaleTuner;
+use crate::baselines::coarse::{self, CoarseTarget};
+use crate::config::{PipelineConfig, PipelineSpec};
+use crate::planner::{Plan, PlanError, Planner};
+use crate::profiler::ProfileSet;
+use crate::simulator::{self, control::simulate_controlled, control::Controller, SimParams, SimResult};
+use crate::tuner::{Tuner, TunerInputs};
+use crate::util::stats;
+use crate::workload::Trace;
+
+/// Experiment context: quick mode shrinks traces so `cargo bench` and CI
+/// complete in seconds; full mode regenerates paper-scale data.
+#[derive(Debug, Clone)]
+pub struct Ctx {
+    pub quick: bool,
+    pub results_dir: PathBuf,
+}
+
+impl Ctx {
+    pub fn new(quick: bool) -> Self {
+        let results_dir = PathBuf::from(
+            std::env::var("INFERLINE_RESULTS_DIR").unwrap_or_else(|_| "results".into()),
+        );
+        let _ = std::fs::create_dir_all(&results_dir);
+        Ctx { quick, results_dir }
+    }
+
+    /// Scale a duration for quick mode.
+    pub fn secs(&self, full: f64) -> f64 {
+        if self.quick {
+            (full / 6.0).max(20.0)
+        } else {
+            full
+        }
+    }
+
+    /// Write a CSV of rows into the results dir.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) {
+        let path = self.results_dir.join(name);
+        let mut text = String::from(header);
+        text.push('\n');
+        for r in rows {
+            text.push_str(r);
+            text.push('\n');
+        }
+        if let Err(e) = std::fs::write(&path, text) {
+            eprintln!("warning: could not write {path:?}: {e}");
+        }
+    }
+}
+
+/// Summary of one serving run under a (planner, tuner) combination.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub system: String,
+    /// $/hr averaged over the run (cost integral / duration).
+    pub mean_cost_per_hour: f64,
+    /// Total dollars for the run.
+    pub total_cost: f64,
+    pub p99: f64,
+    pub miss_rate: f64,
+    pub attainment: f64,
+    pub result: SimResult,
+}
+
+impl RunSummary {
+    pub fn from_result(system: &str, result: SimResult, slo: f64) -> Self {
+        let hours = (result.horizon / 3600.0).max(1e-12);
+        RunSummary {
+            system: system.to_string(),
+            mean_cost_per_hour: result.cost_dollars / hours,
+            total_cost: result.cost_dollars,
+            p99: stats::p99(&result.latencies),
+            miss_rate: result.miss_rate(slo),
+            attainment: 1.0 - result.miss_rate(slo),
+            result,
+        }
+    }
+}
+
+/// Plan with InferLine and serve `live` with the InferLine Tuner in loop.
+pub fn run_inferline(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    sample: &Trace,
+    live: &Trace,
+    slo: f64,
+) -> Result<(Plan, RunSummary), PlanError> {
+    let planner = Planner::new(spec, profiles);
+    let plan = planner.plan(sample, slo)?;
+    let st = simulator::service_time(spec, profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(spec, profiles, &plan.config, sample, st);
+    let mut tuner = Tuner::new(inputs);
+    let result = simulate_controlled(
+        spec, profiles, &plan.config, live, &SimParams::default(), &mut tuner,
+    );
+    Ok((plan, RunSummary::from_result("InferLine", result, slo)))
+}
+
+/// Plan with InferLine and serve statically (no tuner).
+pub fn run_inferline_static(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    sample: &Trace,
+    live: &Trace,
+    slo: f64,
+    label: &str,
+) -> Result<(Plan, RunSummary), PlanError> {
+    let planner = Planner::new(spec, profiles);
+    let plan = planner.plan(sample, slo)?;
+    let mut null = crate::simulator::control::NullController;
+    let result = simulate_controlled(
+        spec, profiles, &plan.config, live, &SimParams::default(), &mut null,
+    );
+    Ok((plan, RunSummary::from_result(label, result, slo)))
+}
+
+/// Coarse-grained plan (Mean or Peak) served with the AutoScale tuner.
+pub fn run_coarse(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    sample: &Trace,
+    live: &Trace,
+    slo: f64,
+    target: CoarseTarget,
+    tune: bool,
+) -> RunSummary {
+    let cg = coarse::plan(spec, profiles, sample, slo, target);
+    let label = match (target, tune) {
+        (CoarseTarget::Mean, true) => "CG-Mean+AutoScale",
+        (CoarseTarget::Peak, true) => "CG-Peak+AutoScale",
+        (CoarseTarget::Mean, false) => "CG-Mean",
+        (CoarseTarget::Peak, false) => "CG-Peak",
+    };
+    let result = if tune {
+        let mut tuner = AutoScaleTuner::new(cg.unit_throughput, cg.units);
+        simulate_controlled(spec, profiles, &cg.config, live, &SimParams::default(), &mut tuner)
+    } else {
+        let mut null = crate::simulator::control::NullController;
+        simulate_controlled(spec, profiles, &cg.config, live, &SimParams::default(), &mut null)
+    };
+    RunSummary::from_result(label, result, slo)
+}
+
+/// Serve a static config with an arbitrary controller (helper for
+/// attribution studies).
+pub fn run_with_controller(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    live: &Trace,
+    slo: f64,
+    label: &str,
+    controller: &mut dyn Controller,
+) -> RunSummary {
+    let result =
+        simulate_controlled(spec, profiles, config, live, &SimParams::default(), controller);
+    RunSummary::from_result(label, result, slo)
+}
+
+/// Pretty-print one summary row.
+pub fn print_summary(prefix: &str, s: &RunSummary) {
+    println!(
+        "{prefix}{:<22} cost ${:>7.2}/hr  total ${:>7.2}  p99 {:>7.1}ms  miss {:>6.2}%  attain {:>6.2}%",
+        s.system,
+        s.mean_cost_per_hour,
+        s.total_cost,
+        s.p99 * 1e3,
+        s.miss_rate * 100.0,
+        s.attainment * 100.0
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pipelines;
+    use crate::profiler::analytic::paper_profiles;
+    use crate::workload::gamma_trace;
+
+    #[test]
+    fn inferline_run_summary_is_consistent() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(80.0, 1.0, 30.0, 1);
+        let live = gamma_trace(80.0, 1.0, 60.0, 2);
+        let (plan, s) = run_inferline(&spec, &profiles, &sample, &live, 0.3).unwrap();
+        assert!(s.miss_rate < 0.05, "miss {}", s.miss_rate);
+        assert!((s.attainment + s.miss_rate - 1.0).abs() < 1e-9);
+        assert!(s.total_cost > 0.0);
+        // Mean cost should be near the planned cost (little tuning).
+        assert!(
+            (s.mean_cost_per_hour - plan.cost_per_hour).abs() / plan.cost_per_hour < 0.6,
+            "mean {} vs plan {}",
+            s.mean_cost_per_hour,
+            plan.cost_per_hour
+        );
+    }
+
+    #[test]
+    fn coarse_run_produces_summary() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(80.0, 1.0, 30.0, 3);
+        let live = gamma_trace(80.0, 1.0, 60.0, 4);
+        let s = run_coarse(&spec, &profiles, &sample, &live, 0.3, CoarseTarget::Peak, true);
+        assert!(s.p99 > 0.0);
+        assert_eq!(s.system, "CG-Peak+AutoScale");
+    }
+
+    #[test]
+    fn ctx_quick_shrinks_durations() {
+        let ctx = Ctx::new(true);
+        assert!(ctx.secs(600.0) < 600.0);
+        let full = Ctx::new(false);
+        assert_eq!(full.secs(600.0), 600.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§7) — see DESIGN.md §5 for the experiment index.
+//!
+//! Each figure driver prints the same rows/series the paper plots and
+//! writes CSVs under `results/` (override with `INFERLINE_RESULTS_DIR`).
+//! `cargo bench` runs the quick variants; `inferline experiment <id>`
+//! runs paper-scale parameters.
+
+pub mod common;
+pub mod figures;
+
+pub use common::{Ctx, RunSummary};
+pub use figures::{run_by_name, ALL_FIGURES};

@@ -1,0 +1,108 @@
+//! Hardware catalog and cost model (paper §6 "Physical Execution
+//! Environment").
+//!
+//! The paper prices resources by decomposing EC2 instances: CPU cost =
+//! instance cost / vCPUs (m4.16xlarge: $3.20/hr / 64 = $0.05), GPU cost =
+//! (GPU instance - CPU-equivalent instance) / GPUs (p2.8xlarge K80s ≈
+//! $0.70/hr each). We add a V100 tier (p3-derived) so the planner has a
+//! 3-deep downgrade chain to search, as in the paper's heterogeneous
+//! setting.
+//!
+//! Real K80/V100 silicon is not present on this image; the catalog prices
+//! are real but stage *performance* on each tier comes from the profile
+//! layer (empirical for CPU via PJRT, analytic for the accelerator tiers —
+//! see DESIGN.md §3).
+
+use std::fmt;
+
+/// A hardware tier a model replica can be placed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Hardware {
+    /// One vCPU slice of an m4.16xlarge.
+    Cpu,
+    /// One NVIDIA K80 of a p2.8xlarge.
+    GpuK80,
+    /// One NVIDIA V100 of a p3.8xlarge.
+    GpuV100,
+}
+
+impl Hardware {
+    /// All tiers, cheapest first.
+    pub const ALL: [Hardware; 3] = [Hardware::Cpu, Hardware::GpuK80, Hardware::GpuV100];
+
+    /// $/hour for one device (paper §6 cost decomposition).
+    pub fn cost_per_hour(self) -> f64 {
+        match self {
+            Hardware::Cpu => 0.05,
+            Hardware::GpuK80 => 0.70,
+            Hardware::GpuV100 => 1.80,
+        }
+    }
+
+    /// The next cheaper tier (the planner's DowngradeHW step), if any.
+    pub fn downgrade(self) -> Option<Hardware> {
+        match self {
+            Hardware::GpuV100 => Some(Hardware::GpuK80),
+            Hardware::GpuK80 => Some(Hardware::Cpu),
+            Hardware::Cpu => None,
+        }
+    }
+
+    /// Stable identifier used in JSON profiles / manifests / CLI flags.
+    pub fn id(self) -> &'static str {
+        match self {
+            Hardware::Cpu => "cpu",
+            Hardware::GpuK80 => "gpu-k80",
+            Hardware::GpuV100 => "gpu-v100",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Hardware> {
+        Hardware::ALL.iter().copied().find(|h| h.id() == id)
+    }
+}
+
+impl fmt::Display for Hardware {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_match_paper_decomposition() {
+        assert!((Hardware::Cpu.cost_per_hour() - 0.05).abs() < 1e-12);
+        assert!((Hardware::GpuK80.cost_per_hour() - 0.70).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downgrade_chain_reaches_cpu() {
+        let mut hw = Hardware::GpuV100;
+        let mut chain = vec![hw];
+        while let Some(next) = hw.downgrade() {
+            hw = next;
+            chain.push(hw);
+        }
+        assert_eq!(chain, vec![Hardware::GpuV100, Hardware::GpuK80, Hardware::Cpu]);
+    }
+
+    #[test]
+    fn downgrade_strictly_reduces_cost() {
+        for hw in Hardware::ALL {
+            if let Some(lower) = hw.downgrade() {
+                assert!(lower.cost_per_hour() < hw.cost_per_hour());
+            }
+        }
+    }
+
+    #[test]
+    fn id_roundtrip() {
+        for hw in Hardware::ALL {
+            assert_eq!(Hardware::from_id(hw.id()), Some(hw));
+        }
+        assert_eq!(Hardware::from_id("tpu"), None);
+    }
+}

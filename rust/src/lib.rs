@@ -1,0 +1,35 @@
+//! # InferLine (reproduction)
+//!
+//! Provisioning and management of ML prediction pipelines subject to
+//! end-to-end tail-latency SLOs at minimum cost, after Crankshaw et al.,
+//! *InferLine: ML Prediction Pipeline Provisioning and Management for
+//! Tight Latency Objectives* (2018).
+//!
+//! The library is organised around the paper's two control loops:
+//!
+//! * **Low-frequency [`planner`]** — combines per-model [`profiler`]
+//!   profiles, the discrete-event [`simulator`] (the Estimator) and a
+//!   constrained greedy search over (hardware, batch size, replicas) to
+//!   find the cost-minimizing configuration meeting a P99 SLO (§4).
+//! * **High-frequency [`tuner`]** — network-calculus traffic envelopes
+//!   detect arrival-process deviations across timescales and re-scale
+//!   individual stages within seconds (§5).
+//!
+//! [`baselines`] implements the paper's comparison points (coarse-grained
+//! CG-Mean/CG-Peak planning, the AutoScale reactive tuner, DS2), and
+//! [`serving`] is a Clipper-like physical serving plane that executes the
+//! real AOT-compiled models through PJRT ([`runtime`]) with centralized
+//! batched queues — Python never runs on the request path.
+
+pub mod baselines;
+pub mod config;
+pub mod experiments;
+pub mod hardware;
+pub mod planner;
+pub mod profiler;
+pub mod runtime;
+pub mod serving;
+pub mod simulator;
+pub mod tuner;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,374 @@
+//! InferLine command-line launcher.
+//!
+//! Subcommands:
+//!   plan        plan a pipeline configuration for a workload + SLO
+//!   profile     measure real CPU model profiles through PJRT
+//!   simulate    run the Estimator on a configuration
+//!   serve       serve a trace on the physical plane (PJRT or calibrated)
+//!   experiment  regenerate a paper figure (fig3..fig14, headline, all)
+//!   trace       generate workload traces to files
+//!
+//! Argument parsing is hand-rolled (no crate network access on this
+//! image — DESIGN.md §8).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use inferline::baselines::coarse::{self, CoarseTarget};
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::profiler::ProfileSet;
+use inferline::runtime::Manifest;
+use inferline::serving::{profile as phys_profile, Backend, ServingEngine};
+use inferline::simulator::{self, SimParams};
+use inferline::util::stats;
+use inferline::workload::{autoscale, gamma_trace, Trace};
+
+/// Minimal flag parser: --key value pairs after the subcommand.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false")
+    }
+}
+
+const USAGE: &str = "\
+InferLine: ML prediction pipeline provisioning for tight latency SLOs
+
+USAGE: inferline <command> [flags]
+
+COMMANDS:
+  plan        --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
+              [--profiles <file.json>] [--compare-cg]
+  profile     --artifacts <dir> [--out <file.json>] [--max-batch <b>]
+  simulate    --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
+  serve       --pipeline <name> --lambda <qps> --duration <s>
+              [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
+  experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|all>
+              [--quick]
+  trace       --kind gamma|big-spike|instant-spike --out <file>
+              [--lambda <qps>] [--cv <v>] [--duration <s>]
+  pipelines   list the built-in paper pipelines
+
+Pipelines: image-processing, video-monitoring, social-media, tf-cascade
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let args = Args::parse(&argv[1..]);
+    let ok = match cmd.as_str() {
+        "plan" => cmd_plan(&args),
+        "profile" => cmd_profile(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(&args),
+        "trace" => cmd_trace(&args),
+        "pipelines" => {
+            for p in pipelines::all() {
+                println!(
+                    "{:<18} {} stages, framework {}",
+                    p.name,
+                    p.n_stages(),
+                    p.framework.id()
+                );
+                for s in &p.stages {
+                    println!("    {:<14} model={:<14} s={:.2}", s.name, s.model, s.scale_factor);
+                }
+            }
+            true
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            true
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            false
+        }
+    };
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn load_profiles(args: &Args) -> ProfileSet {
+    match args.get("profiles") {
+        Some(path) => match ProfileSet::load(std::path::Path::new(path)) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("could not load profiles {path}: {e}; using paper profiles");
+                paper_profiles()
+            }
+        },
+        None => paper_profiles(),
+    }
+}
+
+fn get_pipeline(args: &Args) -> Option<inferline::config::PipelineSpec> {
+    let name = args.get("pipeline").unwrap_or("image-processing");
+    let p = pipelines::by_name(name);
+    if p.is_none() {
+        eprintln!("unknown pipeline {name:?}; see `inferline pipelines`");
+    }
+    p
+}
+
+fn cmd_plan(args: &Args) -> bool {
+    let Some(spec) = get_pipeline(args) else { return false };
+    let profiles = load_profiles(args);
+    let slo = args.f64("slo", 0.15);
+    let lambda = args.f64("lambda", 100.0);
+    let cv = args.f64("cv", 1.0);
+    let sample = gamma_trace(lambda, cv, args.f64("sample-duration", 60.0), 42);
+    println!("planning {} for λ={lambda} cv={cv} slo={slo}s ...", spec.name);
+    match Planner::new(&spec, &profiles).plan(&sample, slo) {
+        Ok(plan) => {
+            println!("  config:    {}", plan.config.summary(&spec));
+            println!("  cost:      ${:.2}/hr", plan.cost_per_hour);
+            println!("  est. P99:  {:.1} ms (SLO {:.0} ms)", plan.estimated_p99 * 1e3, slo * 1e3);
+            println!("  search:    {} iterations; actions: {}", plan.iterations,
+                     plan.actions_taken.join(", "));
+            if args.bool("compare-cg") {
+                for target in [CoarseTarget::Mean, CoarseTarget::Peak] {
+                    let cg = coarse::plan(&spec, &profiles, &sample, slo, target);
+                    println!(
+                        "  {:?}: batch {} x {} units = ${:.2}/hr ({:.1}x InferLine)",
+                        target, cg.batch, cg.units, cg.cost_per_hour,
+                        cg.cost_per_hour / plan.cost_per_hour
+                    );
+                }
+            }
+            true
+        }
+        Err(e) => {
+            eprintln!("  {e}");
+            false
+        }
+    }
+}
+
+fn cmd_profile(args: &Args) -> bool {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return false;
+        }
+    };
+    let opts = phys_profile::ProfileOptions {
+        max_batch: args.get("max-batch").and_then(|v| v.parse().ok()),
+        ..Default::default()
+    };
+    println!("profiling {} models through PJRT (cpu)...", manifest.models.len());
+    match phys_profile::profile_all(&manifest, &opts) {
+        Ok(set) => {
+            for (model, mp) in &set.models {
+                if let Some(p) = mp.get(inferline::hardware::Hardware::Cpu) {
+                    let pts: Vec<String> = p
+                        .points
+                        .iter()
+                        .map(|&(b, l)| format!("b{b}:{:.2}ms", l * 1e3))
+                        .collect();
+                    println!("  {model:<14} {}", pts.join(" "));
+                }
+            }
+            if let Some(out) = args.get("out") {
+                if let Err(e) = set.save(std::path::Path::new(out)) {
+                    eprintln!("save failed: {e}");
+                    return false;
+                }
+                println!("wrote {out}");
+            }
+            true
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            false
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> bool {
+    let Some(spec) = get_pipeline(args) else { return false };
+    let profiles = load_profiles(args);
+    let slo = args.f64("slo", 0.15);
+    let lambda = args.f64("lambda", 100.0);
+    let cv = args.f64("cv", 1.0);
+    let sample = gamma_trace(lambda, cv, 60.0, 42);
+    let live = gamma_trace(lambda, cv, args.f64("duration", 120.0), 43);
+    let plan = match Planner::new(&spec, &profiles).plan(&sample, slo) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let result = simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default());
+    println!("config: {}", plan.config.summary(&spec));
+    println!(
+        "simulated {} queries: p50 {:.1} ms, p99 {:.1} ms, miss rate {:.3}%, cost ${:.2}",
+        result.latencies.len(),
+        stats::quantile(&result.latencies, 0.5) * 1e3,
+        stats::p99(&result.latencies) * 1e3,
+        result.miss_rate(slo) * 100.0,
+        result.cost_dollars
+    );
+    for (i, st) in result.stage_stats.iter().enumerate() {
+        println!(
+            "  stage {:<14} batches {:>6}  mean batch {:>5.2}  max queue {:>5}",
+            spec.stages[i].name, st.batches, st.mean_batch, st.max_queue
+        );
+    }
+    true
+}
+
+fn cmd_serve(args: &Args) -> bool {
+    let Some(spec) = get_pipeline(args) else { return false };
+    let profiles = load_profiles(args);
+    let lambda = args.f64("lambda", 20.0);
+    let duration = args.f64("duration", 10.0);
+    let slo = args.f64("slo", 0.3);
+    let backend_kind = args.get("backend").unwrap_or("calibrated");
+    let sample = gamma_trace(lambda, 1.0, 30.0, 42);
+    let plan = match Planner::new(&spec, &profiles).plan(&sample, slo) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    println!("serving {} at λ={lambda} for {duration}s on {backend_kind} backend", spec.name);
+    println!("  config: {}", plan.config.summary(&spec));
+    let backends: Vec<Backend> = match backend_kind {
+        "pjrt" => {
+            let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let manifest = match Manifest::load(&dir) {
+                Ok(m) => std::sync::Arc::new(m),
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return false;
+                }
+            };
+            spec.stages.iter().map(|_| Backend::Pjrt { manifest: manifest.clone() }).collect()
+        }
+        _ => spec
+            .stages
+            .iter()
+            .zip(&plan.config.stages)
+            .map(|(s, c)| Backend::Calibrated {
+                profile: profiles.get(&s.model).get(c.hw).unwrap().clone(),
+            })
+            .collect(),
+    };
+    let live = gamma_trace(lambda, 1.0, duration, 77);
+    let n = live.len();
+    let engine = match ServingEngine::start(&spec, &plan.config, backends) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return false;
+        }
+    };
+    let result = engine.serve_trace(&live, 1.0, 7);
+    println!(
+        "  served {}/{} queries in {:.1}s ({:.1} qps): p50 {:.1} ms  p99 {:.1} ms  attainment {:.2}%",
+        result.latencies.len(),
+        n,
+        result.makespan,
+        result.achieved_qps,
+        stats::quantile(&result.latencies, 0.5) * 1e3,
+        stats::p99(&result.latencies) * 1e3,
+        stats::attainment(&result.latencies, slo) * 100.0
+    );
+    result.latencies.len() == n
+}
+
+fn cmd_experiment(args: &Args) -> bool {
+    let Some(name) = args.positional.first() else {
+        eprintln!("experiment id required: {:?}", inferline::experiments::ALL_FIGURES);
+        return false;
+    };
+    let quick = args.bool("quick");
+    if !inferline::experiments::run_by_name(name, quick) {
+        eprintln!("unknown experiment {name:?}: {:?}", inferline::experiments::ALL_FIGURES);
+        return false;
+    }
+    true
+}
+
+fn cmd_trace(args: &Args) -> bool {
+    let kind = args.get("kind").unwrap_or("gamma");
+    let out = PathBuf::from(args.get("out").unwrap_or("trace.txt"));
+    let trace: Trace = match kind {
+        "gamma" => gamma_trace(
+            args.f64("lambda", 100.0),
+            args.f64("cv", 1.0),
+            args.f64("duration", 60.0),
+            args.f64("seed", 42.0) as u64,
+        ),
+        "big-spike" => autoscale::big_spike_trace(args.f64("seed", 42.0) as u64),
+        "instant-spike" => autoscale::instant_spike_trace(args.f64("seed", 42.0) as u64),
+        other => {
+            eprintln!("unknown trace kind {other:?}");
+            return false;
+        }
+    };
+    println!(
+        "generated {} arrivals over {:.0}s (mean {:.1} qps, cv {:.2})",
+        trace.len(),
+        trace.duration(),
+        trace.mean_rate(),
+        trace.cv()
+    );
+    match trace.save(&out) {
+        Ok(()) => {
+            println!("wrote {}", out.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            false
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Model performance profiles (paper §4.1).
+//!
+//! A profile captures, per (model, hardware) pair, batch-processing
+//! latency as a function of batch size; throughput follows as b / L(b).
+//! The Profiler measures each model *in isolation* — this is sound because
+//! models are compute-intensive and side-effect free, so stage profiles
+//! compose through the Estimator's queueing simulation (paper §8, last ¶).
+//!
+//! Two sources feed profiles:
+//!  * [`analytic`] — the paper-calibrated profile families for the zoo on
+//!    CPU / K80 / V100 tiers (DESIGN.md §3 substitution);
+//!  * the empirical PJRT profiler in `crate::serving::profiler_physical`
+//!    which measures the real HLO executables on this machine's CPU.
+
+pub mod analytic;
+
+use std::collections::BTreeMap;
+
+use crate::hardware::Hardware;
+use crate::util::json::Json;
+
+/// Batch sizes the planner may assign (powers of two, paper §4.3:
+/// "the batch size is increased by factors of two").
+pub const BATCH_CANDIDATES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Latency-vs-batch profile of one model on one hardware tier.
+///
+/// Stored as measured points `(batch, seconds)`; queries interpolate
+/// linearly between points (batch latency curves are near-affine — Fig 3)
+/// and extrapolate the final slope beyond the largest point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchProfile {
+    /// Sorted by batch size; non-empty; latencies strictly positive.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl BatchProfile {
+    pub fn new(mut points: Vec<(usize, f64)>) -> Self {
+        assert!(!points.is_empty(), "empty profile");
+        points.sort_by_key(|p| p.0);
+        points.dedup_by_key(|p| p.0);
+        assert!(points.iter().all(|&(b, l)| b > 0 && l > 0.0), "bad profile point");
+        BatchProfile { points }
+    }
+
+    /// Affine profile L(b) = alpha + beta * b sampled at the candidate
+    /// batch sizes up to `max_batch`.
+    pub fn affine(alpha: f64, beta: f64, max_batch: usize) -> Self {
+        let points = BATCH_CANDIDATES
+            .iter()
+            .copied()
+            .filter(|&b| b <= max_batch)
+            .map(|b| (b, alpha + beta * b as f64))
+            .collect();
+        BatchProfile::new(points)
+    }
+
+    /// Largest profiled batch size (the planner will not exceed it).
+    pub fn max_batch(&self) -> usize {
+        self.points.last().unwrap().0
+    }
+
+    /// Batch-processing latency in seconds for a batch of `b` queries.
+    pub fn latency(&self, b: usize) -> f64 {
+        assert!(b > 0);
+        let pts = &self.points;
+        if b <= pts[0].0 {
+            // Profiles always include batch 1 in practice; for a smaller
+            // batch than the smallest point, the point's latency is a
+            // conservative (safe) upper bound.
+            return pts[0].1;
+        }
+        for w in pts.windows(2) {
+            let ((b0, l0), (b1, l1)) = (w[0], w[1]);
+            if b <= b1 {
+                let frac = (b - b0) as f64 / (b1 - b0) as f64;
+                return l0 + frac * (l1 - l0);
+            }
+        }
+        // Extrapolate using the last segment's slope.
+        let n = pts.len();
+        let (b0, l0) = pts[n - 2];
+        let (b1, l1) = pts[n - 1];
+        let slope = (l1 - l0) / (b1 - b0) as f64;
+        l1 + slope * (b - b1) as f64
+    }
+
+    /// Steady-state throughput (queries/sec) of one replica at batch `b`.
+    pub fn throughput(&self, b: usize) -> f64 {
+        b as f64 / self.latency(b)
+    }
+
+    /// Max throughput over candidate batch sizes (the μ_m the Tuner uses).
+    pub fn max_throughput(&self) -> f64 {
+        BATCH_CANDIDATES
+            .iter()
+            .copied()
+            .filter(|&b| b <= self.max_batch())
+            .map(|b| self.throughput(b))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Profiles of one model across hardware tiers.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelProfile {
+    pub per_hw: BTreeMap<Hardware, BatchProfile>,
+}
+
+impl ModelProfile {
+    pub fn get(&self, hw: Hardware) -> Option<&BatchProfile> {
+        self.per_hw.get(&hw)
+    }
+
+    /// Lowest-latency hardware at batch size 1 (Algorithm 1's
+    /// `BestHardware`). Ties break toward the cheaper tier.
+    pub fn best_hardware(&self) -> Hardware {
+        *self
+            .per_hw
+            .iter()
+            .min_by(|(ha, pa), (hb, pb)| {
+                pa.latency(1)
+                    .partial_cmp(&pb.latency(1))
+                    .unwrap()
+                    .then(ha.cost_per_hour().partial_cmp(&hb.cost_per_hour()).unwrap())
+            })
+            .expect("model has no profiles")
+            .0
+    }
+
+    /// Hardware tiers cheaper than `hw` that have a profile, costliest
+    /// first (the downgrade search order).
+    pub fn downgrades_from(&self, hw: Hardware) -> Vec<Hardware> {
+        let mut out = Vec::new();
+        let mut cur = hw;
+        while let Some(next) = cur.downgrade() {
+            if self.per_hw.contains_key(&next) {
+                out.push(next);
+            }
+            cur = next;
+        }
+        out
+    }
+}
+
+/// Profiles for every model referenced by a pipeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProfileSet {
+    pub models: BTreeMap<String, ModelProfile>,
+}
+
+impl ProfileSet {
+    pub fn get(&self, model: &str) -> &ModelProfile {
+        self.models
+            .get(model)
+            .unwrap_or_else(|| panic!("no profile for model {model:?}"))
+    }
+
+    pub fn insert(&mut self, model: &str, hw: Hardware, profile: BatchProfile) {
+        self.models
+            .entry(model.to_string())
+            .or_default()
+            .per_hw
+            .insert(hw, profile);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut models = Json::obj();
+        for (name, mp) in &self.models {
+            let mut hw_obj = Json::obj();
+            for (hw, bp) in &mp.per_hw {
+                let pts: Vec<Json> = bp
+                    .points
+                    .iter()
+                    .map(|&(b, l)| Json::Arr(vec![Json::Num(b as f64), Json::Num(l)]))
+                    .collect();
+                hw_obj.set(hw.id(), Json::Arr(pts));
+            }
+            models.set(name, hw_obj);
+        }
+        let mut root = Json::obj();
+        root.set("models", models);
+        root
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let mut set = ProfileSet::default();
+        let models = v.req("models").as_obj().ok_or("models must be object")?;
+        for (name, hw_obj) in models {
+            for (hw_id, pts) in hw_obj.as_obj().ok_or("hw map must be object")? {
+                let hw = Hardware::from_id(hw_id).ok_or_else(|| format!("bad hw {hw_id}"))?;
+                let points = pts
+                    .as_arr()
+                    .ok_or("points must be array")?
+                    .iter()
+                    .map(|p| {
+                        let a = p.as_arr().ok_or("point must be [b, l]")?;
+                        Ok((
+                            a[0].as_usize().ok_or("batch")?,
+                            a[1].as_f64().ok_or("latency")?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                set.insert(name, hw, BatchProfile::new(points));
+            }
+        }
+        Ok(set)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_profile_latency_and_throughput() {
+        let p = BatchProfile::affine(0.010, 0.002, 32);
+        assert!((p.latency(1) - 0.012).abs() < 1e-12);
+        assert!((p.latency(32) - 0.074).abs() < 1e-12);
+        // Interpolation at a non-candidate batch.
+        assert!((p.latency(3) - 0.016).abs() < 1e-12);
+        // Extrapolation beyond the table keeps the slope.
+        assert!((p.latency(64) - 0.138).abs() < 1e-9);
+        assert!(p.throughput(32) > p.throughput(1));
+    }
+
+    #[test]
+    fn throughput_has_diminishing_returns() {
+        let p = BatchProfile::affine(0.05, 0.001, 64);
+        let gains: Vec<f64> = [1usize, 2, 4, 8, 16, 32]
+            .windows(2)
+            .map(|w| p.throughput(w[1]) / p.throughput(w[0]))
+            .collect();
+        for pair in gains.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-9, "gains should shrink: {gains:?}");
+        }
+    }
+
+    #[test]
+    fn max_throughput_picks_best_batch() {
+        let p = BatchProfile::affine(0.05, 0.001, 32);
+        assert!((p.max_throughput() - p.throughput(32)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_hardware_prefers_lower_latency() {
+        let mut mp = ModelProfile::default();
+        mp.per_hw.insert(Hardware::Cpu, BatchProfile::affine(0.2, 0.1, 32));
+        mp.per_hw.insert(Hardware::GpuK80, BatchProfile::affine(0.01, 0.002, 32));
+        assert_eq!(mp.best_hardware(), Hardware::GpuK80);
+    }
+
+    #[test]
+    fn best_hardware_tie_breaks_cheaper() {
+        let mut mp = ModelProfile::default();
+        mp.per_hw.insert(Hardware::Cpu, BatchProfile::affine(0.01, 0.002, 32));
+        mp.per_hw.insert(Hardware::GpuK80, BatchProfile::affine(0.01, 0.002, 32));
+        assert_eq!(mp.best_hardware(), Hardware::Cpu);
+    }
+
+    #[test]
+    fn downgrade_order() {
+        let mut mp = ModelProfile::default();
+        for hw in Hardware::ALL {
+            mp.per_hw.insert(hw, BatchProfile::affine(0.01, 0.001, 32));
+        }
+        assert_eq!(
+            mp.downgrades_from(Hardware::GpuV100),
+            vec![Hardware::GpuK80, Hardware::Cpu]
+        );
+        assert!(mp.downgrades_from(Hardware::Cpu).is_empty());
+    }
+
+    #[test]
+    fn profile_set_json_roundtrip() {
+        let mut set = ProfileSet::default();
+        set.insert("resnet", Hardware::GpuK80, BatchProfile::affine(0.045, 0.018, 32));
+        set.insert("resnet", Hardware::Cpu, BatchProfile::affine(0.1, 1.5, 8));
+        let j = set.to_json();
+        assert_eq!(ProfileSet::from_json(&j).unwrap(), set);
+    }
+
+    #[test]
+    fn profile_set_file_roundtrip() {
+        let mut set = ProfileSet::default();
+        set.insert("m", Hardware::Cpu, BatchProfile::affine(0.01, 0.001, 16));
+        let dir = std::env::temp_dir().join("inferline-test-profiles");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        set.save(&path).unwrap();
+        assert_eq!(ProfileSet::load(&path).unwrap(), set);
+    }
+
+    #[test]
+    #[should_panic(expected = "no profile")]
+    fn missing_model_panics() {
+        ProfileSet::default().get("ghost");
+    }
+}

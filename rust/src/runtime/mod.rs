@@ -1,0 +1,302 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs on
+//! the request path: `make artifacts` lowers the L2 JAX models (with their
+//! L1 Pallas kernels inlined) to HLO text once; from then on the rust
+//! binary is self-contained.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto` — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! PJRT wrapper objects hold raw pointers and are not `Send`, so each
+//! serving replica worker owns its *own* [`ReplicaExecutor`] (client +
+//! compiled executables), constructed on the worker thread.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+/// One model's artifact metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub description: String,
+    /// batch size -> artifact file name.
+    pub batches: BTreeMap<usize, String>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in v
+            .req("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest.models must be an object"))?
+        {
+            let mut batches = BTreeMap::new();
+            for (b, meta) in entry
+                .req("batches")
+                .as_obj()
+                .ok_or_else(|| anyhow!("batches must be an object"))?
+            {
+                batches.insert(
+                    b.parse::<usize>().context("batch key")?,
+                    meta.req("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file"))?
+                        .to_string(),
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    in_dim: entry.req("in_dim").as_usize().ok_or_else(|| anyhow!("in_dim"))?,
+                    out_dim: entry.req("out_dim").as_usize().ok_or_else(|| anyhow!("out_dim"))?,
+                    description: entry
+                        .get("description")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    batches,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// The dyadic artifact batch sizes available for a model, ascending.
+    pub fn batch_sizes(&self, name: &str) -> Result<Vec<usize>> {
+        Ok(self.model(name)?.batches.keys().copied().collect())
+    }
+
+    /// Smallest artifact batch size >= n (Clipper-style dyadic rounding),
+    /// or the largest available if n exceeds all.
+    pub fn round_batch(&self, name: &str, n: usize) -> Result<usize> {
+        let meta = self.model(name)?;
+        Ok(meta
+            .batches
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *meta.batches.keys().last().unwrap()))
+    }
+}
+
+/// A per-thread executor for one model: owns a PJRT client and the
+/// compiled executables for every artifact batch size up to the replica's
+/// configured maximum. A batch of n queries runs through the smallest
+/// executable with batch >= n.
+pub struct ReplicaExecutor {
+    model: String,
+    in_dim: usize,
+    out_dim: usize,
+    /// (batch size, executable, prebuilt input literal) ascending by batch.
+    execs: Vec<(usize, xla::PjRtLoadedExecutable, xla::Literal)>,
+}
+
+impl ReplicaExecutor {
+    /// Compile the model's artifacts for all batch sizes <= `max_batch`
+    /// (plus the smallest one above, for rounding) on this thread.
+    pub fn new(manifest: &Manifest, model: &str, max_batch: usize) -> Result<Self> {
+        let meta = manifest.model(model)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut execs = Vec::new();
+        let cap = manifest.round_batch(model, max_batch)?;
+        for (&b, file) in &meta.batches {
+            if b > cap {
+                break;
+            }
+            let path = manifest.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+            // Prebuilt deterministic input (contents are irrelevant to the
+            // serving measurements; shape must match the artifact).
+            let data: Vec<f32> = (0..b * meta.in_dim)
+                .map(|i| ((i % 97) as f32) * 0.01 - 0.5)
+                .collect();
+            let lit = xla::Literal::vec1(&data)
+                .reshape(&[b as i64, meta.in_dim as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            execs.push((b, exe, lit));
+        }
+        if execs.is_empty() {
+            bail!("no artifacts for model {model} (max_batch {max_batch})");
+        }
+        Ok(ReplicaExecutor {
+            model: model.to_string(),
+            in_dim: meta.in_dim,
+            out_dim: meta.out_dim,
+            execs,
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Largest artifact batch size this executor holds.
+    pub fn max_batch(&self) -> usize {
+        self.execs.last().map(|e| e.0).unwrap_or(1)
+    }
+
+    /// Execute a batch of `n` queries with the prebuilt input, returning
+    /// the executable batch size used and the first output element (a
+    /// liveness check that the computation really ran).
+    pub fn run(&self, n: usize) -> Result<(usize, f32)> {
+        let (b, exe, lit) = self
+            .execs
+            .iter()
+            .find(|(b, _, _)| *b >= n)
+            .or_else(|| self.execs.last())
+            .ok_or_else(|| anyhow!("no executable"))?;
+        let result = exe
+            .execute::<xla::Literal>(std::slice::from_ref(lit))
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if values.len() != b * self.out_dim {
+            bail!(
+                "{}: output len {} != {} x {}",
+                self.model,
+                values.len(),
+                b,
+                self.out_dim
+            );
+        }
+        Ok((*b, values[0]))
+    }
+
+    /// Execute with caller-provided input data (`n x in_dim` f32s).
+    pub fn run_with_input(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let n = input.len() / self.in_dim;
+        anyhow::ensure!(n * self.in_dim == input.len(), "ragged input");
+        let (b, exe, _) = self
+            .execs
+            .iter()
+            .find(|(b, _, _)| *b >= n)
+            .or_else(|| self.execs.last())
+            .ok_or_else(|| anyhow!("no executable"))?;
+        // Pad to the executable's batch.
+        let mut data = input.to_vec();
+        data.resize(b * self.in_dim, 0.0);
+        let lit = xla::Literal::vec1(&data)
+            .reshape(&[*b as i64, self.in_dim as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(values[..n * self.out_dim].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads_and_covers_zoo() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for model in ["preprocess", "resnet_lite", "langid", "nmt_lite", "tf_fast", "tf_slow"] {
+            let meta = m.model(model).unwrap();
+            assert!(!meta.batches.is_empty(), "{model}");
+        }
+    }
+
+    #[test]
+    fn round_batch_is_dyadic_ceiling() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.round_batch("langid", 3).unwrap(), 4);
+        assert_eq!(m.round_batch("langid", 8).unwrap(), 8);
+        assert_eq!(m.round_batch("langid", 1000).unwrap(), 32);
+    }
+
+    #[test]
+    fn executor_runs_real_model() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let exec = ReplicaExecutor::new(&m, "langid", 4).unwrap();
+        let (b, probe) = exec.run(3).unwrap();
+        assert_eq!(b, 4);
+        assert!(probe.is_finite());
+    }
+
+    #[test]
+    fn executor_roundtrips_real_input() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let exec = ReplicaExecutor::new(&m, "tf_fast", 2).unwrap();
+        let input = vec![0.1f32; 2 * exec.in_dim()];
+        let out = exec.run_with_input(&input).unwrap();
+        assert_eq!(out.len(), 2 * 16);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Identical rows in, identical rows out (determinism end to end).
+        assert_eq!(out[..16], out[16..32]);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.model("ghost").is_err());
+        assert!(ReplicaExecutor::new(&m, "ghost", 1).is_err());
+    }
+}

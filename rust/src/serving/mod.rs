@@ -1,0 +1,20 @@
+//! Physical serving plane (Clipper-like substrate, paper §3).
+//!
+//! * [`queue`] — centralized batched FIFO per stage;
+//! * [`engine`] — pipeline DAG execution over replica worker threads with
+//!   real PJRT model execution ([`Backend::Pjrt`]) or calibrated
+//!   stand-ins for absent accelerator tiers ([`Backend::Calibrated`]);
+//! * [`profile`] — the paper's Profiler measuring real per-model
+//!   (batch → latency) curves through PJRT.
+//!
+//! The physical plane validates the Estimator's fidelity (Fig 8) and
+//! powers the end-to-end examples; hour-long 300-QPS experiments run on
+//! the virtual plane (`crate::simulator`) exactly as the paper's own
+//! evaluation methodology prescribes (its Estimator is trusted after
+//! validation, DESIGN.md §3).
+
+pub mod engine;
+pub mod profile;
+pub mod queue;
+
+pub use engine::{Backend, ServeResult, ServingEngine};

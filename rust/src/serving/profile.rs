@@ -1,0 +1,98 @@
+//! Physical Profiler (paper §4.1): measure each model *in isolation* as a
+//! function of batch size by executing its real HLO artifacts through
+//! PJRT on this machine's CPU.
+//!
+//! "Profiling only needs to be performed once for each hardware and batch
+//! size pair and is re-used in subsequent runs of the Planner" — the
+//! results are persisted as a [`ProfileSet`] JSON (hardware tier `cpu`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::hardware::Hardware;
+use crate::profiler::{BatchProfile, ProfileSet};
+use crate::runtime::{Manifest, ReplicaExecutor};
+
+/// Measurement controls.
+#[derive(Debug, Clone)]
+pub struct ProfileOptions {
+    pub warmup_runs: usize,
+    pub measure_runs: usize,
+    /// Cap on batch sizes to profile (None = all artifact sizes).
+    pub max_batch: Option<usize>,
+}
+
+impl Default for ProfileOptions {
+    fn default() -> Self {
+        ProfileOptions { warmup_runs: 3, measure_runs: 9, max_batch: None }
+    }
+}
+
+/// Profile one model across its artifact batch sizes. Returns measured
+/// (batch, median latency seconds) points.
+pub fn profile_model(
+    manifest: &Manifest,
+    model: &str,
+    opts: &ProfileOptions,
+) -> Result<BatchProfile> {
+    let sizes = manifest.batch_sizes(model)?;
+    let cap = opts.max_batch.unwrap_or(usize::MAX);
+    let executor = ReplicaExecutor::new(manifest, model, sizes.iter().copied().max().unwrap_or(1))?;
+    let mut points = Vec::new();
+    for &b in sizes.iter().filter(|&&b| b <= cap) {
+        for _ in 0..opts.warmup_runs {
+            executor.run(b)?;
+        }
+        let mut times = Vec::with_capacity(opts.measure_runs);
+        for _ in 0..opts.measure_runs {
+            let t0 = Instant::now();
+            executor.run(b)?;
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        points.push((b, median.max(1e-7)));
+    }
+    Ok(BatchProfile::new(points))
+}
+
+/// Profile every model in the manifest into a CPU-tier [`ProfileSet`].
+pub fn profile_all(manifest: &Manifest, opts: &ProfileOptions) -> Result<ProfileSet> {
+    let mut set = ProfileSet::default();
+    for model in manifest.models.keys() {
+        let profile = profile_model(manifest, model, opts)?;
+        set.insert(model, Hardware::Cpu, profile);
+    }
+    Ok(set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn profiles_have_positive_increasing_latency() {
+        let Some(m) = manifest() else { return };
+        let opts = ProfileOptions { warmup_runs: 1, measure_runs: 3, max_batch: Some(8) };
+        let p = profile_model(&m, "tf_fast", &opts).unwrap();
+        assert!(p.points.len() >= 3);
+        assert!(p.points.iter().all(|&(_, l)| l > 0.0));
+        // Throughput at batch 8 should beat batch 1 for a GEMM model.
+        assert!(p.throughput(8) > p.throughput(1), "{:?}", p.points);
+    }
+
+    #[test]
+    fn profile_all_covers_manifest() {
+        let Some(m) = manifest() else { return };
+        let opts = ProfileOptions { warmup_runs: 0, measure_runs: 1, max_batch: Some(2) };
+        let set = profile_all(&m, &opts).unwrap();
+        assert_eq!(set.models.len(), m.models.len());
+    }
+}

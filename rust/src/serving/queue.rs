@@ -1,0 +1,177 @@
+//! Centralized batched queue: the queueing discipline InferLine requires
+//! of the underlying serving framework (paper §3, requirement 3).
+//!
+//! One FIFO per stage; replica workers block on it and take up to their
+//! maximum batch size the moment they are free (batch-at-a-time). This is
+//! the same policy the Estimator simulates, which is what makes the
+//! simulation faithful (paper §4.2: "deterministic behavior of queries
+//! flowing through a centralized batched queueing system").
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A blocking MPMC batched FIFO.
+pub struct CentralQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    cv: Condvar,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for CentralQueue<T> {
+    fn default() -> Self {
+        CentralQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl<T> CentralQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue one item. Returns false if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return false;
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Blocking batched pop: waits until at least one item is available
+    /// (or the queue closes) and returns up to `max_batch` items.
+    /// `poll` bounds the wait per iteration so workers can observe
+    /// retirement requests.
+    pub fn pop_batch(&self, max_batch: usize, poll: Duration) -> Option<Vec<T>> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if !q.items.is_empty() {
+                let n = max_batch.max(1).min(q.items.len());
+                return Some(q.items.drain(..n).collect());
+            }
+            if q.closed {
+                return None;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(q, poll).unwrap();
+            q = guard;
+            if timeout.timed_out() && q.items.is_empty() && !q.closed {
+                // Let the worker check for retirement, then come back.
+                return Some(Vec::new());
+            }
+        }
+    }
+
+    /// Instantaneous depth.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: wake all waiters; subsequent pushes fail, pops drain then
+    /// return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn batched_pop_takes_up_to_max() {
+        let q = CentralQueue::new();
+        for i in 0..10 {
+            assert!(q.push(i));
+        }
+        let batch = q.pop_batch(4, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = q.pop_batch(100, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 6);
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(CentralQueue::new());
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            loop {
+                let b = q2.pop_batch(1, Duration::from_millis(50)).unwrap();
+                if !b.is_empty() {
+                    return b[0];
+                }
+            }
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42);
+        assert_eq!(t.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn close_wakes_and_drains() {
+        let q: CentralQueue<u32> = CentralQueue::new();
+        q.push(1);
+        q.close();
+        assert!(!q.push(2));
+        // Drain remaining then None.
+        assert_eq!(q.pop_batch(8, Duration::from_millis(5)).unwrap(), vec![1]);
+        assert!(q.pop_batch(8, Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_items() {
+        let q = Arc::new(CentralQueue::new());
+        let mut producers = Vec::new();
+        for p in 0..4 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    q.push(p * 1000 + i);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(batch) = q.pop_batch(7, Duration::from_millis(20)) {
+                    got.extend(batch);
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        // Give consumers a moment to drain, then close.
+        while !q.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort();
+        assert_eq!(all.len(), 2000);
+        all.dedup();
+        assert_eq!(all.len(), 2000, "duplicates detected");
+    }
+}

@@ -1,0 +1,69 @@
+//! Controlled simulation: a controller (InferLine Tuner or a baseline
+//! autoscaler) observes the arrival stream and adjusts per-stage
+//! replication while queries flow, with realistic replica activation
+//! delays (paper §5, §7.1 "High-Frequency Tuning" experiments).
+
+use crate::config::{PipelineConfig, PipelineSpec};
+use crate::profiler::ProfileSet;
+use crate::workload::Trace;
+
+use super::engine::{Engine, SimParams, SimResult};
+
+/// Scaling actions a controller may issue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControlAction {
+    /// Set the provisioned replica target for one stage. Increases incur
+    /// the activation delay; decreases take effect immediately.
+    SetReplicas { stage: usize, replicas: usize },
+    /// Halt the entire pipeline for `duration` seconds (models Flink-style
+    /// stop–savepoint–restart reconfiguration; used by the DS2 baseline).
+    Halt { duration: f64 },
+}
+
+/// Pipeline state snapshot handed to the controller each tick.
+#[derive(Debug, Clone)]
+pub struct ControlState {
+    pub time: f64,
+    /// Per-stage provisioned replicas (online + pending − retiring).
+    pub provisioned: Vec<usize>,
+    /// Per-stage instantaneous queue depth.
+    pub queue_depths: Vec<usize>,
+    /// Per-stage busy replica count.
+    pub busy: Vec<usize>,
+}
+
+/// A high-frequency controller in the simulation loop.
+pub trait Controller {
+    /// Called on every query arrival (the Tuner's traffic monitoring tap:
+    /// "it observes the incoming arrival trace streamed to it by the
+    /// centralized queueing system", §3).
+    fn on_arrival(&mut self, t: f64);
+
+    /// Called every `control_interval` simulated seconds; returns scaling
+    /// actions to apply now.
+    fn on_tick(&mut self, t: f64, state: &ControlState) -> Vec<ControlAction>;
+}
+
+/// Run the pipeline with a controller in the loop. The returned
+/// [`SimResult`] carries the cost integral and replica timeline in
+/// addition to per-query latencies.
+pub fn simulate_controlled(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    initial: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+    controller: &mut dyn Controller,
+) -> SimResult {
+    Engine::new(spec, profiles, initial, params).run(trace, initial, Some(controller))
+}
+
+/// A controller that never acts (for A/B comparisons of "Planner only").
+pub struct NullController;
+
+impl Controller for NullController {
+    fn on_arrival(&mut self, _t: f64) {}
+    fn on_tick(&mut self, _t: f64, _state: &ControlState) -> Vec<ControlAction> {
+        Vec::new()
+    }
+}

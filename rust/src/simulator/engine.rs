@@ -1,0 +1,578 @@
+//! Core discrete-event engine shared by the open-loop Estimator and the
+//! controlled (tuner-in-the-loop) simulation.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::{PipelineConfig, PipelineSpec};
+use crate::profiler::ProfileSet;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+use super::control::{ControlAction, ControlState, Controller};
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Seed for the per-query conditional-routing RNG. Fixed seed =>
+    /// identical routing across configurations (paper §6: traces are
+    /// "reused across all comparison points").
+    pub routing_seed: u64,
+    /// Seconds a newly requested replica takes to come online (paper §5:
+    /// "the 5 second activation time of spinning up new replicas").
+    pub replica_activation_delay: f64,
+    /// Controller tick interval (controlled mode only).
+    pub control_interval: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            routing_seed: 0x1FE7_11E5,
+            replica_activation_delay: 5.0,
+            control_interval: 1.0,
+        }
+    }
+}
+
+/// Per-stage simulation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    /// Largest instantaneous queue depth observed.
+    pub max_queue: usize,
+    /// Number of batches executed.
+    pub batches: usize,
+    /// Total queries processed.
+    pub queries: usize,
+    /// Aggregate replica busy time (seconds x replicas).
+    pub busy_time: f64,
+    /// Mean batch size actually formed.
+    pub mean_batch: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// End-to-end latency of every completed query (completion order).
+    pub latencies: Vec<f64>,
+    /// (completion time, latency) pairs, completion order.
+    pub completions: Vec<(f64, f64)>,
+    /// Per-stage statistics.
+    pub stage_stats: Vec<StageStats>,
+    /// Simulated time when the last query completed.
+    pub horizon: f64,
+    /// Dollars spent (controlled mode; open-loop = config cost x horizon).
+    pub cost_dollars: f64,
+    /// (time, total provisioned replicas) timeline (controlled mode).
+    pub replica_timeline: Vec<(f64, usize)>,
+}
+
+impl SimResult {
+    /// SLO miss rate over all completed queries.
+    pub fn miss_rate(&self, slo: f64) -> f64 {
+        1.0 - crate::util::stats::attainment(&self.latencies, slo)
+    }
+
+    /// P99 miss-rate series over fixed windows of completion time:
+    /// (window end, miss rate). Used by the Fig 6/7/10-12 plots.
+    pub fn miss_rate_series(&self, slo: f64, window: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        let mut idx = 0usize;
+        let mut w_end = window;
+        while idx < self.completions.len() {
+            let mut total = 0usize;
+            let mut missed = 0usize;
+            while idx < self.completions.len() && self.completions[idx].0 <= w_end {
+                total += 1;
+                if self.completions[idx].1 > slo {
+                    missed += 1;
+                }
+                idx += 1;
+            }
+            out.push((w_end, if total == 0 { 0.0 } else { missed as f64 / total as f64 }));
+            w_end += window;
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    /// Query lands in a stage queue (after RPC hop).
+    Enqueue { stage: u16, qid: u32 },
+    /// A replica finished a batch at a stage.
+    BatchDone { stage: u16, qids: Vec<u32> },
+    /// A provisioned replica comes online.
+    ReplicaUp { stage: u16 },
+    /// Controller tick (controlled mode).
+    ControlTick,
+    /// End of a DS2-style pipeline halt: dispatch everywhere.
+    Resume,
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    // Reverse ordering: BinaryHeap is a max-heap, we want earliest first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct StageState {
+    queue: VecDeque<u32>,
+    idle: usize,
+    /// Online replicas (busy + idle).
+    online: usize,
+    /// Replicas requested but not yet online.
+    pending: usize,
+    /// Busy replicas that must retire upon finishing their batch.
+    retire_debt: usize,
+    /// Pending activations cancelled by a scale-down before coming online.
+    pending_cancel: usize,
+    batch: usize,
+    /// latency_table[n] = batch-processing latency for a batch of n.
+    latency_table: Vec<f64>,
+    stats: super::StageStats,
+    batch_size_sum: usize,
+}
+
+impl StageState {
+    fn provisioned(&self) -> usize {
+        self.online + self.pending - self.retire_debt.min(self.online)
+    }
+}
+
+#[derive(Clone, Copy)]
+struct QueryState {
+    arrival: f64,
+    /// Bitmask of visited stages (pipelines are <= 32 stages).
+    visited: u32,
+    /// Stage completions still outstanding.
+    remaining: u8,
+}
+
+/// The simulation engine. Public entry points are [`simulate`] (open loop)
+/// and [`super::control::simulate_controlled`].
+pub(super) struct Engine<'a> {
+    spec: &'a PipelineSpec,
+    params: &'a SimParams,
+    stages: Vec<StageState>,
+    queries: Vec<QueryState>,
+    events: BinaryHeap<Event>,
+    seq: u64,
+    rng: Rng,
+    rpc: f64,
+    /// DS2-style halt: no dispatch until this time.
+    halted_until: f64,
+    /// Free list of batch qid buffers (perf: recycles the per-batch Vec;
+    /// one allocation per *concurrent* batch instead of per batch).
+    qid_pool: Vec<Vec<u32>>,
+    result: SimResult,
+    // Cost accounting (controlled mode).
+    last_cost_time: f64,
+    cost_rate_per_hour: f64,
+}
+
+impl<'a> Engine<'a> {
+    pub(super) fn new(
+        spec: &'a PipelineSpec,
+        profiles: &'a ProfileSet,
+        config: &PipelineConfig,
+        params: &'a SimParams,
+    ) -> Self {
+        debug_assert!(spec.stages.len() <= 32, "visited bitmask limit");
+        assert_eq!(spec.stages.len(), config.stages.len());
+        let stages = spec
+            .stages
+            .iter()
+            .zip(&config.stages)
+            .map(|(s, c)| {
+                let prof = profiles
+                    .get(&s.model)
+                    .get(c.hw)
+                    .unwrap_or_else(|| panic!("no {} profile for {}", c.hw, s.model));
+                assert!(c.batch >= 1 && c.replicas >= 1, "bad stage config");
+                let latency_table: Vec<f64> =
+                    (0..=c.batch).map(|n| if n == 0 { 0.0 } else { prof.latency(n) }).collect();
+                StageState {
+                    queue: VecDeque::new(),
+                    idle: c.replicas,
+                    online: c.replicas,
+                    pending: 0,
+                    retire_debt: 0,
+                    pending_cancel: 0,
+                    batch: c.batch,
+                    latency_table,
+                    stats: super::StageStats::default(),
+                    batch_size_sum: 0,
+                }
+            })
+            .collect();
+        let cost0: f64 = config.cost_per_hour();
+        Engine {
+            spec,
+            params,
+            stages,
+            queries: Vec::new(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            rng: Rng::new(params.routing_seed),
+            rpc: spec.framework.rpc_overhead(),
+            halted_until: 0.0,
+            qid_pool: Vec::new(),
+            result: SimResult {
+                latencies: Vec::new(),
+                completions: Vec::new(),
+                stage_stats: Vec::new(),
+                horizon: 0.0,
+                cost_dollars: 0.0,
+                replica_timeline: Vec::new(),
+            },
+            last_cost_time: 0.0,
+            cost_rate_per_hour: cost0,
+        }
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Event { time, seq: self.seq, kind });
+    }
+
+    fn seed_arrivals(&mut self, trace: &Trace) {
+        self.queries.reserve(trace.len());
+        self.result.latencies.reserve(trace.len());
+        self.result.completions.reserve(trace.len());
+        // Pre-resolve edge probabilities once (perf: avoids re-deriving
+        // conditional probabilities 2x per query).
+        let edges: Vec<Vec<(usize, f64)>> = self
+            .spec
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                st.children
+                    .iter()
+                    .map(|&c| (c, self.spec.edge_probability(s, c)))
+                    .collect()
+            })
+            .collect();
+        // One reusable DFS stack for all queries (perf: was one Vec
+        // allocation per query).
+        let mut stack: Vec<usize> = Vec::with_capacity(self.spec.stages.len());
+        for (i, &t) in trace.arrivals.iter().enumerate() {
+            // Sample this query's visit set from the scale factors with a
+            // per-query forked RNG (deterministic routing).
+            let mut q_rng = self.rng.fork(i as u64);
+            let mut visited: u32 = 0;
+            let mut remaining: u8 = 0;
+            stack.clear();
+            stack.extend_from_slice(&self.spec.roots);
+            while let Some(s) = stack.pop() {
+                visited |= 1 << s;
+                remaining += 1;
+                for &(c, p) in &edges[s] {
+                    if p >= 1.0 || q_rng.bool(p) {
+                        stack.push(c);
+                    }
+                }
+            }
+            self.queries.push(QueryState { arrival: t, visited, remaining });
+        }
+        // NB: arrival *events* are not pushed; run() merges the sorted
+        // arrival list lazily against the heap.
+    }
+
+    fn try_dispatch(&mut self, stage: usize, now: f64) {
+        if now < self.halted_until {
+            return;
+        }
+        loop {
+            {
+                let st = &self.stages[stage];
+                if st.idle == 0 || st.queue.is_empty() {
+                    break;
+                }
+            }
+            // Batch-at-a-time: an idle replica immediately takes up to its
+            // maximum batch size off the centralized queue. The qid buffer
+            // is recycled through the pool (perf: no per-batch allocation).
+            let mut qids = self.qid_pool.pop().unwrap_or_default();
+            qids.clear();
+            let st = &mut self.stages[stage];
+            let n = st.batch.min(st.queue.len());
+            qids.extend(st.queue.drain(..n));
+            st.idle -= 1;
+            let latency = st.latency_table[n];
+            st.stats.batches += 1;
+            st.stats.queries += n;
+            st.batch_size_sum += n;
+            st.stats.busy_time += latency;
+            self.push(now + latency, EventKind::BatchDone { stage: stage as u16, qids });
+        }
+    }
+
+    fn enqueue(&mut self, stage: usize, qid: u32, now: f64) {
+        let st = &mut self.stages[stage];
+        st.queue.push_back(qid);
+        st.stats.max_queue = st.stats.max_queue.max(st.queue.len());
+        self.try_dispatch(stage, now);
+    }
+
+    fn complete_stage_visit(&mut self, stage: usize, qid: u32, now: f64) {
+        // Route to visited children after an RPC hop.
+        for &c in &self.spec.stages[stage].children {
+            if self.queries[qid as usize].visited & (1 << c) != 0 {
+                self.push(now + self.rpc, EventKind::Enqueue { stage: c as u16, qid });
+            }
+        }
+        let q = &mut self.queries[qid as usize];
+        q.remaining -= 1;
+        if q.remaining == 0 {
+            let latency = now - q.arrival;
+            self.result.latencies.push(latency);
+            self.result.completions.push((now, latency));
+        }
+    }
+
+    fn accrue_cost(&mut self, now: f64) {
+        let dt = now - self.last_cost_time;
+        if dt > 0.0 {
+            self.result.cost_dollars += self.cost_rate_per_hour * dt / 3600.0;
+            self.last_cost_time = now;
+        }
+    }
+
+    fn recompute_cost_rate(&mut self, config_hw: &PipelineConfig) {
+        self.cost_rate_per_hour = self
+            .stages
+            .iter()
+            .zip(&config_hw.stages)
+            .map(|(st, c)| st.provisioned() as f64 * c.hw.cost_per_hour())
+            .sum();
+    }
+
+    fn total_provisioned(&self) -> usize {
+        self.stages.iter().map(|s| s.provisioned()).sum()
+    }
+
+    fn apply_action(
+        &mut self,
+        action: &ControlAction,
+        config_hw: &PipelineConfig,
+        now: f64,
+    ) {
+        match *action {
+            ControlAction::SetReplicas { stage, replicas } => {
+                let target = replicas.max(1);
+                self.accrue_cost(now);
+                let current = self.stages[stage].provisioned();
+                if target > current {
+                    let add = target - current;
+                    self.stages[stage].pending += add;
+                    let when = now + self.params.replica_activation_delay;
+                    for _ in 0..add {
+                        self.push(when, EventKind::ReplicaUp { stage: stage as u16 });
+                    }
+                } else if target < current {
+                    // Remove: cancel pending activations first, then idle
+                    // replicas, then mark busy replicas to retire on their
+                    // current batch's completion.
+                    let st = &mut self.stages[stage];
+                    let mut to_remove = current - target;
+                    let cancel = to_remove.min(st.pending);
+                    st.pending -= cancel;
+                    st.pending_cancel += cancel;
+                    to_remove -= cancel;
+                    let idle_remove = to_remove.min(st.idle);
+                    st.idle -= idle_remove;
+                    st.online -= idle_remove;
+                    to_remove -= idle_remove;
+                    st.retire_debt += to_remove;
+                }
+                self.recompute_cost_rate(config_hw);
+                let t = self.total_provisioned();
+                self.result.replica_timeline.push((now, t));
+            }
+            ControlAction::Halt { duration } => {
+                self.halted_until = self.halted_until.max(now + duration);
+                self.push(self.halted_until, EventKind::Resume);
+            }
+        }
+    }
+
+    /// Run to completion. `controller` is optional (open-loop Estimator
+    /// when `None`).
+    pub(super) fn run(
+        mut self,
+        trace: &Trace,
+        config_hw: &PipelineConfig,
+        mut controller: Option<&mut dyn Controller>,
+    ) -> SimResult {
+        self.seed_arrivals(trace);
+        if controller.is_some() {
+            self.push(self.params.control_interval, EventKind::ControlTick);
+            self.result
+                .replica_timeline
+                .push((0.0, self.total_provisioned()));
+        }
+        let mut outstanding = self.queries.len();
+        // Perf: arrivals are already time-sorted, so they are merged
+        // lazily against the event heap instead of being pre-pushed. The
+        // heap then only holds in-flight events (hundreds) instead of the
+        // whole trace (hundreds of thousands) — log-factor win on every
+        // push/pop. Ties break toward the arrival (matching the previous
+        // all-arrivals-pushed-first ordering).
+        let mut next_arrival = 0usize;
+        loop {
+            let arrival_time = trace.arrivals.get(next_arrival).copied();
+            let event_time = self.events.peek().map(|e| e.time);
+            let take_arrival = match (arrival_time, event_time) {
+                (Some(a), Some(e)) => a <= e,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_arrival {
+                let now = arrival_time.unwrap();
+                let qid = next_arrival as u32;
+                next_arrival += 1;
+                if let Some(c) = controller.as_deref_mut() {
+                    c.on_arrival(now);
+                }
+                let roots = self.spec.roots.clone();
+                for r in roots {
+                    self.enqueue(r, qid, now);
+                }
+                self.result.horizon = now;
+                continue;
+            }
+            let ev = self.events.pop().unwrap();
+            let now = ev.time;
+            match ev.kind {
+                EventKind::Enqueue { stage, qid } => {
+                    self.enqueue(stage as usize, qid, now);
+                }
+                EventKind::BatchDone { stage, qids } => {
+                    let s = stage as usize;
+                    {
+                        let st = &mut self.stages[s];
+                        if st.retire_debt > 0 {
+                            st.retire_debt -= 1;
+                            st.online -= 1;
+                        } else {
+                            st.idle += 1;
+                        }
+                    }
+                    for &qid in &qids {
+                        self.complete_stage_visit(s, qid, now);
+                        if self.queries[qid as usize].remaining == 0 {
+                            outstanding -= 1;
+                        }
+                    }
+                    // Recycle the batch buffer.
+                    self.qid_pool.push(qids);
+                    self.try_dispatch(s, now);
+                }
+                EventKind::ReplicaUp { stage } => {
+                    let s = stage as usize;
+                    let st = &mut self.stages[s];
+                    if st.pending_cancel > 0 {
+                        // This activation was cancelled by a scale-down.
+                        st.pending_cancel -= 1;
+                        continue;
+                    }
+                    if st.pending > 0 {
+                        st.pending -= 1;
+                    }
+                    st.online += 1;
+                    st.idle += 1;
+                    self.try_dispatch(s, now);
+                }
+                EventKind::ControlTick => {
+                    if let Some(c) = controller.as_deref_mut() {
+                        let state = ControlState {
+                            time: now,
+                            provisioned: self.stages.iter().map(|s| s.provisioned()).collect(),
+                            queue_depths: self.stages.iter().map(|s| s.queue.len()).collect(),
+                            busy: self
+                                .stages
+                                .iter()
+                                .map(|s| s.online - s.idle)
+                                .collect(),
+                        };
+                        let actions = c.on_tick(now, &state);
+                        for a in &actions {
+                            self.apply_action(a, config_hw, now);
+                        }
+                        if outstanding > 0 {
+                            self.push(now + self.params.control_interval, EventKind::ControlTick);
+                        }
+                    }
+                }
+                EventKind::Resume => {
+                    for s in 0..self.stages.len() {
+                        self.try_dispatch(s, now);
+                    }
+                }
+            }
+            self.result.horizon = now;
+            if outstanding == 0 && controller.is_none() {
+                break;
+            }
+            if outstanding == 0 && self.events.iter().all(|e| matches!(e.kind, EventKind::ControlTick)) {
+                break;
+            }
+        }
+        self.accrue_cost(self.result.horizon);
+        self.result.stage_stats = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut st = s.stats.clone();
+                st.mean_batch = if st.batches == 0 {
+                    0.0
+                } else {
+                    s.batch_size_sum as f64 / st.batches as f64
+                };
+                st
+            })
+            .collect();
+        self.result
+    }
+}
+
+/// Open-loop simulation: the paper's Estimator (§4.2). Simulates the whole
+/// trace through the given static configuration and returns every query's
+/// end-to-end latency.
+pub fn simulate(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+) -> SimResult {
+    let mut result = Engine::new(spec, profiles, config, params).run(trace, config, None);
+    // Open loop: cost = static config rate x makespan.
+    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
+    result
+}

@@ -1,0 +1,88 @@
+//! The Estimator: a continuous-time, discrete-event simulator of the
+//! pipeline (paper §4.2), plus the controlled variant used to evaluate
+//! tuners (§5, §7).
+//!
+//! The simulator models the deterministic behavior of queries flowing
+//! through a centralized batched queueing system: one FIFO queue per
+//! stage, replicas that dequeue up to their configured maximum batch size
+//! the moment they go idle (batch-at-a-time, no artificial delay — the
+//! queueing discipline InferLine requires of the underlying serving
+//! framework, §3), and per-batch service times taken from the stage's
+//! model profile. Conditional control flow is simulated by sampling each
+//! query's visit set from the pipeline's scale factors with a
+//! deterministic per-query RNG, so configuration comparisons see
+//! identical routing.
+//!
+//! Because only discrete events are processed, hours of trace simulate in
+//! milliseconds (validated in `benches/microbench.rs`; the paper makes the
+//! same claim in §4.2).
+
+pub mod control;
+mod engine;
+
+pub use engine::{simulate, SimParams, SimResult, StageStats};
+
+use crate::config::{PipelineConfig, PipelineSpec};
+use crate::profiler::ProfileSet;
+use crate::util::stats;
+use crate::workload::Trace;
+
+/// Estimate the P99 end-to-end latency of `config` on `trace`.
+pub fn estimate_p99(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+) -> f64 {
+    let result = simulate(spec, profiles, config, trace, params);
+    stats::p99(&result.latencies)
+}
+
+/// The planner's feasibility predicate: does the configuration meet the
+/// P99 latency SLO on the sample trace? (Paper §4.3 `Feasible`.)
+pub fn feasible(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+) -> bool {
+    // Cheap necessary condition first: every stage must have enough
+    // aggregate throughput for its share of the mean arrival rate;
+    // otherwise queues diverge and the expensive simulation is wasted.
+    let lambda = trace.mean_rate();
+    if lambda.is_finite() {
+        for (i, stage) in spec.stages.iter().enumerate() {
+            let c = &config.stages[i];
+            let prof = profiles.get(&stage.model).get(c.hw).expect("profile");
+            let capacity = c.replicas as f64 * prof.throughput(c.batch);
+            if capacity < lambda * stage.scale_factor * 0.98 {
+                return false;
+            }
+        }
+    }
+    estimate_p99(spec, profiles, config, trace, params) <= slo
+}
+
+/// Sum of batch-1 processing latencies along the longest root→leaf path —
+/// Algorithm 1's `ServiceTime` lower bound (ignores queueing).
+pub fn service_time(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+) -> f64 {
+    spec.paths()
+        .iter()
+        .map(|path| {
+            path.iter()
+                .map(|&i| {
+                    let c = &config.stages[i];
+                    let prof = profiles.get(&spec.stages[i].model).get(c.hw).expect("profile");
+                    prof.latency(c.batch) + spec.framework.rpc_overhead()
+                })
+                .sum::<f64>()
+        })
+        .fold(0.0, f64::max)
+}

@@ -1,0 +1,227 @@
+//! Traffic envelopes from network calculus (paper §5, Fig 4).
+//!
+//! A traffic envelope maps a set of window sizes ΔT_i to the maximum
+//! number of queries observed in *any* interval of that width — an
+//! arrival-curve characterization that captures burstiness across
+//! multiple timescales simultaneously. Window sizes start at the system
+//! service time T_s and double up to 60 seconds (paper §5).
+
+use std::collections::VecDeque;
+
+/// Window ladder: T_s, 2·T_s, 4·T_s, … capped at 60 s (inclusive).
+pub fn window_ladder(service_time: f64) -> Vec<f64> {
+    let ts = service_time.max(0.010); // floor at 10 ms for sanity
+    let mut windows = Vec::new();
+    let mut w = ts;
+    while w < 60.0 {
+        windows.push(w);
+        w *= 2.0;
+    }
+    windows.push(60.0);
+    windows
+}
+
+/// A traffic envelope over a fixed window ladder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficEnvelope {
+    pub windows: Vec<f64>,
+    /// Max queries observed in any interval of the matching width.
+    pub max_queries: Vec<f64>,
+    /// Effective window widths: min(window, trace duration). A 30 s
+    /// planning trace cannot say anything about 60 s windows; without the
+    /// clamp its 60 s envelope rate would be half the true sustained rate
+    /// and the Tuner would see permanent phantom exceedances.
+    pub effective: Vec<f64>,
+}
+
+impl TrafficEnvelope {
+    /// Build the envelope of an arrival trace over the given windows
+    /// (two-pointer sliding max per window; O(N) per window).
+    pub fn from_arrivals(arrivals: &[f64], windows: &[f64]) -> Self {
+        let duration = match (arrivals.first(), arrivals.last()) {
+            (Some(a), Some(b)) if b > a => b - a,
+            _ => f64::INFINITY,
+        };
+        let mut max_queries = Vec::with_capacity(windows.len());
+        let mut effective = Vec::with_capacity(windows.len());
+        for &w in windows {
+            let mut best = 0usize;
+            let mut lo = 0usize;
+            for hi in 0..arrivals.len() {
+                while arrivals[hi] - arrivals[lo] > w {
+                    lo += 1;
+                }
+                best = best.max(hi - lo + 1);
+            }
+            max_queries.push(best as f64);
+            effective.push(w.min(duration));
+        }
+        TrafficEnvelope { windows: windows.to_vec(), max_queries, effective }
+    }
+
+    /// Arrival rate bound per window: r_i = q_i / ΔT_i (paper §5), with
+    /// ΔT_i clamped to the trace duration.
+    pub fn rates(&self) -> Vec<f64> {
+        self.effective
+            .iter()
+            .zip(&self.max_queries)
+            .map(|(&w, &q)| q / w)
+            .collect()
+    }
+}
+
+/// Streaming monitor of the live arrival process: maintains the recent
+/// arrival timestamps and answers "current max rate per window" queries.
+/// This is the Tuner's detection tap (§5 "Scaling Up").
+#[derive(Debug, Clone)]
+pub struct RateMonitor {
+    windows: Vec<f64>,
+    max_window: f64,
+    buf: VecDeque<f64>,
+}
+
+impl RateMonitor {
+    pub fn new(windows: Vec<f64>) -> Self {
+        let max_window = windows.iter().copied().fold(60.0_f64, f64::max);
+        RateMonitor { windows, max_window, buf: VecDeque::new() }
+    }
+
+    pub fn on_arrival(&mut self, t: f64) {
+        self.buf.push_back(t);
+        // Evict anything older than the largest window.
+        while let Some(&front) = self.buf.front() {
+            if t - front > self.max_window {
+                self.buf.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Arrival count in the half-open interval `(lo, hi]`.
+    pub fn count_between(&self, lo: f64, hi: f64) -> usize {
+        let (a, b) = self.buf.as_slices();
+        let upto = |s: &[f64], x: f64| s.partition_point(|&t| t <= x);
+        (upto(a, hi) + upto(b, hi)).saturating_sub(upto(a, lo) + upto(b, lo))
+    }
+
+    /// Observed arrival count in the trailing window ending at `now`.
+    pub fn count_in(&self, now: f64, window: f64) -> usize {
+        self.count_between(now - window, now)
+    }
+
+    /// Current trailing rates for every window of the ladder.
+    pub fn rates(&self, now: f64) -> Vec<f64> {
+        self.windows
+            .iter()
+            .map(|&w| self.count_in(now, w) as f64 / w)
+            .collect()
+    }
+
+    /// Max arrival rate over the trailing `span` seconds measured with
+    /// `bucket`-second sub-windows (the Tuner's scale-down statistic:
+    /// "max request rate observed over the last 30 seconds, using 5
+    /// second windows", §5).
+    pub fn max_bucket_rate(&self, now: f64, span: f64, bucket: f64) -> f64 {
+        let mut best = 0.0f64;
+        let mut end = now;
+        while end > now - span + bucket - 1e-9 {
+            let cnt = self.count_between(end - bucket, end);
+            best = best.max(cnt as f64 / bucket);
+            end -= bucket;
+        }
+        best
+    }
+
+    pub fn windows(&self) -> &[f64] {
+        &self.windows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gamma_trace;
+
+    #[test]
+    fn ladder_doubles_and_caps_at_60() {
+        let w = window_ladder(0.25);
+        assert!((w[0] - 0.25).abs() < 1e-12);
+        for pair in w.windows(2) {
+            assert!(pair[1] <= 60.0 + 1e-9);
+            assert!(pair[1] > pair[0]);
+        }
+        assert!((w.last().unwrap() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn envelope_of_uniform_trace() {
+        // 10 QPS uniform: any w-second window holds ~10w+1 queries.
+        let arrivals: Vec<f64> = (0..600).map(|i| i as f64 * 0.1).collect();
+        let env = TrafficEnvelope::from_arrivals(&arrivals, &[1.0, 10.0]);
+        assert_eq!(env.max_queries, vec![11.0, 101.0]);
+    }
+
+    #[test]
+    fn envelope_rates_decrease_with_window_for_bursty() {
+        // Burstiness concentrates arrivals: small windows see higher rates.
+        let tr = gamma_trace(100.0, 4.0, 120.0, 3);
+        let env = TrafficEnvelope::from_arrivals(&tr.arrivals, &[0.5, 60.0]);
+        let r = env.rates();
+        assert!(r[0] > r[1] * 1.5, "rates {r:?}");
+    }
+
+    #[test]
+    fn envelope_is_monotone_in_window() {
+        let tr = gamma_trace(50.0, 2.0, 60.0, 5);
+        let windows = window_ladder(0.2);
+        let env = TrafficEnvelope::from_arrivals(&tr.arrivals, &windows);
+        for pair in env.max_queries.windows(2) {
+            assert!(pair[1] >= pair[0], "counts must grow with window");
+        }
+    }
+
+    #[test]
+    fn monitor_matches_batch_envelope_rates() {
+        let tr = gamma_trace(80.0, 1.0, 90.0, 7);
+        let windows = vec![1.0, 4.0, 16.0];
+        let mut mon = RateMonitor::new(windows.clone());
+        for &t in &tr.arrivals {
+            mon.on_arrival(t);
+        }
+        let now = *tr.arrivals.last().unwrap();
+        let rates = mon.rates(now);
+        // Trailing rates can't exceed the trace envelope's max rates.
+        let env = TrafficEnvelope::from_arrivals(&tr.arrivals, &windows);
+        for (r, e) in rates.iter().zip(env.rates()) {
+            assert!(*r <= e + 1e-9, "trailing {r} > envelope {e}");
+            assert!(*r > 0.0);
+        }
+    }
+
+    #[test]
+    fn monitor_evicts_old_arrivals() {
+        let mut mon = RateMonitor::new(vec![1.0]);
+        for i in 0..100 {
+            mon.on_arrival(i as f64 * 0.01); // burst at t≈0..1
+        }
+        mon.on_arrival(200.0);
+        assert_eq!(mon.count_in(200.0, 1.0), 1);
+    }
+
+    #[test]
+    fn max_bucket_rate_finds_burst() {
+        let mut mon = RateMonitor::new(vec![60.0]);
+        // 5 qps background for 30 s with a 50-query burst at t=15.
+        let mut t = 0.0;
+        while t < 30.0 {
+            mon.on_arrival(t);
+            t += 0.2;
+        }
+        for i in 0..50 {
+            mon.on_arrival(15.0 + i as f64 * 0.001);
+        }
+        let max_rate = mon.max_bucket_rate(30.0, 30.0, 5.0);
+        assert!(max_rate > 12.0, "burst rate {max_rate}");
+    }
+}

@@ -1,0 +1,334 @@
+//! The high-frequency Tuner (paper §5): network-calculus detection +
+//! per-stage re-scaling within seconds.
+//!
+//! During planning, the Planner hands the Tuner (a) the traffic envelope
+//! of the sample trace, (b) each model's single-replica throughput μ_m at
+//! its planned batch size, and (c) each model's max-provisioning ratio
+//! ρ_m — the slack the Planner determined the model needs to absorb
+//! bursts within the SLO. At runtime the Tuner compares the live traffic
+//! envelope against the sample envelope across all timescales
+//! simultaneously; any exceedance at any window size triggers scale-up to
+//! the triggering rate r_max via
+//!
+//!   k_m = ⌈ r_max · s_m / (μ_m · ρ_m) ⌉
+//!
+//! Scale-down is conservative: after 15 s of stability it re-provisions
+//! for the max trailing 30 s rate (5 s buckets) using the pipeline-wide
+//! minimum ρ (paper §5 "Scaling Down").
+
+pub mod envelope;
+
+use crate::config::{PipelineConfig, PipelineSpec};
+use crate::profiler::ProfileSet;
+use crate::simulator::control::{ControlAction, ControlState, Controller};
+use crate::workload::Trace;
+
+use envelope::{window_ladder, RateMonitor, TrafficEnvelope};
+
+/// Immutable planning-time inputs to the Tuner (paper §5 "Initialization").
+#[derive(Debug, Clone)]
+pub struct TunerInputs {
+    /// Sample-trace envelope rates per ladder window.
+    pub sample_rates: Vec<f64>,
+    /// Ladder window sizes (T_s … 60 s).
+    pub windows: Vec<f64>,
+    /// Per-stage single-replica throughput μ_m at the planned batch size.
+    pub mu: Vec<f64>,
+    /// Per-stage max-provisioning ratio ρ_m.
+    pub rho: Vec<f64>,
+    /// Per-stage scale factor s_m.
+    pub scale_factor: Vec<f64>,
+    /// The Planner's replica counts (the floor the Tuner returns to).
+    pub planned_replicas: Vec<usize>,
+}
+
+impl TunerInputs {
+    /// Compute the Tuner's inputs from a plan (paper §5 Initialization):
+    /// ρ_m = (λ · s_m) / (k_m · μ_m) — the planned utilization slack.
+    pub fn from_plan(
+        spec: &PipelineSpec,
+        profiles: &ProfileSet,
+        config: &PipelineConfig,
+        sample: &Trace,
+        service_time: f64,
+    ) -> Self {
+        let lambda = sample.mean_rate();
+        let windows = window_ladder(service_time);
+        let env = TrafficEnvelope::from_arrivals(&sample.arrivals, &windows);
+        let mut mu = Vec::new();
+        let mut rho = Vec::new();
+        let mut scale_factor = Vec::new();
+        let mut planned_replicas = Vec::new();
+        for (stage, c) in spec.stages.iter().zip(&config.stages) {
+            let prof = profiles.get(&stage.model).get(c.hw).expect("profile");
+            let mu_m = prof.throughput(c.batch);
+            let rho_m = (lambda * stage.scale_factor) / (c.replicas as f64 * mu_m);
+            mu.push(mu_m);
+            // Clamp: a stage with huge headroom (e.g. a cheap CPU stage the
+            // planner over-replicated for pennies) would otherwise produce
+            // a near-zero ρ; since scale-down divides by the pipeline-wide
+            // min ρ, that would freeze the expensive stages at spike-level
+            // replication forever. [0.35, 0.95] keeps burst slack while
+            // bounding the conservatism.
+            rho.push(rho_m.clamp(0.35, 0.95));
+            scale_factor.push(stage.scale_factor);
+            planned_replicas.push(c.replicas);
+        }
+        TunerInputs {
+            sample_rates: env.rates(),
+            windows,
+            mu,
+            rho,
+            scale_factor,
+            planned_replicas,
+        }
+    }
+}
+
+/// The InferLine high-frequency Tuner, pluggable into the controlled
+/// simulator and the physical serving plane.
+pub struct Tuner {
+    inputs: TunerInputs,
+    monitor: RateMonitor,
+    /// Pipeline-wide min ρ (conservative scale-down divisor).
+    rho_min: f64,
+    /// Time of the last scaling action (for the stabilization delay).
+    last_change: f64,
+    /// First observed arrival (scale-down requires a warm monitor: acting
+    /// on an empty trailing window would tear the pipeline down at t=0).
+    first_arrival: Option<f64>,
+    /// Seconds to wait after any change before scaling down (paper: 15 s =
+    /// 3× the 5 s replica activation time).
+    pub downscale_delay: f64,
+    /// Trailing span / bucket for the scale-down statistic (30 s / 5 s).
+    pub down_span: f64,
+    pub down_bucket: f64,
+    /// Detection tolerance on envelope exceedance (fractional).
+    pub tolerance: f64,
+}
+
+impl Tuner {
+    pub fn new(inputs: TunerInputs) -> Self {
+        let rho_min = inputs.rho.iter().copied().fold(f64::INFINITY, f64::min);
+        let monitor = RateMonitor::new(inputs.windows.clone());
+        Tuner {
+            inputs,
+            monitor,
+            rho_min,
+            last_change: f64::NEG_INFINITY,
+            first_arrival: None,
+            downscale_delay: 15.0,
+            down_span: 30.0,
+            down_bucket: 5.0,
+            tolerance: 0.02,
+        }
+    }
+
+    /// Replica target for every stage at arrival rate `r` with
+    /// provisioning ratio divisor `rho` (paper §5 k_m formula).
+    fn targets(&self, r: f64, rho: &[f64]) -> Vec<usize> {
+        self.inputs
+            .mu
+            .iter()
+            .zip(&self.inputs.scale_factor)
+            .zip(rho)
+            .map(|((&mu_m, &s_m), &rho_m)| {
+                ((r * s_m) / (mu_m * rho_m)).ceil().max(1.0) as usize
+            })
+            .collect()
+    }
+
+    /// Detection: the maximum live rate exceeding its sample envelope
+    /// rate, if any (paper §5 "Scaling Up").
+    fn detect_exceedance(&self, now: f64) -> Option<f64> {
+        let live = self.monitor.rates(now);
+        let mut r_max: Option<f64> = None;
+        for (r, sample) in live.iter().zip(&self.inputs.sample_rates) {
+            if *r > sample * (1.0 + self.tolerance) {
+                r_max = Some(r_max.map_or(*r, |m: f64| m.max(*r)));
+            }
+        }
+        r_max
+    }
+}
+
+impl Controller for Tuner {
+    fn on_arrival(&mut self, t: f64) {
+        self.first_arrival.get_or_insert(t);
+        self.monitor.on_arrival(t);
+    }
+
+    fn on_tick(&mut self, now: f64, state: &ControlState) -> Vec<ControlAction> {
+        let mut actions = Vec::new();
+        let warm = self
+            .first_arrival
+            .map_or(false, |t0| now - t0 >= self.down_span);
+        if let Some(r_max) = self.detect_exceedance(now) {
+            // Scale up to absorb the triggering rate.
+            let targets = self.targets(r_max, &self.inputs.rho.clone());
+            for (stage, (&target, &current)) in
+                targets.iter().zip(&state.provisioned).enumerate()
+            {
+                if target > current {
+                    actions.push(ControlAction::SetReplicas { stage, replicas: target });
+                }
+            }
+        } else if warm && now - self.last_change >= self.downscale_delay {
+            // Conservative scale-down toward the trailing-max rate.
+            let lambda_new = self
+                .monitor
+                .max_bucket_rate(now, self.down_span, self.down_bucket);
+            let rho_p = vec![self.rho_min; self.inputs.mu.len()];
+            let targets = self.targets(lambda_new, &rho_p);
+            for (stage, (&target, &current)) in
+                targets.iter().zip(&state.provisioned).enumerate()
+            {
+                // Never drop below 1; removal only when strictly lower.
+                if target < current {
+                    actions.push(ControlAction::SetReplicas { stage, replicas: target.max(1) });
+                }
+            }
+        }
+        if !actions.is_empty() {
+            self.last_change = now;
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pipelines;
+    use crate::planner::Planner;
+    use crate::profiler::analytic::paper_profiles;
+    use crate::simulator::{self, control::simulate_controlled, SimParams};
+    use crate::workload::{gamma_trace, varying_trace, Phase};
+
+    fn setup(lambda: f64, slo: f64) -> (crate::config::PipelineSpec, crate::profiler::ProfileSet, crate::config::PipelineConfig, TunerInputs) {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let sample = gamma_trace(lambda, 1.0, 30.0, 21);
+        let plan = Planner::new(&spec, &profiles).plan(&sample, slo).unwrap();
+        let st = simulator::service_time(&spec, &profiles, &plan.config);
+        let inputs = TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st);
+        (spec, profiles, plan.config, inputs)
+    }
+
+    #[test]
+    fn inputs_are_self_consistent() {
+        let (_spec, _profiles, config, inputs) = setup(100.0, 0.3);
+        // Re-deriving targets at the sample λ must not exceed the plan.
+        let tuner = Tuner::new(inputs.clone());
+        let targets = tuner.targets(100.0, &inputs.rho);
+        for (t, c) in targets.iter().zip(&config.stages) {
+            assert!(
+                *t <= c.replicas + 1,
+                "target {t} vs planned {} should roughly match",
+                c.replicas
+            );
+        }
+    }
+
+    #[test]
+    fn no_false_positive_on_sample_like_traffic() {
+        let (spec, profiles, config, inputs) = setup(100.0, 0.3);
+        let live = gamma_trace(100.0, 1.0, 120.0, 77); // same distribution
+        let mut tuner = Tuner::new(inputs);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut tuner,
+        );
+        // Total replicas should stay near the planned level: scale-ups, if
+        // any, are small and transient.
+        let planned: usize = config.stages.iter().map(|s| s.replicas).sum();
+        let max_seen = result
+            .replica_timeline
+            .iter()
+            .map(|&(_, n)| n)
+            .max()
+            .unwrap_or(planned);
+        assert!(
+            max_seen <= planned + planned / 2 + 1,
+            "max {max_seen} vs planned {planned}"
+        );
+    }
+
+    #[test]
+    fn scales_up_on_rate_increase_and_maintains_slo() {
+        let slo = 0.3;
+        let (spec, profiles, config, inputs) = setup(100.0, slo);
+        let live = varying_trace(
+            &[
+                Phase { lambda: 100.0, cv: 1.0, duration: 60.0, ramp: false },
+                Phase { lambda: 220.0, cv: 1.0, duration: 30.0, ramp: true },
+                Phase { lambda: 220.0, cv: 1.0, duration: 120.0, ramp: false },
+            ],
+            31,
+        );
+        let mut tuner = Tuner::new(inputs);
+        let with_tuner = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut tuner,
+        );
+        let mut null = crate::simulator::control::NullController;
+        let without = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut null,
+        );
+        assert!(
+            with_tuner.miss_rate(slo) < 0.05,
+            "tuned miss rate {}",
+            with_tuner.miss_rate(slo)
+        );
+        assert!(
+            with_tuner.miss_rate(slo) < without.miss_rate(slo),
+            "tuner {} should beat static {}",
+            with_tuner.miss_rate(slo),
+            without.miss_rate(slo)
+        );
+        // And it must actually have scaled up.
+        let planned: usize = config.stages.iter().map(|s| s.replicas).sum();
+        let max_seen = with_tuner.replica_timeline.iter().map(|&(_, n)| n).max().unwrap();
+        assert!(max_seen > planned, "never scaled up");
+    }
+
+    #[test]
+    fn detects_burstiness_increase_at_constant_rate() {
+        let slo = 0.3;
+        let (spec, profiles, config, inputs) = setup(100.0, slo);
+        // Same λ, CV jumps 1 -> 4 (the Fig 11 scenario).
+        let live = varying_trace(
+            &[
+                Phase { lambda: 100.0, cv: 1.0, duration: 60.0, ramp: false },
+                Phase { lambda: 100.0, cv: 4.0, duration: 120.0, ramp: false },
+            ],
+            33,
+        );
+        let mut tuner = Tuner::new(inputs);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut tuner,
+        );
+        let planned: usize = config.stages.iter().map(|s| s.replicas).sum();
+        let max_seen = result.replica_timeline.iter().map(|&(_, n)| n).max().unwrap();
+        assert!(max_seen > planned, "burstiness increase not detected");
+    }
+
+    #[test]
+    fn scales_back_down_after_spike() {
+        let slo = 0.3;
+        let (spec, profiles, config, inputs) = setup(100.0, slo);
+        let live = varying_trace(
+            &[
+                Phase { lambda: 100.0, cv: 1.0, duration: 40.0, ramp: false },
+                Phase { lambda: 250.0, cv: 1.0, duration: 40.0, ramp: false },
+                Phase { lambda: 80.0, cv: 1.0, duration: 120.0, ramp: false },
+            ],
+            35,
+        );
+        let mut tuner = Tuner::new(inputs);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut tuner,
+        );
+        let max_seen = result.replica_timeline.iter().map(|&(_, n)| n).max().unwrap();
+        let final_count = result.replica_timeline.last().unwrap().1;
+        assert!(final_count < max_seen, "never scaled down: {max_seen} -> {final_count}");
+    }
+}

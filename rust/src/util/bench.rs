@@ -1,0 +1,108 @@
+//! Criterion-style micro-bench harness (offline replacement for criterion).
+//!
+//! Each `rust/benches/*.rs` target (harness = false) uses this to time its
+//! hot loops and to print the paper-figure rows. Reports mean / p50 / p95
+//! per iteration and derived throughput.
+
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} mean {:>10} p50 {:>10} p95 {:>10} ({} samples)",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p95_s),
+            self.samples
+        );
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        samples,
+        mean_s: times.iter().sum::<f64>() / samples as f64,
+        p50_s: super::stats::quantile_sorted(&times, 0.5),
+        p95_s: super::stats::quantile_sorted(&times, 0.95),
+    };
+    result.report();
+    result
+}
+
+/// Prevent the optimizer from discarding a value (std::hint based).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a figure/table header in a consistent style across benches.
+pub fn figure_header(fig: &str, caption: &str) {
+    println!("\n=== {fig}: {caption} ===");
+}
+
+/// Print one figure row: a label plus (column, value) pairs.
+pub fn figure_row(label: &str, cols: &[(&str, String)]) {
+    print!("{label:<44}");
+    for (k, v) in cols {
+        print!("  {k}={v}");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-spin", 2, 16, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_s >= 0.0 && r.p50_s <= r.p95_s + 1e-12);
+        assert_eq!(r.samples, 16);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500us");
+        assert_eq!(fmt_duration(2.5e-9), "2.5ns");
+    }
+}

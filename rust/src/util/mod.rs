@@ -1,0 +1,8 @@
+//! Offline-friendly utility layer: RNG, JSON, stats, bench + property
+//! harnesses (see DESIGN.md §8 — no crate network access on this image).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,63 @@
+//! Tiny property-testing driver (offline replacement for proptest).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNGs. On a panic
+//! it re-raises with the failing case index and seed so the case can be
+//! replayed deterministically with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` pseudo-random cases. Each case gets its own seeded
+/// RNG. Panics (with seed info) if any case fails.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for i in 0..cases {
+        let seed = 0xD00D_F00D ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 xor self is zero", 64, |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x ^ x, 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn reports_failing_case() {
+        check("always fails eventually", 16, |rng| {
+            assert!(rng.f64() < 0.5, "value too large");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        replay(42, |rng| first = Some(rng.next_u64()));
+        let mut second = None;
+        replay(42, |rng| second = Some(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

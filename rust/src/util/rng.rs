@@ -1,0 +1,265 @@
+//! Deterministic pseudo-random numbers: xoshiro256++ + distribution samplers.
+//!
+//! This image has no crate network access (`rand`/`rand_distr` are
+//! unavailable), so the library carries its own small, well-tested RNG:
+//! splitmix64 seeding, xoshiro256++ generation, Box–Muller normals and the
+//! Marsaglia–Tsang gamma sampler the workload generator needs (paper §6
+//! samples inter-arrival times from a Gamma distribution parameterised by
+//! rate λ and coefficient of variation CV).
+//!
+//! Everything in InferLine that draws randomness takes an explicit seed, so
+//! experiments are bit-for-bit reproducible.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create an RNG from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (e.g. per-query routing RNG).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) excluding 0 (safe for log()).
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's nearly-divisionless bounded sampling.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (with spare caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Gamma(shape, scale) via Marsaglia–Tsang; handles shape < 1 via boost.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma({shape}, {scale})");
+        if shape < 1.0 {
+            // Boosting: X ~ Gamma(a+1), U^(1/a) correction.
+            let u = self.f64_open();
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64_open();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2
+                || u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Exponential with the given rate (mean 1/rate).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        -self.f64_open().ln() / rate
+    }
+
+    /// Gamma-distributed inter-arrival time for a process with mean rate
+    /// `lambda` and coefficient of variation `cv` (paper §6): shape = 1/cv²,
+    /// scale = cv²/λ, so E = 1/λ and CV = cv.
+    pub fn interarrival(&mut self, lambda: f64, cv: f64) -> f64 {
+        assert!(lambda > 0.0 && cv > 0.0);
+        let shape = 1.0 / (cv * cv);
+        let scale = cv * cv / lambda;
+        self.gamma(shape, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (mean, _) = moments(&xs);
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn bounded_usize_is_in_range_and_covers() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.usize(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        let (mean, std) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((std - 1.0).abs() < 0.02, "std {std}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_ge_one() {
+        let mut r = Rng::new(5);
+        let (shape, scale) = (4.0, 0.5);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.gamma(shape, scale)).collect();
+        let (mean, std) = moments(&xs);
+        assert!((mean - shape * scale).abs() < 0.03, "mean {mean}");
+        assert!((std - shape.sqrt() * scale).abs() < 0.03, "std {std}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_lt_one() {
+        let mut r = Rng::new(6);
+        let (shape, scale) = (0.25, 2.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.gamma(shape, scale)).collect();
+        let (mean, std) = moments(&xs);
+        assert!((mean - shape * scale).abs() < 0.05, "mean {mean}");
+        assert!((std - shape.sqrt() * scale).abs() < 0.1, "std {std}");
+    }
+
+    #[test]
+    fn interarrival_matches_lambda_and_cv() {
+        let mut r = Rng::new(9);
+        for &(lambda, cv) in &[(100.0, 1.0), (150.0, 4.0), (50.0, 0.5)] {
+            let xs: Vec<f64> =
+                (0..100_000).map(|_| r.interarrival(lambda, cv)).collect();
+            let (mean, std) = moments(&xs);
+            let got_lambda = 1.0 / mean;
+            let got_cv = std / mean;
+            assert!(
+                (got_lambda - lambda).abs() / lambda < 0.05,
+                "lambda {got_lambda} want {lambda}"
+            );
+            assert!((got_cv - cv).abs() / cv < 0.05, "cv {got_cv} want {cv}");
+        }
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.exp(4.0)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut base = Rng::new(1);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

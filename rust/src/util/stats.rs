@@ -1,0 +1,132 @@
+//! Small statistics helpers: quantiles, moments, inter-arrival CV.
+
+/// Quantile of a sample by linear interpolation on the sorted data
+/// (numpy's default). `q` in [0, 1]. Returns NaN on empty input.
+pub fn quantile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&sorted, q)
+}
+
+/// Quantile of an already-sorted sample.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// P99 convenience wrapper.
+pub fn p99(samples: &[f64]) -> f64 {
+    quantile(samples, 0.99)
+}
+
+/// Sample mean; NaN on empty.
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Population standard deviation; NaN on empty.
+pub fn std_dev(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(samples);
+    (samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / samples.len() as f64)
+        .sqrt()
+}
+
+/// Coefficient of variation of inter-arrival times derived from arrival
+/// timestamps (paper §2.1: CV = σ/μ of the inter-arrival process).
+pub fn interarrival_cv(arrivals: &[f64]) -> f64 {
+    if arrivals.len() < 3 {
+        return f64::NAN;
+    }
+    let gaps: Vec<f64> = arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+    std_dev(&gaps) / mean(&gaps)
+}
+
+/// Mean arrival rate (queries/sec) from timestamps.
+pub fn arrival_rate(arrivals: &[f64]) -> f64 {
+    if arrivals.len() < 2 {
+        return f64::NAN;
+    }
+    let span = arrivals[arrivals.len() - 1] - arrivals[0];
+    if span <= 0.0 {
+        return f64::NAN;
+    }
+    (arrivals.len() - 1) as f64 / span
+}
+
+/// Fraction of samples at or below the threshold (SLO attainment).
+pub fn attainment(latencies: &[f64], slo: f64) -> f64 {
+    if latencies.is_empty() {
+        return 1.0;
+    }
+    latencies.iter().filter(|&&l| l <= slo).count() as f64 / latencies.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((quantile(&xs, 0.99) - 9.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_nan() {
+        assert!(quantile(&[], 0.5).is_nan());
+        assert!(mean(&[]).is_nan());
+        assert!(std_dev(&[]).is_nan());
+    }
+
+    #[test]
+    fn attainment_counts() {
+        let lat = [0.1, 0.2, 0.3, 0.4];
+        assert_eq!(attainment(&lat, 0.25), 0.5);
+        assert_eq!(attainment(&lat, 1.0), 1.0);
+        assert_eq!(attainment(&lat, 0.05), 0.0);
+        assert_eq!(attainment(&[], 0.1), 1.0);
+    }
+
+    #[test]
+    fn interarrival_stats() {
+        // Uniform 10 qps arrivals: CV = 0, rate = 10.
+        let arrivals: Vec<f64> = (0..101).map(|i| i as f64 * 0.1).collect();
+        assert!((arrival_rate(&arrivals) - 10.0).abs() < 1e-9);
+        assert!(interarrival_cv(&arrivals).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,148 @@
+//! AutoScale-derived real-workload traces (paper §6, Fig 6).
+//!
+//! The workloads studied in AutoScale [12] report only the average request
+//! rate each minute for an hour. The paper re-synthesizes full traces by
+//! (1) rescaling the max throughput to 300 QPS and (2) sampling each
+//! per-minute rate from a Gamma distribution with CV 1.0 in 30 s segments.
+//! We follow the identical recipe over the two published workload shapes:
+//!
+//!  * **big_spike** — diurnal-ish slow variation with one large sustained
+//!    spike mid-trace (Fig 6(a));
+//!  * **instant_spike** — a near-instantaneous jump to peak followed by a
+//!    decline to a low terminal rate (Fig 6(b)).
+
+use super::Trace;
+use crate::util::rng::Rng;
+
+/// Per-minute mean rates (normalized 0..1) for the "big spike" workload:
+/// gentle wander, a hard spike around minute 38-44, then recovery.
+pub fn big_spike_minutes() -> Vec<f64> {
+    let mut m = Vec::with_capacity(60);
+    for i in 0..60usize {
+        let t = i as f64;
+        // Baseline diurnal wander around 0.4 with mild oscillation.
+        let mut v = 0.40 + 0.08 * (t / 9.0).sin() + 0.05 * (t / 3.5).cos();
+        // The big spike (paper: "when the big spike occurs ...").
+        if (38..=44).contains(&i) {
+            let peak = 1.0 - 0.03 * (i as f64 - 41.0).abs();
+            v = v.max(peak);
+        }
+        m.push(v.clamp(0.05, 1.0));
+    }
+    m
+}
+
+/// Per-minute mean rates for the "instantaneous spike" workload: low
+/// start, step to peak at minute 12, slow decline to a low terminal rate
+/// (paper: "the workload drops quickly after 1000 seconds").
+pub fn instant_spike_minutes() -> Vec<f64> {
+    let mut m = Vec::with_capacity(60);
+    for i in 0..60usize {
+        let v = if i < 12 {
+            0.25 + 0.02 * (i as f64 / 3.0).sin()
+        } else if i < 17 {
+            1.0 // instantaneous jump to peak, sustained ~5 min
+        } else {
+            // decline toward a low terminal rate
+            (1.0 - 0.06 * (i as f64 - 17.0)).max(0.12)
+        };
+        m.push(v.clamp(0.05, 1.0));
+    }
+    m
+}
+
+/// Synthesize a trace from per-minute normalized rates, following the
+/// paper's recipe: rescale so the max rate is `max_qps` (300 in the
+/// paper), then sample 30 s Gamma(CV=1) segments per half-minute.
+pub fn synthesize(minutes: &[f64], max_qps: f64, seed: u64) -> Trace {
+    assert!(!minutes.is_empty() && max_qps > 0.0);
+    let peak = minutes.iter().copied().fold(f64::MIN, f64::max);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::new();
+    let mut t0 = 0.0;
+    for &norm in minutes {
+        let lambda = (norm / peak * max_qps).max(0.5);
+        for _seg in 0..2 {
+            // 30 s Gamma CV=1 segment at this minute's rate.
+            let end = t0 + 30.0;
+            let mut t = t0;
+            loop {
+                t += rng.interarrival(lambda, 1.0);
+                if t > end {
+                    break;
+                }
+                arrivals.push(t);
+            }
+            t0 = end;
+        }
+    }
+    Trace::new(arrivals)
+}
+
+/// The Fig 6(a) workload at the paper's 300 QPS max.
+pub fn big_spike_trace(seed: u64) -> Trace {
+    synthesize(&big_spike_minutes(), 300.0, seed)
+}
+
+/// The Fig 6(b) workload at the paper's 300 QPS max.
+pub fn instant_spike_trace(seed: u64) -> Trace {
+    synthesize(&instant_spike_minutes(), 300.0, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_hour_long() {
+        assert_eq!(big_spike_minutes().len(), 60);
+        assert_eq!(instant_spike_minutes().len(), 60);
+        let tr = big_spike_trace(1);
+        assert!((tr.duration() - 3600.0).abs() < 60.0, "{}", tr.duration());
+    }
+
+    #[test]
+    fn max_rate_rescaled_to_300() {
+        let tr = big_spike_trace(2);
+        // Count arrivals in each 30 s bucket; the max bucket should be
+        // close to 300 QPS.
+        let mut buckets = vec![0usize; 121];
+        for &t in &tr.arrivals {
+            buckets[(t / 30.0) as usize] += 1;
+        }
+        let max_rate = *buckets.iter().max().unwrap() as f64 / 30.0;
+        assert!((max_rate - 300.0).abs() < 45.0, "max rate {max_rate}");
+    }
+
+    #[test]
+    fn big_spike_has_a_spike() {
+        let m = big_spike_minutes();
+        let baseline: f64 = m[..30].iter().sum::<f64>() / 30.0;
+        let spike = m[38..=44].iter().copied().fold(f64::MIN, f64::max);
+        assert!(spike > 1.8 * baseline, "spike {spike} baseline {baseline}");
+    }
+
+    #[test]
+    fn instant_spike_jumps_within_one_minute() {
+        let m = instant_spike_minutes();
+        assert!(m[12] / m[11] > 3.0, "jump {} -> {}", m[11], m[12]);
+        // and declines to a low terminal rate
+        assert!(m[59] < 0.2);
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        assert_eq!(big_spike_trace(5), big_spike_trace(5));
+        assert_ne!(big_spike_trace(5), big_spike_trace(6));
+    }
+
+    #[test]
+    fn segment_cv_is_near_one() {
+        // Within a constant-rate segment the inter-arrival CV should be ~1.
+        let tr = synthesize(&[0.5; 10], 100.0, 9);
+        let seg = Trace::new(
+            tr.arrivals.iter().copied().filter(|&t| t < 300.0).collect(),
+        );
+        assert!((seg.cv() - 1.0).abs() < 0.2, "cv {}", seg.cv());
+    }
+}

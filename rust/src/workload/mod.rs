@@ -1,0 +1,269 @@
+//! Query arrival workloads (paper §6 "Workload Setup").
+//!
+//! Synthetic traces sample inter-arrival times from a Gamma distribution
+//! with mean 1/λ and coefficient of variation CV; time-varying traces
+//! evolve the generating distribution between (λ, CV) set-points over a
+//! transition time τ; and the AutoScale-derived traces re-synthesize the
+//! real per-minute-rate workloads studied in [12] exactly the way the
+//! paper does (rescale max to 300 QPS, 30 s Gamma CV=1 segments).
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// An arrival trace: sorted query arrival timestamps in seconds from 0.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub arrivals: Vec<f64>,
+}
+
+impl Trace {
+    pub fn new(arrivals: Vec<f64>) -> Self {
+        debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "unsorted trace");
+        Trace { arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Trace duration in seconds (0 for < 2 arrivals).
+    pub fn duration(&self) -> f64 {
+        match (self.arrivals.first(), self.arrivals.last()) {
+            (Some(a), Some(b)) => b - a,
+            _ => 0.0,
+        }
+    }
+
+    /// Mean arrival rate (QPS).
+    pub fn mean_rate(&self) -> f64 {
+        stats::arrival_rate(&self.arrivals)
+    }
+
+    /// Coefficient of variation of the inter-arrival process.
+    pub fn cv(&self) -> f64 {
+        stats::interarrival_cv(&self.arrivals)
+    }
+
+    /// Peak rate over a sliding window of `window` seconds (the CG-Peak
+    /// planning statistic, paper §6: window set to the SLO).
+    pub fn peak_rate(&self, window: f64) -> f64 {
+        assert!(window > 0.0);
+        let a = &self.arrivals;
+        if a.len() < 2 {
+            return self.mean_rate();
+        }
+        let mut lo = 0usize;
+        let mut best = 0usize;
+        for hi in 0..a.len() {
+            while a[hi] - a[lo] > window {
+                lo += 1;
+            }
+            best = best.max(hi - lo + 1);
+        }
+        best as f64 / window
+    }
+
+    /// Split into (head, tail) at a fraction of the *duration* (the paper
+    /// uses the first 25% of the trace for planning, the rest for serving).
+    /// The tail is re-based to t = 0.
+    pub fn split_at_fraction(&self, frac: f64) -> (Trace, Trace) {
+        let cut = self.arrivals.first().unwrap_or(&0.0) + self.duration() * frac;
+        let idx = self.arrivals.partition_point(|&t| t <= cut);
+        let head = Trace::new(self.arrivals[..idx].to_vec());
+        let tail: Vec<f64> = self.arrivals[idx..].iter().map(|t| t - cut).collect();
+        (head, Trace::new(tail))
+    }
+
+    /// Concatenate, shifting `other` to start after `self` ends.
+    pub fn concat(&self, other: &Trace) -> Trace {
+        let offset = self.arrivals.last().copied().unwrap_or(0.0);
+        let mut arrivals = self.arrivals.clone();
+        arrivals.extend(other.arrivals.iter().map(|t| t + offset));
+        Trace::new(arrivals)
+    }
+
+    /// Save as newline-delimited seconds (compact, diffable).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut out = String::with_capacity(self.arrivals.len() * 12);
+        for t in &self.arrivals {
+            out.push_str(&format!("{t:.6}\n"));
+        }
+        std::fs::write(path, out)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let arrivals = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.trim().parse::<f64>().map_err(|e| e.to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Trace::new(arrivals))
+    }
+}
+
+/// Stationary Gamma-process trace: `duration` seconds at rate λ with the
+/// given CV (paper §6). CV = 1 is a Poisson process.
+pub fn gamma_trace(lambda: f64, cv: f64, duration: f64, seed: u64) -> Trace {
+    assert!(lambda > 0.0 && cv > 0.0 && duration > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity((lambda * duration * 1.1) as usize + 16);
+    loop {
+        t += rng.interarrival(lambda, cv);
+        if t > duration {
+            break;
+        }
+        arrivals.push(t);
+    }
+    Trace::new(arrivals)
+}
+
+/// A workload phase for time-varying generation.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub lambda: f64,
+    pub cv: f64,
+    /// Seconds this phase lasts (for `Set`) or takes to morph (for `Ramp`).
+    pub duration: f64,
+    /// If true, λ and CV interpolate linearly from the previous phase over
+    /// `duration` (the paper's "transition time" τ); if false they hold.
+    pub ramp: bool,
+}
+
+/// Time-varying trace: the generating Gamma distribution evolves across
+/// phases (paper §6: "we evolve the workload generating function between
+/// different Gamma distributions over a specified period of time").
+pub fn varying_trace(phases: &[Phase], seed: u64) -> Trace {
+    assert!(!phases.is_empty());
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    let mut phase_start = 0.0;
+    let (mut prev_lambda, mut prev_cv) = (phases[0].lambda, phases[0].cv);
+    for ph in phases {
+        let end = phase_start + ph.duration;
+        while t < end {
+            let (lambda, cv) = if ph.ramp && ph.duration > 0.0 {
+                let frac = ((t - phase_start) / ph.duration).clamp(0.0, 1.0);
+                (
+                    prev_lambda + frac * (ph.lambda - prev_lambda),
+                    prev_cv + frac * (ph.cv - prev_cv),
+                )
+            } else {
+                (ph.lambda, ph.cv)
+            };
+            t += rng.interarrival(lambda, cv);
+            if t <= end {
+                arrivals.push(t);
+            }
+        }
+        t = t.min(end); // do not leak a long gap into the next phase
+        phase_start = end;
+        prev_lambda = ph.lambda;
+        prev_cv = ph.cv;
+    }
+    Trace::new(arrivals)
+}
+
+pub mod autoscale;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_trace_matches_requested_stats() {
+        let tr = gamma_trace(100.0, 1.0, 120.0, 7);
+        assert!((tr.mean_rate() - 100.0).abs() < 5.0, "rate {}", tr.mean_rate());
+        assert!((tr.cv() - 1.0).abs() < 0.1, "cv {}", tr.cv());
+
+        let bursty = gamma_trace(100.0, 4.0, 120.0, 7);
+        assert!((bursty.cv() - 4.0).abs() < 0.5, "cv {}", bursty.cv());
+    }
+
+    #[test]
+    fn gamma_trace_is_deterministic_per_seed() {
+        assert_eq!(gamma_trace(50.0, 1.0, 10.0, 1), gamma_trace(50.0, 1.0, 10.0, 1));
+        assert_ne!(gamma_trace(50.0, 1.0, 10.0, 1), gamma_trace(50.0, 1.0, 10.0, 2));
+    }
+
+    #[test]
+    fn peak_rate_exceeds_mean_for_bursty() {
+        let tr = gamma_trace(100.0, 4.0, 60.0, 3);
+        assert!(tr.peak_rate(0.15) > tr.mean_rate() * 1.5);
+    }
+
+    #[test]
+    fn peak_rate_close_to_mean_for_uniform() {
+        // A perfectly regular trace: peak over 1 s windows == mean.
+        let tr = Trace::new((1..=600).map(|i| i as f64 * 0.1).collect());
+        assert!((tr.peak_rate(1.0) - tr.mean_rate()).abs() / tr.mean_rate() < 0.15);
+    }
+
+    #[test]
+    fn split_rebases_tail() {
+        let tr = gamma_trace(50.0, 1.0, 100.0, 5);
+        let (head, tail) = tr.split_at_fraction(0.25);
+        assert!(head.len() + tail.len() == tr.len());
+        assert!(head.duration() < 30.0);
+        assert!(tail.arrivals[0] >= 0.0 && tail.arrivals[0] < 1.0);
+    }
+
+    #[test]
+    fn varying_trace_ramps_rate() {
+        let phases = [
+            Phase { lambda: 50.0, cv: 1.0, duration: 60.0, ramp: false },
+            Phase { lambda: 200.0, cv: 1.0, duration: 30.0, ramp: true },
+            Phase { lambda: 200.0, cv: 1.0, duration: 60.0, ramp: false },
+        ];
+        let tr = varying_trace(&phases, 11);
+        let early: Vec<f64> = tr.arrivals.iter().copied().filter(|&t| t < 50.0).collect();
+        let late: Vec<f64> = tr.arrivals.iter().copied().filter(|&t| t > 100.0).collect();
+        let early_rate = early.len() as f64 / 50.0;
+        let late_rate = late.len() as f64 / 50.0;
+        assert!((early_rate - 50.0).abs() < 10.0, "early {early_rate}");
+        assert!((late_rate - 200.0).abs() < 25.0, "late {late_rate}");
+    }
+
+    #[test]
+    fn varying_trace_changes_cv_at_fixed_rate() {
+        let phases = [
+            Phase { lambda: 100.0, cv: 1.0, duration: 120.0, ramp: false },
+            Phase { lambda: 100.0, cv: 4.0, duration: 120.0, ramp: false },
+        ];
+        let tr = varying_trace(&phases, 13);
+        let head = Trace::new(tr.arrivals.iter().copied().filter(|&t| t < 115.0).collect());
+        let tail = Trace::new(
+            tr.arrivals.iter().copied().filter(|&t| t > 125.0).map(|t| t - 125.0).collect(),
+        );
+        assert!((head.cv() - 1.0).abs() < 0.3, "head cv {}", head.cv());
+        assert!(tail.cv() > 2.0, "tail cv {}", tail.cv());
+        assert!((head.mean_rate() - tail.mean_rate()).abs() < 20.0);
+    }
+
+    #[test]
+    fn trace_file_roundtrip() {
+        let tr = gamma_trace(20.0, 1.0, 10.0, 17);
+        let dir = std::env::temp_dir().join("inferline-test-traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.txt");
+        tr.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.len(), tr.len());
+        for (a, b) in back.arrivals.iter().zip(&tr.arrivals) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn concat_shifts() {
+        let a = Trace::new(vec![1.0, 2.0]);
+        let b = Trace::new(vec![0.5, 1.0]);
+        assert_eq!(a.concat(&b).arrivals, vec![1.0, 2.0, 2.5, 3.0]);
+    }
+}

@@ -1,0 +1,199 @@
+//! End-to-end integration: plan → estimate → serve (virtual + physical
+//! planes) → tune across the four paper pipelines, plus baseline
+//! cross-checks. These are the "does the whole system compose" tests.
+
+use inferline::baselines::coarse::{self, CoarseTarget};
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::serving::{Backend, ServingEngine};
+use inferline::simulator::{self, control::simulate_controlled, SimParams};
+use inferline::tuner::{Tuner, TunerInputs};
+use inferline::util::stats;
+use inferline::workload::{autoscale, gamma_trace, varying_trace, Phase};
+
+#[test]
+fn all_four_pipelines_plan_and_meet_slo() {
+    let profiles = paper_profiles();
+    for spec in pipelines::all() {
+        let slo = 0.3;
+        let sample = gamma_trace(80.0, 1.0, 30.0, 1);
+        let live = gamma_trace(80.0, 1.0, 60.0, 2);
+        let plan = Planner::new(&spec, &profiles)
+            .plan(&sample, slo)
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        let result =
+            simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default());
+        assert_eq!(result.latencies.len(), live.len(), "{}", spec.name);
+        assert!(
+            result.miss_rate(slo) < 0.02,
+            "{}: miss rate {}",
+            spec.name,
+            result.miss_rate(slo)
+        );
+    }
+}
+
+#[test]
+fn estimator_matches_physical_plane_within_tolerance() {
+    // The Fig 8 property: the Estimator's P99 must predict the physical
+    // threaded serving plane. Calibrated backends isolate queueing
+    // dynamics from machine noise.
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let slo = 0.3;
+    let sample = gamma_trace(60.0, 1.0, 30.0, 5);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, slo).unwrap();
+    let live = gamma_trace(60.0, 1.0, 15.0, 7);
+
+    let est = simulator::estimate_p99(&spec, &profiles, &plan.config, &live, &SimParams::default());
+    let backends: Vec<Backend> = spec
+        .stages
+        .iter()
+        .zip(&plan.config.stages)
+        .map(|(s, c)| Backend::Calibrated {
+            profile: profiles.get(&s.model).get(c.hw).unwrap().clone(),
+        })
+        .collect();
+    let engine = ServingEngine::start(&spec, &plan.config, backends).unwrap();
+    let measured = engine.serve_trace(&live, 1.0, SimParams::default().routing_seed);
+    assert_eq!(measured.latencies.len(), live.len());
+    let measured_p99 = stats::p99(&measured.latencies);
+    // Physical threads add scheduling jitter; require agreement within
+    // 2.5x and both sides comfortably ordered vs the SLO.
+    let ratio = measured_p99 / est;
+    assert!(
+        (0.4..2.5).contains(&ratio),
+        "estimator {est} vs measured {measured_p99} (ratio {ratio})"
+    );
+}
+
+#[test]
+fn tuner_handles_real_derived_trace_end_to_end() {
+    let profiles = paper_profiles();
+    let spec = pipelines::tf_cascade();
+    let slo = 0.15;
+    let full = autoscale::synthesize(&autoscale::instant_spike_minutes()[..20], 150.0, 9);
+    let (sample, live) = full.split_at_fraction(0.25);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, slo).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st);
+    let mut tuner = Tuner::new(inputs);
+    let result =
+        simulate_controlled(&spec, &profiles, &plan.config, &live, &SimParams::default(), &mut tuner);
+    assert_eq!(result.latencies.len(), live.len());
+    assert!(
+        result.miss_rate(slo) < 0.10,
+        "tuned miss rate {} on instant-spike trace",
+        result.miss_rate(slo)
+    );
+}
+
+#[test]
+fn inferline_beats_cg_on_cost_and_attainment_under_ramp() {
+    // The Fig 7 / Fig 12 composite claim.
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let slo = 0.15;
+    let sample = gamma_trace(100.0, 1.0, 30.0, 11);
+    let live = varying_trace(
+        &[
+            Phase { lambda: 100.0, cv: 1.0, duration: 40.0, ramp: false },
+            Phase { lambda: 200.0, cv: 1.0, duration: 30.0, ramp: true },
+            Phase { lambda: 200.0, cv: 1.0, duration: 60.0, ramp: false },
+        ],
+        13,
+    );
+    // InferLine side.
+    let plan = Planner::new(&spec, &profiles).plan(&sample, slo).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st);
+    let mut tuner = Tuner::new(inputs);
+    let il =
+        simulate_controlled(&spec, &profiles, &plan.config, &live, &SimParams::default(), &mut tuner);
+    // CG-Peak + AutoScale side.
+    let cg = coarse::plan(&spec, &profiles, &sample, slo, CoarseTarget::Peak);
+    let mut cg_tuner =
+        inferline::baselines::autoscale::AutoScaleTuner::new(cg.unit_throughput, cg.units);
+    let cgr =
+        simulate_controlled(&spec, &profiles, &cg.config, &live, &SimParams::default(), &mut cg_tuner);
+    assert!(
+        il.cost_dollars < cgr.cost_dollars,
+        "InferLine ${} !< CG ${}",
+        il.cost_dollars,
+        cgr.cost_dollars
+    );
+    assert!(
+        il.miss_rate(slo) <= cgr.miss_rate(slo) + 0.02,
+        "InferLine miss {} vs CG {}",
+        il.miss_rate(slo),
+        cgr.miss_rate(slo)
+    );
+}
+
+#[test]
+fn frameworks_differ_only_in_overhead() {
+    // Fig 13: same planner, two serving frameworks; TFS costs >= Clipper
+    // because of higher RPC overhead.
+    let profiles = paper_profiles();
+    let slo = 0.15;
+    let sample = gamma_trace(120.0, 1.0, 30.0, 17);
+    let mut costs = Vec::new();
+    for fw in [
+        inferline::config::Framework::Clipper,
+        inferline::config::Framework::TfServing,
+    ] {
+        let mut spec = pipelines::tf_cascade();
+        spec.framework = fw;
+        let plan = Planner::new(&spec, &profiles).plan(&sample, slo).unwrap();
+        let live = gamma_trace(120.0, 1.0, 60.0, 19);
+        let result =
+            simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default());
+        assert!(result.miss_rate(slo) < 0.011, "{:?} missed", fw);
+        costs.push(plan.cost_per_hour);
+    }
+    assert!(costs[1] >= costs[0] - 1e-9, "TFS {} < Clipper {}", costs[1], costs[0]);
+}
+
+#[test]
+fn quick_experiment_registry_is_complete() {
+    for name in inferline::experiments::ALL_FIGURES {
+        assert!(
+            ["fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+             "fig13", "fig14", "headline"]
+            .contains(name),
+            "unexpected experiment {name}"
+        );
+    }
+    assert!(!inferline::experiments::run_by_name("nonexistent", true));
+}
+
+#[test]
+fn physical_plane_scales_while_serving() {
+    // Runtime replica scaling (paper §3 requirement 1) under live load.
+    let profiles = paper_profiles();
+    let spec = pipelines::tf_cascade();
+    let config = inferline::config::PipelineConfig::uniform(
+        spec.n_stages(),
+        inferline::hardware::Hardware::Cpu,
+        2,
+        1,
+    );
+    let backends: Vec<Backend> = spec
+        .stages
+        .iter()
+        .map(|s| Backend::Calibrated {
+            profile: profiles.get(&s.model).get(inferline::hardware::Hardware::Cpu).unwrap().clone(),
+        })
+        .collect();
+    let mut engine = ServingEngine::start(&spec, &config, backends).unwrap();
+    assert!(engine.wait_ready(std::time::Duration::from_secs(10)));
+    engine.spawn_worker(0).unwrap();
+    engine.spawn_worker(1).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert_eq!(engine.worker_counts(), vec![2, 2]);
+    let live = gamma_trace(50.0, 1.0, 3.0, 23);
+    let n = live.len();
+    let result = engine.serve_trace(&live, 1.0, 25);
+    assert_eq!(result.latencies.len(), n);
+}

@@ -1,0 +1,155 @@
+//! Property tests of the Planner's §4.3 guarantees over randomized
+//! workloads and SLOs on the real paper pipelines:
+//!
+//!  1. If a feasible configuration exists, the planner returns one the
+//!     Estimator deems feasible.
+//!  2. At termination, no single action (batch x2 / replica −1 /
+//!     hardware downgrade) both reduces cost and stays feasible.
+//!  3. Sensitivity trends: cost is monotone non-increasing in SLO and
+//!     non-decreasing in λ (within greedy tolerance, Fig 9).
+
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::{self, SimParams};
+use inferline::util::prop;
+use inferline::workload::gamma_trace;
+
+fn random_pipeline(rng: &mut inferline::util::rng::Rng) -> inferline::config::PipelineSpec {
+    let all = pipelines::all();
+    all[rng.usize(all.len())].clone()
+}
+
+#[test]
+fn plans_are_feasible() {
+    prop::check("plan feasibility", 12, |rng| {
+        let spec = random_pipeline(rng);
+        let profiles = paper_profiles();
+        let lambda = 40.0 + rng.f64() * 160.0;
+        let cv = if rng.bool(0.5) { 1.0 } else { 4.0 };
+        let slo = 0.2 + rng.f64() * 0.4;
+        let trace = gamma_trace(lambda, cv, 30.0, rng.next_u64());
+        match Planner::new(&spec, &profiles).plan(&trace, slo) {
+            Ok(plan) => {
+                let p99 = simulator::estimate_p99(
+                    &spec, &profiles, &plan.config, &trace, &SimParams::default(),
+                );
+                assert!(p99 <= slo + 1e-9, "{}: p99 {p99} > slo {slo}", spec.name);
+                assert!((plan.cost_per_hour - plan.config.cost_per_hour()).abs() < 1e-9);
+            }
+            Err(e) => {
+                // Only acceptable if even the latency-minimizing config
+                // can't make the SLO.
+                let planner = Planner::new(&spec, &profiles);
+                assert!(
+                    planner.initialize(&trace, slo).is_err(),
+                    "{}: plan failed ({e}) but initialize succeeds",
+                    spec.name
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn termination_means_no_single_cheaper_feasible_action() {
+    prop::check("greedy termination guarantee", 8, |rng| {
+        let spec = random_pipeline(rng);
+        let profiles = paper_profiles();
+        let lambda = 50.0 + rng.f64() * 100.0;
+        let slo = 0.25 + rng.f64() * 0.25;
+        let trace = gamma_trace(lambda, 1.0, 30.0, rng.next_u64());
+        let planner = Planner::new(&spec, &profiles);
+        let Ok(plan) = planner.plan(&trace, slo) else { return };
+        for stage in 0..spec.n_stages() {
+            for cand in [
+                planner.try_increase_batch(&plan.config, stage, &trace, slo),
+                planner.try_remove_replica(&plan.config, stage, &trace, slo),
+                planner.try_downgrade_hw(&plan.config, stage, &trace, slo),
+            ]
+            .into_iter()
+            .flatten()
+            {
+                assert!(
+                    cand.cost_per_hour() >= plan.cost_per_hour - 1e-9,
+                    "{} stage {stage}: residual action reduces cost {} -> {}",
+                    spec.name,
+                    plan.cost_per_hour,
+                    cand.cost_per_hour()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cost_monotone_in_slo() {
+    prop::check("cost vs slo", 6, |rng| {
+        let spec = random_pipeline(rng);
+        let profiles = paper_profiles();
+        let lambda = 60.0 + rng.f64() * 80.0;
+        let trace = gamma_trace(lambda, 1.0, 30.0, rng.next_u64());
+        let planner = Planner::new(&spec, &profiles);
+        let mut last_cost = f64::INFINITY;
+        for slo in [0.15, 0.3, 0.6] {
+            if let Ok(plan) = planner.plan(&trace, slo) {
+                // Greedy search is not globally optimal (the paper notes
+                // occasional sub-optimal configs in Fig 9); allow 25% slack.
+                assert!(
+                    plan.cost_per_hour <= last_cost * 1.25 + 1e-9,
+                    "{}: slo {slo} cost {} vs previous {last_cost}",
+                    spec.name,
+                    plan.cost_per_hour
+                );
+                last_cost = last_cost.min(plan.cost_per_hour);
+            }
+        }
+    });
+}
+
+#[test]
+fn cost_monotone_in_lambda() {
+    prop::check("cost vs lambda", 6, |rng| {
+        let spec = random_pipeline(rng);
+        let profiles = paper_profiles();
+        let planner = Planner::new(&spec, &profiles);
+        let slo = 0.3;
+        let seed = rng.next_u64();
+        let mut last_cost = 0.0f64;
+        for lambda in [50.0, 120.0, 250.0] {
+            let trace = gamma_trace(lambda, 1.0, 30.0, seed);
+            if let Ok(plan) = planner.plan(&trace, slo) {
+                assert!(
+                    plan.cost_per_hour >= last_cost * 0.8 - 1e-9,
+                    "{}: λ {lambda} cost {} fell below previous {last_cost}",
+                    spec.name,
+                    plan.cost_per_hour
+                );
+                last_cost = last_cost.max(plan.cost_per_hour);
+            }
+        }
+    });
+}
+
+#[test]
+fn burstier_workloads_cost_at_least_as_much() {
+    prop::check("cost vs cv", 5, |rng| {
+        let spec = random_pipeline(rng);
+        let profiles = paper_profiles();
+        let planner = Planner::new(&spec, &profiles);
+        let slo = 0.3;
+        let lambda = 80.0 + rng.f64() * 80.0;
+        let seed = rng.next_u64();
+        let calm = planner.plan(&gamma_trace(lambda, 1.0, 40.0, seed), slo);
+        let bursty = planner.plan(&gamma_trace(lambda, 4.0, 40.0, seed), slo);
+        if let (Ok(c), Ok(b)) = (calm, bursty) {
+            assert!(
+                b.cost_per_hour >= c.cost_per_hour * 0.9 - 1e-9,
+                "{}: cv4 cost {} << cv1 cost {}",
+                spec.name,
+                b.cost_per_hour,
+                c.cost_per_hour
+            );
+        }
+    });
+}

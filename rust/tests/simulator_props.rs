@@ -1,0 +1,203 @@
+//! Property tests on the discrete-event Estimator's invariants, driven by
+//! randomized pipelines, profiles and workloads (util::prop — the in-repo
+//! proptest replacement, DESIGN.md §8).
+
+use inferline::config::{Framework, PipelineConfig, PipelineSpec, StageConfig, StageSpec};
+use inferline::hardware::Hardware;
+use inferline::profiler::{BatchProfile, ProfileSet};
+use inferline::simulator::{self, SimParams};
+use inferline::util::prop;
+use inferline::util::rng::Rng;
+use inferline::workload::gamma_trace;
+
+/// Random linear-or-branching pipeline with 2-5 stages and valid scale
+/// factors, plus matching profiles and a random (feasible-ish) config.
+fn random_setup(rng: &mut Rng) -> (PipelineSpec, ProfileSet, PipelineConfig) {
+    let n = 2 + rng.usize(4);
+    let mut stages = Vec::new();
+    let mut profiles = ProfileSet::default();
+    for i in 0..n {
+        // Parent: previous stage (chain) or an earlier fork point.
+        let scale = if i == 0 { 1.0 } else { (0.2 + 0.8 * rng.f64()).min(1.0) };
+        stages.push(StageSpec {
+            name: format!("s{i}"),
+            model: format!("m{i}"),
+            scale_factor: scale,
+            children: Vec::new(),
+        });
+        let alpha = 0.001 + rng.f64() * 0.01;
+        let beta = 0.0002 + rng.f64() * 0.004;
+        profiles.insert(&format!("m{i}"), Hardware::Cpu, BatchProfile::affine(alpha, beta, 32));
+        profiles.insert(
+            &format!("m{i}"),
+            Hardware::GpuK80,
+            BatchProfile::affine(alpha * 0.5, beta * 0.2, 64),
+        );
+    }
+    // Tree shape: each stage i>0 hangs off a random earlier stage whose
+    // scale factor is >= its own.
+    for i in 1..n {
+        let mut parent = rng.usize(i);
+        let mut guard = 0;
+        while stages[parent].scale_factor < stages[i].scale_factor && guard < 10 {
+            stages[i].scale_factor = stages[parent].scale_factor * (0.3 + 0.7 * rng.f64());
+            guard += 1;
+            parent = rng.usize(i);
+        }
+        stages[i].scale_factor = stages[i].scale_factor.min(stages[parent].scale_factor);
+        let child = i;
+        stages[parent].children.push(child);
+    }
+    stages[0].scale_factor = 1.0;
+    let spec = PipelineSpec {
+        name: "random".into(),
+        stages,
+        roots: vec![0],
+        framework: if rng.bool(0.5) { Framework::Clipper } else { Framework::TfServing },
+    };
+    spec.validate().expect("generated spec must validate");
+    let config = PipelineConfig {
+        stages: (0..n)
+            .map(|_| StageConfig {
+                hw: if rng.bool(0.5) { Hardware::Cpu } else { Hardware::GpuK80 },
+                batch: [1, 2, 4, 8][rng.usize(4)],
+                replicas: 1 + rng.usize(4),
+            })
+            .collect(),
+    };
+    (spec, profiles, config)
+}
+
+#[test]
+fn every_query_completes_exactly_once() {
+    prop::check("completion conservation", 40, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let lambda = 10.0 + rng.f64() * 100.0;
+        let trace = gamma_trace(lambda, 0.5 + rng.f64() * 3.0, 10.0, rng.next_u64());
+        let result = simulator::simulate(&spec, &profiles, &config, &trace, &SimParams::default());
+        assert_eq!(result.latencies.len(), trace.len(), "query loss or duplication");
+    });
+}
+
+#[test]
+fn latency_at_least_best_case_service_time() {
+    prop::check("latency lower bound", 30, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(20.0, 1.0, 10.0, rng.next_u64());
+        let result = simulator::simulate(&spec, &profiles, &config, &trace, &SimParams::default());
+        // Lower bound: cheapest single-stage batch-1 latency of the root.
+        let root = 0usize;
+        let c = &config.stages[root];
+        let min_service = profiles.get(&spec.stages[root].model).get(c.hw).unwrap().latency(1);
+        for &l in &result.latencies {
+            assert!(l >= min_service * 0.999, "latency {l} below service {min_service}");
+        }
+    });
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    prop::check("determinism", 20, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(50.0, 2.0, 8.0, rng.next_u64());
+        let params = SimParams::default();
+        let a = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+        let b = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.stage_stats.len(), b.stage_stats.len());
+    });
+}
+
+#[test]
+fn batch_sizes_never_exceed_configured_max() {
+    prop::check("batch bound", 30, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(80.0, 2.0, 8.0, rng.next_u64());
+        let result = simulator::simulate(&spec, &profiles, &config, &trace, &SimParams::default());
+        for (i, st) in result.stage_stats.iter().enumerate() {
+            if st.batches > 0 {
+                assert!(
+                    st.mean_batch <= config.stages[i].batch as f64 + 1e-9,
+                    "stage {i} mean batch {} > max {}",
+                    st.mean_batch,
+                    config.stages[i].batch
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn stage_visit_counts_respect_scale_factors() {
+    prop::check("scale factor routing", 20, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(100.0, 1.0, 30.0, rng.next_u64());
+        let result = simulator::simulate(&spec, &profiles, &config, &trace, &SimParams::default());
+        let n = trace.len() as f64;
+        for (i, st) in result.stage_stats.iter().enumerate() {
+            let expected = spec.stages[i].scale_factor * n;
+            let got = st.queries as f64;
+            // 5-sigma binomial tolerance.
+            let sigma = (n * spec.stages[i].scale_factor
+                * (1.0 - spec.stages[i].scale_factor))
+                .sqrt()
+                .max(1.0);
+            assert!(
+                (got - expected).abs() <= 5.0 * sigma + 1.0,
+                "stage {i}: {got} visits vs expected {expected} (sigma {sigma})"
+            );
+        }
+    });
+}
+
+#[test]
+fn routing_is_identical_across_configs() {
+    // Paper §6: the same trace is reused across comparison points; our
+    // routing RNG keys on query index so per-stage visit sets must be
+    // identical regardless of the configuration under test.
+    prop::check("routing invariance", 15, |rng| {
+        let (spec, profiles, config_a) = random_setup(rng);
+        let mut config_b = config_a.clone();
+        for s in &mut config_b.stages {
+            s.replicas += 1 + rng.usize(3);
+            s.batch = 1;
+        }
+        let trace = gamma_trace(60.0, 1.0, 10.0, rng.next_u64());
+        let params = SimParams::default();
+        let a = simulator::simulate(&spec, &profiles, &config_a, &trace, &params);
+        let b = simulator::simulate(&spec, &profiles, &config_b, &trace, &params);
+        for (sa, sb) in a.stage_stats.iter().zip(&b.stage_stats) {
+            assert_eq!(sa.queries, sb.queries, "visit sets changed with config");
+        }
+    });
+}
+
+#[test]
+fn more_replicas_never_hurt_p99() {
+    prop::check("replica monotonicity", 15, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(100.0, 2.0, 15.0, rng.next_u64());
+        let params = SimParams::default();
+        let p99_before = simulator::estimate_p99(&spec, &profiles, &config, &trace, &params);
+        let mut bigger = config.clone();
+        for s in &mut bigger.stages {
+            s.replicas *= 2;
+        }
+        let p99_after = simulator::estimate_p99(&spec, &profiles, &bigger, &trace, &params);
+        assert!(
+            p99_after <= p99_before * 1.001 + 1e-6,
+            "doubling replicas raised p99: {p99_before} -> {p99_after}"
+        );
+    });
+}
+
+#[test]
+fn horizon_covers_trace() {
+    prop::check("horizon bound", 20, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(30.0, 1.0, 10.0, rng.next_u64());
+        let result = simulator::simulate(&spec, &profiles, &config, &trace, &SimParams::default());
+        let last = *trace.arrivals.last().unwrap();
+        assert!(result.horizon >= last, "horizon {} < last arrival {last}", result.horizon);
+    });
+}
