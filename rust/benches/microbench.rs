@@ -43,10 +43,28 @@ fn main() {
         black_box(simulator::estimate_p99(&spec, &profiles, &plan.config, &plan_trace, &params));
     });
 
-    // --- Full planner run. -------------------------------------------------
-    bench("planner: full plan, social-media @150qps slo=0.3", 1, 5, || {
+    // --- Full planner run: serial vs parallel candidate evaluation. --------
+    // A fresh planner per run keeps the feasibility memo-cache cold, so
+    // both sides measure one complete search.
+    let serial = bench("planner: full plan (serial), social-media @150qps", 1, 5, || {
+        black_box(
+            Planner::serial(&spec, &profiles).plan(&plan_trace, 0.3).unwrap().cost_per_hour,
+        );
+    });
+    let parallel = bench("planner: full plan (parallel), social-media @150qps", 1, 5, || {
         black_box(Planner::new(&spec, &profiles).plan(&plan_trace, 0.3).unwrap().cost_per_hour);
     });
+    let telemetry = Planner::new(&spec, &profiles).plan(&plan_trace, 0.3).unwrap().telemetry;
+    println!(
+        "  -> parallel speedup {:.2}x on {} threads; feasibility cache: {} hits / {} evals \
+         ({:.0}% hit rate), {} pruned analytically",
+        serial.mean_s / parallel.mean_s,
+        telemetry.threads,
+        telemetry.cache_hits,
+        telemetry.cache_hits + telemetry.cache_misses,
+        telemetry.hit_rate() * 100.0,
+        telemetry.pruned
+    );
 
     // --- Envelope construction over a full hour trace. ---------------------
     let windows = inferline::tuner::envelope::window_ladder(0.1);

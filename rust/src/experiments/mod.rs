@@ -8,6 +8,8 @@
 
 pub mod common;
 pub mod figures;
+pub mod sweep;
 
 pub use common::{Ctx, RunSummary};
 pub use figures::{run_by_name, ALL_FIGURES};
+pub use sweep::{run_sweep, sweep_grid};

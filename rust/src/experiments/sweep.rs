@@ -1,0 +1,202 @@
+//! Parallel scenario sweep: plan a (λ, CV, SLO) grid across all four
+//! paper pipeline topologies at once.
+//!
+//! Each grid point is an independent planning problem, so the sweep fans
+//! scenarios out over a scoped thread pool (one scenario per task,
+//! work-stolen off an atomic counter). Within a scenario the planner runs
+//! serially — the outer parallelism already saturates the machine, and
+//! nesting both levels would oversubscribe it. Results are deterministic:
+//! every scenario derives its trace seed from its grid index.
+//!
+//! Output: one row per scenario (cost, estimated P99, search iterations,
+//! feasibility-cache hit rate) on stdout and in `results/sweep.csv`.
+
+use crate::config::pipelines;
+use crate::planner::Planner;
+use crate::profiler::analytic::paper_profiles;
+use crate::util::par::{default_workers, parallel_map_indexed};
+use crate::workload::gamma_trace;
+
+use super::common::Ctx;
+
+/// One planned grid point.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub pipeline: String,
+    pub lambda: f64,
+    pub cv: f64,
+    pub slo: f64,
+    /// Planned cost and telemetry, or the infeasibility reason.
+    pub outcome: Result<ScenarioPlan, String>,
+}
+
+/// The sweep's per-scenario plan summary.
+#[derive(Debug, Clone)]
+pub struct ScenarioPlan {
+    pub cost_per_hour: f64,
+    pub estimated_p99: f64,
+    pub total_replicas: usize,
+    pub iterations: usize,
+    pub cache_hit_rate: f64,
+}
+
+/// Plan every (pipeline, λ, CV, SLO) combination in parallel and return
+/// the results in grid order (deterministic regardless of thread count).
+pub fn sweep_grid(
+    lambdas: &[f64],
+    cvs: &[f64],
+    slos: &[f64],
+    trace_secs: f64,
+) -> Vec<ScenarioResult> {
+    let specs = pipelines::all();
+    let profiles = paper_profiles();
+    // Flatten the grid; index order is the output order.
+    let mut scenarios = Vec::new();
+    for spec in &specs {
+        for &lambda in lambdas {
+            for &cv in cvs {
+                for &slo in slos {
+                    scenarios.push((spec.clone(), lambda, cv, slo));
+                }
+            }
+        }
+    }
+    let n_tasks = scenarios.len();
+    let run_one = |idx: usize| -> ScenarioResult {
+        let (spec, lambda, cv, slo) = &scenarios[idx];
+        // Deterministic per-scenario seed: results do not depend on how
+        // scenarios land on threads.
+        let trace = gamma_trace(*lambda, *cv, trace_secs, 9000 + idx as u64);
+        // Serial planner per scenario: the sweep is the parallel layer.
+        let outcome = match Planner::serial(spec, &profiles).plan(&trace, *slo) {
+            Ok(plan) => Ok(ScenarioPlan {
+                cost_per_hour: plan.cost_per_hour,
+                estimated_p99: plan.estimated_p99,
+                total_replicas: plan.config.total_replicas(),
+                iterations: plan.iterations,
+                cache_hit_rate: plan.telemetry.hit_rate(),
+            }),
+            Err(e) => Err(e.to_string()),
+        };
+        ScenarioResult {
+            pipeline: spec.name.clone(),
+            lambda: *lambda,
+            cv: *cv,
+            slo: *slo,
+            outcome,
+        }
+    };
+    parallel_map_indexed(n_tasks, default_workers(), run_one)
+}
+
+/// The CLI / bench entry point: sweep a standard grid, print a table,
+/// write `sweep.csv`.
+pub fn run_sweep(ctx: &Ctx) {
+    crate::util::bench::figure_header(
+        "Sweep",
+        "planner across the (λ, CV, SLO) grid, all four pipelines",
+    );
+    let lambdas: &[f64] = if ctx.quick { &[50.0, 150.0] } else { &[50.0, 100.0, 200.0, 300.0] };
+    let cvs: &[f64] = &[1.0, 4.0];
+    let slos: &[f64] = if ctx.quick { &[0.15, 0.35] } else { &[0.1, 0.15, 0.25, 0.35, 0.5] };
+    let results = sweep_grid(lambdas, cvs, slos, ctx.secs(45.0));
+    let mut rows = Vec::new();
+    let mut feasible = 0usize;
+    for r in &results {
+        match &r.outcome {
+            Ok(p) => {
+                feasible += 1;
+                println!(
+                    "  {:<18} λ={:>3} cv={} slo={:<4}: ${:>6.2}/hr  {:>3} replicas  p99 {:>6.1}ms  \
+                     {:>2} iters  cache {:>4.0}%",
+                    r.pipeline,
+                    r.lambda,
+                    r.cv,
+                    r.slo,
+                    p.cost_per_hour,
+                    p.total_replicas,
+                    p.estimated_p99 * 1e3,
+                    p.iterations,
+                    p.cache_hit_rate * 100.0
+                );
+                rows.push(format!(
+                    "{},{},{},{},{:.3},{},{:.4},{},{:.4}",
+                    r.pipeline,
+                    r.lambda,
+                    r.cv,
+                    r.slo,
+                    p.cost_per_hour,
+                    p.total_replicas,
+                    p.estimated_p99,
+                    p.iterations,
+                    p.cache_hit_rate
+                ));
+            }
+            Err(e) => {
+                println!(
+                    "  {:<18} λ={:>3} cv={} slo={:<4}: {e}",
+                    r.pipeline, r.lambda, r.cv, r.slo
+                );
+                rows.push(format!(
+                    "{},{},{},{},,,,,",
+                    r.pipeline, r.lambda, r.cv, r.slo
+                ));
+            }
+        }
+    }
+    println!("  {} / {} scenarios feasible", feasible, results.len());
+    ctx.write_csv(
+        "sweep.csv",
+        "pipeline,lambda,cv,slo,cost_per_hour,total_replicas,est_p99,iterations,cache_hit_rate",
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_grid_in_order_and_is_deterministic() {
+        let lambdas = [60.0, 120.0];
+        let cvs = [1.0];
+        let slos = [0.3];
+        let a = sweep_grid(&lambdas, &cvs, &slos, 20.0);
+        let b = sweep_grid(&lambdas, &cvs, &slos, 20.0);
+        assert_eq!(a.len(), 4 * lambdas.len() * cvs.len() * slos.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pipeline, y.pipeline);
+            assert_eq!(x.lambda, y.lambda);
+            match (&x.outcome, &y.outcome) {
+                (Ok(p), Ok(q)) => {
+                    assert_eq!(p.cost_per_hour.to_bits(), q.cost_per_hour.to_bits());
+                    assert_eq!(p.iterations, q.iterations);
+                }
+                (Err(e), Err(f)) => assert_eq!(e, f),
+                _ => panic!("outcome mismatch for {}", x.pipeline),
+            }
+        }
+        // Grid order: all scenarios of the first pipeline come first.
+        assert_eq!(a[0].pipeline, a[1].pipeline);
+        assert!(a.iter().filter(|r| r.outcome.is_ok()).count() >= 4);
+    }
+
+    #[test]
+    fn sweep_cost_grows_with_lambda_per_pipeline() {
+        let results = sweep_grid(&[50.0, 200.0], &[1.0], &[0.3], 25.0);
+        // For each pipeline: λ=50 row precedes λ=200 row.
+        for pair in results.chunks(2) {
+            let (lo, hi) = (&pair[0], &pair[1]);
+            assert_eq!(lo.pipeline, hi.pipeline);
+            if let (Ok(a), Ok(b)) = (&lo.outcome, &hi.outcome) {
+                assert!(
+                    b.cost_per_hour >= a.cost_per_hour - 1e-9,
+                    "{}: λ200 ${} < λ50 ${}",
+                    lo.pipeline,
+                    b.cost_per_hour,
+                    a.cost_per_hour
+                );
+            }
+        }
+    }
+}

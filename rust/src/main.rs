@@ -78,7 +78,7 @@ COMMANDS:
   simulate    --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
   serve       --pipeline <name> --lambda <qps> --duration <s>
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
-  experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|all>
+  experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
               [--quick]
   trace       --kind gamma|big-spike|instant-spike --out <file>
               [--lambda <qps>] [--cv <v>] [--duration <s>]
@@ -168,6 +168,14 @@ fn cmd_plan(args: &Args) -> bool {
             println!("  est. P99:  {:.1} ms (SLO {:.0} ms)", plan.estimated_p99 * 1e3, slo * 1e3);
             println!("  search:    {} iterations; actions: {}", plan.iterations,
                      plan.actions_taken.join(", "));
+            println!(
+                "  estimator: {} sims + {} pruned, {} cache hits ({:.0}% hit rate), {} threads",
+                plan.telemetry.cache_misses - plan.telemetry.pruned,
+                plan.telemetry.pruned,
+                plan.telemetry.cache_hits,
+                plan.telemetry.hit_rate() * 100.0,
+                plan.telemetry.threads
+            );
             if args.bool("compare-cg") {
                 for target in [CoarseTarget::Mean, CoarseTarget::Peak] {
                     let cg = coarse::plan(&spec, &profiles, &sample, slo, target);

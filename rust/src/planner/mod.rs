@@ -19,7 +19,29 @@
 //! candidate composes the batch doubling with the replica removals it
 //! enables, and is accepted only if the composition reduces cost. The
 //! termination guarantees (§4.3) are preserved and property-tested in
-//! `rust/tests/planner_props.rs`.
+//! `tests/planner_props.rs` (relative to the `rust/` crate root).
+//!
+//! ## Search performance
+//!
+//! Every greedy iteration evaluates 3×N candidate actions, each one a
+//! discrete-event simulation — the dominant planning cost. Three
+//! optimizations keep it fast without changing any result:
+//!
+//! * **Parallel candidate evaluation**: the 3×N candidates of an
+//!   iteration fan out over a scoped thread pool. Selection then replays
+//!   the serial fold over the gathered results in (stage, action) order,
+//!   so the parallel planner returns a bit-identical [`Plan`].
+//! * **Feasibility memo-cache**: results are memoized under a canonical
+//!   (trace, SLO, configuration) key shared across `initialize` and
+//!   `plan` — the downgrade path re-visits the same configurations many
+//!   times per search.
+//! * **Analytic pruning**: a cheap per-stage throughput lower bound
+//!   rejects under-provisioned candidates before the expensive
+//!   simulation (the same bound [`simulator::feasible`] applies).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::config::{PipelineConfig, PipelineSpec, StageConfig};
 use crate::profiler::{ProfileSet, BATCH_CANDIDATES};
@@ -29,6 +51,32 @@ use crate::workload::Trace;
 /// Hard cap on per-stage replicas during search: beyond this the workload
 /// is declared infeasible for the catalog (prevents unbounded growth).
 pub const MAX_REPLICAS: usize = 256;
+
+/// Telemetry of one search's feasibility evaluations.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTelemetry {
+    /// Feasibility queries answered from the memo-cache.
+    pub cache_hits: usize,
+    /// Feasibility queries that had to be computed.
+    pub cache_misses: usize,
+    /// Computed queries rejected by the analytic throughput bound before
+    /// any simulation ran (subset of `cache_misses`).
+    pub pruned: usize,
+    /// Worker threads used for candidate evaluation (1 = serial).
+    pub threads: usize,
+}
+
+impl SearchTelemetry {
+    /// Fraction of feasibility queries served by the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
 
 /// Planner outcome.
 #[derive(Debug, Clone)]
@@ -41,6 +89,8 @@ pub struct Plan {
     /// Search telemetry.
     pub iterations: usize,
     pub actions_taken: Vec<String>,
+    /// Feasibility cache / pruning telemetry for this search.
+    pub telemetry: SearchTelemetry,
 }
 
 /// Errors the planner can report.
@@ -58,23 +108,145 @@ impl std::fmt::Display for PlanError {
     }
 }
 
+/// Canonical memo-cache key: a fingerprint of the planning trace and the
+/// simulation parameters, the SLO bits, and the full per-stage
+/// configuration. Feasibility is a pure function of exactly these inputs.
+type CacheKey = (u64, u64, Vec<(u8, u32, u32)>);
+
+/// FNV-1a over every arrival timestamp plus the `SimParams` fields.
+/// Hashing the whole trace is O(N), so callers compute this once per
+/// search entry point and reuse it for every feasibility query; the full
+/// hash makes key collisions between different traces (or mutated
+/// `params`) practically impossible. The exhaustive destructuring is a
+/// guard: adding a field to `SimParams` fails compilation here instead
+/// of silently serving stale cache entries.
+fn trace_fingerprint(trace: &Trace, params: &SimParams) -> u64 {
+    let SimParams { routing_seed, replica_activation_delay, control_interval } = params;
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325 ^ (trace.arrivals.len() as u64);
+    let mut mix = |bits: u64| {
+        h ^= bits;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    };
+    for t in &trace.arrivals {
+        mix(t.to_bits());
+    }
+    mix(*routing_seed);
+    mix(replica_activation_delay.to_bits());
+    mix(control_interval.to_bits());
+    h
+}
+
+fn cache_key(fp: u64, slo: f64, config: &PipelineConfig) -> CacheKey {
+    let stages = config
+        .stages
+        .iter()
+        .map(|s| {
+            let hw = crate::hardware::Hardware::ALL
+                .iter()
+                .position(|&h| h == s.hw)
+                .unwrap_or(0) as u8;
+            (hw, s.batch as u32, s.replicas as u32)
+        })
+        .collect();
+    (fp, slo.to_bits(), stages)
+}
+
+/// Shared, thread-safe feasibility memo-cache with counters.
+#[derive(Default)]
+struct FeasibilityCache {
+    map: Mutex<HashMap<CacheKey, bool>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    pruned: AtomicUsize,
+}
+
+impl FeasibilityCache {
+    fn snapshot(&self) -> (usize, usize, usize) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.pruned.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The three candidate actions of Algorithm 2, in the serial planner's
+/// evaluation order. The order is load-bearing: tie-breaking (stage
+/// index, then action kind) keeps parallel and serial plans identical.
+const ACTIONS_PER_STAGE: usize = 3;
+
 pub struct Planner<'a> {
     pub spec: &'a PipelineSpec,
     pub profiles: &'a ProfileSet,
     pub params: SimParams,
+    /// Worker threads for candidate evaluation (1 = serial).
+    pub threads: usize,
+    cache: FeasibilityCache,
 }
 
 impl<'a> Planner<'a> {
     pub fn new(spec: &'a PipelineSpec, profiles: &'a ProfileSet) -> Self {
-        Planner { spec, profiles, params: SimParams::default() }
+        let threads = crate::util::par::default_workers();
+        Planner {
+            spec,
+            profiles,
+            params: SimParams::default(),
+            threads,
+            cache: FeasibilityCache::default(),
+        }
     }
 
+    /// A planner that evaluates candidates serially (reference semantics).
+    pub fn serial(spec: &'a PipelineSpec, profiles: &'a ProfileSet) -> Self {
+        Self::new(spec, profiles).with_threads(1)
+    }
+
+    /// Override the candidate-evaluation worker count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The (trace, params) fingerprint prefix of every cache key for one
+    /// search. O(arrivals) — computed once per public entry point, never
+    /// per feasibility query.
+    fn fingerprint(&self, trace: &Trace) -> u64 {
+        trace_fingerprint(trace, &self.params)
+    }
+
+    /// Cached feasibility predicate under a precomputed fingerprint:
+    /// memo-cache lookup, then the analytic throughput lower bound, then
+    /// (only if needed) the Estimator.
+    fn feasible_fp(&self, fp: u64, config: &PipelineConfig, trace: &Trace, slo: f64) -> bool {
+        let key = cache_key(fp, slo, config);
+        if let Some(&v) = self.cache.map.lock().unwrap().get(&key) {
+            self.cache.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+        let v = if !simulator::throughput_bound_ok(
+            self.spec,
+            self.profiles,
+            config,
+            trace.mean_rate(),
+        ) {
+            self.cache.pruned.fetch_add(1, Ordering::Relaxed);
+            false
+        } else {
+            simulator::estimate_p99(self.spec, self.profiles, config, trace, &self.params) <= slo
+        };
+        self.cache.map.lock().unwrap().insert(key, v);
+        v
+    }
+
+    /// Cached feasibility predicate (standalone-call convenience).
     fn feasible(&self, config: &PipelineConfig, trace: &Trace, slo: f64) -> bool {
-        simulator::feasible(self.spec, self.profiles, config, trace, slo, &self.params)
+        self.feasible_fp(self.fingerprint(trace), config, trace, slo)
     }
 
     /// Algorithm 1: find an initial feasible configuration (or fail).
     pub fn initialize(&self, trace: &Trace, slo: f64) -> Result<PipelineConfig, PlanError> {
+        let fp = self.fingerprint(trace);
         // Lines 2-5: batch = 1, replicas = 1, lowest-latency hardware.
         let mut config = PipelineConfig {
             stages: self
@@ -97,7 +269,7 @@ impl<'a> Planner<'a> {
             )));
         }
         // Lines 9-11: replicate the throughput bottleneck until feasible.
-        while !self.feasible(&config, trace, slo) {
+        while !self.feasible_fp(fp, &config, trace, slo) {
             let bottleneck = self.find_min_throughput(&config);
             config.stages[bottleneck].replicas += 1;
             if config.stages[bottleneck].replicas > MAX_REPLICAS {
@@ -130,37 +302,78 @@ impl<'a> Planner<'a> {
         worst
     }
 
+    /// Evaluate one candidate action by its flat index (stage-major, then
+    /// action kind: batch ×2, replica −1, downgrade).
+    fn eval_action(
+        &self,
+        fp: u64,
+        idx: usize,
+        config: &PipelineConfig,
+        trace: &Trace,
+        slo: f64,
+    ) -> Option<PipelineConfig> {
+        let stage = idx / ACTIONS_PER_STAGE;
+        match idx % ACTIONS_PER_STAGE {
+            0 => self.try_increase_batch_fp(fp, config, stage, trace, slo),
+            1 => self.try_remove_replica_fp(fp, config, stage, trace, slo),
+            _ => self.try_downgrade_hw_fp(fp, config, stage, trace, slo),
+        }
+    }
+
+    /// Evaluate all 3×N candidate actions, fanning out over a scoped
+    /// thread pool when `threads > 1`. The result vector is indexed by
+    /// flat action index regardless of evaluation order, which is what
+    /// lets selection replay the serial fold deterministically.
+    fn evaluate_candidates(
+        &self,
+        fp: u64,
+        config: &PipelineConfig,
+        trace: &Trace,
+        slo: f64,
+    ) -> Vec<Option<PipelineConfig>> {
+        let n_tasks = self.spec.stages.len() * ACTIONS_PER_STAGE;
+        crate::util::par::parallel_map_indexed(n_tasks, self.threads, |idx| {
+            self.eval_action(fp, idx, config, trace, slo)
+        })
+    }
+
+    fn action_label(&self, idx: usize) -> String {
+        let name = &self.spec.stages[idx / ACTIONS_PER_STAGE].name;
+        match idx % ACTIONS_PER_STAGE {
+            0 => format!("batch x2 @ {name}"),
+            1 => format!("replica -1 @ {name}"),
+            _ => format!("downgrade @ {name}"),
+        }
+    }
+
     /// Algorithm 2: greedy cost minimization.
     pub fn plan(&self, trace: &Trace, slo: f64) -> Result<Plan, PlanError> {
+        let t0 = self.cache.snapshot();
+        let fp = self.fingerprint(trace);
         let mut config = self.initialize(trace, slo)?;
         let mut actions_taken = Vec::new();
         let mut iterations = 0usize;
         loop {
             iterations += 1;
             let current_cost = config.cost_per_hour();
-            let mut best: Option<(PipelineConfig, f64, String)> = None;
-            let consider = |cand: PipelineConfig, label: String, best: &mut Option<(PipelineConfig, f64, String)>| {
+            let candidates = self.evaluate_candidates(fp, &config, trace, slo);
+            // Deterministic selection: replay the serial fold in flat
+            // action order — first-best wins within a 1e-12 cost band, so
+            // ties break by (stage index, action kind) exactly as the
+            // serial planner's nested loops did.
+            let mut best: Option<(usize, PipelineConfig, f64)> = None;
+            for (idx, cand) in candidates.into_iter().enumerate() {
+                let Some(cand) = cand else { continue };
                 let cost = cand.cost_per_hour();
                 if cost < current_cost - 1e-9
-                    && best.as_ref().map_or(true, |(_, c, _)| cost < *c - 1e-12)
+                    && best.as_ref().map_or(true, |(_, _, c)| cost < *c - 1e-12)
                 {
-                    *best = Some((cand, cost, label));
-                }
-            };
-            for stage in 0..self.spec.stages.len() {
-                if let Some(cand) = self.try_increase_batch(&config, stage, trace, slo) {
-                    consider(cand, format!("batch x2 @ {}", self.spec.stages[stage].name), &mut best);
-                }
-                if let Some(cand) = self.try_remove_replica(&config, stage, trace, slo) {
-                    consider(cand, format!("replica -1 @ {}", self.spec.stages[stage].name), &mut best);
-                }
-                if let Some(cand) = self.try_downgrade_hw(&config, stage, trace, slo) {
-                    consider(cand, format!("downgrade @ {}", self.spec.stages[stage].name), &mut best);
+                    best = Some((idx, cand, cost));
                 }
             }
             match best {
-                Some((next, _, label)) => {
-                    actions_taken.push(label);
+                Some((idx, next, _)) => {
+                    actions_taken.push(self.action_label(idx));
                     config = next;
                 }
                 None => break,
@@ -169,12 +382,19 @@ impl<'a> Planner<'a> {
         let estimated_p99 = simulator::estimate_p99(
             self.spec, self.profiles, &config, trace, &self.params,
         );
+        let t1 = self.cache.snapshot();
         Ok(Plan {
             cost_per_hour: config.cost_per_hour(),
             config,
             estimated_p99,
             iterations,
             actions_taken,
+            telemetry: SearchTelemetry {
+                cache_hits: t1.0 - t0.0,
+                cache_misses: t1.1 - t0.1,
+                pruned: t1.2 - t0.2,
+                threads: self.threads,
+            },
         })
     }
 
@@ -182,6 +402,17 @@ impl<'a> Planner<'a> {
     /// removals the higher per-replica throughput enables.
     pub fn try_increase_batch(
         &self,
+        config: &PipelineConfig,
+        stage: usize,
+        trace: &Trace,
+        slo: f64,
+    ) -> Option<PipelineConfig> {
+        self.try_increase_batch_fp(self.fingerprint(trace), config, stage, trace, slo)
+    }
+
+    fn try_increase_batch_fp(
+        &self,
+        fp: u64,
         config: &PipelineConfig,
         stage: usize,
         trace: &Trace,
@@ -199,7 +430,7 @@ impl<'a> Planner<'a> {
         }
         let mut cand = config.clone();
         cand.stages[stage].batch = next_batch;
-        if !self.feasible(&cand, trace, slo) {
+        if !self.feasible_fp(fp, &cand, trace, slo) {
             return None;
         }
         // Harvest enabled removals (keeps the greedy loop strictly
@@ -207,7 +438,7 @@ impl<'a> Planner<'a> {
         while cand.stages[stage].replicas > 1 {
             let mut fewer = cand.clone();
             fewer.stages[stage].replicas -= 1;
-            if self.feasible(&fewer, trace, slo) {
+            if self.feasible_fp(fp, &fewer, trace, slo) {
                 cand = fewer;
             } else {
                 break;
@@ -224,12 +455,23 @@ impl<'a> Planner<'a> {
         trace: &Trace,
         slo: f64,
     ) -> Option<PipelineConfig> {
+        self.try_remove_replica_fp(self.fingerprint(trace), config, stage, trace, slo)
+    }
+
+    fn try_remove_replica_fp(
+        &self,
+        fp: u64,
+        config: &PipelineConfig,
+        stage: usize,
+        trace: &Trace,
+        slo: f64,
+    ) -> Option<PipelineConfig> {
         if config.stages[stage].replicas <= 1 {
             return None;
         }
         let mut cand = config.clone();
         cand.stages[stage].replicas -= 1;
-        self.feasible(&cand, trace, slo).then_some(cand)
+        self.feasible_fp(fp, &cand, trace, slo).then_some(cand)
     }
 
     /// Candidate: move the stage to the next cheaper hardware tier,
@@ -237,6 +479,17 @@ impl<'a> Planner<'a> {
     /// (paper §4.3 "Downgrading hardware is more involved...").
     pub fn try_downgrade_hw(
         &self,
+        config: &PipelineConfig,
+        stage: usize,
+        trace: &Trace,
+        slo: f64,
+    ) -> Option<PipelineConfig> {
+        self.try_downgrade_hw_fp(self.fingerprint(trace), config, stage, trace, slo)
+    }
+
+    fn try_downgrade_hw_fp(
+        &self,
+        fp: u64,
         config: &PipelineConfig,
         stage: usize,
         trace: &Trace,
@@ -257,7 +510,7 @@ impl<'a> Planner<'a> {
                 if cand.cost_per_hour() >= current_cost {
                     break;
                 }
-                if self.feasible(&cand, trace, slo) {
+                if self.feasible_fp(fp, &cand, trace, slo) {
                     break;
                 }
                 cand.stages[stage].replicas += 1;
@@ -265,14 +518,14 @@ impl<'a> Planner<'a> {
                     break;
                 }
             }
-            if cand.cost_per_hour() >= current_cost || !self.feasible(&cand, trace, slo) {
+            if cand.cost_per_hour() >= current_cost || !self.feasible_fp(fp, &cand, trace, slo) {
                 // Try batching on the lower tier to regain throughput.
                 let mut batched = None;
                 'batches: for &b in BATCH_CANDIDATES.iter().filter(|&&b| b <= prof.max_batch()) {
                     let mut alt = config.clone();
                     alt.stages[stage] = StageConfig { hw: lower, batch: b, replicas: 1 };
                     while alt.cost_per_hour() < current_cost {
-                        if self.feasible(&alt, trace, slo) {
+                        if self.feasible_fp(fp, &alt, trace, slo) {
                             batched = Some(alt);
                             break 'batches;
                         }
@@ -296,13 +549,13 @@ impl<'a> Planner<'a> {
                 while alt.stages[stage].replicas > 1 {
                     let mut fewer = alt.clone();
                     fewer.stages[stage].replicas -= 1;
-                    if self.feasible(&fewer, trace, slo) {
+                    if self.feasible_fp(fp, &fewer, trace, slo) {
                         alt = fewer;
                     } else {
                         break;
                     }
                 }
-                if self.feasible(&alt, trace, slo)
+                if self.feasible_fp(fp, &alt, trace, slo)
                     && alt.cost_per_hour() < best.cost_per_hour()
                 {
                     best = alt;
@@ -433,5 +686,73 @@ mod tests {
         let low = plan(&spec, &profiles, &quick_trace(50.0), 0.3).unwrap();
         let high = plan(&spec, &profiles, &quick_trace(200.0), 0.3).unwrap();
         assert!(high.cost_per_hour >= low.cost_per_hour - 1e-9);
+    }
+
+    #[test]
+    fn parallel_plan_is_bit_identical_to_serial() {
+        let profiles = paper_profiles();
+        for spec in pipelines::all() {
+            let trace = quick_trace(120.0);
+            let slo = 0.3;
+            let serial = Planner::serial(&spec, &profiles).plan(&trace, slo).unwrap();
+            let parallel = Planner::new(&spec, &profiles)
+                .with_threads(4)
+                .plan(&trace, slo)
+                .unwrap();
+            assert_eq!(serial.config, parallel.config, "{}", spec.name);
+            assert_eq!(serial.actions_taken, parallel.actions_taken, "{}", spec.name);
+            assert_eq!(serial.iterations, parallel.iterations, "{}", spec.name);
+            assert_eq!(
+                serial.cost_per_hour.to_bits(),
+                parallel.cost_per_hour.to_bits(),
+                "{}",
+                spec.name
+            );
+            assert_eq!(
+                serial.estimated_p99.to_bits(),
+                parallel.estimated_p99.to_bits(),
+                "{}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn feasibility_cache_reports_hits() {
+        let spec = pipelines::social_media();
+        let profiles = paper_profiles();
+        let planner = Planner::new(&spec, &profiles);
+        let trace = quick_trace(100.0);
+        let plan = planner.plan(&trace, 0.3).unwrap();
+        let t = &plan.telemetry;
+        assert!(t.cache_misses > 0, "no feasibility work recorded");
+        assert!(
+            t.cache_hits > 0,
+            "downgrade search should revisit configs: {t:?}"
+        );
+        assert!(t.hit_rate() > 0.0 && t.hit_rate() < 1.0, "rate {}", t.hit_rate());
+        // Re-planning the same problem on the same planner is ~all hits.
+        let again = planner.plan(&trace, 0.3).unwrap();
+        assert_eq!(again.config, plan.config);
+        assert!(
+            again.telemetry.hit_rate() > 0.9,
+            "second pass rate {}",
+            again.telemetry.hit_rate()
+        );
+    }
+
+    #[test]
+    fn cache_distinguishes_slos_and_traces() {
+        let spec = pipelines::image_processing();
+        let profiles = paper_profiles();
+        let planner = Planner::new(&spec, &profiles);
+        // Same planner instance, different SLOs and traces: results must
+        // match fresh planners (no cross-contamination through the cache).
+        for (lambda, slo) in [(100.0, 0.15), (100.0, 0.5), (200.0, 0.3)] {
+            let trace = quick_trace(lambda);
+            let shared = planner.plan(&trace, slo).unwrap();
+            let fresh = Planner::new(&spec, &profiles).plan(&trace, slo).unwrap();
+            assert_eq!(shared.config, fresh.config, "λ={lambda} slo={slo}");
+        }
     }
 }

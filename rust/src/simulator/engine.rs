@@ -387,11 +387,36 @@ impl<'a> Engine<'a> {
                 self.accrue_cost(now);
                 let current = self.stages[stage].provisioned();
                 if target > current {
-                    let add = target - current;
-                    self.stages[stage].pending += add;
-                    let when = now + self.params.replica_activation_delay;
-                    for _ in 0..add {
-                        self.push(when, EventKind::ReplicaUp { stage: stage as u16 });
+                    let mut add = target - current;
+                    // A rate flap (scale-down immediately followed by
+                    // scale-up) must not pay the activation delay for
+                    // capacity that was never actually released. Reclaim
+                    // in two steps, cheapest capacity first:
+                    //  1. retiring replicas — still online finishing
+                    //     their current batch; cancelling the retirement
+                    //     restores them instantly;
+                    //  2. cancelled-but-inflight activations — their
+                    //     ReplicaUp event is already scheduled, so
+                    //     un-cancelling brings them online at the
+                    //     original (earlier) activation time.
+                    // Only what remains is genuinely new and pays the
+                    // full activation delay.
+                    {
+                        let st = &mut self.stages[stage];
+                        let reclaim = add.min(st.retire_debt);
+                        st.retire_debt -= reclaim;
+                        add -= reclaim;
+                        let uncancel = add.min(st.pending_cancel);
+                        st.pending_cancel -= uncancel;
+                        st.pending += uncancel;
+                        add -= uncancel;
+                    }
+                    if add > 0 {
+                        self.stages[stage].pending += add;
+                        let when = now + self.params.replica_activation_delay;
+                        for _ in 0..add {
+                            self.push(when, EventKind::ReplicaUp { stage: stage as u16 });
+                        }
                     }
                 } else if target < current {
                     // Remove: cancel pending activations first, then idle

@@ -39,6 +39,30 @@ pub fn estimate_p99(
     stats::p99(&result.latencies)
 }
 
+/// Cheap analytic necessary condition for feasibility: every stage must
+/// have enough aggregate throughput for its share of the mean arrival
+/// rate, or queues diverge and the expensive simulation is wasted. The
+/// planner uses this as a pre-simulation pruning bound.
+pub fn throughput_bound_ok(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    lambda: f64,
+) -> bool {
+    if !lambda.is_finite() {
+        return true;
+    }
+    for (i, stage) in spec.stages.iter().enumerate() {
+        let c = &config.stages[i];
+        let prof = profiles.get(&stage.model).get(c.hw).expect("profile");
+        let capacity = c.replicas as f64 * prof.throughput(c.batch);
+        if capacity < lambda * stage.scale_factor * 0.98 {
+            return false;
+        }
+    }
+    true
+}
+
 /// The planner's feasibility predicate: does the configuration meet the
 /// P99 latency SLO on the sample trace? (Paper §4.3 `Feasible`.)
 pub fn feasible(
@@ -49,19 +73,8 @@ pub fn feasible(
     slo: f64,
     params: &SimParams,
 ) -> bool {
-    // Cheap necessary condition first: every stage must have enough
-    // aggregate throughput for its share of the mean arrival rate;
-    // otherwise queues diverge and the expensive simulation is wasted.
-    let lambda = trace.mean_rate();
-    if lambda.is_finite() {
-        for (i, stage) in spec.stages.iter().enumerate() {
-            let c = &config.stages[i];
-            let prof = profiles.get(&stage.model).get(c.hw).expect("profile");
-            let capacity = c.replicas as f64 * prof.throughput(c.batch);
-            if capacity < lambda * stage.scale_factor * 0.98 {
-                return false;
-            }
-        }
+    if !throughput_bound_ok(spec, profiles, config, trace.mean_rate()) {
+        return false;
     }
     estimate_p99(spec, profiles, config, trace, params) <= slo
 }

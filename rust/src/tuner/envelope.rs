@@ -8,16 +8,21 @@
 
 use std::collections::VecDeque;
 
-/// Window ladder: T_s, 2·T_s, 4·T_s, … capped at 60 s (inclusive).
+/// Window ladder: T_s, 2·T_s, 4·T_s, … capped at 60 s (inclusive). The
+/// ladder always starts at T_s, even when T_s ≥ 60 s (a slow pipeline
+/// still needs its service-time rung — the cap only bounds the rungs
+/// *above* T_s, so such a pipeline gets the single window [T_s]).
 pub fn window_ladder(service_time: f64) -> Vec<f64> {
     let ts = service_time.max(0.010); // floor at 10 ms for sanity
-    let mut windows = Vec::new();
-    let mut w = ts;
+    let mut windows = vec![ts];
+    let mut w = ts * 2.0;
     while w < 60.0 {
         windows.push(w);
         w *= 2.0;
     }
-    windows.push(60.0);
+    if ts < 60.0 {
+        windows.push(60.0);
+    }
     windows
 }
 

@@ -1,0 +1,100 @@
+//! Minimal scoped fan-out helper (offline replacement for rayon-style
+//! parallel iterators — no crate network access on this image).
+//!
+//! Used by the Planner's candidate evaluation and the experiment
+//! scenario sweep: both need "evaluate N independent tasks on up to W
+//! threads and get the results back in index order", which is exactly
+//! what [`parallel_map_indexed`] provides. Index-ordered results are the
+//! key property — callers replay deterministic selection logic over them
+//! regardless of which thread computed what.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Evaluate `f(0)..f(n-1)` across up to `workers` scoped threads and
+/// return the results in index order. Tasks are work-stolen off a shared
+/// atomic counter, so uneven task costs balance automatically. Falls
+/// back to a plain serial loop when one worker (or at most one task)
+/// suffices. Panics in `f` propagate to the caller.
+pub fn parallel_map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.min(n).max(1);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let idx = next.fetch_add(1, Ordering::Relaxed);
+                        if idx >= n {
+                            break;
+                        }
+                        local.push((idx, f(idx)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (idx, v) in h.join().expect("parallel_map worker panicked") {
+                out[idx] = Some(v);
+            }
+        }
+    });
+    out.into_iter()
+        .map(|v| v.expect("every index is computed exactly once"))
+        .collect()
+}
+
+/// Default fan-out width: one worker per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_index_order() {
+        for workers in [1, 2, 3, 8, 64] {
+            let got = parallel_map_indexed(37, workers, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_task() {
+        let empty: Vec<usize> = parallel_map_indexed(0, 4, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map_indexed(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn uneven_tasks_all_complete() {
+        // Tasks of wildly different cost: the atomic work counter must
+        // hand every index to exactly one worker.
+        let got = parallel_map_indexed(64, 4, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

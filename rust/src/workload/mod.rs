@@ -49,7 +49,11 @@ impl Trace {
     }
 
     /// Peak rate over a sliding window of `window` seconds (the CG-Peak
-    /// planning statistic, paper §6: window set to the SLO).
+    /// planning statistic, paper §6: window set to the SLO). The divisor
+    /// is clamped to the trace duration the same way
+    /// `TrafficEnvelope::effective` clamps its windows: a 10 s trace
+    /// cannot say anything about 60 s windows, and dividing its total
+    /// count by the full window would underestimate the statistic 6×.
     pub fn peak_rate(&self, window: f64) -> f64 {
         assert!(window > 0.0);
         let a = &self.arrivals;
@@ -64,7 +68,9 @@ impl Trace {
             }
             best = best.max(hi - lo + 1);
         }
-        best as f64 / window
+        let duration = self.duration();
+        let effective = if duration > 0.0 { window.min(duration) } else { window };
+        best as f64 / effective
     }
 
     /// Split into (head, tail) at a fraction of the *duration* (the paper

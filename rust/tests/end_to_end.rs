@@ -160,7 +160,7 @@ fn quick_experiment_registry_is_complete() {
     for name in inferline::experiments::ALL_FIGURES {
         assert!(
             ["fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-             "fig13", "fig14", "headline"]
+             "fig13", "fig14", "headline", "sweep"]
             .contains(name),
             "unexpected experiment {name}"
         );

@@ -1,0 +1,226 @@
+//! Regression tests for the bug fixes shipped with the build-restoration
+//! PR: retire-debt reclamation on scale-up flaps, the window-ladder T_s
+//! rung for slow pipelines, the peak-rate divisor clamp on short traces,
+//! and serial/parallel planner determinism.
+
+use inferline::config::{Framework, PipelineConfig, PipelineSpec, StageConfig, StageSpec};
+use inferline::hardware::Hardware;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::profiler::{BatchProfile, ProfileSet};
+use inferline::simulator::control::{
+    simulate_controlled, ControlAction, ControlState, Controller,
+};
+use inferline::simulator::SimParams;
+use inferline::tuner::envelope::window_ladder;
+use inferline::workload::{gamma_trace, Trace};
+
+/// One-stage pipeline with a fixed 10 s batch-1 service time, 4 replicas,
+/// and one arrival every 2.5 s: exactly critical utilization on a time
+/// grid where every arrival coincides with a completion, so in steady
+/// state *every* query's latency is exactly the 10 s service time. Any
+/// capacity gap shows up as a clean latency step, which makes the flap
+/// behavior fully deterministic to assert on.
+fn slow_stage_setup() -> (PipelineSpec, ProfileSet, PipelineConfig, Trace) {
+    let spec = PipelineSpec {
+        name: "one-slow-stage".into(),
+        stages: vec![StageSpec {
+            name: "only".into(),
+            model: "m".into(),
+            scale_factor: 1.0,
+            children: vec![],
+        }],
+        roots: vec![0],
+        framework: Framework::Clipper,
+    };
+    spec.validate().unwrap();
+    let mut profiles = ProfileSet::default();
+    // Batch cap 1 => a single (1, 10.0s) profile point.
+    profiles.insert("m", Hardware::Cpu, BatchProfile::affine(10.0, 0.0, 1));
+    let config = PipelineConfig {
+        stages: vec![StageConfig { hw: Hardware::Cpu, batch: 1, replicas: 4 }],
+    };
+    // 24 arrivals at t = 2.5, 5.0, …, 60.0.
+    let trace = Trace::new((1..=24).map(|i| i as f64 * 2.5).collect());
+    (spec, profiles, config, trace)
+}
+
+/// Scripted controller: fires each (time, replica-target) action on the
+/// first tick at or after its time, in order.
+struct ScriptController {
+    /// (fire at or after, replica target) — strictly increasing times.
+    schedule: Vec<(f64, usize)>,
+    next: usize,
+}
+
+impl ScriptController {
+    fn new(schedule: Vec<(f64, usize)>) -> Self {
+        ScriptController { schedule, next: 0 }
+    }
+}
+
+impl Controller for ScriptController {
+    fn on_arrival(&mut self, _t: f64) {}
+
+    fn on_tick(&mut self, now: f64, _state: &ControlState) -> Vec<ControlAction> {
+        match self.schedule.get(self.next) {
+            Some(&(at, replicas)) if now >= at => {
+                self.next += 1;
+                vec![ControlAction::SetReplicas { stage: 0, replicas }]
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// A scale-down followed one control tick later by a scale-up must
+/// reclaim the still-online retiring replicas instead of paying the 5 s
+/// activation delay for capacity that was never actually released.
+///
+/// At t = 20 all four replicas are busy (batches run 10 s), so the
+/// scale-down to 1 marks three of them as retire-on-completion; none
+/// completes before the scale-up at t = 21. With reclamation the flap is
+/// a no-op — every query's latency stays exactly the 10 s service time.
+/// Without it, the three retiring replicas exit at t = 22.5/25/27.5 while
+/// their three replacements sit out the activation delay until t = 26,
+/// and the starved queue pushes latencies past 12.5 s.
+#[test]
+fn scale_flap_restores_capacity_without_activation_spike() {
+    let (spec, profiles, config, trace) = slow_stage_setup();
+    let params = SimParams::default(); // 1 s control ticks, 5 s activation
+    let mut flap = ScriptController::new(vec![(20.0, 1), (21.0, 4)]);
+    let result = simulate_controlled(&spec, &profiles, &config, &trace, &params, &mut flap);
+    assert_eq!(result.latencies.len(), trace.len(), "queries lost during flap");
+    let max_latency = result.latencies.iter().copied().fold(0.0, f64::max);
+    assert!(
+        max_latency < 10.5,
+        "flap paid an activation/queueing penalty: max latency {max_latency:.2}s \
+         (service time is 10s; reclaimed capacity must restore instantly)"
+    );
+    // The replica timeline must show the dip and the instant restore.
+    assert!(result
+        .replica_timeline
+        .iter()
+        .any(|&(t, n)| (t - 20.0).abs() < 1e-9 && n == 1));
+    assert!(result
+        .replica_timeline
+        .iter()
+        .any(|&(t, n)| (t - 21.0).abs() < 1e-9 && n == 4));
+}
+
+/// Control case: with a *long* gap the retiring replicas really do exit,
+/// so the later scale-up must pay the activation delay — guarding against
+/// reclamation accidentally granting free capacity for genuinely
+/// released replicas.
+#[test]
+fn slow_flap_still_pays_activation_delay() {
+    let (spec, profiles, config, trace) = slow_stage_setup();
+    let params = SimParams::default();
+    // The three retiring replicas complete (and exit) at t = 22.5, 25.0
+    // and 27.5; scaling up at t = 35 finds nothing to reclaim.
+    let mut flap = ScriptController::new(vec![(20.0, 1), (35.0, 4)]);
+    let result = simulate_controlled(&spec, &profiles, &config, &trace, &params, &mut flap);
+    assert_eq!(result.latencies.len(), trace.len());
+    let max_latency = result.latencies.iter().copied().fold(0.0, f64::max);
+    assert!(
+        max_latency > 11.0,
+        "genuinely released capacity must not restore for free: max {max_latency:.2}s"
+    );
+}
+
+/// The same flap class one lifecycle state earlier: a scale-up must also
+/// reclaim cancelled-but-inflight activations, which come online at
+/// their *original* activation time instead of paying a fresh 5 s delay.
+#[test]
+fn scale_flap_reclaims_cancelled_pending_activations() {
+    let spec = PipelineSpec {
+        name: "one-slow-stage".into(),
+        stages: vec![StageSpec {
+            name: "only".into(),
+            model: "m".into(),
+            scale_factor: 1.0,
+            children: vec![],
+        }],
+        roots: vec![0],
+        framework: Framework::Clipper,
+    };
+    spec.validate().unwrap();
+    let mut profiles = ProfileSet::default();
+    profiles.insert("m", Hardware::Cpu, BatchProfile::affine(10.0, 0.0, 1));
+    let config = PipelineConfig {
+        stages: vec![StageConfig { hw: Hardware::Cpu, batch: 1, replicas: 1 }],
+    };
+    // q1 occupies the only replica from t = 0.2 to 10.2. The script asks
+    // for a second replica at t = 1 (online at t = 6), cancels it at
+    // t = 2 while it is still in flight, and re-requests it at t = 3.
+    // Un-cancelling keeps the original t = 6 activation, so q2 (t = 6.5)
+    // is served immediately: latency exactly 10 s. Without reclamation a
+    // fresh activation lands at t = 8 and q2 waits 1.5 s.
+    let trace = Trace::new(vec![0.2, 6.5]);
+    let params = SimParams::default();
+    let mut flap = ScriptController::new(vec![(1.0, 2), (2.0, 1), (3.0, 2)]);
+    let result = simulate_controlled(&spec, &profiles, &config, &trace, &params, &mut flap);
+    assert_eq!(result.latencies.len(), 2);
+    let q2 = result.latencies[1];
+    assert!(
+        (q2 - 10.0).abs() < 0.5,
+        "cancelled in-flight activation not reclaimed: q2 latency {q2:.2}s (want ~10.0s)"
+    );
+}
+
+#[test]
+fn window_ladder_always_includes_service_time_rung() {
+    // Slow pipelines (T_s >= 60 s) keep their T_s rung instead of
+    // degenerating to the single window [60.0].
+    assert_eq!(window_ladder(75.0), vec![75.0]);
+    assert_eq!(window_ladder(60.0), vec![60.0]);
+    assert_eq!(window_ladder(120.0), vec![120.0]);
+    // Just below the cap: T_s rung plus the 60 s cap.
+    assert_eq!(window_ladder(40.0), vec![40.0, 60.0]);
+    // Fast pipelines: unchanged doubling ladder from T_s to 60 s.
+    let fast = window_ladder(0.25);
+    assert!((fast[0] - 0.25).abs() < 1e-12);
+    assert!((fast.last().unwrap() - 60.0).abs() < 1e-9);
+    for pair in fast.windows(2) {
+        assert!(pair[1] > pair[0]);
+    }
+}
+
+#[test]
+fn peak_rate_clamps_window_to_trace_duration() {
+    // 10 QPS uniform trace lasting ~10 s: a 60 s peak window must divide
+    // by the trace duration, not the full window.
+    let trace = Trace::new((1..=100).map(|i| i as f64 / 10.0).collect());
+    let mean = trace.mean_rate();
+    let peak60 = trace.peak_rate(60.0);
+    assert!(
+        (peak60 - mean).abs() < 1.0,
+        "peak over an over-long window should ~equal the mean rate: peak {peak60:.2} mean {mean:.2}"
+    );
+    // Regression guard against the old behavior (100 queries / 60 s ≈ 1.7).
+    assert!(peak60 > mean * 0.9, "underestimated: {peak60:.2} vs mean {mean:.2}");
+    // Windows shorter than the trace are unaffected.
+    let bursty = gamma_trace(100.0, 4.0, 60.0, 3);
+    assert!(bursty.peak_rate(0.15) > bursty.mean_rate() * 1.5);
+    // CG-Peak's statistic on a short planning trace no longer undershoots
+    // the sustained rate.
+    let short = gamma_trace(100.0, 1.0, 10.0, 5);
+    assert!(short.peak_rate(30.0) >= short.mean_rate() * 0.95);
+}
+
+#[test]
+fn parallel_and_serial_planner_agree_end_to_end() {
+    let profiles = paper_profiles();
+    let spec = inferline::config::pipelines::social_media();
+    let trace = gamma_trace(150.0, 1.0, 30.0, 7);
+    let slo = 0.25;
+    let serial = Planner::serial(&spec, &profiles).plan(&trace, slo).unwrap();
+    let parallel = Planner::new(&spec, &profiles).with_threads(8).plan(&trace, slo).unwrap();
+    assert_eq!(serial.config, parallel.config);
+    assert_eq!(serial.actions_taken, parallel.actions_taken);
+    assert_eq!(serial.iterations, parallel.iterations);
+    assert_eq!(serial.cost_per_hour.to_bits(), parallel.cost_per_hour.to_bits());
+    // Telemetry must report real cache activity.
+    assert!(parallel.telemetry.cache_misses > 0);
+    assert!(parallel.telemetry.cache_hits + parallel.telemetry.cache_misses > 0);
+}

@@ -1,0 +1,151 @@
+//! Stub of the `xla` PJRT bindings used by `inferline::runtime`.
+//!
+//! The real crate wraps a PJRT CPU client and compiled HLO executables;
+//! this image has neither the crate nor the native library, so the stub
+//! mirrors the API surface exactly and fails gracefully at runtime:
+//! [`PjRtClient::cpu`] returns an error, which the serving layer already
+//! treats as "executor init failed" (workers report and exit; the
+//! calibrated backend is unaffected). All `runtime` tests gate on the
+//! presence of `artifacts/manifest.json`, which a stub-only image does
+//! not have, so nothing downstream ever reaches a stubbed execution path.
+//!
+//! Swapping in the real bindings is a one-line Cargo.toml change; no
+//! source edits are needed (ROADMAP "Open items").
+
+use std::fmt;
+
+/// Error type; the callers only format it with `{:?}`.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla unavailable: {}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla unavailable: {}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: the PJRT runtime is not present on this image (stub crate; \
+         use the calibrated backend, or vendor the real xla bindings)"
+    )))
+}
+
+/// Host literal (stub: shape + data are retained so construction works).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from f32 data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// First element of a 1-tuple result (stub: never reached at runtime).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("to_tuple1")
+    }
+
+    /// Typed host copy (stub: never reached at runtime).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("to_vec")
+    }
+
+    /// Declared dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; generic over the argument type to
+    /// match the real API's `execute::<Literal>(..)` call sites.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execute")
+    }
+}
+
+/// PJRT client (stub): construction fails, so callers bail out before any
+/// execution path is reached.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_construction_and_reshape_work() {
+        let lit = Literal::vec1(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert!(lit.reshape(&[4, 4]).is_err());
+    }
+}
