@@ -13,6 +13,7 @@ use inferline::baselines::coarse::CoarseTarget;
 use inferline::config::pipelines;
 use inferline::experiments::common::{print_summary, run_coarse, run_inferline};
 use inferline::profiler::analytic::paper_profiles;
+use inferline::util::par::default_workers;
 use inferline::workload::autoscale;
 
 fn main() {
@@ -30,7 +31,7 @@ fn main() {
     );
     println!("planning on the first 25% ({} queries), serving the rest\n", sample.len());
 
-    match run_inferline(&spec, &profiles, &sample, &live, slo) {
+    match run_inferline(&spec, &profiles, &sample, &live, slo, default_workers()) {
         Ok((plan, summary)) => {
             println!("InferLine plan: {}", plan.config.summary(&spec));
             println!("  initial cost ${:.2}/hr\n", plan.cost_per_hour);

@@ -84,15 +84,26 @@ impl RunSummary {
     }
 }
 
+/// Planner thread budget for one of `n_scenarios` figure scenarios
+/// sharded across the machine: the cores the outer fan-out cannot fill.
+/// 1 (serial planner) once the scenario count covers the core count.
+pub fn shard_planner_threads(n_scenarios: usize) -> usize {
+    (crate::util::par::default_workers() / n_scenarios.max(1)).max(1)
+}
+
 /// Plan with InferLine and serve `live` with the InferLine Tuner in loop.
+/// `planner_threads` is the candidate-evaluation fan-out — callers running
+/// scenarios in parallel pass [`shard_planner_threads`] to avoid
+/// oversubscribing the machine.
 pub fn run_inferline(
     spec: &PipelineSpec,
     profiles: &ProfileSet,
     sample: &Trace,
     live: &Trace,
     slo: f64,
+    planner_threads: usize,
 ) -> Result<(Plan, RunSummary), PlanError> {
-    let planner = Planner::new(spec, profiles);
+    let planner = Planner::new(spec, profiles).with_threads(planner_threads);
     let plan = planner.plan(sample, slo)?;
     let st = simulator::service_time(spec, profiles, &plan.config);
     let inputs = TunerInputs::from_plan(spec, profiles, &plan.config, sample, st);
@@ -103,7 +114,8 @@ pub fn run_inferline(
     Ok((plan, RunSummary::from_result("InferLine", result, slo)))
 }
 
-/// Plan with InferLine and serve statically (no tuner).
+/// Plan with InferLine and serve statically (no tuner). See
+/// [`run_inferline`] for `planner_threads`.
 pub fn run_inferline_static(
     spec: &PipelineSpec,
     profiles: &ProfileSet,
@@ -111,8 +123,9 @@ pub fn run_inferline_static(
     live: &Trace,
     slo: f64,
     label: &str,
+    planner_threads: usize,
 ) -> Result<(Plan, RunSummary), PlanError> {
-    let planner = Planner::new(spec, profiles);
+    let planner = Planner::new(spec, profiles).with_threads(planner_threads);
     let plan = planner.plan(sample, slo)?;
     let mut null = crate::simulator::control::NullController;
     let result = simulate_controlled(
@@ -190,7 +203,9 @@ mod tests {
         let profiles = paper_profiles();
         let sample = gamma_trace(80.0, 1.0, 30.0, 1);
         let live = gamma_trace(80.0, 1.0, 60.0, 2);
-        let (plan, s) = run_inferline(&spec, &profiles, &sample, &live, 0.3).unwrap();
+        let (plan, s) =
+            run_inferline(&spec, &profiles, &sample, &live, 0.3, shard_planner_threads(1))
+                .unwrap();
         assert!(s.miss_rate < 0.05, "miss {}", s.miss_rate);
         assert!((s.attainment + s.miss_rate - 1.0).abs() < 1e-9);
         assert!(s.total_cost > 0.0);

@@ -1,0 +1,108 @@
+//! `inferline bench estimator` — the Estimator/Planner performance
+//! microbench behind the perf-trajectory artifact.
+//!
+//! Measures (1) raw Estimator throughput (simulated queries per second on
+//! a long trace) and (2) end-to-end `plan()` latency per pipeline with
+//! the fast path on and off, then writes the numbers as JSON (by default
+//! `BENCH_estimator.json`) so successive PRs leave a comparable perf
+//! trail. CI runs it as a non-gating step with `--quick`.
+
+use std::path::Path;
+
+use crate::config::pipelines;
+use crate::planner::Planner;
+use crate::profiler::analytic::paper_profiles;
+use crate::simulator::{self, SimParams};
+use crate::util::bench::{bench, black_box};
+use crate::util::json::Json;
+use crate::workload::gamma_trace;
+
+/// Run the estimator benchmark and write the JSON report to `out`.
+pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let samples = if quick { 3 } else { 5 };
+    let mut doc = Json::obj();
+    doc.set("bench", "estimator");
+    doc.set("quick", quick);
+    doc.set("threads", crate::util::par::default_workers());
+
+    // --- Raw Estimator throughput on a long trace. -------------------------
+    let sim_secs = if quick { 600.0 } else { 3600.0 };
+    let spec = pipelines::social_media();
+    let long_trace = gamma_trace(150.0, 1.0, sim_secs, 1);
+    let warm_plan = Planner::new(&spec, &profiles)
+        .plan(&gamma_trace(150.0, 1.0, 30.0, 2), 0.3)
+        .expect("social-media plan");
+    let r = bench("estimator: long trace @150qps social-media", 1, samples, || {
+        black_box(
+            simulator::simulate(&spec, &profiles, &warm_plan.config, &long_trace, &params)
+                .latencies
+                .len(),
+        );
+    });
+    let sim_qps = long_trace.len() as f64 / r.mean_s;
+    doc.set("sim_queries_per_sec", sim_qps);
+    println!("  -> {:.2} M simulated queries/sec", sim_qps / 1e6);
+
+    // --- plan() end-to-end per pipeline, fast path on vs off. --------------
+    // A fresh planner per run keeps the memo-cache cold, so each sample
+    // measures one complete Algorithm 1 + 2 search.
+    let plan_secs = if quick { 30.0 } else { 60.0 };
+    let slo = 0.3;
+    let mut per_pipeline = Json::obj();
+    let mut heaviest: (String, f64) = (String::new(), 0.0);
+    for spec in pipelines::all() {
+        let sample = gamma_trace(150.0, 1.0, plan_secs, 3);
+        // Surface infeasibility instead of timing an instant Err: a
+        // silently-failing plan would report garbage plans/sec into the
+        // perf trail this artifact exists to keep honest.
+        if let Err(e) = Planner::new(&spec, &profiles).plan(&sample, slo) {
+            println!("  -> {}: plan() failed ({e}); excluded from bench", spec.name);
+            let mut entry = Json::obj();
+            entry.set("error", e.to_string());
+            per_pipeline.set(&spec.name, entry);
+            continue;
+        }
+        let fast = bench(&format!("planner: plan() fast path, {}", spec.name), 1, samples, || {
+            black_box(
+                Planner::new(&spec, &profiles).plan(&sample, slo).expect("plan").cost_per_hour,
+            );
+        });
+        let reference =
+            bench(&format!("planner: plan() reference, {}", spec.name), 1, samples, || {
+                black_box(
+                    Planner::new(&spec, &profiles)
+                        .with_fast_path(false)
+                        .plan(&sample, slo)
+                        .expect("plan")
+                        .cost_per_hour,
+                );
+            });
+        let mut entry = Json::obj();
+        entry.set("plan_mean_s", fast.mean_s);
+        entry.set("plans_per_sec", 1.0 / fast.mean_s);
+        entry.set("reference_mean_s", reference.mean_s);
+        entry.set("fast_path_speedup", reference.mean_s / fast.mean_s);
+        println!(
+            "  -> {}: {:.2} plans/sec, fast-path speedup {:.2}x",
+            spec.name,
+            1.0 / fast.mean_s,
+            reference.mean_s / fast.mean_s
+        );
+        if fast.mean_s > heaviest.1 {
+            heaviest = (spec.name.clone(), fast.mean_s);
+        }
+        per_pipeline.set(&spec.name, entry);
+    }
+    doc.set("pipelines", per_pipeline);
+    let mut h = Json::obj();
+    h.set("pipeline", heaviest.0.as_str());
+    h.set("plan_mean_s", heaviest.1);
+    h.set("plans_per_sec", 1.0 / heaviest.1);
+    doc.set("heaviest", h);
+
+    std::fs::write(out, format!("{doc}\n"))?;
+    println!("  wrote {}", out.display());
+    Ok(())
+}

@@ -17,9 +17,11 @@ use crate::tuner::{Tuner, TunerInputs};
 use crate::util::stats;
 use crate::workload::{autoscale as asw, gamma_trace, varying_trace, Phase};
 
+use crate::util::par::{default_workers, parallel_map_indexed};
+
 use super::common::{
-    print_summary, run_coarse, run_inferline, run_inferline_static, run_with_controller, Ctx,
-    RunSummary,
+    print_summary, run_coarse, run_inferline, run_inferline_static, run_with_controller,
+    shard_planner_threads, Ctx, RunSummary,
 };
 
 /// Fig 3: per-model profiles on the K80 tier — throughput and batch
@@ -58,36 +60,51 @@ pub fn fig5(ctx: &Ctx) {
     let slo = 0.15;
     let lambdas: &[f64] = if ctx.quick { &[100.0, 200.0] } else { &[100.0, 200.0, 300.0, 400.0] };
     let cvs = [1.0, 4.0];
-    let mut rows = Vec::new();
+    // Each (pipeline, cv, λ) point is an independent plan+serve trace
+    // analysis — shard them across cores, leftover cores to each planner.
+    let mut scenarios = Vec::new();
     for spec in [pipelines::image_processing(), pipelines::video_monitoring()] {
         for &cv in &cvs {
             for (i, &lambda) in lambdas.iter().enumerate() {
-                let seed = 100 + i as u64;
-                let sample = gamma_trace(lambda, cv, ctx.secs(60.0), seed);
-                let live = gamma_trace(lambda, cv, ctx.secs(120.0), seed + 50);
-                let mut summaries: Vec<RunSummary> = Vec::new();
-                match run_inferline_static(&spec, &profiles, &sample, &live, slo, "InferLine") {
-                    Ok((_, s)) => summaries.push(s),
-                    Err(e) => println!("  {} λ={lambda} cv={cv}: InferLine {e}", spec.name),
-                }
-                summaries.push(run_coarse(
-                    &spec, &profiles, &sample, &live, slo, CoarseTarget::Mean, false,
-                ));
-                // Paper: CG-Peak not evaluated for λ > 300 (cluster capacity).
-                if lambda <= 300.0 {
-                    summaries.push(run_coarse(
-                        &spec, &profiles, &sample, &live, slo, CoarseTarget::Peak, false,
-                    ));
-                }
-                println!("  {} λ={lambda} cv={cv}:", spec.name);
-                for s in &summaries {
-                    print_summary("    ", s);
-                    rows.push(format!(
-                        "{},{lambda},{cv},{},{:.3},{:.5}",
-                        spec.name, s.system, s.mean_cost_per_hour, s.miss_rate
-                    ));
-                }
+                scenarios.push((spec.clone(), cv, lambda, 100 + i as u64));
             }
+        }
+    }
+    let inner = shard_planner_threads(scenarios.len());
+    let evaluated = parallel_map_indexed(scenarios.len(), default_workers(), |idx| {
+        let (spec, cv, lambda, seed) = &scenarios[idx];
+        let sample = gamma_trace(*lambda, *cv, ctx.secs(60.0), *seed);
+        let live = gamma_trace(*lambda, *cv, ctx.secs(120.0), *seed + 50);
+        let mut errors: Vec<String> = Vec::new();
+        let mut summaries: Vec<RunSummary> = Vec::new();
+        match run_inferline_static(spec, &profiles, &sample, &live, slo, "InferLine", inner) {
+            Ok((_, s)) => summaries.push(s),
+            Err(e) => errors.push(format!("  {} λ={lambda} cv={cv}: InferLine {e}", spec.name)),
+        }
+        summaries.push(run_coarse(
+            spec, &profiles, &sample, &live, slo, CoarseTarget::Mean, false,
+        ));
+        // Paper: CG-Peak not evaluated for λ > 300 (cluster capacity).
+        if *lambda <= 300.0 {
+            summaries.push(run_coarse(
+                spec, &profiles, &sample, &live, slo, CoarseTarget::Peak, false,
+            ));
+        }
+        (errors, summaries)
+    });
+    let mut rows = Vec::new();
+    for (idx, (errors, summaries)) in evaluated.into_iter().enumerate() {
+        let (spec, cv, lambda, _) = &scenarios[idx];
+        for e in &errors {
+            println!("{e}");
+        }
+        println!("  {} λ={lambda} cv={cv}:", spec.name);
+        for s in &summaries {
+            print_summary("    ", s);
+            rows.push(format!(
+                "{},{lambda},{cv},{},{:.3},{:.5}",
+                spec.name, s.system, s.mean_cost_per_hour, s.miss_rate
+            ));
         }
     }
     ctx.write_csv("fig05.csv", "pipeline,lambda,cv,system,cost_per_hour,miss_rate", &rows);
@@ -116,7 +133,7 @@ pub fn fig6(ctx: &Ctx) {
         let (sample, live) = full.split_at_fraction(0.25);
         println!("  trace {name}: sample {} qs, live {} qs", sample.len(), live.len());
         let mut summaries = Vec::new();
-        match run_inferline(&spec, &profiles, &sample, &live, slo) {
+        match run_inferline(&spec, &profiles, &sample, &live, slo, default_workers()) {
             Ok((plan, s)) => {
                 println!("    plan: {}", plan.config.summary(&spec));
                 summaries.push(s);
@@ -165,7 +182,7 @@ pub fn fig7(ctx: &Ctx) {
     let mut rows = Vec::new();
     let mut series_rows = Vec::new();
     let mut summaries = Vec::new();
-    if let Ok((_, s)) = run_inferline(&spec, &profiles, &sample, &live, slo) {
+    if let Ok((_, s)) = run_inferline(&spec, &profiles, &sample, &live, slo, default_workers()) {
         summaries.push(s);
     }
     summaries.push(run_coarse(&spec, &profiles, &sample, &live, slo, CoarseTarget::Mean, true));
@@ -174,6 +191,10 @@ pub fn fig7(ctx: &Ctx) {
         print_summary("  ", s);
         rows.push(format!("{},{:.3},{:.5}", s.system, s.mean_cost_per_hour, s.miss_rate));
         for (t, miss) in s.result.miss_rate_series(slo, 10.0) {
+            // NaN = window with no completions: no data, skip the point.
+            if miss.is_nan() {
+                continue;
+            }
             series_rows.push(format!("{},{t:.0},{miss:.4}", s.system));
         }
     }
@@ -191,40 +212,58 @@ pub fn fig8(ctx: &Ctx) {
     let profiles = paper_profiles();
     let slo = 0.3;
     let lambda = if ctx.quick { 80.0 } else { 150.0 };
-    let mut rows = Vec::new();
-    for spec in pipelines::all() {
+    // Phase 1 (parallel): planning and the Estimator side are pure CPU
+    // simulation, so the four pipelines shard across cores.
+    let specs = pipelines::all();
+    let inner = shard_planner_threads(specs.len());
+    let planned = parallel_map_indexed(specs.len(), default_workers(), |idx| {
+        let spec = &specs[idx];
         let sample = gamma_trace(lambda, 4.0, ctx.secs(60.0), 81);
         let live = gamma_trace(lambda, 4.0, ctx.secs(30.0), 83);
-        let plan = match Planner::new(&spec, &profiles).plan(&sample, slo) {
+        let plan = match Planner::new(spec, &profiles).with_threads(inner).plan(&sample, slo) {
             Ok(p) => p,
-            Err(e) => {
-                println!("  {}: {e}", spec.name);
-                continue;
-            }
+            Err(e) => return Err(format!("  {}: {e}", spec.name)),
         };
         // Estimator side.
-        let est = simulator::estimate_p99(&spec, &profiles, &plan.config, &live, &SimParams::default());
-        // Physical side: same config served on the threaded engine with
-        // per-stage calibrated backends (profile-faithful service times).
-        let backends: Vec<crate::serving::Backend> = spec
-            .stages
-            .iter()
-            .zip(&plan.config.stages)
-            .map(|(s, c)| crate::serving::Backend::Calibrated {
-                profile: profiles.get(&s.model).get(c.hw).unwrap().clone(),
-            })
-            .collect();
-        let engine = crate::serving::ServingEngine::start(&spec, &plan.config, backends).unwrap();
-        let measured = engine.serve_trace(&live, 1.0, SimParams::default().routing_seed);
-        let measured_p99 = stats::p99(&measured.latencies);
-        println!(
-            "  {:<18} estimated P99 {:>6.1} ms | measured P99 {:>6.1} ms | SLO {:>5.0} ms",
-            spec.name,
-            est * 1e3,
-            measured_p99 * 1e3,
-            slo * 1e3
-        );
-        rows.push(format!("{},{est:.4},{measured_p99:.4},{slo}", spec.name));
+        let est =
+            simulator::estimate_p99(spec, &profiles, &plan.config, &live, &SimParams::default());
+        Ok((plan, live, est))
+    });
+    // Phase 2 (serial, deliberately): the physical side measures
+    // wall-clock latencies on real threads — running the engines
+    // concurrently (or against other scenarios' planner threads) would
+    // inflate the measured P99 with scheduler contention, the very number
+    // this figure validates the Estimator against.
+    let mut rows = Vec::new();
+    for (idx, outcome) in planned.into_iter().enumerate() {
+        let spec = &specs[idx];
+        match outcome {
+            Ok((plan, live, est)) => {
+                // Same config served on the threaded engine with per-stage
+                // calibrated backends (profile-faithful service times).
+                let backends: Vec<crate::serving::Backend> = spec
+                    .stages
+                    .iter()
+                    .zip(&plan.config.stages)
+                    .map(|(s, c)| crate::serving::Backend::Calibrated {
+                        profile: profiles.get(&s.model).get(c.hw).unwrap().clone(),
+                    })
+                    .collect();
+                let engine =
+                    crate::serving::ServingEngine::start(spec, &plan.config, backends).unwrap();
+                let measured = engine.serve_trace(&live, 1.0, SimParams::default().routing_seed);
+                let measured_p99 = stats::p99(&measured.latencies);
+                println!(
+                    "  {:<18} estimated P99 {:>6.1} ms | measured P99 {:>6.1} ms | SLO {:>5.0} ms",
+                    spec.name,
+                    est * 1e3,
+                    measured_p99 * 1e3,
+                    slo * 1e3
+                );
+                rows.push(format!("{},{est:.4},{measured_p99:.4},{slo}", spec.name));
+            }
+            Err(line) => println!("{line}"),
+        }
     }
     ctx.write_csv("fig08.csv", "pipeline,estimated_p99,measured_p99,slo", &rows);
 }
@@ -241,25 +280,40 @@ pub fn fig9(ctx: &Ctx) {
         &[0.1, 0.15, 0.2, 0.25, 0.3, 0.35, 0.4, 0.5]
     };
     let lambdas: &[f64] = if ctx.quick { &[100.0] } else { &[100.0, 200.0, 300.0] };
-    let mut rows = Vec::new();
+    // Shard the (λ, CV) scenarios; within one scenario a single planner
+    // walks the SLO ladder so its cross-SLO estimator cache (exact P99
+    // entries answer feasibility at every SLO) is reused end to end.
+    let mut scenarios = Vec::new();
     for &lambda in lambdas {
         for &cv in &[1.0, 4.0] {
-            let sample = gamma_trace(lambda, cv, ctx.secs(60.0), 91);
-            print!("  λ={lambda:>3} cv={cv}: ");
-            for &slo in slos {
-                match Planner::new(&spec, &profiles).plan(&sample, slo) {
-                    Ok(plan) => {
-                        print!("slo={slo}: ${:.2}  ", plan.cost_per_hour);
-                        rows.push(format!("{lambda},{cv},{slo},{:.3}", plan.cost_per_hour));
-                    }
-                    Err(_) => {
-                        print!("slo={slo}: infeasible  ");
-                        rows.push(format!("{lambda},{cv},{slo},"));
-                    }
+            scenarios.push((lambda, cv));
+        }
+    }
+    let inner = shard_planner_threads(scenarios.len());
+    let evaluated = parallel_map_indexed(scenarios.len(), default_workers(), |idx| {
+        let (lambda, cv) = scenarios[idx];
+        let sample = gamma_trace(lambda, cv, ctx.secs(60.0), 91);
+        let planner = Planner::new(&spec, &profiles).with_threads(inner);
+        let mut line = format!("  λ={lambda:>3} cv={cv}: ");
+        let mut rows = Vec::new();
+        for &slo in slos {
+            match planner.plan(&sample, slo) {
+                Ok(plan) => {
+                    line.push_str(&format!("slo={slo}: ${:.2}  ", plan.cost_per_hour));
+                    rows.push(format!("{lambda},{cv},{slo},{:.3}", plan.cost_per_hour));
+                }
+                Err(_) => {
+                    line.push_str(&format!("slo={slo}: infeasible  "));
+                    rows.push(format!("{lambda},{cv},{slo},"));
                 }
             }
-            println!();
         }
+        (line, rows)
+    });
+    let mut rows = Vec::new();
+    for (line, scenario_rows) in evaluated {
+        println!("{line}");
+        rows.extend(scenario_rows);
     }
     ctx.write_csv("fig09.csv", "lambda,cv,slo,cost_per_hour", &rows);
 }
@@ -286,7 +340,8 @@ pub fn fig10(ctx: &Ctx) {
         );
         println!("  τ = {tau}s:");
         let mut summaries = Vec::new();
-        if let Ok((_, s)) = run_inferline(&spec, &profiles, &sample, &live, slo) {
+        if let Ok((_, s)) = run_inferline(&spec, &profiles, &sample, &live, slo, default_workers())
+        {
             summaries.push(s);
         }
         // Oracle planner: full live-trace knowledge, no tuner.
@@ -296,9 +351,15 @@ pub fn fig10(ctx: &Ctx) {
                 &spec, &profiles, &config, &live, slo, "Planner(oracle)", &mut null,
             ));
         }
-        if let Ok((_, s)) =
-            run_inferline_static(&spec, &profiles, &sample, &live, slo, "Planner(sample)")
-        {
+        if let Ok((_, s)) = run_inferline_static(
+            &spec,
+            &profiles,
+            &sample,
+            &live,
+            slo,
+            "Planner(sample)",
+            default_workers(),
+        ) {
             summaries.push(s);
         }
         for s in &summaries {
@@ -329,18 +390,28 @@ pub fn fig11(ctx: &Ctx) {
     );
     let mut rows = Vec::new();
     let mut summaries = Vec::new();
-    if let Ok((_, s)) = run_inferline(&spec, &profiles, &sample, &live, slo) {
+    if let Ok((_, s)) = run_inferline(&spec, &profiles, &sample, &live, slo, default_workers()) {
         summaries.push(s);
     }
-    if let Ok((_, s)) =
-        run_inferline_static(&spec, &profiles, &sample, &live, slo, "Planner(sample)")
-    {
+    if let Ok((_, s)) = run_inferline_static(
+        &spec,
+        &profiles,
+        &sample,
+        &live,
+        slo,
+        "Planner(sample)",
+        default_workers(),
+    ) {
         summaries.push(s);
     }
     for s in &summaries {
         print_summary("  ", s);
         rows.push(format!("{},{:.3},{:.5}", s.system, s.mean_cost_per_hour, s.miss_rate));
         for (t, miss) in s.result.miss_rate_series(slo, 15.0) {
+            // NaN = window with no completions: no data, skip the point.
+            if miss.is_nan() {
+                continue;
+            }
             rows.push(format!("# series,{},{t:.0},{miss:.4}", s.system));
         }
     }
@@ -408,7 +479,15 @@ pub fn fig13(ctx: &Ctx) {
         // surfaces as a (small) cost difference, as the paper observes.
         let sample = gamma_trace(250.0, 1.0, ctx.secs(60.0), 131);
         let live = gamma_trace(250.0, 1.0, ctx.secs(120.0), 133);
-        match run_inferline_static(&spec, &profiles, &sample, &live, slo, fw.id()) {
+        match run_inferline_static(
+            &spec,
+            &profiles,
+            &sample,
+            &live,
+            slo,
+            fw.id(),
+            default_workers(),
+        ) {
             Ok((plan, s)) => {
                 println!("    plan: {}", plan.config.summary(&spec));
                 print_summary("  ", &s);
@@ -455,15 +534,20 @@ pub fn fig14(ctx: &Ctx) {
             .collect(),
     };
     let mut rows = Vec::new();
-    // (a) burstiness sweep at fixed λ=50.
-    for &cv in &[1.0, 2.0, 4.0] {
+    // (a) burstiness sweep at fixed λ=50: three independent DS2 baseline
+    // trace analyses, sharded across cores.
+    let panel_cvs = [1.0, 2.0, 4.0];
+    let panel_a = parallel_map_indexed(panel_cvs.len(), default_workers(), |i| {
+        let cv = panel_cvs[i];
         let live = gamma_trace(50.0, cv, ctx.secs(180.0), 141);
         let mut ds2 = Ds2Controller::new(&spec, &service_times);
         let result = simulate_controlled(
             &spec, &profiles, &make_config(50.0), &live, &SimParams::default(), &mut ds2,
         );
-        let s = RunSummary::from_result(&format!("DS2 cv={cv}"), result, slo);
-        print_summary("  (a) ", &s);
+        RunSummary::from_result(&format!("DS2 cv={cv}"), result, slo)
+    });
+    for (cv, s) in panel_cvs.iter().zip(&panel_a) {
+        print_summary("  (a) ", s);
         rows.push(format!("a,{cv},50,{:.5},{:.4}", s.miss_rate, s.p99));
     }
     // (b) rate ramp 50 → 100 over 60 s: P99-over-time for DS2 vs the
@@ -484,13 +568,17 @@ pub fn fig14(ctx: &Ctx) {
     print_summary("  (b) ", &ds2_s);
     rows.push(format!("b,1,50-100,{:.5},{:.4}", ds2_s.miss_rate, ds2_s.p99));
     let sample = gamma_trace(50.0, 1.0, ctx.secs(60.0), 145);
-    if let Ok((_, il_s)) = run_inferline(&spec, &profiles, &sample, &live, slo) {
+    if let Ok((_, il_s)) = run_inferline(&spec, &profiles, &sample, &live, slo, default_workers())
+    {
         print_summary("  (b) ", &il_s);
         rows.push(format!("b-il,1,50-100,{:.5},{:.4}", il_s.miss_rate, il_s.p99));
     }
-    // P99-over-time series for the plot.
+    // P99-over-time series for the plot (NaN windows carry no data).
     let mut series = Vec::new();
     for (t, miss) in ds2_s.result.miss_rate_series(slo, 15.0) {
+        if miss.is_nan() {
+            continue;
+        }
         series.push(format!("DS2,{t:.0},{miss:.4}"));
     }
     ctx.write_csv("fig14.csv", "panel,cv,lambda,miss_rate,p99", &rows);

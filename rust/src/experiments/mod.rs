@@ -7,6 +7,7 @@
 //! runs paper-scale parameters.
 
 pub mod common;
+pub mod estbench;
 pub mod figures;
 pub mod sweep;
 

@@ -3,21 +3,39 @@
 //!
 //! Each grid point is an independent planning problem, so the sweep fans
 //! scenarios out over a scoped thread pool (one scenario per task,
-//! work-stolen off an atomic counter). Within a scenario the planner runs
-//! serially — the outer parallelism already saturates the machine, and
-//! nesting both levels would oversubscribe it. Results are deterministic:
-//! every scenario derives its trace seed from its grid index.
+//! work-stolen off an atomic counter). Planner parallelism is adaptive:
+//! when the grid has at least as many points as cores, each planner runs
+//! serially (the outer fan-out already saturates the machine); when the
+//! grid is smaller, the leftover cores are handed to each grid point's
+//! planner as candidate-level parallelism instead of idling. Results are
+//! deterministic either way — the parallel planner is bit-identical to
+//! the serial one, and every scenario derives its trace seed from its
+//! (pipeline, λ, CV) group.
+//!
+//! Grid points that differ only in SLO share a trace (same group seed)
+//! and therefore a trace fingerprint, so the sweep hands every planner
+//! one shared [`EstimatorCache`]: a full simulation at one SLO answers
+//! feasibility queries at every other SLO of the group, and the cache's
+//! segmented-LRU bound keeps very long sweeps from growing without limit.
+//!
+//! Determinism caveat: plans, costs, P99s and iteration counts are
+//! bit-identical run to run. The `cache_hit_rate` column is *not* — it
+//! depends on which sibling scenario populated the shared cache first,
+//! i.e. on thread scheduling. Treat it as utilization telemetry, not a
+//! comparable metric.
 //!
 //! Output: one row per scenario (cost, estimated P99, search iterations,
 //! feasibility-cache hit rate) on stdout and in `results/sweep.csv`.
 
+use std::sync::Arc;
+
 use crate::config::pipelines;
-use crate::planner::Planner;
+use crate::planner::{EstimatorCache, Planner};
 use crate::profiler::analytic::paper_profiles;
 use crate::util::par::{default_workers, parallel_map_indexed};
 use crate::workload::gamma_trace;
 
-use super::common::Ctx;
+use super::common::{shard_planner_threads, Ctx};
 
 /// One planned grid point.
 #[derive(Debug, Clone)]
@@ -62,13 +80,26 @@ pub fn sweep_grid(
         }
     }
     let n_tasks = scenarios.len();
+    let workers = default_workers();
+    // Adaptive inner parallelism: cores the grid fan-out can't fill go to
+    // each grid point's candidate search (bit-identical plans either way).
+    let inner_threads = shard_planner_threads(n_tasks);
+    // One estimator cache for the whole sweep; scenarios that share a
+    // trace fingerprint reuse each other's simulations across SLOs.
+    let cache = EstimatorCache::shared(1 << 18);
     let run_one = |idx: usize| -> ScenarioResult {
         let (spec, lambda, cv, slo) = &scenarios[idx];
-        // Deterministic per-scenario seed: results do not depend on how
-        // scenarios land on threads.
-        let trace = gamma_trace(*lambda, *cv, trace_secs, 9000 + idx as u64);
-        // Serial planner per scenario: the sweep is the parallel layer.
-        let outcome = match Planner::serial(spec, &profiles).plan(&trace, *slo) {
+        // Deterministic per-group seed (SLO is the innermost grid axis, so
+        // `idx / slos.len()` indexes the (pipeline, λ, CV) group): results
+        // do not depend on how scenarios land on threads, and SLO-only
+        // variations share the trace — and thus the estimator cache.
+        let group = idx / slos.len().max(1);
+        let trace = gamma_trace(*lambda, *cv, trace_secs, 9000 + group as u64);
+        let outcome = match Planner::new(spec, &profiles)
+            .with_threads(inner_threads)
+            .with_shared_cache(Arc::clone(&cache))
+            .plan(&trace, *slo)
+        {
             Ok(plan) => Ok(ScenarioPlan {
                 cost_per_hour: plan.cost_per_hour,
                 estimated_p99: plan.estimated_p99,
@@ -86,7 +117,7 @@ pub fn sweep_grid(
             outcome,
         }
     };
-    parallel_map_indexed(n_tasks, default_workers(), run_one)
+    parallel_map_indexed(n_tasks, workers, run_one)
 }
 
 /// The CLI / bench entry point: sweep a standard grid, print a table,

@@ -80,6 +80,8 @@ COMMANDS:
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
   experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
               [--quick]
+  bench       estimator [--out <file.json>] [--quick]
+              (writes the Estimator/Planner perf-trajectory JSON)
   trace       --kind gamma|big-spike|instant-spike --out <file>
               [--lambda <qps>] [--cv <v>] [--duration <s>]
   pipelines   list the built-in paper pipelines
@@ -100,6 +102,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
+        "bench" => cmd_bench(&args),
         "trace" => cmd_trace(&args),
         "pipelines" => {
             for p in pipelines::all() {
@@ -343,6 +346,26 @@ fn cmd_experiment(args: &Args) -> bool {
         return false;
     }
     true
+}
+
+fn cmd_bench(args: &Args) -> bool {
+    let what = args.positional.first().map(String::as_str).unwrap_or("estimator");
+    match what {
+        "estimator" => {
+            let out = PathBuf::from(args.get("out").unwrap_or("BENCH_estimator.json"));
+            match inferline::experiments::estbench::run(&out, args.bool("quick")) {
+                Ok(()) => true,
+                Err(e) => {
+                    eprintln!("bench failed: {e}");
+                    false
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown bench {other:?} (available: estimator)");
+            false
+        }
+    }
 }
 
 fn cmd_trace(args: &Args) -> bool {

@@ -31,21 +31,31 @@
 //!   iteration fan out over a scoped thread pool. Selection then replays
 //!   the serial fold over the gathered results in (stage, action) order,
 //!   so the parallel planner returns a bit-identical [`Plan`].
-//! * **Feasibility memo-cache**: results are memoized under a canonical
-//!   (trace, SLO, configuration) key shared across `initialize` and
-//!   `plan` — the downgrade path re-visits the same configurations many
-//!   times per search.
+//! * **Estimator memo-cache** ([`EstimatorCache`]): what the Estimator
+//!   learned about each (trace, configuration) pair is memoized *across
+//!   SLOs* — a full simulation records the exact P99 (answers feasibility
+//!   at any SLO), an early-aborted one records the lower bound it proved
+//!   (answers any SLO at or below it). The cache is shareable (`Arc`)
+//!   across planners, e.g. across sweep grid points whose traces
+//!   coincide, and bounded by a segmented LRU so long sweeps don't grow
+//!   without limit.
+//! * **Estimator fast path** (see the [`simulator`](crate::simulator)
+//!   module docs): one shared [`RoutingPlan`] per (trace, params) reused
+//!   by every candidate simulation, early-abort budgeted feasibility, and
+//!   O(n) P99 selection. `with_fast_path(false)` restores the reference
+//!   full-simulation semantics; plans and feasibility decisions are
+//!   bit-identical either way (`tests/estimator_fast_path.rs`).
 //! * **Analytic pruning**: a cheap per-stage throughput lower bound
 //!   rejects under-provisioned candidates before the expensive
 //!   simulation (the same bound [`simulator::feasible`] applies).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::{PipelineConfig, PipelineSpec, StageConfig};
 use crate::profiler::{ProfileSet, BATCH_CANDIDATES};
-use crate::simulator::{self, SimParams};
+use crate::simulator::{self, RoutingPlan, SimParams};
 use crate::workload::Trace;
 
 /// Hard cap on per-stage replicas during search: beyond this the workload
@@ -62,6 +72,9 @@ pub struct SearchTelemetry {
     /// Computed queries rejected by the analytic throughput bound before
     /// any simulation ran (subset of `cache_misses`).
     pub pruned: usize,
+    /// Simulations that early-aborted once P99 > SLO was proven (subset
+    /// of `cache_misses`; fast path only).
+    pub early_aborts: usize,
     /// Worker threads used for candidate evaluation (1 = serial).
     pub threads: usize,
 }
@@ -108,12 +121,39 @@ impl std::fmt::Display for PlanError {
     }
 }
 
-/// Canonical memo-cache key: a fingerprint of the planning trace and the
-/// simulation parameters, the SLO bits, and the full per-stage
-/// configuration. Feasibility is a pure function of exactly these inputs.
-type CacheKey = (u64, u64, Vec<(u8, u32, u32)>);
+/// Canonical memo-cache key: a fingerprint of (planning trace, simulation
+/// parameters, pipeline spec) plus the full per-stage configuration. The
+/// SLO is deliberately *not* part of the key — the cached value is
+/// knowledge about the configuration's P99, which answers feasibility at
+/// any SLO it covers (see [`P99Knowledge`]).
+type CacheKey = (u64, Vec<(u8, u32, u32)>);
 
-/// FNV-1a over every arrival timestamp plus the `SimParams` fields.
+/// FNV-1a accumulator shared by the fingerprint functions below — one
+/// mechanism, so the offset basis and prime cannot silently diverge.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new(seed: u64) -> Self {
+        Fnv(0xCBF2_9CE4_8422_2325 ^ seed)
+    }
+
+    fn mix(&mut self, bits: u64) {
+        self.0 ^= bits;
+        self.0 = self.0.wrapping_mul(0x100_0000_01B3);
+    }
+
+    fn mix_str(&mut self, s: &str) {
+        for b in s.bytes() {
+            self.mix(b as u64);
+        }
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint of every arrival timestamp plus the `SimParams` fields.
 /// Hashing the whole trace is O(N), so callers compute this once per
 /// search entry point and reuse it for every feasibility query; the full
 /// hash makes key collisions between different traces (or mutated
@@ -122,21 +162,64 @@ type CacheKey = (u64, u64, Vec<(u8, u32, u32)>);
 /// of silently serving stale cache entries.
 fn trace_fingerprint(trace: &Trace, params: &SimParams) -> u64 {
     let SimParams { routing_seed, replica_activation_delay, control_interval } = params;
-    let mut h: u64 = 0xCBF2_9CE4_8422_2325 ^ (trace.arrivals.len() as u64);
-    let mut mix = |bits: u64| {
-        h ^= bits;
-        h = h.wrapping_mul(0x100_0000_01B3);
-    };
+    let mut h = Fnv::new(trace.arrivals.len() as u64);
     for t in &trace.arrivals {
-        mix(t.to_bits());
+        h.mix(t.to_bits());
     }
-    mix(*routing_seed);
-    mix(replica_activation_delay.to_bits());
-    mix(control_interval.to_bits());
-    h
+    h.mix(*routing_seed);
+    h.mix(replica_activation_delay.to_bits());
+    h.mix(control_interval.to_bits());
+    h.finish()
 }
 
-fn cache_key(fp: u64, slo: f64, config: &PipelineConfig) -> CacheKey {
+/// Fingerprint of the pipeline structure. Mixed into every cache key so
+/// an [`EstimatorCache`] can be safely shared across planners for
+/// *different* pipelines (e.g. the scenario sweep): identical stage
+/// configurations mean different things under different DAGs.
+fn spec_fingerprint(spec: &PipelineSpec) -> u64 {
+    let mut h = Fnv::new(spec.stages.len() as u64);
+    h.mix(spec.framework.rpc_overhead().to_bits());
+    h.mix_str(&spec.name);
+    for s in &spec.stages {
+        h.mix_str(&s.model);
+        h.mix(s.scale_factor.to_bits());
+        h.mix(s.children.len() as u64);
+        for &c in &s.children {
+            h.mix(c as u64);
+        }
+    }
+    for &r in &spec.roots {
+        h.mix(r as u64);
+    }
+    h.finish()
+}
+
+/// Fingerprint of every (model, hardware, batch-latency point) of the
+/// profile set. Simulated service times come from these profiles, so the
+/// cache key must distinguish planners built over different sets (e.g.
+/// the analytic paper profiles vs a measured/calibrated set) even when
+/// spec, trace and params coincide. `ProfileSet` stores `BTreeMap`s, so
+/// iteration — and hence the fingerprint — is canonical.
+fn profiles_fingerprint(profiles: &ProfileSet) -> u64 {
+    let mut h = Fnv::new(profiles.models.len() as u64);
+    for (model, mp) in &profiles.models {
+        h.mix_str(model);
+        for (hw, prof) in &mp.per_hw {
+            let hw_idx = crate::hardware::Hardware::ALL
+                .iter()
+                .position(|&cand| cand == *hw)
+                .unwrap_or(0) as u64;
+            h.mix(hw_idx);
+            for &(batch, latency) in &prof.points {
+                h.mix(batch as u64);
+                h.mix(latency.to_bits());
+            }
+        }
+    }
+    h.finish()
+}
+
+fn cache_key(fp: u64, config: &PipelineConfig) -> CacheKey {
     let stages = config
         .stages
         .iter()
@@ -148,24 +231,206 @@ fn cache_key(fp: u64, slo: f64, config: &PipelineConfig) -> CacheKey {
             (hw, s.batch as u32, s.replicas as u32)
         })
         .collect();
-    (fp, slo.to_bits(), stages)
+    (fp, stages)
 }
 
-/// Shared, thread-safe feasibility memo-cache with counters.
+/// What the Estimator has learned about a configuration's P99 on a trace.
+/// Either form answers feasibility queries exactly as a fresh computation
+/// would, so cached and uncached planners make identical decisions.
+#[derive(Debug, Clone, Copy)]
+enum P99Knowledge {
+    /// A full simulation ran: the exact Estimator P99.
+    Exact(f64),
+    /// P99 is provably above this value: a budgeted simulation aborted at
+    /// this SLO, or (for `Above(f64::INFINITY)`) the analytic throughput
+    /// bound showed queues diverge, which is infeasible at every SLO.
+    Above(f64),
+}
+
+impl P99Knowledge {
+    /// Resolve feasibility at `slo` if this knowledge suffices.
+    fn resolve(self, slo: f64) -> Option<bool> {
+        match self {
+            P99Knowledge::Exact(p99) => Some(p99 <= slo),
+            P99Knowledge::Above(bound) => {
+                if slo <= bound {
+                    Some(false)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Maximum routing plans retained (each is ~5 bytes per trace query; a
+/// planning run touches exactly one).
+const MAX_ROUTING_PLANS: usize = 64;
+
+/// Shared, thread-safe Estimator memo state: cross-SLO [`P99Knowledge`]
+/// per (trace, spec, params, configuration) and the shared routing plans.
+/// Bounded by a two-generation (segmented) LRU: when the current
+/// generation fills half the capacity it becomes the previous generation
+/// and the oldest entries are dropped — recently touched entries survive
+/// because lookups promote them back into the current generation.
+/// Hit/miss telemetry lives on each [`Planner`] (not here), so planners
+/// sharing one cache still report accurate per-search numbers.
+pub struct EstimatorCache {
+    feas: Mutex<Generations>,
+    /// Read-mostly: every cache-miss feasibility query fetches the same
+    /// per-search plan, so reads take a shared lock; only the first query
+    /// of a new trace takes the write lock to build. Bounded by the same
+    /// two-generation scheme as `feas` (capacity `MAX_ROUTING_PLANS`), so
+    /// hot plans survive eviction instead of a wholesale clear.
+    routing: RwLock<(HashMap<u64, Arc<RoutingPlan>>, HashMap<u64, Arc<RoutingPlan>>)>,
+    capacity: usize,
+}
+
 #[derive(Default)]
-struct FeasibilityCache {
-    map: Mutex<HashMap<CacheKey, bool>>,
+struct Generations {
+    current: HashMap<CacheKey, P99Knowledge>,
+    previous: HashMap<CacheKey, P99Knowledge>,
+}
+
+impl Default for EstimatorCache {
+    fn default() -> Self {
+        Self::new(Self::DEFAULT_CAPACITY)
+    }
+}
+
+impl EstimatorCache {
+    /// Default entry bound: roomy for any single search, a few tens of MB
+    /// at worst for sweep-length workloads.
+    pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+    pub fn new(capacity: usize) -> Self {
+        EstimatorCache {
+            feas: Mutex::new(Generations::default()),
+            routing: RwLock::new((HashMap::new(), HashMap::new())),
+            capacity: capacity.max(2),
+        }
+    }
+
+    /// An `Arc`-wrapped cache ready to share across planners (sweeps).
+    pub fn shared(capacity: usize) -> Arc<Self> {
+        Arc::new(Self::new(capacity))
+    }
+
+    /// Entries currently held across both LRU generations.
+    pub fn len(&self) -> usize {
+        let g = self.feas.lock().unwrap();
+        g.current.len() + g.previous.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resolve a feasibility query from cached knowledge, promoting the
+    /// entry to the current generation on a hit.
+    fn lookup(&self, key: &CacheKey, slo: f64) -> Option<bool> {
+        let mut g = self.feas.lock().unwrap();
+        if let Some(&k) = g.current.get(key) {
+            return k.resolve(slo);
+        }
+        if let Some(&k) = g.previous.get(key) {
+            let capacity = self.capacity;
+            Self::insert_merged(&mut g, capacity, key.clone(), k);
+            return k.resolve(slo);
+        }
+        None
+    }
+
+    /// Peek at the raw knowledge without telemetry or promotion.
+    fn peek(&self, key: &CacheKey) -> Option<P99Knowledge> {
+        let g = self.feas.lock().unwrap();
+        g.current.get(key).copied().or_else(|| g.previous.get(key).copied())
+    }
+
+    fn store(&self, key: CacheKey, val: P99Knowledge) {
+        let mut g = self.feas.lock().unwrap();
+        let capacity = self.capacity;
+        Self::insert_merged(&mut g, capacity, key, val);
+    }
+
+    /// Merge new knowledge with whatever either generation already holds
+    /// (an exact P99 beats any lower bound; bounds keep their max), then
+    /// insert into the current generation, rotating generations when it
+    /// fills its half of the capacity budget.
+    fn insert_merged(g: &mut Generations, capacity: usize, key: CacheKey, val: P99Knowledge) {
+        let existing = g.current.get(&key).copied().or_else(|| g.previous.get(&key).copied());
+        let merged = match (existing, val) {
+            (Some(P99Knowledge::Exact(p)), _) | (_, P99Knowledge::Exact(p)) => {
+                P99Knowledge::Exact(p)
+            }
+            (Some(P99Knowledge::Above(a)), P99Knowledge::Above(b)) => {
+                P99Knowledge::Above(a.max(b))
+            }
+            (None, v) => v,
+        };
+        if g.current.len() >= (capacity / 2).max(1) && !g.current.contains_key(&key) {
+            g.previous = std::mem::take(&mut g.current);
+        }
+        g.current.insert(key, merged);
+    }
+
+    /// The shared routing plan for a search fingerprint, building it on
+    /// first use. Keyed by the full fingerprint — coarser than the plan's
+    /// true inputs (routing ignores profiles and the non-seed params), so
+    /// planners differing only in those rebuild an identical plan; that
+    /// costs one O(trace) build per search, a deliberate trade against
+    /// threading a second fingerprint through every call site.
+    fn routing_plan(
+        &self,
+        fp: u64,
+        spec: &PipelineSpec,
+        trace: &Trace,
+        routing_seed: u64,
+    ) -> Arc<RoutingPlan> {
+        {
+            let maps = self.routing.read().unwrap();
+            if let Some(plan) = maps.0.get(&fp) {
+                return plan.clone();
+            }
+        }
+        let mut maps = self.routing.write().unwrap();
+        // Re-check current, then promote from the previous generation:
+        // another thread may have built it while we upgraded the lock.
+        if let Some(plan) = maps.0.get(&fp) {
+            return plan.clone();
+        }
+        let plan = match maps.1.get(&fp) {
+            Some(plan) => plan.clone(),
+            None => Arc::new(RoutingPlan::build(spec, trace, routing_seed)),
+        };
+        if maps.0.len() >= MAX_ROUTING_PLANS / 2 {
+            let retired = std::mem::take(&mut maps.0);
+            maps.1 = retired;
+        }
+        maps.0.insert(fp, plan.clone());
+        plan
+    }
+}
+
+/// Per-planner feasibility counters behind `&self` (candidate evaluation
+/// fans out over threads). Deliberately *not* on the shared cache: with a
+/// sweep-wide cache, global counters would mix concurrently running
+/// searches into every plan's telemetry.
+#[derive(Default)]
+struct SearchCounters {
     hits: AtomicUsize,
     misses: AtomicUsize,
     pruned: AtomicUsize,
+    early_aborts: AtomicUsize,
 }
 
-impl FeasibilityCache {
-    fn snapshot(&self) -> (usize, usize, usize) {
+impl SearchCounters {
+    fn snapshot(&self) -> (usize, usize, usize, usize) {
         (
             self.hits.load(Ordering::Relaxed),
             self.misses.load(Ordering::Relaxed),
             self.pruned.load(Ordering::Relaxed),
+            self.early_aborts.load(Ordering::Relaxed),
         )
     }
 }
@@ -181,7 +446,15 @@ pub struct Planner<'a> {
     pub params: SimParams,
     /// Worker threads for candidate evaluation (1 = serial).
     pub threads: usize,
-    cache: FeasibilityCache,
+    /// Estimator fast path: shared routing plans + early-abort budgeted
+    /// feasibility. Decisions and plans are bit-identical with it off;
+    /// disabling is for benchmarking and regression tests.
+    pub fast_path: bool,
+    cache: Arc<EstimatorCache>,
+    counters: SearchCounters,
+    /// Fingerprint of everything that shapes simulated outcomes besides
+    /// the trace and params: the pipeline spec and the profile set.
+    context_fp: u64,
 }
 
 impl<'a> Planner<'a> {
@@ -192,7 +465,11 @@ impl<'a> Planner<'a> {
             profiles,
             params: SimParams::default(),
             threads,
-            cache: FeasibilityCache::default(),
+            fast_path: true,
+            cache: EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY),
+            counters: SearchCounters::default(),
+            context_fp: spec_fingerprint(spec)
+                ^ profiles_fingerprint(profiles).rotate_left(17),
         }
     }
 
@@ -207,36 +484,100 @@ impl<'a> Planner<'a> {
         self
     }
 
-    /// The (trace, params) fingerprint prefix of every cache key for one
-    /// search. O(arrivals) — computed once per public entry point, never
-    /// per feasibility query.
+    /// Share an [`EstimatorCache`] with other planners — e.g. across
+    /// scenario-sweep grid points whose trace fingerprints coincide (same
+    /// pipeline, λ and CV at different SLOs), where one grid point's full
+    /// simulations answer the others' feasibility queries.
+    pub fn with_shared_cache(mut self, cache: Arc<EstimatorCache>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Toggle the Estimator fast path (reference semantics when off).
+    pub fn with_fast_path(mut self, fast_path: bool) -> Self {
+        self.fast_path = fast_path;
+        self
+    }
+
+    /// The (trace, params, spec, profiles) fingerprint prefix of every
+    /// cache key for one search. O(arrivals) — computed once per public
+    /// entry point, never per feasibility query.
     fn fingerprint(&self, trace: &Trace) -> u64 {
         trace_fingerprint(trace, &self.params)
+            ^ self.context_fp.wrapping_mul(0x9E37_79B9_7F4A_7C15)
     }
 
     /// Cached feasibility predicate under a precomputed fingerprint:
-    /// memo-cache lookup, then the analytic throughput lower bound, then
-    /// (only if needed) the Estimator.
+    /// memo-cache lookup (cross-SLO), then the analytic throughput lower
+    /// bound, then (only if needed) the Estimator — budgeted with the
+    /// shared routing plan on the fast path, a full simulation otherwise.
+    /// Every path produces the same decision for the same inputs.
     fn feasible_fp(&self, fp: u64, config: &PipelineConfig, trace: &Trace, slo: f64) -> bool {
-        let key = cache_key(fp, slo, config);
-        if let Some(&v) = self.cache.map.lock().unwrap().get(&key) {
-            self.cache.hits.fetch_add(1, Ordering::Relaxed);
-            return v;
+        let key = cache_key(fp, config);
+        if let Some(verdict) = self.cache.lookup(&key, slo) {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return verdict;
         }
-        self.cache.misses.fetch_add(1, Ordering::Relaxed);
-        let v = if !simulator::throughput_bound_ok(
-            self.spec,
-            self.profiles,
-            config,
-            trace.mean_rate(),
-        ) {
-            self.cache.pruned.fetch_add(1, Ordering::Relaxed);
-            false
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        if !simulator::throughput_bound_ok(self.spec, self.profiles, config, trace.mean_rate()) {
+            self.counters.pruned.fetch_add(1, Ordering::Relaxed);
+            // Diverging queues miss any latency target.
+            self.cache.store(key, P99Knowledge::Above(f64::INFINITY));
+            return false;
+        }
+        if self.fast_path {
+            let routing =
+                self.cache.routing_plan(fp, self.spec, trace, self.params.routing_seed);
+            let check = simulator::check_feasible(
+                self.spec,
+                self.profiles,
+                config,
+                trace,
+                slo,
+                &self.params,
+                Some(&routing),
+            );
+            match check.p99 {
+                Some(p99) => self.cache.store(key, P99Knowledge::Exact(p99)),
+                None => {
+                    self.counters.early_aborts.fetch_add(1, Ordering::Relaxed);
+                    self.cache.store(key, P99Knowledge::Above(slo));
+                }
+            }
+            check.feasible
         } else {
-            simulator::estimate_p99(self.spec, self.profiles, config, trace, &self.params) <= slo
+            let p99 =
+                simulator::estimate_p99(self.spec, self.profiles, config, trace, &self.params);
+            self.cache.store(key, P99Knowledge::Exact(p99));
+            p99 <= slo
+        }
+    }
+
+    /// The Estimator P99 of a configuration, answered from an exact cache
+    /// entry when one exists (any feasible-verdict entry is exact) and
+    /// computed by a full simulation otherwise. Deterministic either way.
+    fn estimated_p99_fp(&self, fp: u64, config: &PipelineConfig, trace: &Trace) -> f64 {
+        let key = cache_key(fp, config);
+        if let Some(P99Knowledge::Exact(p99)) = self.cache.peek(&key) {
+            return p99;
+        }
+        let p99 = if self.fast_path {
+            let routing =
+                self.cache.routing_plan(fp, self.spec, trace, self.params.routing_seed);
+            let mut result = simulator::simulate_with_routing(
+                self.spec,
+                self.profiles,
+                config,
+                trace,
+                &self.params,
+                Some(&routing),
+            );
+            crate::util::stats::p99_in_place(&mut result.latencies)
+        } else {
+            simulator::estimate_p99(self.spec, self.profiles, config, trace, &self.params)
         };
-        self.cache.map.lock().unwrap().insert(key, v);
-        v
+        self.cache.store(key, P99Knowledge::Exact(p99));
+        p99
     }
 
     /// Cached feasibility predicate (standalone-call convenience).
@@ -348,7 +689,7 @@ impl<'a> Planner<'a> {
 
     /// Algorithm 2: greedy cost minimization.
     pub fn plan(&self, trace: &Trace, slo: f64) -> Result<Plan, PlanError> {
-        let t0 = self.cache.snapshot();
+        let t0 = self.counters.snapshot();
         let fp = self.fingerprint(trace);
         let mut config = self.initialize(trace, slo)?;
         let mut actions_taken = Vec::new();
@@ -379,10 +720,8 @@ impl<'a> Planner<'a> {
                 None => break,
             }
         }
-        let estimated_p99 = simulator::estimate_p99(
-            self.spec, self.profiles, &config, trace, &self.params,
-        );
-        let t1 = self.cache.snapshot();
+        let estimated_p99 = self.estimated_p99_fp(fp, &config, trace);
+        let t1 = self.counters.snapshot();
         Ok(Plan {
             cost_per_hour: config.cost_per_hour(),
             config,
@@ -393,6 +732,7 @@ impl<'a> Planner<'a> {
                 cache_hits: t1.0 - t0.0,
                 cache_misses: t1.1 - t0.1,
                 pruned: t1.2 - t0.2,
+                early_aborts: t1.3 - t0.3,
                 threads: self.threads,
             },
         })

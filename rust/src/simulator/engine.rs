@@ -6,10 +6,10 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;
-use crate::util::rng::Rng;
 use crate::workload::Trace;
 
 use super::control::{ControlAction, ControlState, Controller};
+use super::routing::RoutingPlan;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -74,7 +74,10 @@ impl SimResult {
     }
 
     /// P99 miss-rate series over fixed windows of completion time:
-    /// (window end, miss rate). Used by the Fig 6/7/10-12 plots.
+    /// (window end, miss rate). Used by the Fig 6/7/10-12 plots. Windows
+    /// with zero completions report `NaN` — there is no data, and a
+    /// fabricated 0.0 would read as a perfect-attainment window; plots
+    /// skip NaN points.
     pub fn miss_rate_series(&self, slo: f64, window: f64) -> Vec<(f64, f64)> {
         let mut out = Vec::new();
         let mut idx = 0usize;
@@ -89,7 +92,10 @@ impl SimResult {
                 }
                 idx += 1;
             }
-            out.push((w_end, if total == 0 { 0.0 } else { missed as f64 / total as f64 }));
+            out.push((
+                w_end,
+                if total == 0 { f64::NAN } else { missed as f64 / total as f64 },
+            ));
             w_end += window;
         }
         out
@@ -171,6 +177,50 @@ struct QueryState {
     remaining: u8,
 }
 
+/// Early-abort budget for feasibility simulations: the SLO the run is
+/// being checked against.
+struct AbortBudget {
+    slo: f64,
+}
+
+/// In-flight bookkeeping for a budgeted run. `misses` counts *guaranteed*
+/// misses: completed queries over the SLO plus in-flight queries already
+/// older than the SLO (their latency can only grow). Once `misses`
+/// reaches `threshold`, the sorted latency vector provably has its
+/// interpolated P99 above the SLO no matter how the remaining queries
+/// finish, so the simulation may abort with an infeasible verdict that is
+/// bit-identical to the full run's.
+struct BudgetState {
+    slo: f64,
+    /// Guaranteed-miss count proving P99 > SLO: with `n` trace queries
+    /// and interpolation position `pos = 0.99 (n-1)`, P99 certainly
+    /// exceeds the SLO once sorted[floor(pos)] does — misses sort above
+    /// every non-miss, so that takes `n - floor(pos)` of them. (Below the
+    /// threshold the interpolated P99 may still exceed the SLO; the full
+    /// run decides, so the abort is sound, never eager.)
+    threshold: usize,
+    misses: usize,
+    /// Arrival-order cursor for the deadline sweep: every query below it
+    /// has either completed or been counted as a guaranteed miss.
+    deadline_idx: usize,
+}
+
+impl BudgetState {
+    fn new(budget: AbortBudget, n_queries: usize) -> Self {
+        let lo = if n_queries == 0 {
+            0
+        } else {
+            (0.99 * (n_queries - 1) as f64).floor() as usize
+        };
+        BudgetState {
+            slo: budget.slo,
+            threshold: (n_queries - lo).max(1),
+            misses: 0,
+            deadline_idx: 0,
+        }
+    }
+}
+
 /// The simulation engine. Public entry points are [`simulate`] (open loop)
 /// and [`super::control::simulate_controlled`].
 pub(super) struct Engine<'a> {
@@ -180,13 +230,15 @@ pub(super) struct Engine<'a> {
     queries: Vec<QueryState>,
     events: BinaryHeap<Event>,
     seq: u64,
-    rng: Rng,
     rpc: f64,
     /// DS2-style halt: no dispatch until this time.
     halted_until: f64,
     /// Free list of batch qid buffers (perf: recycles the per-batch Vec;
     /// one allocation per *concurrent* batch instead of per batch).
     qid_pool: Vec<Vec<u32>>,
+    /// Early-abort accounting for budgeted feasibility runs.
+    budget: Option<BudgetState>,
+    aborted: bool,
     result: SimResult,
     // Cost accounting (controlled mode).
     last_cost_time: f64,
@@ -236,10 +288,11 @@ impl<'a> Engine<'a> {
             queries: Vec::new(),
             events: BinaryHeap::new(),
             seq: 0,
-            rng: Rng::new(params.routing_seed),
             rpc: spec.framework.rpc_overhead(),
             halted_until: 0.0,
             qid_pool: Vec::new(),
+            budget: None,
+            aborted: false,
             result: SimResult {
                 latencies: Vec::new(),
                 completions: Vec::new(),
@@ -258,48 +311,55 @@ impl<'a> Engine<'a> {
         self.events.push(Event { time, seq: self.seq, kind });
     }
 
-    fn seed_arrivals(&mut self, trace: &Trace) {
-        self.queries.reserve(trace.len());
+    /// Populate per-query state from a routing plan — either one shared
+    /// by the caller (the planner reuses one plan across every candidate
+    /// simulation of a search) or a locally built one. Both paths sample
+    /// identically, so results are bit-identical either way.
+    fn seed_arrivals(&mut self, trace: &Trace, routing: Option<&RoutingPlan>) {
+        let local;
+        let plan = match routing {
+            Some(p) => {
+                assert_eq!(p.len(), trace.len(), "routing plan / trace length mismatch");
+                p
+            }
+            None => {
+                local = RoutingPlan::build(self.spec, trace, self.params.routing_seed);
+                &local
+            }
+        };
+        self.queries = plan
+            .visits
+            .iter()
+            .zip(&trace.arrivals)
+            .map(|(&(visited, remaining), &arrival)| QueryState { arrival, visited, remaining })
+            .collect();
         self.result.latencies.reserve(trace.len());
         self.result.completions.reserve(trace.len());
-        // Pre-resolve edge probabilities once (perf: avoids re-deriving
-        // conditional probabilities 2x per query).
-        let edges: Vec<Vec<(usize, f64)>> = self
-            .spec
-            .stages
-            .iter()
-            .enumerate()
-            .map(|(s, st)| {
-                st.children
-                    .iter()
-                    .map(|&c| (c, self.spec.edge_probability(s, c)))
-                    .collect()
-            })
-            .collect();
-        // One reusable DFS stack for all queries (perf: was one Vec
-        // allocation per query).
-        let mut stack: Vec<usize> = Vec::with_capacity(self.spec.stages.len());
-        for (i, &t) in trace.arrivals.iter().enumerate() {
-            // Sample this query's visit set from the scale factors with a
-            // per-query forked RNG (deterministic routing).
-            let mut q_rng = self.rng.fork(i as u64);
-            let mut visited: u32 = 0;
-            let mut remaining: u8 = 0;
-            stack.clear();
-            stack.extend_from_slice(&self.spec.roots);
-            while let Some(s) = stack.pop() {
-                visited |= 1 << s;
-                remaining += 1;
-                for &(c, p) in &edges[s] {
-                    if p >= 1.0 || q_rng.bool(p) {
-                        stack.push(c);
-                    }
-                }
-            }
-            self.queries.push(QueryState { arrival: t, visited, remaining });
-        }
         // NB: arrival *events* are not pushed; run() merges the sorted
         // arrival list lazily against the heap.
+    }
+
+    /// Budgeted-run deadline sweep (the queue-divergence bailout): any
+    /// arrived-but-incomplete query whose age already exceeds the SLO is
+    /// a guaranteed miss — its latency only grows from here. The age test
+    /// is written as `now - arrival > slo`, the *same* float expression
+    /// the completion path uses for `latency > slo`: fp subtraction is
+    /// monotone in `now`, so a query doomed at `now` provably produces
+    /// `latency > slo` at any completion time ≥ `now` — bit-exactly, not
+    /// just in real arithmetic. Arrivals are time-sorted, so the doomed
+    /// set is a prefix and one monotone cursor visits each query at most
+    /// once across the whole run.
+    fn sweep_deadlines(&mut self, arrivals: &[f64], now: f64) {
+        let Some(b) = &mut self.budget else { return };
+        while b.deadline_idx < self.queries.len() && now - arrivals[b.deadline_idx] > b.slo {
+            if self.queries[b.deadline_idx].remaining > 0 {
+                b.misses += 1;
+                if b.misses >= b.threshold {
+                    self.aborted = true;
+                }
+            }
+            b.deadline_idx += 1;
+        }
     }
 
     fn try_dispatch(&mut self, stage: usize, now: f64) {
@@ -351,6 +411,13 @@ impl<'a> Engine<'a> {
             let latency = now - q.arrival;
             self.result.latencies.push(latency);
             self.result.completions.push((now, latency));
+            if let Some(b) = &self.budget {
+                // No counting here: the deadline sweep at this same `now`
+                // already counted every miss — `latency > slo` is exactly
+                // its `now - arrival > slo` condition, and deadlines are
+                // sorted, so the cursor is provably past `qid`.
+                debug_assert!(latency <= b.slo || (qid as usize) < b.deadline_idx);
+            }
         }
     }
 
@@ -448,12 +515,32 @@ impl<'a> Engine<'a> {
     /// Run to completion. `controller` is optional (open-loop Estimator
     /// when `None`).
     pub(super) fn run(
+        self,
+        trace: &Trace,
+        config_hw: &PipelineConfig,
+        controller: Option<&mut dyn Controller>,
+    ) -> SimResult {
+        self.run_ext(trace, config_hw, controller, None, None).0
+    }
+
+    /// Full-control entry point: optional shared routing plan, optional
+    /// early-abort budget. Returns the (possibly partial) result and
+    /// whether the run aborted. Budgets are only meaningful open-loop
+    /// (feasibility checks); controlled runs pass `None`.
+    fn run_ext(
         mut self,
         trace: &Trace,
         config_hw: &PipelineConfig,
         mut controller: Option<&mut dyn Controller>,
-    ) -> SimResult {
-        self.seed_arrivals(trace);
+        routing: Option<&RoutingPlan>,
+        budget: Option<AbortBudget>,
+    ) -> (SimResult, bool) {
+        debug_assert!(
+            budget.is_none() || controller.is_none(),
+            "abort budgets are for open-loop feasibility runs"
+        );
+        self.budget = budget.map(|b| BudgetState::new(b, trace.len()));
+        self.seed_arrivals(trace, routing);
         if controller.is_some() {
             self.push(self.params.control_interval, EventKind::ControlTick);
             self.result
@@ -479,6 +566,10 @@ impl<'a> Engine<'a> {
             };
             if take_arrival {
                 let now = arrival_time.unwrap();
+                self.sweep_deadlines(&trace.arrivals, now);
+                if self.aborted {
+                    break;
+                }
                 let qid = next_arrival as u32;
                 next_arrival += 1;
                 if let Some(c) = controller.as_deref_mut() {
@@ -493,6 +584,10 @@ impl<'a> Engine<'a> {
             }
             let ev = self.events.pop().unwrap();
             let now = ev.time;
+            self.sweep_deadlines(&trace.arrivals, now);
+            if self.aborted {
+                break;
+            }
             match ev.kind {
                 EventKind::Enqueue { stage, qid } => {
                     self.enqueue(stage as usize, qid, now);
@@ -582,7 +677,8 @@ impl<'a> Engine<'a> {
                 st
             })
             .collect();
-        self.result
+        let aborted = self.aborted;
+        (self.result, aborted)
     }
 }
 
@@ -596,8 +692,49 @@ pub fn simulate(
     trace: &Trace,
     params: &SimParams,
 ) -> SimResult {
-    let mut result = Engine::new(spec, profiles, config, params).run(trace, config, None);
+    simulate_with_routing(spec, profiles, config, trace, params, None)
+}
+
+/// [`simulate`] with an optional precomputed [`RoutingPlan`] (built for
+/// the same spec, trace and `params.routing_seed`). Results are
+/// bit-identical with and without the plan; sharing one across candidate
+/// simulations skips the per-query visit-set sampling.
+pub fn simulate_with_routing(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+    routing: Option<&RoutingPlan>,
+) -> SimResult {
+    let (mut result, _) =
+        Engine::new(spec, profiles, config, params).run_ext(trace, config, None, routing, None);
     // Open loop: cost = static config rate x makespan.
     result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
     result
+}
+
+/// Budgeted open-loop simulation for feasibility checks: aborts as soon
+/// as enough queries are *guaranteed* to miss the SLO that the final P99
+/// provably exceeds it (see `BudgetState` for the exact bound). Returns
+/// the (partial, when aborted) result and the abort flag. A non-aborted
+/// run is bit-identical to [`simulate`].
+pub fn simulate_budgeted(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+    routing: Option<&RoutingPlan>,
+) -> (SimResult, bool) {
+    let (mut result, aborted) = Engine::new(spec, profiles, config, params).run_ext(
+        trace,
+        config,
+        None,
+        routing,
+        Some(AbortBudget { slo }),
+    );
+    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
+    (result, aborted)
 }

@@ -16,11 +16,44 @@
 //! Because only discrete events are processed, hours of trace simulate in
 //! milliseconds (validated in `benches/microbench.rs`; the paper makes the
 //! same claim in §4.2).
+//!
+//! ## Estimator fast path
+//!
+//! Planner candidate evaluation funnels every decision through
+//! [`feasible`]-style simulations, so the open-loop path carries three
+//! coordinated optimizations — none of which change any simulated
+//! outcome (regression-tested in `tests/estimator_fast_path.rs`):
+//!
+//! * **Shared routing plans** ([`RoutingPlan`]): a query's conditional
+//!   visit set depends only on (pipeline, trace, routing seed) — never on
+//!   the candidate configuration — so it is sampled once per planning run
+//!   and shared (`Arc`) across every candidate simulation and worker
+//!   thread, instead of re-forking the per-query RNG for each of the
+//!   hundreds of `feasible()` calls in an Algorithm-2 search.
+//! * **Early-abort feasibility** ([`check_feasible`]): feasibility only
+//!   needs the sign of `P99 − SLO`, not the exact P99. The budgeted
+//!   simulation counts *guaranteed* misses — completed queries over the
+//!   SLO plus in-flight queries already older than the SLO (the
+//!   queue-divergence bailout: when a stage's queues grow without bound,
+//!   queries age past the SLO immediately and the count explodes) — and
+//!   aborts the moment the count provably pushes the interpolated P99
+//!   over the SLO (just over 1% of the trace). Hopeless candidates cost a
+//!   fraction of the horizon; decisions are bit-identical to the
+//!   unbudgeted path ([`feasible_unbudgeted`]). Configurations whose mean
+//!   throughput cannot cover the arrival rate at all are rejected even
+//!   earlier, before any simulation, by [`throughput_bound_ok`].
+//! * **O(n) quantiles**: P99 extraction uses `select_nth_unstable`-based
+//!   selection (`util::stats::quantile_in_place`) instead of sorting the
+//!   whole latency vector.
 
 pub mod control;
 mod engine;
+mod routing;
 
-pub use engine::{simulate, SimParams, SimResult, StageStats};
+pub use engine::{
+    simulate, simulate_budgeted, simulate_with_routing, SimParams, SimResult, StageStats,
+};
+pub use routing::RoutingPlan;
 
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;
@@ -35,8 +68,8 @@ pub fn estimate_p99(
     trace: &Trace,
     params: &SimParams,
 ) -> f64 {
-    let result = simulate(spec, profiles, config, trace, params);
-    stats::p99(&result.latencies)
+    let mut result = simulate(spec, profiles, config, trace, params);
+    stats::p99_in_place(&mut result.latencies)
 }
 
 /// Cheap analytic necessary condition for feasibility: every stage must
@@ -63,9 +96,63 @@ pub fn throughput_bound_ok(
     true
 }
 
+/// Outcome of a budgeted feasibility simulation ([`check_feasible`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FeasibilityCheck {
+    /// Does the configuration meet the P99 SLO on the trace?
+    pub feasible: bool,
+    /// True when the simulation early-aborted: enough queries were
+    /// guaranteed to miss that P99 > SLO was already proven.
+    pub aborted: bool,
+    /// The exact Estimator P99 — available only when the simulation ran
+    /// to completion (aborted runs know just the sign of `P99 − SLO`).
+    pub p99: Option<f64>,
+}
+
+/// Budgeted feasibility check: simulate with the early-abort budget and
+/// an optional shared routing plan. The decision is bit-identical to
+/// [`feasible_unbudgeted`] minus the analytic throughput prune, which the
+/// caller is expected to apply first (as [`feasible`] does).
+pub fn check_feasible(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+    routing: Option<&RoutingPlan>,
+) -> FeasibilityCheck {
+    let (mut result, aborted) =
+        simulate_budgeted(spec, profiles, config, trace, slo, params, routing);
+    if aborted {
+        FeasibilityCheck { feasible: false, aborted: true, p99: None }
+    } else {
+        let p99 = stats::p99_in_place(&mut result.latencies);
+        FeasibilityCheck { feasible: p99 <= slo, aborted: false, p99: Some(p99) }
+    }
+}
+
 /// The planner's feasibility predicate: does the configuration meet the
-/// P99 latency SLO on the sample trace? (Paper §4.3 `Feasible`.)
+/// P99 latency SLO on the sample trace? (Paper §4.3 `Feasible`.) Runs the
+/// analytic throughput prune, then the budgeted fast-path simulation.
 pub fn feasible(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+) -> bool {
+    if !throughput_bound_ok(spec, profiles, config, trace.mean_rate()) {
+        return false;
+    }
+    check_feasible(spec, profiles, config, trace, slo, params, None).feasible
+}
+
+/// Reference feasibility predicate: identical decision to [`feasible`]
+/// but always simulates the full trace (no early abort). Kept as the
+/// semantic baseline the fast path is regression-tested against.
+pub fn feasible_unbudgeted(
     spec: &PipelineSpec,
     profiles: &ProfileSet,
     config: &PipelineConfig,

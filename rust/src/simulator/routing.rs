@@ -1,0 +1,117 @@
+//! Shared routing plans: the per-query conditional visit sets, sampled
+//! once per (pipeline, trace, routing seed) and reused across candidate
+//! simulations.
+//!
+//! Conditional control flow in the Estimator is determined by a per-query
+//! forked RNG seeded from `SimParams::routing_seed` — deliberately
+//! independent of the candidate configuration, so every configuration
+//! comparison sees identical routing (paper §6: traces are "reused across
+//! all comparison points"). That independence means the sampling work is
+//! also identical across the hundreds of `feasible()` calls in one
+//! Algorithm-2 search, and profiling showed the per-query RNG forks were
+//! the dominant seed-arrival cost on long traces. A [`RoutingPlan`]
+//! factors that sampling out: build it once, wrap it in an `Arc`, and
+//! hand it to every candidate simulation (and every worker thread) of the
+//! planning run. Simulations with and without a precomputed plan are
+//! bit-identical (`tests/estimator_fast_path.rs`).
+
+use crate::config::PipelineSpec;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// Precomputed per-query routing for one (pipeline, trace, seed) triple:
+/// which stages each query visits and how many stage completions it needs.
+#[derive(Debug, Clone)]
+pub struct RoutingPlan {
+    /// Per query, in trace order: (visited-stage bitmask, visit count).
+    /// Pipelines are limited to 32 stages (the engine's bitmask width).
+    pub(crate) visits: Vec<(u32, u8)>,
+}
+
+impl RoutingPlan {
+    /// Sample every query's visit set, exactly as the engine would when
+    /// seeding arrivals without a plan: a base RNG seeded with
+    /// `routing_seed`, forked once per query in trace order.
+    pub fn build(spec: &PipelineSpec, trace: &Trace, routing_seed: u64) -> RoutingPlan {
+        debug_assert!(spec.stages.len() <= 32, "visited bitmask limit");
+        let mut rng = Rng::new(routing_seed);
+        // Pre-resolve edge probabilities once (avoids re-deriving the
+        // conditional probabilities twice per query).
+        let edges: Vec<Vec<(usize, f64)>> = spec
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                st.children
+                    .iter()
+                    .map(|&c| (c, spec.edge_probability(s, c)))
+                    .collect()
+            })
+            .collect();
+        let mut visits = Vec::with_capacity(trace.len());
+        // One reusable DFS stack for all queries.
+        let mut stack: Vec<usize> = Vec::with_capacity(spec.stages.len());
+        for i in 0..trace.len() {
+            let mut q_rng = rng.fork(i as u64);
+            let mut visited: u32 = 0;
+            let mut remaining: u8 = 0;
+            stack.clear();
+            stack.extend_from_slice(&spec.roots);
+            while let Some(s) = stack.pop() {
+                visited |= 1 << s;
+                remaining += 1;
+                for &(c, p) in &edges[s] {
+                    if p >= 1.0 || q_rng.bool(p) {
+                        stack.push(c);
+                    }
+                }
+            }
+            visits.push((visited, remaining));
+        }
+        RoutingPlan { visits }
+    }
+
+    /// Number of queries the plan covers (must equal the trace length).
+    pub fn len(&self) -> usize {
+        self.visits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.visits.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pipelines;
+    use crate::workload::gamma_trace;
+
+    #[test]
+    fn plan_is_deterministic_and_covers_trace() {
+        let spec = pipelines::social_media();
+        let trace = gamma_trace(80.0, 1.0, 10.0, 3);
+        let a = RoutingPlan::build(&spec, &trace, 7);
+        let b = RoutingPlan::build(&spec, &trace, 7);
+        assert_eq!(a.len(), trace.len());
+        assert_eq!(a.visits, b.visits);
+        // Every query visits at least the roots.
+        for &(visited, remaining) in &a.visits {
+            for &r in &spec.roots {
+                assert!(visited & (1 << r) != 0);
+            }
+            assert!(remaining as usize >= spec.roots.len());
+            assert_eq!(visited.count_ones() as usize, remaining as usize);
+        }
+    }
+
+    #[test]
+    fn different_seeds_route_differently() {
+        let spec = pipelines::social_media();
+        let trace = gamma_trace(80.0, 1.0, 20.0, 3);
+        let a = RoutingPlan::build(&spec, &trace, 1);
+        let b = RoutingPlan::build(&spec, &trace, 2);
+        // social-media has conditional stages, so some query must differ.
+        assert_ne!(a.visits, b.visits);
+    }
+}

@@ -1,14 +1,42 @@
 //! Small statistics helpers: quantiles, moments, inter-arrival CV.
 
-/// Quantile of a sample by linear interpolation on the sorted data
-/// (numpy's default). `q` in [0, 1]. Returns NaN on empty input.
+/// Quantile of a sample by linear interpolation on the order statistics
+/// (numpy's default definition). `q` in [0, 1]. Returns NaN on empty
+/// input. Computed by O(n) selection, not an O(n log n) sort — the value
+/// is bit-identical to sorting first (`tests/estimator_fast_path.rs`).
 pub fn quantile(samples: &[f64], q: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
-    let mut sorted: Vec<f64> = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    quantile_sorted(&sorted, q)
+    let mut scratch: Vec<f64> = samples.to_vec();
+    quantile_in_place(&mut scratch, q)
+}
+
+/// [`quantile`] on a mutable buffer the caller is willing to have
+/// reordered: avoids the scratch copy. This is the Estimator feasibility
+/// hot path — `p99` over every simulated latency, once per candidate.
+pub fn quantile_in_place(samples: &mut [f64], q: f64) -> f64 {
+    let n = samples.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    // Partition so samples[lo] holds the lo-th order statistic and
+    // everything above it lands (unordered) in `above`.
+    let (_, lo_val, above) =
+        samples.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    let lo_val = *lo_val;
+    if pos.ceil() as usize == lo {
+        return lo_val;
+    }
+    // The (lo+1)-th order statistic is the minimum of the upper partition.
+    let hi_val = above.iter().copied().fold(f64::INFINITY, f64::min);
+    let frac = pos - lo as f64;
+    // Same clamp as `quantile_sorted` (bit-identical results, and the
+    // early-abort bound needs quantile(q) >= sorted[floor(pos)] exactly).
+    (lo_val * (1.0 - frac) + hi_val * frac).clamp(lo_val, hi_val)
 }
 
 /// Quantile of an already-sorted sample.
@@ -24,13 +52,22 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
         sorted[lo]
     } else {
         let frac = pos - lo as f64;
-        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        // Clamp: fp rounding in the lerp can land an ulp outside
+        // [sorted[lo], sorted[hi]], but a quantile must lie within its
+        // bracketing order statistics — the Estimator's early-abort bound
+        // relies on quantile(q) >= sorted[floor(pos)] holding exactly.
+        (sorted[lo] * (1.0 - frac) + sorted[hi] * frac).clamp(sorted[lo], sorted[hi])
     }
 }
 
 /// P99 convenience wrapper.
 pub fn p99(samples: &[f64]) -> f64 {
     quantile(samples, 0.99)
+}
+
+/// P99 by in-place selection (reorders `samples`, saves the copy).
+pub fn p99_in_place(samples: &mut [f64]) -> f64 {
+    quantile_in_place(samples, 0.99)
 }
 
 /// Sample mean; NaN on empty.
@@ -104,6 +141,28 @@ mod tests {
     fn quantile_unsorted_input() {
         let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
         assert_eq!(quantile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn selection_quantile_matches_sorted_quantile() {
+        // Including duplicates and a two-element edge case.
+        let cases: &[&[f64]] = &[
+            &[7.0],
+            &[2.0, 1.0],
+            &[3.0, 3.0, 3.0, 1.0, 9.0],
+            &[0.5, 0.25, 0.125, 8.0, 4.0, 2.0, 1.0, 0.0625],
+        ];
+        for xs in cases {
+            let mut sorted = xs.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                let by_select = quantile(xs, q);
+                let by_sort = quantile_sorted(&sorted, q);
+                assert_eq!(by_select.to_bits(), by_sort.to_bits(), "{xs:?} q={q}");
+                let mut buf = xs.to_vec();
+                assert_eq!(quantile_in_place(&mut buf, q).to_bits(), by_sort.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Regression tests for the Estimator fast path: shared routing plans,
+//! early-abort budgeted feasibility, O(n) selection quantiles, and the
+//! cross-SLO estimator memo-cache. The invariant under test throughout:
+//! the fast path changes *nothing* about simulated outcomes or planner
+//! decisions — only how fast they are reached.
+
+use inferline::config::pipelines;
+use inferline::planner::{EstimatorCache, Planner};
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::{self, RoutingPlan, SimParams};
+use inferline::util::rng::Rng;
+use inferline::util::stats;
+use inferline::workload::{gamma_trace, Trace};
+
+/// Budgeted and unbudgeted `feasible()` agree across all four pipelines,
+/// a spread of SLOs, and configurations on both sides of the feasibility
+/// boundary (including deliberately under-provisioned ones).
+#[test]
+fn budgeted_feasibility_matches_unbudgeted() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    for spec in pipelines::all() {
+        let trace = gamma_trace(120.0, 2.0, 30.0, 7);
+        let planner = Planner::new(&spec, &profiles);
+        let base = planner.initialize(&trace, 0.5).unwrap();
+        let mut candidates = vec![base.clone()];
+        for i in 0..spec.stages.len() {
+            let mut under = base.clone();
+            under.stages[i].replicas = 1;
+            candidates.push(under);
+        }
+        for config in &candidates {
+            for &slo in &[0.05, 0.1, 0.2, 0.3, 0.5, 1.0] {
+                let fast = simulator::feasible(&spec, &profiles, config, &trace, slo, &params);
+                let slow =
+                    simulator::feasible_unbudgeted(&spec, &profiles, config, &trace, slo, &params);
+                assert_eq!(fast, slow, "{} slo={slo} config={config:?}", spec.name);
+            }
+        }
+    }
+}
+
+/// A simulation fed a shared `RoutingPlan` is bit-identical to one that
+/// samples routing itself.
+#[test]
+fn routing_plan_reuse_is_bit_identical() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    for spec in pipelines::all() {
+        let trace = gamma_trace(100.0, 4.0, 30.0, 11);
+        let planner = Planner::new(&spec, &profiles);
+        let config = planner.initialize(&trace, 0.5).unwrap();
+        let plain = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+        let routing = RoutingPlan::build(&spec, &trace, params.routing_seed);
+        let shared = simulator::simulate_with_routing(
+            &spec,
+            &profiles,
+            &config,
+            &trace,
+            &params,
+            Some(&routing),
+        );
+        assert_eq!(plain.latencies.len(), shared.latencies.len(), "{}", spec.name);
+        for (a, b) in plain.latencies.iter().zip(&shared.latencies) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", spec.name);
+        }
+        assert_eq!(plain.horizon.to_bits(), shared.horizon.to_bits(), "{}", spec.name);
+        for (a, b) in plain.completions.iter().zip(&shared.completions) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+    }
+}
+
+/// Selection-based quantiles equal sort-based quantiles bit for bit on
+/// random samples.
+#[test]
+fn select_quantile_matches_sort_quantile_on_random_samples() {
+    let mut rng = Rng::new(99);
+    for n in [1usize, 2, 3, 10, 101, 1000, 4096] {
+        let samples: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &q in &[0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let by_select = stats::quantile(&samples, q);
+            let by_sort = stats::quantile_sorted(&sorted, q);
+            assert_eq!(by_select.to_bits(), by_sort.to_bits(), "n={n} q={q}");
+        }
+    }
+}
+
+/// The fast-path planner and the reference (full-simulation) planner emit
+/// identical plans on every pipeline.
+#[test]
+fn fast_path_planner_matches_reference_planner() {
+    let profiles = paper_profiles();
+    for spec in pipelines::all() {
+        let trace = gamma_trace(120.0, 1.0, 30.0, 42);
+        let slo = 0.3;
+        let fast = Planner::new(&spec, &profiles).plan(&trace, slo).unwrap();
+        let reference = Planner::new(&spec, &profiles)
+            .with_fast_path(false)
+            .plan(&trace, slo)
+            .unwrap();
+        assert_eq!(fast.config, reference.config, "{}", spec.name);
+        assert_eq!(fast.actions_taken, reference.actions_taken, "{}", spec.name);
+        assert_eq!(fast.iterations, reference.iterations, "{}", spec.name);
+        assert_eq!(
+            fast.estimated_p99.to_bits(),
+            reference.estimated_p99.to_bits(),
+            "{}",
+            spec.name
+        );
+    }
+}
+
+/// A hopeless configuration (SLO far below service time) aborts early and
+/// still reports the same verdict as the full simulation.
+#[test]
+fn budgeted_sim_aborts_early_on_mass_misses() {
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let params = SimParams::default();
+    let trace = gamma_trace(100.0, 1.0, 60.0, 9);
+    let planner = Planner::new(&spec, &profiles);
+    let config = planner.initialize(&trace, 0.5).unwrap();
+    // 1 ms SLO is below the batch-1 service path: every query misses.
+    let check = simulator::check_feasible(&spec, &profiles, &config, &trace, 0.001, &params, None);
+    assert!(check.aborted, "expected an early abort");
+    assert!(!check.feasible);
+    assert!(check.p99.is_none(), "aborted runs know only the sign of P99 - SLO");
+    assert!(!simulator::feasible_unbudgeted(&spec, &profiles, &config, &trace, 0.001, &params));
+}
+
+/// Tight-SLO searches actually exercise the early-abort path (telemetry).
+#[test]
+fn searches_report_early_aborts() {
+    let profiles = paper_profiles();
+    let mut total_aborts = 0usize;
+    for spec in pipelines::all() {
+        let trace = gamma_trace(150.0, 1.0, 30.0, 12);
+        for &slo in &[0.1, 0.15] {
+            if let Ok(plan) = Planner::new(&spec, &profiles).plan(&trace, slo) {
+                total_aborts += plan.telemetry.early_aborts;
+            }
+        }
+    }
+    assert!(total_aborts > 0, "no search aborted a single hopeless candidate");
+}
+
+/// A cache shared across SLOs produces exactly the plans fresh planners
+/// produce — exact-P99 entries answer feasibility at every SLO.
+#[test]
+fn shared_cache_across_slos_matches_fresh_planners() {
+    let profiles = paper_profiles();
+    let spec = pipelines::social_media();
+    let cache = EstimatorCache::shared(1 << 16);
+    let trace = gamma_trace(100.0, 1.0, 30.0, 5);
+    for &slo in &[0.15, 0.25, 0.4] {
+        let shared = Planner::new(&spec, &profiles)
+            .with_shared_cache(cache.clone())
+            .plan(&trace, slo)
+            .unwrap();
+        let fresh = Planner::new(&spec, &profiles).plan(&trace, slo).unwrap();
+        assert_eq!(shared.config, fresh.config, "slo={slo}");
+        assert_eq!(shared.actions_taken, fresh.actions_taken, "slo={slo}");
+        assert_eq!(
+            shared.estimated_p99.to_bits(),
+            fresh.estimated_p99.to_bits(),
+            "slo={slo}"
+        );
+    }
+    assert!(!cache.is_empty());
+}
+
+/// The segmented LRU keeps the cache within its configured bound, and
+/// planning still succeeds (evicted entries are simply recomputed).
+#[test]
+fn estimator_cache_is_bounded() {
+    let profiles = paper_profiles();
+    let spec = pipelines::social_media();
+    let cache = EstimatorCache::shared(64);
+    let trace = gamma_trace(100.0, 1.0, 25.0, 6);
+    let unbounded = Planner::new(&spec, &profiles).plan(&trace, 0.3).unwrap();
+    for &slo in &[0.2, 0.3, 0.4] {
+        let bounded = Planner::new(&spec, &profiles)
+            .with_shared_cache(cache.clone())
+            .plan(&trace, slo)
+            .unwrap();
+        if slo == 0.3 {
+            assert_eq!(bounded.config, unbounded.config);
+        }
+        assert!(cache.len() <= 64, "cache grew to {}", cache.len());
+    }
+    assert!(!cache.is_empty());
+}
+
+/// Windows with zero completions report NaN (no data), not a fabricated
+/// perfect-attainment 0.0.
+#[test]
+fn miss_rate_series_reports_nan_for_empty_windows() {
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let params = SimParams::default();
+    // Two bursts separated by a long silent gap.
+    let mut arrivals: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+    arrivals.extend((0..50).map(|i| 60.0 + i as f64 * 0.1));
+    let trace = Trace::new(arrivals);
+    let planner = Planner::new(&spec, &profiles);
+    let config = planner.initialize(&gamma_trace(50.0, 1.0, 20.0, 3), 0.5).unwrap();
+    let result = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+    let series = result.miss_rate_series(0.5, 5.0);
+    assert!(
+        series.iter().any(|(_, m)| m.is_nan()),
+        "expected empty windows in {series:?}"
+    );
+    assert!(series.iter().any(|(_, m)| !m.is_nan()));
+}
