@@ -646,7 +646,10 @@ pub fn run_by_name(name: &str, quick: bool) -> bool {
 /// Every figure id, in paper order. The scenario sweep is registered in
 /// [`run_by_name`] as `"sweep"` but deliberately kept out of this list so
 /// `experiment all` reproduces exactly the paper's figures without also
-/// paying for the full grid sweep.
+/// paying for the full grid sweep. The closed-loop robustness harness is
+/// dispatched directly by the CLI (`experiment robustness`) because it
+/// takes a seed flag and reports write failures in its exit code —
+/// see `experiments::robustness::run`.
 pub const ALL_FIGURES: &[&str] = &[
     "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "headline",

@@ -9,6 +9,7 @@
 pub mod common;
 pub mod estbench;
 pub mod figures;
+pub mod robustness;
 pub mod sweep;
 
 pub use common::{Ctx, RunSummary};

@@ -1,0 +1,444 @@
+//! Closed-loop robustness harness: the Planner → Tuner loop under
+//! adversarial arrival processes.
+//!
+//! The paper's claim (§5, §6.4) is that the combination of the
+//! low-frequency Planner and the network-calculus Tuner holds tail-latency
+//! SLOs *under changes in the query arrival process*. This harness
+//! measures that claim directly: every cell of a scenario × pipeline grid
+//! plans on a nominal Gamma sample (what the operator believed the
+//! workload was), then serves a scenario trace from
+//! [`crate::workload::scenarios`] — flash crowds, MMPP regime switching,
+//! diurnal cycles, heavy-tailed renewals, CV shifts — with the Tuner in
+//! the control loop ([`simulate_controlled`]).
+//!
+//! Mechanics:
+//!
+//! * the grid is sharded over [`parallel_map_indexed`] (one cell per
+//!   task), with planner-internal parallelism adaptively set to the cores
+//!   the fan-out cannot fill ([`shard_planner_threads`]);
+//! * all cells share one planning sample per seed and one
+//!   [`EstimatorCache`], so the four unique planning problems are solved
+//!   once and every other cell's feasibility queries are cache hits;
+//! * every cell reports SLO miss rate, measured P99, the cost trajectory
+//!   (mean $/hr, total $, downsampled replica timeline) and the Tuner's
+//!   action counts ([`CountingController`]);
+//! * the report is written as machine-readable JSON (`robustness.json`).
+//!
+//! Determinism: traces derive from the base seed via
+//! [`scenarios::child_seed`], plans are bit-identical regardless of
+//! thread count or cache state, and the JSON encoder orders keys
+//! canonically — the same seed always produces a byte-identical report
+//! (regression-tested below). Telemetry that depends on thread
+//! scheduling (cache hit rates) is deliberately excluded.
+
+use std::sync::Arc;
+
+use crate::config::{pipelines, PipelineSpec};
+use crate::planner::{EstimatorCache, Planner};
+use crate::profiler::analytic::paper_profiles;
+use crate::simulator::control::{simulate_controlled, CountingController};
+use crate::simulator::{self, SimParams};
+use crate::tuner::{Tuner, TunerInputs};
+use crate::util::json::Json;
+use crate::util::par::{default_workers, parallel_map_indexed};
+use crate::util::stats;
+use crate::workload::scenarios::{self, Scenario};
+use crate::workload::{gamma_trace, Trace};
+
+use super::common::{shard_planner_threads, Ctx};
+
+/// SLO all cells are planned and judged against (loose enough that every
+/// paper pipeline is feasible at the nominal λ = 100 QPS sample).
+pub const DEFAULT_SLO: f64 = 0.35;
+
+/// Nominal planning rate: every scenario family stresses deviations from
+/// this assumed workload.
+const NOMINAL_LAMBDA: f64 = 100.0;
+
+/// The built-in scenario families, in report order.
+pub const FAMILIES: &[&str] = &[
+    "steady",
+    "bursty-mmpp",
+    "diurnal",
+    "flash-crowd",
+    "heavy-tail-pareto",
+    "heavy-tail-lognormal",
+    "cv-shift",
+];
+
+/// The declarative scenario for one family (`None` for unknown names).
+/// Quick mode shrinks the served horizon so CI completes in seconds.
+pub fn family_scenario(family: &str, quick: bool) -> Option<Scenario> {
+    let dur = if quick { 120.0 } else { 600.0 };
+    let s = match family {
+        // The control: live traffic matches the planning assumption.
+        "steady" => Scenario::Gamma { lambda: NOMINAL_LAMBDA, cv: 1.0, duration: dur },
+        // Markov-modulated bursts: long calm regime, short hot regime,
+        // same long-run mean as the nominal plan.
+        "bursty-mmpp" => Scenario::Mmpp {
+            rates: vec![60.0, 240.0],
+            dwell: vec![40.0, 12.0],
+            duration: dur,
+        },
+        // Two compressed diurnal cycles around the nominal rate.
+        "diurnal" => Scenario::Diurnal {
+            base: NOMINAL_LAMBDA,
+            amplitude: 0.5,
+            period: dur / 2.0,
+            cv: 1.0,
+            duration: dur,
+        },
+        // A 3.2x flash crowd: sharp ramp, sustained hold, linear decay.
+        "flash-crowd" => Scenario::FlashCrowd {
+            base: NOMINAL_LAMBDA,
+            peak: 320.0,
+            start: dur * 0.25,
+            ramp: 5.0,
+            hold: dur * 0.15,
+            decay: dur * 0.10,
+            cv: 1.0,
+            duration: dur,
+        },
+        // Heavy-tailed renewals at the nominal mean rate.
+        "heavy-tail-pareto" => {
+            Scenario::Pareto { lambda: NOMINAL_LAMBDA, shape: 1.7, duration: dur }
+        }
+        "heavy-tail-lognormal" => {
+            Scenario::Lognormal { lambda: NOMINAL_LAMBDA, sigma: 1.4, duration: dur }
+        }
+        // The Fig 11 class: same rate, burstiness jumps mid-trace.
+        "cv-shift" => Scenario::Splice(vec![
+            Scenario::Gamma { lambda: NOMINAL_LAMBDA, cv: 1.0, duration: dur / 2.0 },
+            Scenario::Gamma { lambda: NOMINAL_LAMBDA, cv: 4.0, duration: dur / 2.0 },
+        ]),
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// The (planning sample, live trace) pair for one family. The sample is
+/// the *same* nominal Gamma trace for every family — the operator planned
+/// for nominal traffic; the scenario is what actually arrived — which
+/// also lets the whole grid share planning work through the estimator
+/// cache. Seeds derive deterministically from `seed` and the family's
+/// position in [`FAMILIES`].
+pub fn family_traces(family: &str, seed: u64, quick: bool) -> Option<(Trace, Trace)> {
+    let scenario = family_scenario(family, quick)?;
+    let idx = FAMILIES.iter().position(|f| *f == family)? as u64;
+    let sample_secs = if quick { 25.0 } else { 60.0 };
+    let sample = gamma_trace(
+        NOMINAL_LAMBDA,
+        1.0,
+        sample_secs,
+        scenarios::child_seed(seed, 7),
+    );
+    let live = scenario.build(scenarios::child_seed(seed, 100 + idx)).ok()?;
+    Some((sample, live))
+}
+
+/// Closed-loop metrics of one (scenario, pipeline) cell.
+#[derive(Debug, Clone)]
+pub struct CellMetrics {
+    pub planned_cost_per_hour: f64,
+    pub planned_replicas: usize,
+    pub estimated_p99: f64,
+    pub queries: usize,
+    pub p99: f64,
+    pub miss_rate: f64,
+    pub mean_cost_per_hour: f64,
+    pub total_cost: f64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub max_replicas: usize,
+    pub final_replicas: usize,
+    /// Downsampled (time, total provisioned replicas) cost trajectory.
+    pub replica_timeline: Vec<(f64, usize)>,
+}
+
+/// One grid cell: a scenario family served by a pipeline, or the reason
+/// it could not run (e.g. the plan was infeasible).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub scenario: String,
+    pub pipeline: String,
+    pub outcome: Result<CellMetrics, String>,
+}
+
+/// Keep at most `max_points` timeline points, always retaining the first
+/// and last (the plot-ready cost trajectory; full timelines can hold one
+/// point per tuner action).
+fn downsample(timeline: &[(f64, usize)], max_points: usize) -> Vec<(f64, usize)> {
+    if timeline.len() <= max_points || max_points < 2 {
+        return timeline.to_vec();
+    }
+    let mut out: Vec<(f64, usize)> = (0..max_points)
+        .map(|i| timeline[i * (timeline.len() - 1) / (max_points - 1)])
+        .collect();
+    out.dedup();
+    out
+}
+
+/// Run the scenario × pipeline grid closed-loop and return the cells in
+/// grid order (scenario-major), deterministic for a fixed seed.
+pub fn run_grid(
+    families: &[&str],
+    specs: &[PipelineSpec],
+    seed: u64,
+    slo: f64,
+    quick: bool,
+) -> Vec<Cell> {
+    let profiles = paper_profiles();
+    let mut grid: Vec<(&str, &PipelineSpec)> = Vec::new();
+    for &family in families {
+        for spec in specs {
+            grid.push((family, spec));
+        }
+    }
+    let n = grid.len();
+    let inner = shard_planner_threads(n);
+    let cache = EstimatorCache::shared(1 << 18);
+    parallel_map_indexed(n, default_workers(), |idx| {
+        let (family, spec) = grid[idx];
+        let Some((sample, live)) = family_traces(family, seed, quick) else {
+            return Cell {
+                scenario: family.to_string(),
+                pipeline: spec.name.clone(),
+                outcome: Err(format!("unknown scenario family {family:?}")),
+            };
+        };
+        let outcome = run_cell(spec, &profiles, &sample, &live, slo, inner, &cache);
+        Cell { scenario: family.to_string(), pipeline: spec.name.clone(), outcome }
+    })
+}
+
+fn run_cell(
+    spec: &PipelineSpec,
+    profiles: &crate::profiler::ProfileSet,
+    sample: &Trace,
+    live: &Trace,
+    slo: f64,
+    planner_threads: usize,
+    cache: &Arc<EstimatorCache>,
+) -> Result<CellMetrics, String> {
+    let plan = Planner::new(spec, profiles)
+        .with_threads(planner_threads)
+        .with_shared_cache(Arc::clone(cache))
+        .plan(sample, slo)
+        .map_err(|e| e.to_string())?;
+    let st = simulator::service_time(spec, profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(spec, profiles, &plan.config, sample, st);
+    let mut tuner = Tuner::new(inputs);
+    let mut counting = CountingController::new(&mut tuner);
+    let result = simulate_controlled(
+        spec,
+        profiles,
+        &plan.config,
+        live,
+        &SimParams::default(),
+        &mut counting,
+    );
+    let hours = (result.horizon / 3600.0).max(1e-12);
+    Ok(CellMetrics {
+        planned_cost_per_hour: plan.cost_per_hour,
+        planned_replicas: plan.config.total_replicas(),
+        estimated_p99: plan.estimated_p99,
+        queries: result.latencies.len(),
+        p99: stats::p99(&result.latencies),
+        miss_rate: result.miss_rate(slo),
+        mean_cost_per_hour: result.cost_dollars / hours,
+        total_cost: result.cost_dollars,
+        scale_ups: counting.scale_ups,
+        scale_downs: counting.scale_downs,
+        max_replicas: result.replica_timeline.iter().map(|&(_, r)| r).max().unwrap_or(0),
+        final_replicas: result.replica_timeline.last().map_or(0, |&(_, r)| r),
+        replica_timeline: downsample(&result.replica_timeline, 24),
+    })
+}
+
+/// Encode the grid as the canonical machine-readable report. Key order
+/// is canonical (`Json::Obj` is a `BTreeMap`) and every value is a
+/// deterministic function of the seed, so the byte stream is too.
+pub fn report_json(seed: u64, slo: f64, quick: bool, cells: &[Cell]) -> Json {
+    let mut doc = Json::obj();
+    doc.set("seed", seed as usize)
+        .set("slo", slo)
+        .set("quick", quick)
+        .set(
+            "scenarios",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| c.scenario.as_str())
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .into_iter()
+                    .map(Json::from)
+                    .collect(),
+            ),
+        )
+        .set(
+            "pipelines",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| c.pipeline.as_str())
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .into_iter()
+                    .map(Json::from)
+                    .collect(),
+            ),
+        );
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("scenario", c.scenario.as_str()).set("pipeline", c.pipeline.as_str());
+            match &c.outcome {
+                Ok(m) => {
+                    o.set("planned_cost_per_hour", m.planned_cost_per_hour)
+                        .set("planned_replicas", m.planned_replicas)
+                        .set("estimated_p99", m.estimated_p99)
+                        .set("queries", m.queries)
+                        .set("p99", m.p99)
+                        .set("miss_rate", m.miss_rate)
+                        .set("mean_cost_per_hour", m.mean_cost_per_hour)
+                        .set("total_cost", m.total_cost)
+                        .set("scale_ups", m.scale_ups)
+                        .set("scale_downs", m.scale_downs)
+                        .set("max_replicas", m.max_replicas)
+                        .set("final_replicas", m.final_replicas)
+                        .set(
+                            "replica_timeline",
+                            Json::Arr(
+                                m.replica_timeline
+                                    .iter()
+                                    .map(|&(t, r)| {
+                                        Json::Arr(vec![Json::Num(t), Json::Num(r as f64)])
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                }
+                Err(e) => {
+                    o.set("error", e.as_str());
+                }
+            }
+            o
+        })
+        .collect();
+    doc.set("cells", Json::Arr(rows));
+    doc
+}
+
+/// CLI entry point: run the full grid, print a table, write
+/// `robustness.json` into the results dir.
+pub fn run(ctx: &Ctx, seed: u64) -> bool {
+    crate::util::bench::figure_header(
+        "Robustness",
+        "Planner + Tuner closed loop across scenario families, all four pipelines",
+    );
+    let specs = pipelines::all();
+    let cells = run_grid(FAMILIES, &specs, seed, DEFAULT_SLO, ctx.quick);
+    for c in &cells {
+        match &c.outcome {
+            Ok(m) => println!(
+                "  {:<22} {:<18} p99 {:>7.1}ms  miss {:>6.2}%  ${:>6.2}/hr  \
+                 up {:>3} down {:>3}  replicas {:>3}→{:<3} (max {})",
+                c.scenario,
+                c.pipeline,
+                m.p99 * 1e3,
+                m.miss_rate * 100.0,
+                m.mean_cost_per_hour,
+                m.scale_ups,
+                m.scale_downs,
+                m.planned_replicas,
+                m.final_replicas,
+                m.max_replicas,
+            ),
+            Err(e) => println!("  {:<22} {:<18} {e}", c.scenario, c.pipeline),
+        }
+    }
+    let ok = cells.iter().filter(|c| c.outcome.is_ok()).count();
+    println!(
+        "  {} / {} cells completed (slo {:.0} ms, seed {seed})",
+        ok,
+        cells.len(),
+        DEFAULT_SLO * 1e3
+    );
+    let doc = report_json(seed, DEFAULT_SLO, ctx.quick, &cells);
+    let path = ctx.results_dir.join("robustness.json");
+    match std::fs::write(&path, doc.to_string()) {
+        Ok(()) => {
+            println!("  wrote {}", path.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("could not write {}: {e}", path.display());
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_yields_a_live_trace() {
+        for family in FAMILIES {
+            let (sample, live) = family_traces(family, 1, true).unwrap();
+            assert!(!sample.is_empty(), "{family}: empty sample");
+            assert!(!live.is_empty(), "{family}: empty live trace");
+            assert!(live.duration() > 60.0, "{family}: live too short");
+            // Deterministic in the seed.
+            let (s2, l2) = family_traces(family, 1, true).unwrap();
+            assert_eq!(sample, s2, "{family}");
+            assert_eq!(live, l2, "{family}");
+            assert_ne!(live, family_traces(family, 2, true).unwrap().1, "{family}");
+        }
+        assert!(family_traces("no-such-family", 1, true).is_none());
+    }
+
+    #[test]
+    fn families_share_the_planning_sample() {
+        let (a, _) = family_traces("steady", 5, true).unwrap();
+        let (b, _) = family_traces("flash-crowd", 5, true).unwrap();
+        assert_eq!(a, b, "one nominal sample across the grid");
+    }
+
+    #[test]
+    fn grid_report_is_bit_reproducible() {
+        let families = ["steady", "flash-crowd"];
+        let specs = [pipelines::image_processing()];
+        let a = run_grid(&families, &specs, 11, DEFAULT_SLO, true);
+        let b = run_grid(&families, &specs, 11, DEFAULT_SLO, true);
+        let ja = report_json(11, DEFAULT_SLO, true, &a).to_string();
+        let jb = report_json(11, DEFAULT_SLO, true, &b).to_string();
+        assert_eq!(ja, jb, "same seed must produce byte-identical reports");
+        // Cells are in grid order and carry real metrics.
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].scenario, "steady");
+        assert_eq!(a[1].scenario, "flash-crowd");
+        for c in &a {
+            let m = c.outcome.as_ref().expect("cell should plan and run");
+            assert!(m.queries > 0);
+            assert!(m.p99 > 0.0);
+            assert!(m.total_cost > 0.0);
+            assert!(m.planned_replicas > 0);
+            assert!(!m.replica_timeline.is_empty());
+        }
+        // The flash crowd must actually exercise the tuner.
+        let flash = a[1].outcome.as_ref().unwrap();
+        assert!(flash.scale_ups > 0, "flash crowd never scaled up");
+        assert!(flash.max_replicas > flash.planned_replicas);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let timeline: Vec<(f64, usize)> = (0..100).map(|i| (i as f64, i)).collect();
+        let d = downsample(&timeline, 10);
+        assert!(d.len() <= 10);
+        assert_eq!(d.first().copied(), Some((0.0, 0)));
+        assert_eq!(d.last().copied(), Some((99.0, 99)));
+        assert_eq!(downsample(&timeline[..5], 10).len(), 5);
+    }
+}

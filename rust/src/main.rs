@@ -23,7 +23,7 @@ use inferline::runtime::Manifest;
 use inferline::serving::{profile as phys_profile, Backend, ServingEngine};
 use inferline::simulator::{self, SimParams};
 use inferline::util::stats;
-use inferline::workload::{autoscale, gamma_trace, Trace};
+use inferline::workload::{autoscale, gamma_trace, scenarios, Trace};
 
 /// Minimal flag parser: --key value pairs after the subcommand.
 struct Args {
@@ -80,10 +80,14 @@ COMMANDS:
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
   experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
               [--quick]
+  experiment  robustness [--quick] [--seed <n>]
+              (closed-loop Planner+Tuner scenario matrix -> robustness.json)
   bench       estimator [--out <file.json>] [--quick]
               (writes the Estimator/Planner perf-trajectory JSON)
   trace       --kind gamma|big-spike|instant-spike --out <file>
               [--lambda <qps>] [--cv <v>] [--duration <s>]
+  trace       scenario <spec.json> [--out <file>] [--seed <n>]
+              (build a declarative scenario; see workload::scenarios docs)
   pipelines   list the built-in paper pipelines
 
 Pipelines: image-processing, video-monitoring, social-media, tf-cascade
@@ -341,6 +345,14 @@ fn cmd_experiment(args: &Args) -> bool {
         return false;
     };
     let quick = args.bool("quick");
+    if name == "robustness" {
+        // Separately dispatched so the seed flag reaches the harness (the
+        // report is bit-reproducible per seed; parse as u64, not via f64,
+        // so every seed value round-trips exactly).
+        let seed = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42u64);
+        let ctx = inferline::experiments::Ctx::new(quick);
+        return inferline::experiments::robustness::run(&ctx, seed);
+    }
     if !inferline::experiments::run_by_name(name, quick) {
         eprintln!("unknown experiment {name:?}: {:?}", inferline::experiments::ALL_FIGURES);
         return false;
@@ -369,8 +381,11 @@ fn cmd_bench(args: &Args) -> bool {
 }
 
 fn cmd_trace(args: &Args) -> bool {
-    let kind = args.get("kind").unwrap_or("gamma");
     let out = PathBuf::from(args.get("out").unwrap_or("trace.txt"));
+    if args.positional.first().map(String::as_str) == Some("scenario") {
+        return cmd_trace_scenario(args, &out);
+    }
+    let kind = args.get("kind").unwrap_or("gamma");
     let trace: Trace = match kind {
         "gamma" => gamma_trace(
             args.f64("lambda", 100.0),
@@ -393,6 +408,49 @@ fn cmd_trace(args: &Args) -> bool {
         trace.cv()
     );
     match trace.save(&out) {
+        Ok(()) => {
+            println!("wrote {}", out.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            false
+        }
+    }
+}
+
+/// `trace scenario <spec.json>`: build a declarative scenario spec into
+/// an arrival-trace file (deterministic in the spec's — or `--seed`'s —
+/// seed).
+fn cmd_trace_scenario(args: &Args, out: &std::path::Path) -> bool {
+    let Some(spec_path) = args.positional.get(1) else {
+        eprintln!("usage: inferline trace scenario <spec.json> [--out <file>] [--seed <n>]");
+        return false;
+    };
+    let spec = match scenarios::ScenarioSpec::load(std::path::Path::new(spec_path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let seed = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(spec.seed);
+    let trace = match spec.scenario.build(seed) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("scenario {:?} failed to build: {e}", spec.name);
+            return false;
+        }
+    };
+    println!(
+        "scenario {:?} (seed {seed}): {} arrivals over {:.0}s (mean {:.1} qps, cv {:.2})",
+        spec.name,
+        trace.len(),
+        trace.duration(),
+        trace.mean_rate(),
+        trace.cv()
+    );
+    match trace.save(out) {
         Ok(()) => {
             println!("wrote {}", out.display());
             true

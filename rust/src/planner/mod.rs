@@ -30,7 +30,11 @@
 //! * **Parallel candidate evaluation**: the 3×N candidates of an
 //!   iteration fan out over a scoped thread pool. Selection then replays
 //!   the serial fold over the gathered results in (stage, action) order,
-//!   so the parallel planner returns a bit-identical [`Plan`].
+//!   so the parallel planner returns a bit-identical [`Plan`]. Inside a
+//!   downgrade candidate — the critical path for small pipelines — the
+//!   independent per-batch replica-growth sub-searches are additionally
+//!   evaluated speculatively in parallel, feeding the cache the serial
+//!   selection logic reads (see `prewarm_downgrade_tier`).
 //! * **Estimator memo-cache** ([`EstimatorCache`]): what the Estimator
 //!   learned about each (trace, configuration) pair is memoized *across
 //!   SLOs* — a full simulation records the exact P99 (answers feasibility
@@ -827,6 +831,63 @@ impl<'a> Planner<'a> {
         self.try_downgrade_hw_fp(self.fingerprint(trace), config, stage, trace, slo)
     }
 
+    /// Speculatively evaluate one downgrade tier's independent per-batch
+    /// replica-growth sub-searches in parallel, populating the estimator
+    /// cache the serial selection logic then reads. Each sub-search grows
+    /// the stage's replicas at a fixed batch size until the configuration
+    /// is feasible (or no longer cheaper than `current_cost`) — exactly
+    /// the query sequence the serial paths below issue — so this is pure
+    /// prewarming: `feasible_fp` is a deterministic function of its
+    /// arguments, cached or not, and the serial replay makes bit-identical
+    /// decisions whether or not (and in whichever order) the speculative
+    /// evaluations ran. This is what parallelizes *inside* a single
+    /// downgrade candidate: for small pipelines the critical path of an
+    /// iteration is one expensive `try_downgrade_hw`, whose batch
+    /// sub-searches would otherwise run one after another.
+    #[allow(clippy::too_many_arguments)]
+    fn prewarm_downgrade_tier(
+        &self,
+        fp: u64,
+        config: &PipelineConfig,
+        stage: usize,
+        lower: crate::hardware::Hardware,
+        current_cost: f64,
+        trace: &Trace,
+        slo: f64,
+    ) {
+        let prof = self
+            .profiles
+            .get(&self.spec.stages[stage].model)
+            .get(lower)
+            .expect("profile");
+        let batches: Vec<usize> =
+            BATCH_CANDIDATES.iter().copied().filter(|&b| b <= prof.max_batch()).collect();
+        // Bound the nested width: up to `threads` downgrade candidates can
+        // be inside this function concurrently (one per stage task of the
+        // outer candidate fan-out), so an unbounded inner pool would spawn
+        // ~threads² simulation threads. Budgeting 2×threads across the
+        // stages keeps worst-case oversubscription mild while still giving
+        // the critical-path case (one expensive downgrade, everything else
+        // idle) a real speedup.
+        let inner = (self.threads * 2 / self.spec.stages.len().max(1)).min(self.threads);
+        if inner < 2 || batches.len() < 2 {
+            return;
+        }
+        crate::util::par::parallel_map_indexed(batches.len(), inner, |i| {
+            let mut cand = config.clone();
+            cand.stages[stage] = StageConfig { hw: lower, batch: batches[i], replicas: 1 };
+            while cand.cost_per_hour() < current_cost {
+                if self.feasible_fp(fp, &cand, trace, slo) {
+                    break;
+                }
+                cand.stages[stage].replicas += 1;
+                if cand.stages[stage].replicas > MAX_REPLICAS {
+                    break;
+                }
+            }
+        });
+    }
+
     fn try_downgrade_hw_fp(
         &self,
         fp: u64,
@@ -840,6 +901,7 @@ impl<'a> Planner<'a> {
         let mp = self.profiles.get(model);
         let current_cost = config.cost_per_hour();
         for lower in mp.downgrades_from(c.hw) {
+            self.prewarm_downgrade_tier(fp, config, stage, lower, current_cost, trace, slo);
             // Freeze other stages; re-initialize this stage on `lower`.
             let mut cand = config.clone();
             cand.stages[stage] = StageConfig { hw: lower, batch: 1, replicas: 1 };
@@ -1055,6 +1117,30 @@ mod tests {
                 spec.name
             );
         }
+    }
+
+    #[test]
+    fn threaded_downgrade_search_is_bit_identical_to_serial() {
+        // social_media at a loose SLO is the known downgrade-heavy case
+        // (langid returns to CPU), exercising prewarm_downgrade_tier's
+        // speculative per-batch sub-searches.
+        let spec = pipelines::social_media();
+        let profiles = paper_profiles();
+        let trace = quick_trace(50.0);
+        let slo = 0.4;
+        let serial = Planner::serial(&spec, &profiles).plan(&trace, slo).unwrap();
+        let threaded = Planner::new(&spec, &profiles)
+            .with_threads(8)
+            .plan(&trace, slo)
+            .unwrap();
+        assert_eq!(serial.config, threaded.config);
+        assert_eq!(serial.actions_taken, threaded.actions_taken);
+        assert_eq!(serial.cost_per_hour.to_bits(), threaded.cost_per_hour.to_bits());
+        assert!(
+            serial.actions_taken.iter().any(|a| a.starts_with("downgrade")),
+            "scenario no longer exercises the downgrade path: {:?}",
+            serial.actions_taken
+        );
     }
 
     #[test]

@@ -67,3 +67,45 @@ impl Controller for NullController {
         Vec::new()
     }
 }
+
+/// Transparent wrapper that counts the actions an inner controller
+/// issues (classified against the provisioned state at decision time).
+/// The robustness harness reports these as tuner-activity telemetry.
+pub struct CountingController<'a> {
+    inner: &'a mut dyn Controller,
+    /// `SetReplicas` actions raising a stage above its current target.
+    pub scale_ups: usize,
+    /// `SetReplicas` actions lowering a stage below its current target.
+    pub scale_downs: usize,
+    /// `Halt` actions (DS2-style stop-restart reconfigurations).
+    pub halts: usize,
+}
+
+impl<'a> CountingController<'a> {
+    pub fn new(inner: &'a mut dyn Controller) -> Self {
+        CountingController { inner, scale_ups: 0, scale_downs: 0, halts: 0 }
+    }
+}
+
+impl Controller for CountingController<'_> {
+    fn on_arrival(&mut self, t: f64) {
+        self.inner.on_arrival(t);
+    }
+
+    fn on_tick(&mut self, t: f64, state: &ControlState) -> Vec<ControlAction> {
+        let actions = self.inner.on_tick(t, state);
+        for action in &actions {
+            match *action {
+                ControlAction::SetReplicas { stage, replicas } => {
+                    match replicas.cmp(&state.provisioned[stage]) {
+                        std::cmp::Ordering::Greater => self.scale_ups += 1,
+                        std::cmp::Ordering::Less => self.scale_downs += 1,
+                        std::cmp::Ordering::Equal => {}
+                    }
+                }
+                ControlAction::Halt { .. } => self.halts += 1,
+            }
+        }
+        actions
+    }
+}

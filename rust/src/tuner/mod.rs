@@ -14,7 +14,9 @@
 //!
 //! Scale-down is conservative: after 15 s of stability it re-provisions
 //! for the max trailing 30 s rate (5 s buckets) using the pipeline-wide
-//! minimum ρ (paper §5 "Scaling Down").
+//! minimum ρ, floored at the Planner's replica counts — the Tuner
+//! returns to the planned configuration but never undercuts it (paper
+//! §5 "Scaling Down").
 
 pub mod envelope;
 
@@ -174,7 +176,11 @@ impl Controller for Tuner {
                 }
             }
         } else if warm && now - self.last_change >= self.downscale_delay {
-            // Conservative scale-down toward the trailing-max rate.
+            // Conservative scale-down toward the trailing-max rate,
+            // floored at the Planner's replica counts: the planned
+            // configuration is the validated baseline the Tuner returns
+            // to, never undercuts (paper §5 — lowering the floor is the
+            // Planner's job on its next low-frequency pass).
             let lambda_new = self
                 .monitor
                 .max_bucket_rate(now, self.down_span, self.down_bucket);
@@ -183,9 +189,11 @@ impl Controller for Tuner {
             for (stage, (&target, &current)) in
                 targets.iter().zip(&state.provisioned).enumerate()
             {
-                // Never drop below 1; removal only when strictly lower.
+                let floor = self.inputs.planned_replicas[stage].max(1);
+                let target = target.max(floor);
+                // Removal only when strictly lower.
                 if target < current {
-                    actions.push(ControlAction::SetReplicas { stage, replicas: target.max(1) });
+                    actions.push(ControlAction::SetReplicas { stage, replicas: target });
                 }
             }
         }
@@ -309,6 +317,30 @@ mod tests {
         let planned: usize = config.stages.iter().map(|s| s.replicas).sum();
         let max_seen = result.replica_timeline.iter().map(|&(_, n)| n).max().unwrap();
         assert!(max_seen > planned, "burstiness increase not detected");
+    }
+
+    #[test]
+    fn scale_down_never_undercuts_the_planned_floor() {
+        // A long rate *drop*: the trailing-rate targets fall below the
+        // planned replica counts, but the Tuner must park at the planned
+        // floor rather than tearing the validated baseline down.
+        let slo = 0.3;
+        let (spec, profiles, config, inputs) = setup(100.0, slo);
+        let live = varying_trace(
+            &[
+                Phase { lambda: 100.0, cv: 1.0, duration: 40.0, ramp: false },
+                Phase { lambda: 30.0, cv: 1.0, duration: 160.0, ramp: false },
+            ],
+            37,
+        );
+        let mut tuner = Tuner::new(inputs);
+        let result = simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut tuner,
+        );
+        let planned: usize = config.stages.iter().map(|s| s.replicas).sum();
+        for &(t, n) in &result.replica_timeline {
+            assert!(n >= planned, "t={t}: provisioned {n} under planned floor {planned}");
+        }
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! transition time τ; and the AutoScale-derived traces re-synthesize the
 //! real per-minute-rate workloads studied in [12] exactly the way the
 //! paper does (rescale max to 300 QPS, 30 s Gamma CV=1 segments).
+//!
+//! Beyond the paper's processes, [`scenarios`] adds declarative
+//! scenario construction — MMPP bursts, diurnal curves, flash crowds,
+//! heavy-tailed renewals, file replay, and composition operators — the
+//! workload layer the robustness harness stresses the closed loop with.
 
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -19,6 +24,35 @@ pub struct Trace {
 impl Trace {
     pub fn new(arrivals: Vec<f64>) -> Self {
         debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "unsorted trace");
+        Trace { arrivals }
+    }
+
+    /// Checked constructor for externally supplied timestamps (file
+    /// replay, user tooling): rejects non-finite and out-of-order
+    /// arrivals with the offending index, in release builds too —
+    /// [`Trace::new`]'s debug assertion vanishes exactly where replayed
+    /// traces are most likely to be malformed.
+    pub fn try_new(arrivals: Vec<f64>) -> Result<Trace, String> {
+        for (i, w) in arrivals.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(format!(
+                    "arrivals out of order at index {}: {} > {}",
+                    i + 1,
+                    w[0],
+                    w[1]
+                ));
+            }
+        }
+        if let Some(i) = arrivals.iter().position(|t| !t.is_finite()) {
+            return Err(format!("arrival {i} is not finite: {}", arrivals[i]));
+        }
+        Ok(Trace { arrivals })
+    }
+
+    /// Constructor for generators that produce unordered timestamps
+    /// (superposition, crossfades): sorts before wrapping.
+    pub fn from_unsorted(mut arrivals: Vec<f64>) -> Trace {
+        arrivals.sort_by(f64::total_cmp);
         Trace { arrivals }
     }
 
@@ -101,14 +135,19 @@ impl Trace {
         std::fs::write(path, out)
     }
 
+    /// Load a saved trace, validating it: a file with non-numeric,
+    /// non-finite or unsorted timestamps is rejected with a descriptive
+    /// error instead of tripping a debug-only assertion downstream.
     pub fn load(path: &std::path::Path) -> Result<Trace, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
         let arrivals = text
             .lines()
             .filter(|l| !l.trim().is_empty())
             .map(|l| l.trim().parse::<f64>().map_err(|e| e.to_string()))
-            .collect::<Result<Vec<_>, _>>()?;
-        Ok(Trace::new(arrivals))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Trace::try_new(arrivals).map_err(|e| format!("{}: {e}", path.display()))
     }
 }
 
@@ -177,6 +216,7 @@ pub fn varying_trace(phases: &[Phase], seed: u64) -> Trace {
 }
 
 pub mod autoscale;
+pub mod scenarios;
 
 #[cfg(test)]
 mod tests {
@@ -261,6 +301,44 @@ mod tests {
         tr.save(&path).unwrap();
         let back = Trace::load(&path).unwrap();
         assert_eq!(back.len(), tr.len());
+        for (a, b) in back.arrivals.iter().zip(&tr.arrivals) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn load_rejects_unsorted_file() {
+        let dir = std::env::temp_dir().join("inferline-test-traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unsorted.txt");
+        std::fs::write(&path, "1.0\n3.0\n2.0\n").unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        assert!(err.contains("out of order"), "{err}");
+        std::fs::write(&path, "1.0\nnan\n2.0\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+    }
+
+    #[test]
+    fn try_new_and_from_unsorted() {
+        assert!(Trace::try_new(vec![1.0, 2.0, 3.0]).is_ok());
+        assert!(Trace::try_new(vec![2.0, 1.0]).is_err());
+        assert!(Trace::try_new(vec![1.0, f64::INFINITY]).is_err());
+        assert_eq!(
+            Trace::from_unsorted(vec![3.0, 1.0, 2.0]).arrivals,
+            vec![1.0, 2.0, 3.0]
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_order_and_length() {
+        let tr = gamma_trace(120.0, 2.0, 20.0, 31);
+        let dir = std::env::temp_dir().join("inferline-test-traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.txt");
+        tr.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.len(), tr.len());
+        assert!(back.arrivals.windows(2).all(|w| w[0] <= w[1]));
         for (a, b) in back.arrivals.iter().zip(&tr.arrivals) {
             assert!((a - b).abs() < 1e-5);
         }

@@ -1,0 +1,799 @@
+//! Scenario workload subsystem: declarative arrival-process construction.
+//!
+//! The paper evaluates InferLine on Gamma processes and two
+//! AutoScale-derived traces; this module opens the workload dimension the
+//! robustness harness (`experiments::robustness`) stresses — how the
+//! Planner + Tuner closed loop behaves *under changes in the arrival
+//! process* (flash crowds, diurnal cycles, bursty regime switching,
+//! heavy-tailed inter-arrivals).
+//!
+//! Two layers:
+//!
+//! * **Generators** — deterministic, seed-parameterized arrival-process
+//!   primitives: [`mmpp_trace`] (Markov-modulated Poisson regimes),
+//!   [`diurnal_trace`] (sinusoidal rate curve), [`flash_crowd_trace`]
+//!   (ramp / hold / decay spike), [`pareto_trace`] and
+//!   [`lognormal_trace`] (heavy-tailed inter-arrivals), plus the generic
+//!   [`rate_curve_trace`] they share, and file-backed replay with
+//!   rescaling ([`Trace::load`] + [`rescale_time`] / [`rescale_to_rate`]).
+//! * **Operators** — composition on traces: [`superpose`] (merge),
+//!   [`splice`] (back-to-back), [`thin`] (Bernoulli subsampling) and
+//!   [`ramp_between`] (probabilistic crossfade from one process into
+//!   another).
+//!
+//! Both layers are reachable declaratively through a small JSON scenario
+//! spec ([`ScenarioSpec`] / [`Scenario`]), loadable by the CLI
+//! (`inferline trace scenario <spec.json>`). Every node derives its
+//! sub-seeds deterministically from the spec seed ([`child_seed`]), so a
+//! spec + seed pair is a bit-reproducible workload: same inputs, same
+//! trace, byte for byte.
+//!
+//! ## JSON scenario-spec schema
+//!
+//! ```json
+//! {
+//!   "name": "flash-crowd-3x",
+//!   "seed": 7,
+//!   "scenario": {
+//!     "kind": "flash_crowd",
+//!     "base": 100, "peak": 300, "start": 60,
+//!     "ramp": 5, "hold": 30, "decay": 30,
+//!     "cv": 1.0, "duration": 240
+//!   }
+//! }
+//! ```
+//!
+//! Node kinds (fields beyond `kind`):
+//!
+//! | kind           | fields                                                   |
+//! |----------------|----------------------------------------------------------|
+//! | `gamma`        | `lambda`, `cv`, `duration`                               |
+//! | `mmpp`         | `rates` [..], `dwell` [..], `duration`                   |
+//! | `diurnal`      | `base`, `amplitude`, `period`, `cv`?, `duration`         |
+//! | `flash_crowd`  | `base`, `peak`, `start`, `ramp`, `hold`, `decay`, `cv`?, `duration` |
+//! | `pareto`       | `lambda`, `shape` (α > 1), `duration`                    |
+//! | `lognormal`    | `lambda`, `sigma`, `duration`                            |
+//! | `replay`       | `path`, `time_scale`?, `target_rate`?                    |
+//! | `superpose`    | `of` [nodes]                                             |
+//! | `splice`       | `of` [nodes]                                             |
+//! | `thin`         | `p`, `of` node                                           |
+//! | `ramp_between` | `from` node, `to` node, `overlap`                        |
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::Trace;
+
+/// Deterministically derive a sub-seed for the `tag`-th child of a
+/// scenario node (splitmix64 finalizer over seed ⊕ tag). Independent
+/// children get independent streams; the same (seed, tag) always yields
+/// the same stream.
+pub fn child_seed(seed: u64, tag: u64) -> u64 {
+    let mut z = seed ^ tag.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// Non-homogeneous Gamma process: the instantaneous rate is `rate(t)`
+/// evaluated at the current arrival time (the same stepping
+/// [`super::varying_trace`] uses), inter-arrival CV fixed at `cv`.
+/// Rates are floored at a small positive value so a curve touching zero
+/// cannot stall the generator.
+pub fn rate_curve_trace(
+    rate: impl Fn(f64) -> f64,
+    cv: f64,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    assert!(cv > 0.0 && duration > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    loop {
+        let lambda = rate(t).max(1e-3);
+        t += rng.interarrival(lambda, cv);
+        if t > duration {
+            break;
+        }
+        arrivals.push(t);
+    }
+    Trace::new(arrivals)
+}
+
+/// Markov-modulated Poisson process: `rates[i]` is state i's Poisson
+/// arrival rate, `dwell[i]` its mean sojourn (exponentially distributed).
+/// The chain starts in state 0 and jumps uniformly among the *other*
+/// states — with two states this is the classic bursty on/off regime
+/// switcher. Burstiness shows up as inter-arrival CV > 1 whenever the
+/// state rates are well separated.
+pub fn mmpp_trace(rates: &[f64], dwell: &[f64], duration: f64, seed: u64) -> Trace {
+    assert!(
+        !rates.is_empty() && rates.len() == dwell.len(),
+        "mmpp needs matching non-empty rates/dwell"
+    );
+    assert!(rates.iter().all(|&r| r > 0.0) && dwell.iter().all(|&d| d > 0.0));
+    assert!(duration > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::new();
+    let mut state = 0usize;
+    let mut t = 0.0;
+    while t < duration {
+        let sojourn = rng.exp(1.0 / dwell[state]);
+        let end = (t + sojourn).min(duration);
+        let mut a = t;
+        loop {
+            a += rng.exp(rates[state]);
+            if a >= end {
+                break;
+            }
+            arrivals.push(a);
+        }
+        t = end;
+        if rates.len() > 1 {
+            let mut next = rng.usize(rates.len() - 1);
+            if next >= state {
+                next += 1;
+            }
+            state = next;
+        }
+    }
+    Trace::new(arrivals)
+}
+
+/// Diurnal (sinusoidal) rate curve:
+/// λ(t) = base · (1 + amplitude · sin(2πt / period)), Gamma(cv)
+/// inter-arrivals. `amplitude` in [0, 1) keeps the rate positive.
+pub fn diurnal_trace(
+    base: f64,
+    amplitude: f64,
+    period: f64,
+    cv: f64,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    assert!(base > 0.0 && (0.0..1.0).contains(&amplitude) && period > 0.0);
+    let omega = 2.0 * std::f64::consts::PI / period;
+    rate_curve_trace(
+        |t| base * (1.0 + amplitude * (omega * t).sin()),
+        cv,
+        duration,
+        seed,
+    )
+}
+
+/// Flash crowd: baseline `base` QPS, then a spike at `start` that ramps
+/// linearly to `peak` over `ramp` seconds, holds for `hold` seconds and
+/// decays linearly back over `decay` seconds.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_crowd_trace(
+    base: f64,
+    peak: f64,
+    start: f64,
+    ramp: f64,
+    hold: f64,
+    decay: f64,
+    cv: f64,
+    duration: f64,
+    seed: u64,
+) -> Trace {
+    assert!(base > 0.0 && peak > 0.0 && start >= 0.0);
+    assert!(ramp >= 0.0 && hold >= 0.0 && decay >= 0.0);
+    rate_curve_trace(
+        |t| {
+            if t < start {
+                base
+            } else if t < start + ramp {
+                base + (peak - base) * (t - start) / ramp
+            } else if t < start + ramp + hold {
+                peak
+            } else if t < start + ramp + hold + decay {
+                peak - (peak - base) * (t - start - ramp - hold) / decay
+            } else {
+                base
+            }
+        },
+        cv,
+        duration,
+        seed,
+    )
+}
+
+/// Renewal process with Pareto inter-arrivals: shape α > 1 (finite mean),
+/// scale chosen so the mean rate is `lambda`. Small α (1 < α ≲ 2) gives
+/// the heavy tail — rare but enormous gaps between dense packs of
+/// arrivals.
+pub fn pareto_trace(lambda: f64, shape: f64, duration: f64, seed: u64) -> Trace {
+    assert!(lambda > 0.0 && shape > 1.0 && duration > 0.0);
+    // E[X] = α·x_m / (α − 1) = 1/λ  ⇒  x_m = (α − 1) / (α·λ).
+    let xm = (shape - 1.0) / (shape * lambda);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += xm / rng.f64_open().powf(1.0 / shape);
+        if t > duration {
+            break;
+        }
+        arrivals.push(t);
+    }
+    Trace::new(arrivals)
+}
+
+/// Renewal process with lognormal inter-arrivals: log-σ `sigma`, log-μ
+/// chosen so the mean rate is `lambda` (μ = −ln λ − σ²/2). σ ≳ 1.5 gives
+/// inter-arrival CVs well above the Gamma traces the paper studies.
+pub fn lognormal_trace(lambda: f64, sigma: f64, duration: f64, seed: u64) -> Trace {
+    assert!(lambda > 0.0 && sigma > 0.0 && duration > 0.0);
+    let mu = -lambda.ln() - sigma * sigma / 2.0;
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += (mu + sigma * rng.normal()).exp();
+        if t > duration {
+            break;
+        }
+        arrivals.push(t);
+    }
+    Trace::new(arrivals)
+}
+
+// ---------------------------------------------------------------------------
+// Operators
+// ---------------------------------------------------------------------------
+
+/// Superpose (merge) several traces into one arrival stream.
+pub fn superpose(traces: &[Trace]) -> Trace {
+    Trace::from_unsorted(
+        traces.iter().flat_map(|t| t.arrivals.iter().copied()).collect(),
+    )
+}
+
+/// Splice traces back-to-back: each subsequent trace is shifted to start
+/// where the previous one ended.
+pub fn splice(traces: &[Trace]) -> Trace {
+    traces.iter().fold(Trace::default(), |acc, t| acc.concat(t))
+}
+
+/// Bernoulli thinning: keep each arrival independently with probability
+/// `p` (models subsampled or partially migrated traffic).
+pub fn thin(trace: &Trace, p: f64, seed: u64) -> Trace {
+    assert!((0.0..=1.0).contains(&p), "thin probability {p}");
+    let mut rng = Rng::new(seed);
+    Trace::new(trace.arrivals.iter().copied().filter(|_| rng.bool(p)).collect())
+}
+
+/// Probabilistic crossfade: play `a` in full, then hand traffic over to
+/// `b` across the trailing `overlap` seconds of `a` — inside the window
+/// each `a`-arrival survives with the fraction of the window remaining
+/// and each `b`-arrival with the fraction elapsed, so the mix shifts
+/// linearly from pure `a` to pure `b`. `b` is rebased to start at the
+/// beginning of the window and continues after `a` ends.
+pub fn ramp_between(a: &Trace, b: &Trace, overlap: f64, seed: u64) -> Trace {
+    assert!(overlap >= 0.0);
+    let a_end = a.arrivals.last().copied().unwrap_or(0.0);
+    let t0 = (a_end - overlap).max(0.0);
+    let window = (a_end - t0).max(f64::MIN_POSITIVE);
+    let mut rng = Rng::new(seed);
+    let mut arrivals = Vec::with_capacity(a.len() + b.len());
+    for &t in &a.arrivals {
+        let fade = ((t - t0) / window).clamp(0.0, 1.0);
+        if fade <= 0.0 || rng.bool(1.0 - fade) {
+            arrivals.push(t);
+        }
+    }
+    for &t in &b.arrivals {
+        let shifted = t0 + t;
+        let fade = ((shifted - t0) / window).clamp(0.0, 1.0);
+        if fade >= 1.0 || rng.bool(fade) {
+            arrivals.push(shifted);
+        }
+    }
+    Trace::from_unsorted(arrivals)
+}
+
+/// Rescale time by `factor` (> 1 stretches the trace and divides the
+/// rate; < 1 compresses it and multiplies the rate).
+pub fn rescale_time(trace: &Trace, factor: f64) -> Trace {
+    assert!(factor > 0.0);
+    Trace::new(trace.arrivals.iter().map(|&t| t * factor).collect())
+}
+
+/// Rescale time so the trace's mean rate becomes `target_qps`.
+pub fn rescale_to_rate(trace: &Trace, target_qps: f64) -> Trace {
+    assert!(target_qps > 0.0);
+    let rate = trace.mean_rate();
+    if rate <= 0.0 {
+        return trace.clone();
+    }
+    rescale_time(trace, rate / target_qps)
+}
+
+// ---------------------------------------------------------------------------
+// Declarative scenario tree
+// ---------------------------------------------------------------------------
+
+/// A declarative scenario node: a generator leaf or a composition
+/// operator over sub-scenarios. Built from JSON by [`Scenario::parse`]
+/// and realized into a [`Trace`] by [`Scenario::build`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    Gamma { lambda: f64, cv: f64, duration: f64 },
+    Mmpp { rates: Vec<f64>, dwell: Vec<f64>, duration: f64 },
+    Diurnal { base: f64, amplitude: f64, period: f64, cv: f64, duration: f64 },
+    FlashCrowd {
+        base: f64,
+        peak: f64,
+        start: f64,
+        ramp: f64,
+        hold: f64,
+        decay: f64,
+        cv: f64,
+        duration: f64,
+    },
+    Pareto { lambda: f64, shape: f64, duration: f64 },
+    Lognormal { lambda: f64, sigma: f64, duration: f64 },
+    Replay { path: String, time_scale: f64, target_rate: Option<f64> },
+    Superpose(Vec<Scenario>),
+    Splice(Vec<Scenario>),
+    Thin { p: f64, of: Box<Scenario> },
+    RampBetween { from: Box<Scenario>, to: Box<Scenario>, overlap: f64 },
+}
+
+fn req_num(node: &Json, key: &str) -> Result<f64, String> {
+    node.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("scenario node missing numeric field {key:?}"))
+}
+
+/// Range check performed at parse time, so a malformed-but-numeric spec
+/// surfaces as a CLI error instead of tripping a generator assertion.
+fn check(cond: bool, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(format!("scenario field out of range: {what}"))
+    }
+}
+
+fn opt_num(node: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match node.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("scenario field {key:?} must be a number")),
+    }
+}
+
+fn num_array(node: &Json, key: &str) -> Result<Vec<f64>, String> {
+    let arr = node
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("scenario node missing array field {key:?}"))?;
+    arr.iter()
+        .map(|v| v.as_f64().ok_or_else(|| format!("{key:?} must contain numbers")))
+        .collect()
+}
+
+fn node_list(node: &Json, key: &str) -> Result<Vec<Scenario>, String> {
+    let arr = node
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("scenario node missing array field {key:?}"))?;
+    if arr.is_empty() {
+        return Err(format!("scenario field {key:?} must not be empty"));
+    }
+    arr.iter().map(Scenario::parse).collect()
+}
+
+fn sub_node(node: &Json, key: &str) -> Result<Box<Scenario>, String> {
+    let sub = node
+        .get(key)
+        .ok_or_else(|| format!("scenario node missing field {key:?}"))?;
+    Ok(Box::new(Scenario::parse(sub)?))
+}
+
+impl Scenario {
+    /// Parse one scenario node from its JSON form (see the module docs
+    /// for the schema).
+    pub fn parse(node: &Json) -> Result<Scenario, String> {
+        let kind = node
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("scenario node missing string field \"kind\"")?;
+        match kind {
+            "gamma" => {
+                let (lambda, cv) = (req_num(node, "lambda")?, opt_num(node, "cv", 1.0)?);
+                let duration = req_num(node, "duration")?;
+                check(lambda > 0.0, "gamma lambda must be > 0")?;
+                check(cv > 0.0, "gamma cv must be > 0")?;
+                check(duration > 0.0, "gamma duration must be > 0")?;
+                Ok(Scenario::Gamma { lambda, cv, duration })
+            }
+            "mmpp" => {
+                let rates = num_array(node, "rates")?;
+                let dwell = num_array(node, "dwell")?;
+                if rates.is_empty() || rates.len() != dwell.len() {
+                    return Err("mmpp needs matching non-empty \"rates\" and \"dwell\"".into());
+                }
+                let duration = req_num(node, "duration")?;
+                check(rates.iter().all(|&r| r > 0.0), "mmpp rates must be > 0")?;
+                check(dwell.iter().all(|&d| d > 0.0), "mmpp dwell must be > 0")?;
+                check(duration > 0.0, "mmpp duration must be > 0")?;
+                Ok(Scenario::Mmpp { rates, dwell, duration })
+            }
+            "diurnal" => {
+                let (base, amplitude) = (req_num(node, "base")?, req_num(node, "amplitude")?);
+                let (period, cv) = (req_num(node, "period")?, opt_num(node, "cv", 1.0)?);
+                let duration = req_num(node, "duration")?;
+                check(base > 0.0, "diurnal base must be > 0")?;
+                check((0.0..1.0).contains(&amplitude), "diurnal amplitude must be in [0, 1)")?;
+                check(period > 0.0 && cv > 0.0, "diurnal period and cv must be > 0")?;
+                check(duration > 0.0, "diurnal duration must be > 0")?;
+                Ok(Scenario::Diurnal { base, amplitude, period, cv, duration })
+            }
+            "flash_crowd" => {
+                let (base, peak) = (req_num(node, "base")?, req_num(node, "peak")?);
+                let (start, ramp) = (req_num(node, "start")?, opt_num(node, "ramp", 1.0)?);
+                let (hold, decay) = (req_num(node, "hold")?, opt_num(node, "decay", 1.0)?);
+                let (cv, duration) = (opt_num(node, "cv", 1.0)?, req_num(node, "duration")?);
+                check(base > 0.0 && peak > 0.0, "flash_crowd rates must be > 0")?;
+                check(
+                    start >= 0.0 && ramp >= 0.0 && hold >= 0.0 && decay >= 0.0,
+                    "flash_crowd phases must be >= 0",
+                )?;
+                check(cv > 0.0 && duration > 0.0, "flash_crowd cv and duration must be > 0")?;
+                Ok(Scenario::FlashCrowd { base, peak, start, ramp, hold, decay, cv, duration })
+            }
+            "pareto" => {
+                let (lambda, shape) = (req_num(node, "lambda")?, req_num(node, "shape")?);
+                let duration = req_num(node, "duration")?;
+                check(lambda > 0.0, "pareto lambda must be > 0")?;
+                check(shape > 1.0, "pareto shape must be > 1 (finite mean)")?;
+                check(duration > 0.0, "pareto duration must be > 0")?;
+                Ok(Scenario::Pareto { lambda, shape, duration })
+            }
+            "lognormal" => {
+                let (lambda, sigma) = (req_num(node, "lambda")?, req_num(node, "sigma")?);
+                let duration = req_num(node, "duration")?;
+                check(lambda > 0.0 && sigma > 0.0, "lognormal lambda and sigma must be > 0")?;
+                check(duration > 0.0, "lognormal duration must be > 0")?;
+                Ok(Scenario::Lognormal { lambda, sigma, duration })
+            }
+            "replay" => {
+                let path = node
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or("replay node missing string field \"path\"")?
+                    .to_string();
+                let target_rate = match node.get("target_rate") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_f64().ok_or("\"target_rate\" must be a number")?,
+                    ),
+                };
+                let time_scale = opt_num(node, "time_scale", 1.0)?;
+                check(time_scale > 0.0, "replay time_scale must be > 0")?;
+                check(
+                    target_rate.map_or(true, |r| r > 0.0),
+                    "replay target_rate must be > 0",
+                )?;
+                Ok(Scenario::Replay { path, time_scale, target_rate })
+            }
+            "superpose" => Ok(Scenario::Superpose(node_list(node, "of")?)),
+            "splice" => Ok(Scenario::Splice(node_list(node, "of")?)),
+            "thin" => {
+                let p = req_num(node, "p")?;
+                check((0.0..=1.0).contains(&p), "thin p must be in [0, 1]")?;
+                Ok(Scenario::Thin { p, of: sub_node(node, "of")? })
+            }
+            "ramp_between" => {
+                let overlap = req_num(node, "overlap")?;
+                check(overlap >= 0.0, "ramp_between overlap must be >= 0")?;
+                Ok(Scenario::RampBetween {
+                    from: sub_node(node, "from")?,
+                    to: sub_node(node, "to")?,
+                    overlap,
+                })
+            }
+            other => Err(format!("unknown scenario kind {other:?}")),
+        }
+    }
+
+    /// Realize the scenario into an arrival trace. Deterministic in
+    /// (self, seed): every child derives its sub-seed via [`child_seed`],
+    /// so sibling subtrees have independent but reproducible streams.
+    pub fn build(&self, seed: u64) -> Result<Trace, String> {
+        match self {
+            Scenario::Gamma { lambda, cv, duration } => {
+                Ok(super::gamma_trace(*lambda, *cv, *duration, seed))
+            }
+            Scenario::Mmpp { rates, dwell, duration } => {
+                Ok(mmpp_trace(rates, dwell, *duration, seed))
+            }
+            Scenario::Diurnal { base, amplitude, period, cv, duration } => {
+                Ok(diurnal_trace(*base, *amplitude, *period, *cv, *duration, seed))
+            }
+            Scenario::FlashCrowd { base, peak, start, ramp, hold, decay, cv, duration } => {
+                Ok(flash_crowd_trace(
+                    *base, *peak, *start, *ramp, *hold, *decay, *cv, *duration, seed,
+                ))
+            }
+            Scenario::Pareto { lambda, shape, duration } => {
+                Ok(pareto_trace(*lambda, *shape, *duration, seed))
+            }
+            Scenario::Lognormal { lambda, sigma, duration } => {
+                Ok(lognormal_trace(*lambda, *sigma, *duration, seed))
+            }
+            Scenario::Replay { path, time_scale, target_rate } => {
+                let mut trace = Trace::load(Path::new(path))?;
+                if (*time_scale - 1.0).abs() > 1e-12 {
+                    trace = rescale_time(&trace, *time_scale);
+                }
+                if let Some(target) = target_rate {
+                    trace = rescale_to_rate(&trace, *target);
+                }
+                Ok(trace)
+            }
+            Scenario::Superpose(parts) => {
+                let traces = parts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| p.build(child_seed(seed, i as u64)))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(superpose(&traces))
+            }
+            Scenario::Splice(parts) => {
+                let traces = parts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| p.build(child_seed(seed, i as u64)))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(splice(&traces))
+            }
+            Scenario::Thin { p, of } => {
+                let inner = of.build(child_seed(seed, 0))?;
+                Ok(thin(&inner, *p, child_seed(seed, 1)))
+            }
+            Scenario::RampBetween { from, to, overlap } => {
+                let a = from.build(child_seed(seed, 0))?;
+                let b = to.build(child_seed(seed, 1))?;
+                Ok(ramp_between(&a, &b, *overlap, child_seed(seed, 2)))
+            }
+        }
+    }
+}
+
+/// A named, seeded scenario document: the on-disk unit the CLI loads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub seed: u64,
+    pub scenario: Scenario,
+}
+
+impl ScenarioSpec {
+    /// Parse a full spec document (`{"name", "seed", "scenario"}`; name
+    /// defaults to `"scenario"`, seed to 42).
+    pub fn parse(doc: &Json) -> Result<ScenarioSpec, String> {
+        let scenario = doc
+            .get("scenario")
+            .ok_or("spec missing field \"scenario\"")?;
+        Ok(ScenarioSpec {
+            name: doc
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("scenario")
+                .to_string(),
+            seed: doc.get("seed").and_then(Json::as_f64).unwrap_or(42.0) as u64,
+            scenario: Scenario::parse(scenario)?,
+        })
+    }
+
+    pub fn parse_str(text: &str) -> Result<ScenarioSpec, String> {
+        Self::parse(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<ScenarioSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse_str(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Build the trace with the spec's own seed.
+    pub fn build(&self) -> Result<Trace, String> {
+        self.scenario.build(self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gamma_trace;
+
+    fn window_rate(tr: &Trace, lo: f64, hi: f64) -> f64 {
+        let n = tr.arrivals.iter().filter(|&&t| t >= lo && t < hi).count();
+        n as f64 / (hi - lo)
+    }
+
+    #[test]
+    fn child_seed_is_stable_and_spreads() {
+        assert_eq!(child_seed(7, 0), child_seed(7, 0));
+        assert_ne!(child_seed(7, 0), child_seed(7, 1));
+        assert_ne!(child_seed(7, 0), child_seed(8, 0));
+    }
+
+    #[test]
+    fn mmpp_is_deterministic_and_bursty() {
+        let rates = [20.0, 300.0];
+        let dwell = [15.0, 15.0];
+        let a = mmpp_trace(&rates, &dwell, 300.0, 3);
+        let b = mmpp_trace(&rates, &dwell, 300.0, 3);
+        assert_eq!(a, b);
+        assert_ne!(a, mmpp_trace(&rates, &dwell, 300.0, 4));
+        // Mean rate between the state rates; CV well above Poisson.
+        assert!(a.mean_rate() > 30.0 && a.mean_rate() < 290.0, "rate {}", a.mean_rate());
+        assert!(a.cv() > 1.1, "cv {}", a.cv());
+    }
+
+    #[test]
+    fn diurnal_peaks_and_troughs() {
+        let tr = diurnal_trace(100.0, 0.5, 120.0, 1.0, 240.0, 5);
+        // sin peaks at t=30 (+mod period), troughs at t=90.
+        let peak = window_rate(&tr, 15.0, 45.0) + window_rate(&tr, 135.0, 165.0);
+        let trough = window_rate(&tr, 75.0, 105.0) + window_rate(&tr, 195.0, 225.0);
+        assert!(peak > 1.5 * trough, "peak {peak} vs trough {trough}");
+        assert_eq!(tr, diurnal_trace(100.0, 0.5, 120.0, 1.0, 240.0, 5));
+    }
+
+    #[test]
+    fn flash_crowd_hits_peak_then_recovers() {
+        let tr = flash_crowd_trace(100.0, 400.0, 60.0, 5.0, 30.0, 15.0, 1.0, 180.0, 7);
+        let before = window_rate(&tr, 10.0, 55.0);
+        let during = window_rate(&tr, 66.0, 94.0);
+        let after = window_rate(&tr, 130.0, 175.0);
+        assert!((before - 100.0).abs() < 25.0, "before {before}");
+        assert!((during - 400.0).abs() < 80.0, "during {during}");
+        assert!((after - 100.0).abs() < 25.0, "after {after}");
+    }
+
+    #[test]
+    fn pareto_has_heavy_tail() {
+        let tr = pareto_trace(100.0, 1.6, 120.0, 9);
+        assert!(tr.mean_rate() > 40.0 && tr.mean_rate() < 200.0, "rate {}", tr.mean_rate());
+        // Tail heaviness: the p99 inter-arrival dwarfs the median
+        // (theoretical ratio 50^(1/1.6) ≈ 11.5 for Pareto).
+        let mut gaps: Vec<f64> = tr.arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_by(f64::total_cmp);
+        let median = gaps[gaps.len() / 2];
+        let p99 = gaps[gaps.len() * 99 / 100];
+        assert!(p99 > 5.0 * median, "p99 {p99} vs median {median}");
+    }
+
+    #[test]
+    fn lognormal_matches_rate_with_high_cv() {
+        let tr = lognormal_trace(100.0, 1.5, 120.0, 11);
+        assert!((tr.mean_rate() - 100.0).abs() < 25.0, "rate {}", tr.mean_rate());
+        assert!(tr.cv() > 1.3, "cv {}", tr.cv());
+    }
+
+    #[test]
+    fn superpose_adds_rates_and_sorts() {
+        let a = gamma_trace(50.0, 1.0, 60.0, 1);
+        let b = gamma_trace(50.0, 1.0, 60.0, 2);
+        let merged = superpose(&[a.clone(), b.clone()]);
+        assert_eq!(merged.len(), a.len() + b.len());
+        assert!(merged.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        assert!((merged.mean_rate() - 100.0).abs() < 15.0, "rate {}", merged.mean_rate());
+    }
+
+    #[test]
+    fn thin_keeps_expected_fraction() {
+        let tr = gamma_trace(100.0, 1.0, 60.0, 13);
+        let half = thin(&tr, 0.5, 17);
+        let frac = half.len() as f64 / tr.len() as f64;
+        assert!((frac - 0.5).abs() < 0.08, "kept {frac}");
+        assert_eq!(half, thin(&tr, 0.5, 17));
+        assert_eq!(thin(&tr, 1.0, 1).len(), tr.len());
+        assert_eq!(thin(&tr, 0.0, 1).len(), 0);
+    }
+
+    #[test]
+    fn splice_concatenates_durations() {
+        let a = gamma_trace(80.0, 1.0, 30.0, 19);
+        let b = gamma_trace(20.0, 1.0, 30.0, 23);
+        let joined = splice(&[a.clone(), b.clone()]);
+        assert_eq!(joined.len(), a.len() + b.len());
+        assert!(joined.arrivals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn ramp_between_crossfades() {
+        let a = gamma_trace(200.0, 1.0, 60.0, 29);
+        let b = gamma_trace(50.0, 1.0, 60.0, 31);
+        let tr = ramp_between(&a, &b, 20.0, 37);
+        assert!(tr.arrivals.windows(2).all(|w| w[0] <= w[1]));
+        let early = window_rate(&tr, 0.0, 35.0);
+        let late = window_rate(&tr, 65.0, 95.0);
+        assert!(early > 2.0 * late, "early {early} late {late}");
+    }
+
+    #[test]
+    fn rescale_changes_rate() {
+        let tr = gamma_trace(100.0, 1.0, 60.0, 41);
+        let double = rescale_time(&tr, 0.5);
+        assert!((double.mean_rate() - 2.0 * tr.mean_rate()).abs() < 10.0);
+        let target = rescale_to_rate(&tr, 40.0);
+        assert!((target.mean_rate() - 40.0).abs() < 2.0, "rate {}", target.mean_rate());
+    }
+
+    #[test]
+    fn spec_parses_and_builds_deterministically() {
+        let text = r#"{
+            "name": "composite",
+            "seed": 9,
+            "scenario": {
+                "kind": "superpose",
+                "of": [
+                    {"kind": "gamma", "lambda": 60, "cv": 1.0, "duration": 60},
+                    {"kind": "thin", "p": 0.5,
+                     "of": {"kind": "mmpp", "rates": [30, 120], "dwell": [10, 10],
+                            "duration": 60}}
+                ]
+            }
+        }"#;
+        let spec = ScenarioSpec::parse_str(text).unwrap();
+        assert_eq!(spec.name, "composite");
+        assert_eq!(spec.seed, 9);
+        let a = spec.build().unwrap();
+        let b = spec.build().unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // A different seed changes the realization.
+        assert_ne!(a, spec.scenario.build(10).unwrap());
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed_nodes() {
+        for text in [
+            r#"{"scenario": {"kind": "nope"}}"#,
+            r#"{"scenario": {"kind": "gamma", "cv": 1.0}}"#,
+            r#"{"scenario": {"kind": "mmpp", "rates": [1], "dwell": [], "duration": 10}}"#,
+            r#"{"scenario": {"kind": "thin", "p": 0.5}}"#,
+            r#"{"name": "no-scenario"}"#,
+            // Numeric but out of range: must error at parse, not panic in
+            // a generator assertion at build time.
+            r#"{"scenario": {"kind": "gamma", "lambda": 0, "duration": 10}}"#,
+            r#"{"scenario": {"kind": "mmpp", "rates": [0, 5], "dwell": [1, 1], "duration": 10}}"#,
+            r#"{"scenario": {"kind": "diurnal", "base": 50, "amplitude": 1.5, "period": 60,
+                "duration": 60}}"#,
+            r#"{"scenario": {"kind": "pareto", "lambda": 50, "shape": 0.9, "duration": 10}}"#,
+            r#"{"scenario": {"kind": "thin", "p": 1.5,
+                "of": {"kind": "gamma", "lambda": 10, "duration": 5}}}"#,
+        ] {
+            assert!(ScenarioSpec::parse_str(text).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn replay_node_rescales_a_saved_trace() {
+        let dir = std::env::temp_dir().join("inferline-scenario-replay");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("replay.txt");
+        gamma_trace(50.0, 1.0, 30.0, 43).save(&path).unwrap();
+        let spec = ScenarioSpec::parse_str(&format!(
+            r#"{{"scenario": {{"kind": "replay", "path": {:?}, "target_rate": 100}}}}"#,
+            path.to_str().unwrap()
+        ))
+        .unwrap();
+        let tr = spec.build().unwrap();
+        assert!((tr.mean_rate() - 100.0).abs() < 5.0, "rate {}", tr.mean_rate());
+    }
+}

@@ -1,0 +1,153 @@
+//! Closed-loop Tuner regressions under the scenario workload subsystem
+//! (`workload::scenarios`): deterministic-seed checks that a flash-crowd
+//! spike triggers envelope scale-up within the detection ladder window,
+//! and that the 15 s-stability scale-down returns toward the planned
+//! floor — and never undercuts it — once the crowd passes.
+
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::control::{simulate_controlled, CountingController, NullController};
+use inferline::simulator::{self, SimParams};
+use inferline::tuner::{Tuner, TunerInputs};
+use inferline::workload::{gamma_trace, scenarios};
+
+const SLO: f64 = 0.3;
+const BASE: f64 = 100.0;
+
+/// Plan image-processing for nominal BASE-rate traffic and derive the
+/// Tuner's inputs, exactly as the serving path does.
+fn setup() -> (
+    inferline::config::PipelineSpec,
+    inferline::profiler::ProfileSet,
+    inferline::config::PipelineConfig,
+    TunerInputs,
+) {
+    let spec = pipelines::image_processing();
+    let profiles = paper_profiles();
+    let sample = gamma_trace(BASE, 1.0, 30.0, 21);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, SLO).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st);
+    (spec, profiles, plan.config, inputs)
+}
+
+#[test]
+fn flash_crowd_triggers_scale_up_within_ladder_window() {
+    let (spec, profiles, config, inputs) = setup();
+    let spike_start = 60.0;
+    // 3x flash crowd: 2 s ramp, 40 s hold, 20 s decay.
+    let live = scenarios::flash_crowd_trace(
+        BASE,
+        300.0,
+        spike_start,
+        2.0,
+        40.0,
+        20.0,
+        1.0,
+        180.0,
+        51,
+    );
+    let mut tuner = Tuner::new(inputs);
+    let mut counting = CountingController::new(&mut tuner);
+    let tuned = simulate_controlled(
+        &spec, &profiles, &config, &live, &SimParams::default(), &mut counting,
+    );
+    assert!(counting.scale_ups > 0, "flash crowd produced no scale-up actions");
+
+    // The spike demands far more capacity than any baseline-jitter
+    // excursion: the first provisioning level clearly above the pre-spike
+    // maximum must appear within the envelope ladder's largest window
+    // (60 s) plus one control tick of the spike's onset.
+    let baseline_max = tuned
+        .replica_timeline
+        .iter()
+        .filter(|&&(t, _)| t < spike_start)
+        .map(|&(_, n)| n)
+        .max()
+        .expect("timeline starts at t=0");
+    let first_big = tuned
+        .replica_timeline
+        .iter()
+        .find(|&&(_, n)| n >= baseline_max + 2)
+        .expect("spike never drove provisioning past the baseline excursions")
+        .0;
+    assert!(
+        first_big <= spike_start + 61.0,
+        "scale-up landed at t={first_big}, outside the ladder window after t={spike_start}"
+    );
+
+    // And the closed loop beats the static plan on SLO attainment.
+    let mut null = NullController;
+    let static_run = simulate_controlled(
+        &spec, &profiles, &config, &live, &SimParams::default(), &mut null,
+    );
+    assert!(
+        tuned.miss_rate(SLO) < static_run.miss_rate(SLO),
+        "tuned miss {} should beat static {}",
+        tuned.miss_rate(SLO),
+        static_run.miss_rate(SLO)
+    );
+}
+
+#[test]
+fn scale_down_returns_to_planned_floor_after_flash_crowd() {
+    let (spec, profiles, config, inputs) = setup();
+    // 4x crowd early in a long trace: ~230 s of stable base traffic
+    // remain after the decay, many 15 s stability windows.
+    let live = scenarios::flash_crowd_trace(
+        BASE,
+        400.0,
+        40.0,
+        2.0,
+        30.0,
+        10.0,
+        1.0,
+        300.0,
+        53,
+    );
+    let mut tuner = Tuner::new(inputs);
+    let mut counting = CountingController::new(&mut tuner);
+    let result = simulate_controlled(
+        &spec, &profiles, &config, &live, &SimParams::default(), &mut counting,
+    );
+    assert!(counting.scale_ups > 0, "never scaled up");
+    assert!(counting.scale_downs > 0, "never scaled down");
+
+    let planned: usize = config.stages.iter().map(|s| s.replicas).sum();
+    let max_seen = result.replica_timeline.iter().map(|&(_, n)| n).max().unwrap();
+    let final_count = result.replica_timeline.last().unwrap().1;
+    assert!(
+        max_seen >= planned + planned / 2,
+        "4x crowd only reached {max_seen} vs planned {planned}"
+    );
+    // Substantial descent back toward the planned configuration once the
+    // trailing-rate statistic forgets the spike.
+    assert!(
+        final_count < max_seen && (final_count as f64) < 0.8 * max_seen as f64,
+        "stuck at spike provisioning: {max_seen} -> {final_count} (planned {planned})"
+    );
+    // The planned floor is never undercut — before, during, or after.
+    for &(t, n) in &result.replica_timeline {
+        assert!(n >= planned, "t={t}: provisioned {n} under planned floor {planned}");
+    }
+}
+
+#[test]
+fn flash_crowd_runs_are_deterministic_per_seed() {
+    let (spec, profiles, config, inputs) = setup();
+    let live = scenarios::flash_crowd_trace(
+        BASE, 300.0, 30.0, 2.0, 20.0, 10.0, 1.0, 120.0, 57,
+    );
+    let run = |inputs: TunerInputs| {
+        let mut tuner = Tuner::new(inputs);
+        simulate_controlled(
+            &spec, &profiles, &config, &live, &SimParams::default(), &mut tuner,
+        )
+    };
+    let a = run(inputs.clone());
+    let b = run(inputs);
+    assert_eq!(a.latencies, b.latencies);
+    assert_eq!(a.replica_timeline, b.replica_timeline);
+    assert_eq!(a.cost_dollars.to_bits(), b.cost_dollars.to_bits());
+}
