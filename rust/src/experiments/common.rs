@@ -2,12 +2,13 @@
 //! emission, standard system setups (InferLine plan+tune, CG plan+tune),
 //! and controlled-run summaries.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::baselines::autoscale::AutoScaleTuner;
 use crate::baselines::coarse::{self, CoarseTarget};
 use crate::config::{PipelineConfig, PipelineSpec};
-use crate::planner::{Plan, PlanError, Planner};
+use crate::planner::{EstimatorCache, Plan, PlanError, Planner};
 use crate::profiler::ProfileSet;
 use crate::simulator::{self, control::simulate_controlled, control::Controller, SimParams, SimResult};
 use crate::tuner::{Tuner, TunerInputs};
@@ -20,6 +21,10 @@ use crate::workload::Trace;
 pub struct Ctx {
     pub quick: bool,
     pub results_dir: PathBuf,
+    /// Estimator-cache persistence path (`None` = in-memory only).
+    /// Experiments with a path warm-start from it and write it back, so
+    /// repeated invocations on the same traces skip re-simulation.
+    pub cache_path: Option<PathBuf>,
 }
 
 impl Ctx {
@@ -28,7 +33,13 @@ impl Ctx {
             std::env::var("INFERLINE_RESULTS_DIR").unwrap_or_else(|_| "results".into()),
         );
         let _ = std::fs::create_dir_all(&results_dir);
-        Ctx { quick, results_dir }
+        Ctx { quick, results_dir, cache_path: None }
+    }
+
+    /// Enable estimator-cache persistence at `path`.
+    pub fn with_cache(mut self, path: Option<PathBuf>) -> Self {
+        self.cache_path = path;
+        self
     }
 
     /// Scale a duration for quick mode.
@@ -89,6 +100,49 @@ impl RunSummary {
 /// 1 (serial planner) once the scenario count covers the core count.
 pub fn shard_planner_threads(n_scenarios: usize) -> usize {
     (crate::util::par::default_workers() / n_scenarios.max(1)).max(1)
+}
+
+/// Warm `cache` from a persisted cache file. A missing file is a normal
+/// cold start; a *rejected* file (corrupt, version-mismatched) is logged
+/// and ignored — planner decisions are bit-identical warm or cold, so a
+/// bad cache file must never abort or skew the run. Returns the number
+/// of entries loaded. Single source of the warm-start log line the CI
+/// warm-start check greps for.
+pub fn warm_cache_from(path: &Path, cache: &Arc<EstimatorCache>) -> usize {
+    if !path.exists() {
+        return 0;
+    }
+    match cache.load_from(path) {
+        Ok(n) => {
+            println!("  estimator cache: warm-started with {n} entries from {}", path.display());
+            n
+        }
+        Err(e) => {
+            eprintln!("  estimator cache: {e}; starting cold");
+            0
+        }
+    }
+}
+
+/// Persist `cache` to a file (logged, best effort — a write failure must
+/// not fail the run that produced the results).
+pub fn persist_cache_to(path: &Path, cache: &Arc<EstimatorCache>) {
+    match cache.save(path) {
+        Ok(n) => println!("  estimator cache: saved {n} entries to {}", path.display()),
+        Err(e) => eprintln!("  estimator cache: {e}"),
+    }
+}
+
+/// [`warm_cache_from`] the context's cache file, if any.
+pub fn warm_cache(ctx: &Ctx, cache: &Arc<EstimatorCache>) -> usize {
+    ctx.cache_path.as_deref().map_or(0, |path| warm_cache_from(path, cache))
+}
+
+/// [`persist_cache_to`] the context's cache file, if any.
+pub fn persist_cache(ctx: &Ctx, cache: &Arc<EstimatorCache>) {
+    if let Some(path) = ctx.cache_path.as_deref() {
+        persist_cache_to(path, cache);
+    }
 }
 
 /// Plan with InferLine and serve `live` with the InferLine Tuner in loop.

@@ -2,15 +2,18 @@
 //! microbench behind the perf-trajectory artifact.
 //!
 //! Measures (1) raw Estimator throughput (simulated queries per second on
-//! a long trace) and (2) end-to-end `plan()` latency per pipeline with
-//! the fast path on and off, then writes the numbers as JSON (by default
-//! `BENCH_estimator.json`) so successive PRs leave a comparable perf
-//! trail. CI runs it as a non-gating step with `--quick`.
+//! a long trace), (2) end-to-end `plan()` latency per pipeline with the
+//! fast path on and off, (3) the feasibility fast-accept against a full
+//! reference simulation on a feasible (accept-heavy) workload, and (4)
+//! the persistent-cache warm-start: a second identical `plan()` that
+//! loads the first run's cache file from disk. Everything is written as
+//! JSON (by default `BENCH_estimator.json`) so successive PRs leave a
+//! comparable perf trail. CI runs it as a non-gating step with `--quick`.
 
 use std::path::Path;
 
 use crate::config::pipelines;
-use crate::planner::Planner;
+use crate::planner::{EstimatorCache, Planner};
 use crate::profiler::analytic::paper_profiles;
 use crate::simulator::{self, SimParams};
 use crate::util::bench::{bench, black_box};
@@ -44,6 +47,58 @@ pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
     let sim_qps = long_trace.len() as f64 / r.mean_s;
     doc.set("sim_queries_per_sec", sim_qps);
     println!("  -> {:.2} M simulated queries/sec", sim_qps / 1e6);
+
+    // --- Feasibility fast-accept on a feasible-heavy workload. -------------
+    // The planned configuration meets a loose SLO on the long trace, so
+    // the budgeted check early-accepts (skipping the trace tail, the
+    // backlog drain and the final P99 selection) while the reference path
+    // simulates everything and selects the exact P99.
+    let accept_slo = 0.5;
+    let check = simulator::check_feasible(
+        &spec,
+        &profiles,
+        &warm_plan.config,
+        &long_trace,
+        accept_slo,
+        &params,
+        None,
+    );
+    let fa = bench("feasibility: fast-accept check", 1, samples, || {
+        black_box(
+            simulator::check_feasible(
+                &spec,
+                &profiles,
+                &warm_plan.config,
+                &long_trace,
+                accept_slo,
+                &params,
+                None,
+            )
+            .feasible,
+        );
+    });
+    let full = bench("feasibility: full reference sim", 1, samples, || {
+        black_box(simulator::feasible_unbudgeted(
+            &spec,
+            &profiles,
+            &warm_plan.config,
+            &long_trace,
+            accept_slo,
+            &params,
+        ));
+    });
+    let mut accept = Json::obj();
+    accept.set("slo", accept_slo);
+    accept.set("accepted", check.accepted);
+    accept.set("check_mean_s", fa.mean_s);
+    accept.set("reference_mean_s", full.mean_s);
+    accept.set("speedup", full.mean_s / fa.mean_s);
+    doc.set("fast_accept", accept);
+    println!(
+        "  -> fast-accept on feasible workload: {:.2}x (accepted: {})",
+        full.mean_s / fa.mean_s,
+        check.accepted
+    );
 
     // --- plan() end-to-end per pipeline, fast path on vs off. --------------
     // A fresh planner per run keeps the memo-cache cold, so each sample
@@ -101,6 +156,59 @@ pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
     h.set("plan_mean_s", heaviest.1);
     h.set("plans_per_sec", 1.0 / heaviest.1);
     doc.set("heaviest", h);
+
+    // --- Warm-start: persistent cache across two plan() invocations. -------
+    // A cold search populates a cache that is saved to disk; each warm
+    // sample then loads that file into a *fresh* cache (measuring the real
+    // cross-process path, file parse included) and re-plans the identical
+    // problem. Plans are bit-identical; only the time differs.
+    let cache_file = out.with_file_name("BENCH_estimator_cache.json");
+    let warm_spec = pipelines::social_media();
+    let warm_sample = gamma_trace(150.0, 1.0, plan_secs, 3);
+    let cold_cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    let cold = bench("planner: plan() cold cache", 0, samples, || {
+        let c = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+        black_box(
+            Planner::new(&warm_spec, &profiles)
+                .with_shared_cache(c)
+                .plan(&warm_sample, slo)
+                .expect("plan")
+                .cost_per_hour,
+        );
+    });
+    let cold_plan = Planner::new(&warm_spec, &profiles)
+        .with_shared_cache(cold_cache.clone())
+        .plan(&warm_sample, slo)
+        .expect("plan");
+    let saved = cold_cache.save(&cache_file).expect("save estimator cache");
+    let mut warm_hit_rate = 0.0;
+    let mut warm_identical = true;
+    let warm = bench("planner: plan() warm-started cache", 0, samples, || {
+        let c = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+        c.load_from(&cache_file).expect("load estimator cache");
+        let plan = Planner::new(&warm_spec, &profiles)
+            .with_shared_cache(c)
+            .plan(&warm_sample, slo)
+            .expect("plan");
+        warm_hit_rate = plan.telemetry.hit_rate();
+        warm_identical &= plan.config == cold_plan.config;
+        black_box(plan.cost_per_hour);
+    });
+    let _ = std::fs::remove_file(&cache_file);
+    let mut ws = Json::obj();
+    ws.set("entries", saved);
+    ws.set("hit_rate", warm_hit_rate);
+    ws.set("cold_mean_s", cold.mean_s);
+    ws.set("warm_mean_s", warm.mean_s);
+    ws.set("speedup", cold.mean_s / warm.mean_s);
+    ws.set("bit_identical", warm_identical);
+    doc.set("warm_start", ws);
+    println!(
+        "  -> warm-start: {:.2}x over cold ({} persisted entries, {:.0}% hit rate)",
+        cold.mean_s / warm.mean_s,
+        saved,
+        warm_hit_rate * 100.0
+    );
 
     std::fs::write(out, format!("{doc}\n"))?;
     println!("  wrote {}", out.display());

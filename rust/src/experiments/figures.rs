@@ -632,7 +632,6 @@ pub fn run_by_name(name: &str, quick: bool) -> bool {
         "fig13" => fig13(&ctx),
         "fig14" => fig14(&ctx),
         "headline" => headline(&ctx),
-        "sweep" => super::sweep::run_sweep(&ctx),
         "all" => {
             for f in ALL_FIGURES {
                 run_by_name(f, quick);
@@ -643,13 +642,12 @@ pub fn run_by_name(name: &str, quick: bool) -> bool {
     true
 }
 
-/// Every figure id, in paper order. The scenario sweep is registered in
-/// [`run_by_name`] as `"sweep"` but deliberately kept out of this list so
-/// `experiment all` reproduces exactly the paper's figures without also
-/// paying for the full grid sweep. The closed-loop robustness harness is
-/// dispatched directly by the CLI (`experiment robustness`) because it
-/// takes a seed flag and reports write failures in its exit code —
-/// see `experiments::robustness::run`.
+/// Every figure id, in paper order. The scenario sweep and the
+/// closed-loop robustness harness are dispatched directly by the CLI
+/// (`experiment sweep` / `experiment robustness`, one dispatch site
+/// each) because they take flags this registry doesn't thread (the
+/// estimator-cache persistence path, the robustness seed) — see
+/// `experiments::sweep::run_sweep` and `experiments::robustness::run`.
 pub const ALL_FIGURES: &[&str] = &[
     "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
     "headline",

@@ -14,4 +14,4 @@ pub mod sweep;
 
 pub use common::{Ctx, RunSummary};
 pub use figures::{run_by_name, ALL_FIGURES};
-pub use sweep::{run_sweep, sweep_grid};
+pub use sweep::{run_sweep, sweep_grid, sweep_grid_with_cache};

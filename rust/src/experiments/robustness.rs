@@ -18,7 +18,9 @@
 //!   the fan-out cannot fill ([`shard_planner_threads`]);
 //! * all cells share one planning sample per seed and one
 //!   [`EstimatorCache`], so the four unique planning problems are solved
-//!   once and every other cell's feasibility queries are cache hits;
+//!   once and every other cell's feasibility queries are cache hits; the
+//!   CLI run persists that cache across processes (disable with
+//!   `--no-cache`), so repeated invocations warm-start;
 //! * every cell reports SLO miss rate, measured P99, the cost trajectory
 //!   (mean $/hr, total $, downsampled replica timeline) and the Tuner's
 //!   action counts ([`CountingController`]);
@@ -187,6 +189,22 @@ pub fn run_grid(
     slo: f64,
     quick: bool,
 ) -> Vec<Cell> {
+    let cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    run_grid_with_cache(families, specs, seed, slo, quick, cache)
+}
+
+/// [`run_grid`] against a caller-supplied [`EstimatorCache`] — e.g. one
+/// warm-started from a persisted cache file. Reports are bit-identical to
+/// a cold cache: cached knowledge answers feasibility queries exactly as
+/// a fresh computation would.
+pub fn run_grid_with_cache(
+    families: &[&str],
+    specs: &[PipelineSpec],
+    seed: u64,
+    slo: f64,
+    quick: bool,
+    cache: Arc<EstimatorCache>,
+) -> Vec<Cell> {
     let profiles = paper_profiles();
     let mut grid: Vec<(&str, &PipelineSpec)> = Vec::new();
     for &family in families {
@@ -196,7 +214,6 @@ pub fn run_grid(
     }
     let n = grid.len();
     let inner = shard_planner_threads(n);
-    let cache = EstimatorCache::shared(1 << 18);
     parallel_map_indexed(n, default_workers(), |idx| {
         let (family, spec) = grid[idx];
         let Some((sample, live)) = family_traces(family, seed, quick) else {
@@ -337,7 +354,14 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
         "Planner + Tuner closed loop across scenario families, all four pipelines",
     );
     let specs = pipelines::all();
-    let cells = run_grid(FAMILIES, &specs, seed, DEFAULT_SLO, ctx.quick);
+    // Persistent estimator cache: the four planning problems warm-start
+    // from a previous invocation's simulations (bit-identical reports
+    // either way — the cache only memoizes deterministic knowledge).
+    let cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    super::common::warm_cache(ctx, &cache);
+    let cells =
+        run_grid_with_cache(FAMILIES, &specs, seed, DEFAULT_SLO, ctx.quick, Arc::clone(&cache));
+    super::common::persist_cache(ctx, &cache);
     for c in &cells {
         match &c.outcome {
             Ok(m) => println!(

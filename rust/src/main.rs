@@ -16,7 +16,7 @@ use std::process::ExitCode;
 
 use inferline::baselines::coarse::{self, CoarseTarget};
 use inferline::config::pipelines;
-use inferline::planner::Planner;
+use inferline::planner::{EstimatorCache, Planner};
 use inferline::profiler::analytic::paper_profiles;
 use inferline::profiler::ProfileSet;
 use inferline::runtime::Manifest;
@@ -64,6 +64,26 @@ impl Args {
     fn bool(&self, key: &str) -> bool {
         self.get(key).is_some_and(|v| v != "false")
     }
+
+    /// Resolve the estimator-cache persistence flags: `--no-cache` wins,
+    /// `--cache <path>` names a file, a bare `--cache` (and, when
+    /// `default_on` — the sweep/robustness experiments — no flag at all)
+    /// uses the standard `results/estimator_cache.json`.
+    fn cache_path(&self, default_on: bool) -> Option<PathBuf> {
+        const DEFAULT: &str = "results/estimator_cache.json";
+        if self.bool("no-cache") {
+            return None;
+        }
+        match self.get("cache") {
+            // Bare `--cache` parses as "true"; `--cache false` mirrors the
+            // bool() convention and disables persistence.
+            Some("true") => Some(PathBuf::from(DEFAULT)),
+            Some("false") => None,
+            Some(path) => Some(PathBuf::from(path)),
+            None if default_on => Some(PathBuf::from(DEFAULT)),
+            None => None,
+        }
+    }
 }
 
 const USAGE: &str = "\
@@ -73,14 +93,18 @@ USAGE: inferline <command> [flags]
 
 COMMANDS:
   plan        --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
-              [--profiles <file.json>] [--compare-cg]
+              [--profiles <file.json>] [--compare-cg] [--cache [<file>]]
+              (--cache persists the estimator cache so a repeated plan
+              warm-starts; default file results/estimator_cache.json)
   profile     --artifacts <dir> [--out <file.json>] [--max-batch <b>]
   simulate    --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
   serve       --pipeline <name> --lambda <qps> --duration <s>
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
   experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
               [--quick]
-  experiment  robustness [--quick] [--seed <n>]
+              (sweep persists its estimator cache across runs; override
+              the file with --cache <file> or disable with --no-cache)
+  experiment  robustness [--quick] [--seed <n>] [--cache <file>|--no-cache]
               (closed-loop Planner+Tuner scenario matrix -> robustness.json)
   bench       estimator [--out <file.json>] [--quick]
               (writes the Estimator/Planner perf-trajectory JSON)
@@ -168,7 +192,15 @@ fn cmd_plan(args: &Args) -> bool {
     let cv = args.f64("cv", 1.0);
     let sample = gamma_trace(lambda, cv, args.f64("sample-duration", 60.0), 42);
     println!("planning {} for λ={lambda} cv={cv} slo={slo}s ...", spec.name);
-    match Planner::new(&spec, &profiles).plan(&sample, slo) {
+    // Optional persistent estimator cache: plans are bit-identical warm
+    // or cold; the second identical invocation just skips simulations.
+    let cache_path = args.cache_path(false);
+    let cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    if let Some(path) = &cache_path {
+        inferline::experiments::common::warm_cache_from(path, &cache);
+    }
+    let planner = Planner::new(&spec, &profiles).with_shared_cache(cache.clone());
+    let ok = match planner.plan(&sample, slo) {
         Ok(plan) => {
             println!("  config:    {}", plan.config.summary(&spec));
             println!("  cost:      ${:.2}/hr", plan.cost_per_hour);
@@ -176,8 +208,11 @@ fn cmd_plan(args: &Args) -> bool {
             println!("  search:    {} iterations; actions: {}", plan.iterations,
                      plan.actions_taken.join(", "));
             println!(
-                "  estimator: {} sims + {} pruned, {} cache hits ({:.0}% hit rate), {} threads",
+                "  estimator: {} sims ({} early-aborted, {} fast-accepted) + {} pruned, \
+                 {} cache hits ({:.0}% hit rate), {} threads",
                 plan.telemetry.cache_misses - plan.telemetry.pruned,
+                plan.telemetry.early_aborts,
+                plan.telemetry.early_accepts,
                 plan.telemetry.pruned,
                 plan.telemetry.cache_hits,
                 plan.telemetry.hit_rate() * 100.0,
@@ -199,7 +234,13 @@ fn cmd_plan(args: &Args) -> bool {
             eprintln!("  {e}");
             false
         }
+    };
+    // Persist even after an infeasible search: the simulations it ran
+    // (aborted bounds, exact P99s) answer the natural looser-SLO retry.
+    if let Some(path) = &cache_path {
+        inferline::experiments::common::persist_cache_to(path, &cache);
     }
+    ok
 }
 
 fn cmd_profile(args: &Args) -> bool {
@@ -350,8 +391,16 @@ fn cmd_experiment(args: &Args) -> bool {
         // report is bit-reproducible per seed; parse as u64, not via f64,
         // so every seed value round-trips exactly).
         let seed = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42u64);
-        let ctx = inferline::experiments::Ctx::new(quick);
+        let ctx = inferline::experiments::Ctx::new(quick).with_cache(args.cache_path(true));
         return inferline::experiments::robustness::run(&ctx, seed);
+    }
+    if name == "sweep" {
+        // Separately dispatched so the cache flags reach the harness:
+        // the sweep persists its shared estimator cache across processes
+        // by default (disable with --no-cache).
+        let ctx = inferline::experiments::Ctx::new(quick).with_cache(args.cache_path(true));
+        inferline::experiments::run_sweep(&ctx);
+        return true;
     }
     if !inferline::experiments::run_by_name(name, quick) {
         eprintln!("unknown experiment {name:?}: {:?}", inferline::experiments::ALL_FIGURES);

@@ -39,10 +39,14 @@
 //!   learned about each (trace, configuration) pair is memoized *across
 //!   SLOs* — a full simulation records the exact P99 (answers feasibility
 //!   at any SLO), an early-aborted one records the lower bound it proved
-//!   (answers any SLO at or below it). The cache is shareable (`Arc`)
-//!   across planners, e.g. across sweep grid points whose traces
-//!   coincide, and bounded by a segmented LRU so long sweeps don't grow
-//!   without limit.
+//!   (answers any SLO at or below it), and a fast-accepted one records
+//!   the upper bound it proved (answers any SLO at or above it). The
+//!   cache is shareable (`Arc`) across planners, e.g. across sweep grid
+//!   points whose traces coincide, bounded by a segmented LRU so long
+//!   sweeps don't grow without limit, and persistable across *processes*:
+//!   exact and proven-bound entries serialize to a versioned JSON file
+//!   (see the [`EstimatorCache`] docs for format and invalidation rules),
+//!   so repeated CLI invocations on the same traces warm-start.
 //! * **Estimator fast path** (see the [`simulator`](crate::simulator)
 //!   module docs): one shared [`RoutingPlan`] per (trace, params) reused
 //!   by every candidate simulation, early-abort budgeted feasibility, and
@@ -53,13 +57,15 @@
 //!   rejects under-provisioned candidates before the expensive
 //!   simulation (the same bound [`simulator::feasible`] applies).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::{PipelineConfig, PipelineSpec, StageConfig};
 use crate::profiler::{ProfileSet, BATCH_CANDIDATES};
 use crate::simulator::{self, RoutingPlan, SimParams};
+use crate::util::json::Json;
 use crate::workload::Trace;
 
 /// Hard cap on per-stage replicas during search: beyond this the workload
@@ -79,6 +85,9 @@ pub struct SearchTelemetry {
     /// Simulations that early-aborted once P99 > SLO was proven (subset
     /// of `cache_misses`; fast path only).
     pub early_aborts: usize,
+    /// Simulations that early-accepted once P99 <= SLO was proven (subset
+    /// of `cache_misses`; fast path only).
+    pub early_accepts: usize,
     /// Worker threads used for candidate evaluation (1 = serial).
     pub threads: usize,
 }
@@ -241,24 +250,42 @@ fn cache_key(fp: u64, config: &PipelineConfig) -> CacheKey {
 /// What the Estimator has learned about a configuration's P99 on a trace.
 /// Either form answers feasibility queries exactly as a fresh computation
 /// would, so cached and uncached planners make identical decisions.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 enum P99Knowledge {
     /// A full simulation ran: the exact Estimator P99.
     Exact(f64),
-    /// P99 is provably above this value: a budgeted simulation aborted at
-    /// this SLO, or (for `Above(f64::INFINITY)`) the analytic throughput
-    /// bound showed queues diverge, which is infeasible at every SLO.
-    Above(f64),
+    /// P99 lies in the half-open interval `(above, at_most]`. `above`
+    /// comes from budgeted simulations that early-aborted at that SLO —
+    /// or is `f64::INFINITY` when the analytic throughput bound showed
+    /// queues diverge, which is infeasible at every SLO. `at_most` comes
+    /// from budgeted simulations that early-accepted at that SLO (it is
+    /// `f64::INFINITY` while no accept has been proven). Both sides can
+    /// be learned for the same configuration by checks at different SLOs;
+    /// the merge keeps the tightest interval.
+    Bounded { above: f64, at_most: f64 },
 }
 
 impl P99Knowledge {
+    /// P99 is provably above `bound` (aborted run, or analytic prune for
+    /// `bound = f64::INFINITY`), nothing known from the other side.
+    fn above(bound: f64) -> Self {
+        P99Knowledge::Bounded { above: bound, at_most: f64::INFINITY }
+    }
+
+    /// P99 is provably at or under `bound` (fast-accepted run).
+    fn at_most(bound: f64) -> Self {
+        P99Knowledge::Bounded { above: f64::NEG_INFINITY, at_most: bound }
+    }
+
     /// Resolve feasibility at `slo` if this knowledge suffices.
     fn resolve(self, slo: f64) -> Option<bool> {
         match self {
             P99Knowledge::Exact(p99) => Some(p99 <= slo),
-            P99Knowledge::Above(bound) => {
-                if slo <= bound {
+            P99Knowledge::Bounded { above, at_most } => {
+                if slo <= above {
                     Some(false)
+                } else if at_most <= slo {
+                    Some(true)
                 } else {
                     None
                 }
@@ -279,6 +306,45 @@ const MAX_ROUTING_PLANS: usize = 64;
 /// because lookups promote them back into the current generation.
 /// Hit/miss telemetry lives on each [`Planner`] (not here), so planners
 /// sharing one cache still report accurate per-search numbers.
+///
+/// ## Persistence
+///
+/// The cache can outlive the process: [`save`](Self::save) serializes
+/// every exact-P99 and finite proven-bound entry to a JSON file and
+/// [`load_from`](Self::load_from) merges such a file back, so repeated
+/// CLI invocations on the same traces warm-start (`--cache` on `plan`,
+/// `experiment sweep`, `experiment robustness`). File format, one object:
+///
+/// ```json
+/// {"format": "inferline-estimator-cache", "version": 1,
+///  "entries": [{"fp": "<16-hex-digit fingerprint>",
+///               "config": [[hw, batch, replicas], ...],
+///               "exact": 0.123}, ...]}
+/// ```
+///
+/// where each entry carries either `"exact"` (full simulation ran) or one
+/// or both of `"above"` / `"at_most"` (proven bounds from early-aborted /
+/// fast-accepted runs). Floats round-trip bit-exactly (Rust's shortest
+/// `Display` form), so warm-started planners make bit-identical
+/// decisions.
+///
+/// Invalidation rules — a file is rejected *wholesale* (`Err`, callers
+/// log and start cold; never partially or silently trusted) when:
+///
+/// * the `format` marker or `version` does not match
+///   [`PERSIST_FORMAT`](Self::PERSIST_FORMAT) /
+///   [`PERSIST_VERSION`](Self::PERSIST_VERSION) — bump the version
+///   whenever simulated outcomes can change (engine semantics, profile or
+///   fingerprint definitions), which invalidates every older file;
+/// * the JSON is unparsable, or any entry is malformed (bad fingerprint,
+///   unknown hardware tier, zero batch/replicas, non-finite value).
+///
+/// Entries from a *different* planning context ("foreign fingerprints":
+/// another trace, pipeline, profile set or `SimParams`) load fine but are
+/// inert — every lookup key mixes the full context fingerprint, so they
+/// can never answer this context's queries. Analytic-prune entries
+/// (diverging queues, infeasible at every SLO) persist as
+/// `"diverges": true` since JSON has no infinity literal.
 pub struct EstimatorCache {
     feas: Mutex<Generations>,
     /// Read-mostly: every cache-miss feasibility query fetches the same
@@ -306,6 +372,15 @@ impl EstimatorCache {
     /// Default entry bound: roomy for any single search, a few tens of MB
     /// at worst for sweep-length workloads.
     pub const DEFAULT_CAPACITY: usize = 1 << 18;
+
+    /// Format marker of persisted cache files.
+    pub const PERSIST_FORMAT: &'static str = "inferline-estimator-cache";
+
+    /// Persisted-file version. Bump whenever simulated outcomes can
+    /// change (engine semantics, fingerprint or profile-format
+    /// definitions): every older file is then rejected at load time
+    /// instead of being silently trusted.
+    pub const PERSIST_VERSION: usize = 1;
 
     pub fn new(capacity: usize) -> Self {
         EstimatorCache {
@@ -358,18 +433,19 @@ impl EstimatorCache {
     }
 
     /// Merge new knowledge with whatever either generation already holds
-    /// (an exact P99 beats any lower bound; bounds keep their max), then
-    /// insert into the current generation, rotating generations when it
-    /// fills its half of the capacity budget.
+    /// (an exact P99 beats any interval; intervals keep their tightest
+    /// sides), then insert into the current generation, rotating
+    /// generations when it fills its half of the capacity budget.
     fn insert_merged(g: &mut Generations, capacity: usize, key: CacheKey, val: P99Knowledge) {
         let existing = g.current.get(&key).copied().or_else(|| g.previous.get(&key).copied());
         let merged = match (existing, val) {
             (Some(P99Knowledge::Exact(p)), _) | (_, P99Knowledge::Exact(p)) => {
                 P99Knowledge::Exact(p)
             }
-            (Some(P99Knowledge::Above(a)), P99Knowledge::Above(b)) => {
-                P99Knowledge::Above(a.max(b))
-            }
+            (
+                Some(P99Knowledge::Bounded { above: a1, at_most: m1 }),
+                P99Knowledge::Bounded { above: a2, at_most: m2 },
+            ) => P99Knowledge::Bounded { above: a1.max(a2), at_most: m1.min(m2) },
             (None, v) => v,
         };
         if g.current.len() >= (capacity / 2).max(1) && !g.current.contains_key(&key) {
@@ -414,6 +490,208 @@ impl EstimatorCache {
         maps.0.insert(fp, plan.clone());
         plan
     }
+
+    /// Serialize every persistable entry (exact P99s and finite proven
+    /// bounds) as a canonical JSON document: entries are sorted by cache
+    /// key and objects use `BTreeMap`s, so the byte stream is a
+    /// deterministic function of the cache contents.
+    pub fn to_json(&self) -> Json {
+        // Previous generation first so current-generation knowledge (the
+        // freshest merge for any key present in both) wins.
+        let mut entries: BTreeMap<CacheKey, P99Knowledge> = BTreeMap::new();
+        {
+            let g = self.feas.lock().unwrap();
+            for (k, v) in g.previous.iter().chain(g.current.iter()) {
+                entries.insert(k.clone(), *v);
+            }
+        }
+        let mut arr = Vec::new();
+        for ((fp, stages), val) in entries {
+            let mut e = Json::obj();
+            match val {
+                P99Knowledge::Exact(p) if p.is_finite() => {
+                    e.set("exact", p);
+                }
+                // Analytic prune: queues diverge, infeasible at every SLO.
+                // JSON has no ∞, so the case is encoded explicitly.
+                P99Knowledge::Bounded { above, .. } if above == f64::INFINITY => {
+                    e.set("diverges", true);
+                }
+                P99Knowledge::Bounded { above, at_most }
+                    if above.is_finite() || at_most.is_finite() =>
+                {
+                    if above.is_finite() {
+                        e.set("above", above);
+                    }
+                    if at_most.is_finite() {
+                        e.set("at_most", at_most);
+                    }
+                }
+                // Degenerate values (NaN, empty intervals) carry no
+                // knowledge worth persisting.
+                _ => continue,
+            }
+            e.set("fp", format!("{fp:016x}"));
+            e.set(
+                "config",
+                Json::Arr(
+                    stages
+                        .iter()
+                        .map(|&(hw, batch, replicas)| {
+                            Json::Arr(vec![
+                                Json::Num(hw as f64),
+                                Json::Num(batch as f64),
+                                Json::Num(replicas as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+            arr.push(e);
+        }
+        let mut doc = Json::obj();
+        doc.set("format", Self::PERSIST_FORMAT);
+        doc.set("version", Self::PERSIST_VERSION);
+        doc.set("entries", Json::Arr(arr));
+        doc
+    }
+
+    /// Merge entries from a persisted document into this cache. Strict:
+    /// a format or version mismatch, or any malformed entry, rejects the
+    /// whole file (see the type docs for the invalidation rules). Returns
+    /// the number of entries merged.
+    pub fn merge_json(&self, doc: &Json) -> Result<usize, String> {
+        let format = doc
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or("cache file has no format marker")?;
+        if format != Self::PERSIST_FORMAT {
+            return Err(format!("not an estimator cache file (format {format:?})"));
+        }
+        let version = doc
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("cache file has no version")?;
+        if version != Self::PERSIST_VERSION as f64 {
+            return Err(format!(
+                "estimator cache version {version} is not the supported version {}",
+                Self::PERSIST_VERSION
+            ));
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("cache file has no entries array")?;
+        // Two phases — validate everything, then store — so a file that
+        // fails on its N-th entry is rejected wholesale, never partially
+        // merged.
+        let mut validated: Vec<(CacheKey, P99Knowledge)> = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let fail = |what: &str| format!("cache entry {i}: {what}");
+            let fp_str =
+                e.get("fp").and_then(Json::as_str).ok_or_else(|| fail("missing fingerprint"))?;
+            if fp_str.len() != 16 {
+                return Err(fail("fingerprint is not 16 hex digits"));
+            }
+            let fp = u64::from_str_radix(fp_str, 16).map_err(|_| fail("bad fingerprint"))?;
+            let config =
+                e.get("config").and_then(Json::as_arr).ok_or_else(|| fail("missing config"))?;
+            let mut stages = Vec::with_capacity(config.len());
+            for s in config {
+                let triple = s
+                    .as_arr()
+                    .filter(|a| a.len() == 3)
+                    .ok_or_else(|| fail("stage is not an [hw, batch, replicas] triple"))?;
+                let mut nums = [0u32; 3];
+                for (j, v) in triple.iter().enumerate() {
+                    let x = v.as_f64().ok_or_else(|| fail("non-numeric stage field"))?;
+                    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                        return Err(fail("stage field out of range"));
+                    }
+                    nums[j] = x as u32;
+                }
+                if nums[0] as usize >= crate::hardware::Hardware::ALL.len() {
+                    return Err(fail("unknown hardware tier"));
+                }
+                if nums[1] == 0 || nums[2] == 0 {
+                    return Err(fail("zero batch or replicas"));
+                }
+                stages.push((nums[0] as u8, nums[1], nums[2]));
+            }
+            let finite = |key: &str| -> Result<Option<f64>, String> {
+                match e.get(key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let x = v.as_f64().ok_or_else(|| fail("non-numeric value"))?;
+                        if !x.is_finite() {
+                            return Err(fail("non-finite value"));
+                        }
+                        Ok(Some(x))
+                    }
+                }
+            };
+            let diverges = match e.get("diverges") {
+                None => false,
+                Some(v) => v.as_bool().ok_or_else(|| fail("non-boolean diverges flag"))?,
+            };
+            let val = match (diverges, finite("exact")?, finite("above")?, finite("at_most")?) {
+                (true, None, None, None) => P99Knowledge::above(f64::INFINITY),
+                (false, Some(p), None, None) => P99Knowledge::Exact(p),
+                (false, None, above, at_most) if above.is_some() || at_most.is_some() => {
+                    P99Knowledge::Bounded {
+                        above: above.unwrap_or(f64::NEG_INFINITY),
+                        at_most: at_most.unwrap_or(f64::INFINITY),
+                    }
+                }
+                _ => return Err(fail("entry carries no usable knowledge")),
+            };
+            validated.push(((fp, stages), val));
+        }
+        let n = validated.len();
+        for (key, val) in validated {
+            self.store(key, val);
+        }
+        Ok(n)
+    }
+
+    /// Write the persistable entries to `path` (creating parent
+    /// directories as needed). Returns the number of entries written.
+    pub fn save(&self, path: &Path) -> Result<usize, String> {
+        let doc = self.to_json();
+        let n = doc.get("entries").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("create {}: {e}", parent.display()))?;
+            }
+        }
+        // Atomic publish: write a per-process sibling temp file, then
+        // rename over the target. A concurrent reader (or a writer killed
+        // mid-save) must never see a torn file — `load_from` rejects
+        // partial JSON wholesale, which would silently turn every
+        // subsequent warm start cold.
+        let tmp = path.with_file_name(format!(
+            "{}.tmp.{}",
+            path.file_name().and_then(|f| f.to_str()).unwrap_or("estimator_cache"),
+            std::process::id()
+        ));
+        std::fs::write(&tmp, format!("{doc}\n"))
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+        Ok(n)
+    }
+
+    /// Merge a persisted cache file into this cache; see
+    /// [`merge_json`](Self::merge_json) for the (strict) validation.
+    /// Returns the number of entries merged.
+    pub fn load_from(&self, path: &Path) -> Result<usize, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let doc =
+            Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        self.merge_json(&doc)
+    }
 }
 
 /// Per-planner feasibility counters behind `&self` (candidate evaluation
@@ -426,15 +704,17 @@ struct SearchCounters {
     misses: AtomicUsize,
     pruned: AtomicUsize,
     early_aborts: AtomicUsize,
+    early_accepts: AtomicUsize,
 }
 
 impl SearchCounters {
-    fn snapshot(&self) -> (usize, usize, usize, usize) {
+    fn snapshot(&self) -> (usize, usize, usize, usize, usize) {
         (
             self.hits.load(Ordering::Relaxed),
             self.misses.load(Ordering::Relaxed),
             self.pruned.load(Ordering::Relaxed),
             self.early_aborts.load(Ordering::Relaxed),
+            self.early_accepts.load(Ordering::Relaxed),
         )
     }
 }
@@ -526,7 +806,7 @@ impl<'a> Planner<'a> {
         if !simulator::throughput_bound_ok(self.spec, self.profiles, config, trace.mean_rate()) {
             self.counters.pruned.fetch_add(1, Ordering::Relaxed);
             // Diverging queues miss any latency target.
-            self.cache.store(key, P99Knowledge::Above(f64::INFINITY));
+            self.cache.store(key, P99Knowledge::above(f64::INFINITY));
             return false;
         }
         if self.fast_path {
@@ -543,9 +823,13 @@ impl<'a> Planner<'a> {
             );
             match check.p99 {
                 Some(p99) => self.cache.store(key, P99Knowledge::Exact(p99)),
-                None => {
+                None if check.aborted => {
                     self.counters.early_aborts.fetch_add(1, Ordering::Relaxed);
-                    self.cache.store(key, P99Knowledge::Above(slo));
+                    self.cache.store(key, P99Knowledge::above(slo));
+                }
+                None => {
+                    self.counters.early_accepts.fetch_add(1, Ordering::Relaxed);
+                    self.cache.store(key, P99Knowledge::at_most(slo));
                 }
             }
             check.feasible
@@ -558,8 +842,9 @@ impl<'a> Planner<'a> {
     }
 
     /// The Estimator P99 of a configuration, answered from an exact cache
-    /// entry when one exists (any feasible-verdict entry is exact) and
-    /// computed by a full simulation otherwise. Deterministic either way.
+    /// entry when one exists (bounded entries — aborted or fast-accepted
+    /// runs — know only an interval) and computed by a full simulation
+    /// otherwise. Deterministic either way.
     fn estimated_p99_fp(&self, fp: u64, config: &PipelineConfig, trace: &Trace) -> f64 {
         let key = cache_key(fp, config);
         if let Some(P99Knowledge::Exact(p99)) = self.cache.peek(&key) {
@@ -737,6 +1022,7 @@ impl<'a> Planner<'a> {
                 cache_misses: t1.1 - t0.1,
                 pruned: t1.2 - t0.2,
                 early_aborts: t1.3 - t0.3,
+                early_accepts: t1.4 - t0.4,
                 threads: self.threads,
             },
         })

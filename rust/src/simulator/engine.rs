@@ -175,6 +175,10 @@ struct QueryState {
     visited: u32,
     /// Stage completions still outstanding.
     remaining: u8,
+    /// Budgeted runs only: this query was already counted as a guaranteed
+    /// SLO hit at dispatch time (its final batch was in flight with a
+    /// known completion time), so completion must not count it again.
+    hit_counted: bool,
 }
 
 /// Early-abort budget for feasibility simulations: the SLO the run is
@@ -183,13 +187,38 @@ struct AbortBudget {
     slo: f64,
 }
 
-/// In-flight bookkeeping for a budgeted run. `misses` counts *guaranteed*
-/// misses: completed queries over the SLO plus in-flight queries already
-/// older than the SLO (their latency can only grow). Once `misses`
-/// reaches `threshold`, the sorted latency vector provably has its
-/// interpolated P99 above the SLO no matter how the remaining queries
-/// finish, so the simulation may abort with an infeasible verdict that is
-/// bit-identical to the full run's.
+/// How a budgeted feasibility simulation ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetVerdict {
+    /// The whole trace was simulated: the exact latency vector (and hence
+    /// the exact P99) is available.
+    Completed,
+    /// Early abort: enough queries were *guaranteed* to miss the SLO that
+    /// P99 > SLO was already proven.
+    ProvedInfeasible,
+    /// Early accept: enough queries had *provably met* the SLO that
+    /// P99 <= SLO was already proven.
+    ProvedFeasible,
+}
+
+/// In-flight bookkeeping for a budgeted run, symmetric in both verdicts.
+///
+/// `misses` counts *guaranteed* misses: completed queries over the SLO
+/// plus in-flight queries already older than the SLO (their latency can
+/// only grow). Once `misses` reaches `threshold`, the sorted latency
+/// vector provably has its interpolated P99 above the SLO no matter how
+/// the remaining queries finish.
+///
+/// `hits` counts *guaranteed* hits: completed queries at or under the SLO
+/// plus in-flight queries in their final batch whose (already scheduled,
+/// never cancelled in open loop) completion time keeps them under it.
+/// Once `hits` reaches `accept_threshold`, P99 <= SLO is certain even if
+/// every remaining query misses.
+///
+/// Either way the simulation may stop with a verdict bit-identical to the
+/// full run's; the two conditions are mutually exclusive (a query is
+/// counted in at most one of the two tallies, and each threshold claims
+/// more than the leftover after the other fires).
 struct BudgetState {
     slo: f64,
     /// Guaranteed-miss count proving P99 > SLO: with `n` trace queries
@@ -203,21 +232,42 @@ struct BudgetState {
     /// Arrival-order cursor for the deadline sweep: every query below it
     /// has either completed or been counted as a guaranteed miss.
     deadline_idx: usize,
+    /// Guaranteed-hit count proving P99 <= SLO: the clamped interpolated
+    /// quantile satisfies P99 <= sorted[ceil(pos)] bit-exactly (the same
+    /// clamp the abort bound leans on, from the other side), and hits
+    /// sort below every non-hit, so `ceil(pos) + 1` of them pin
+    /// sorted[ceil(pos)] at or under the SLO no matter how the remaining
+    /// queries finish — including queries that have not even arrived yet
+    /// when the accept fires (the threshold is derived from the *full*
+    /// trace length, never from completions so far).
+    accept_threshold: usize,
+    hits: usize,
 }
 
 impl BudgetState {
     fn new(budget: AbortBudget, n_queries: usize) -> Self {
-        let lo = if n_queries == 0 {
-            0
+        let (lo, hi) = if n_queries == 0 {
+            (0, 0)
         } else {
-            (0.99 * (n_queries - 1) as f64).floor() as usize
+            let pos = 0.99 * (n_queries - 1) as f64;
+            (pos.floor() as usize, pos.ceil() as usize)
         };
         BudgetState {
             slo: budget.slo,
             threshold: (n_queries - lo).max(1),
             misses: 0,
             deadline_idx: 0,
+            // An empty trace must never accept: its full-run P99 is NaN,
+            // which compares infeasible at every SLO.
+            accept_threshold: if n_queries == 0 { usize::MAX } else { hi + 1 },
+            hits: 0,
         }
+    }
+
+    /// Count one guaranteed hit; returns true once P99 <= SLO is proven.
+    fn count_hit(&mut self) -> bool {
+        self.hits += 1;
+        self.hits >= self.accept_threshold
     }
 }
 
@@ -236,9 +286,10 @@ pub(super) struct Engine<'a> {
     /// Free list of batch qid buffers (perf: recycles the per-batch Vec;
     /// one allocation per *concurrent* batch instead of per batch).
     qid_pool: Vec<Vec<u32>>,
-    /// Early-abort accounting for budgeted feasibility runs.
+    /// Early-abort / fast-accept accounting for budgeted feasibility runs.
     budget: Option<BudgetState>,
     aborted: bool,
+    accepted: bool,
     result: SimResult,
     // Cost accounting (controlled mode).
     last_cost_time: f64,
@@ -293,6 +344,7 @@ impl<'a> Engine<'a> {
             qid_pool: Vec::new(),
             budget: None,
             aborted: false,
+            accepted: false,
             result: SimResult {
                 latencies: Vec::new(),
                 completions: Vec::new(),
@@ -331,7 +383,12 @@ impl<'a> Engine<'a> {
             .visits
             .iter()
             .zip(&trace.arrivals)
-            .map(|(&(visited, remaining), &arrival)| QueryState { arrival, visited, remaining })
+            .map(|(&(visited, remaining), &arrival)| QueryState {
+                arrival,
+                visited,
+                remaining,
+                hit_counted: false,
+            })
             .collect();
         self.result.latencies.reserve(trace.len());
         self.result.completions.reserve(trace.len());
@@ -387,7 +444,27 @@ impl<'a> Engine<'a> {
             st.stats.queries += n;
             st.batch_size_sum += n;
             st.stats.busy_time += latency;
-            self.push(now + latency, EventKind::BatchDone { stage: stage as u16, qids });
+            let done = now + latency;
+            if let Some(b) = &mut self.budget {
+                // Fast-accept in-flight sweep: a query whose *final*
+                // outstanding visit is in this batch completes exactly at
+                // `done` (open-loop batches are never cancelled), so its
+                // latency is already decided. `done - arrival` is the
+                // *same* float expression the completion path evaluates
+                // at the BatchDone event (whose time is this very `done`
+                // value), so counting it now as a guaranteed hit is
+                // bit-exact, not just sound in real arithmetic.
+                for &qid in &qids {
+                    let q = &mut self.queries[qid as usize];
+                    if q.remaining == 1 && !q.hit_counted && done - q.arrival <= b.slo {
+                        q.hit_counted = true;
+                        if b.count_hit() {
+                            self.accepted = true;
+                        }
+                    }
+                }
+            }
+            self.push(done, EventKind::BatchDone { stage: stage as u16, qids });
         }
     }
 
@@ -409,14 +486,20 @@ impl<'a> Engine<'a> {
         q.remaining -= 1;
         if q.remaining == 0 {
             let latency = now - q.arrival;
+            let hit_counted = q.hit_counted;
             self.result.latencies.push(latency);
             self.result.completions.push((now, latency));
-            if let Some(b) = &self.budget {
-                // No counting here: the deadline sweep at this same `now`
-                // already counted every miss — `latency > slo` is exactly
-                // its `now - arrival > slo` condition, and deadlines are
-                // sorted, so the cursor is provably past `qid`.
+            if let Some(b) = &mut self.budget {
+                // No *miss* counting here: the deadline sweep at this same
+                // `now` already counted every miss — `latency > slo` is
+                // exactly its `now - arrival > slo` condition, and
+                // deadlines are sorted, so the cursor is provably past
+                // `qid`. Hits are tallied here (unless the dispatch-time
+                // sweep already claimed this query).
                 debug_assert!(latency <= b.slo || (qid as usize) < b.deadline_idx);
+                if latency <= b.slo && !hit_counted && b.count_hit() {
+                    self.accepted = true;
+                }
             }
         }
     }
@@ -524,9 +607,9 @@ impl<'a> Engine<'a> {
     }
 
     /// Full-control entry point: optional shared routing plan, optional
-    /// early-abort budget. Returns the (possibly partial) result and
-    /// whether the run aborted. Budgets are only meaningful open-loop
-    /// (feasibility checks); controlled runs pass `None`.
+    /// early-abort/fast-accept budget. Returns the (possibly partial)
+    /// result and the budget verdict. Budgets are only meaningful
+    /// open-loop (feasibility checks); controlled runs pass `None`.
     fn run_ext(
         mut self,
         trace: &Trace,
@@ -534,7 +617,7 @@ impl<'a> Engine<'a> {
         mut controller: Option<&mut dyn Controller>,
         routing: Option<&RoutingPlan>,
         budget: Option<AbortBudget>,
-    ) -> (SimResult, bool) {
+    ) -> (SimResult, BudgetVerdict) {
         debug_assert!(
             budget.is_none() || controller.is_none(),
             "abort budgets are for open-loop feasibility runs"
@@ -567,7 +650,7 @@ impl<'a> Engine<'a> {
             if take_arrival {
                 let now = arrival_time.unwrap();
                 self.sweep_deadlines(&trace.arrivals, now);
-                if self.aborted {
+                if self.aborted || self.accepted {
                     break;
                 }
                 let qid = next_arrival as u32;
@@ -585,7 +668,7 @@ impl<'a> Engine<'a> {
             let ev = self.events.pop().unwrap();
             let now = ev.time;
             self.sweep_deadlines(&trace.arrivals, now);
-            if self.aborted {
+            if self.aborted || self.accepted {
                 break;
             }
             match ev.kind {
@@ -677,8 +760,18 @@ impl<'a> Engine<'a> {
                 st
             })
             .collect();
-        let aborted = self.aborted;
-        (self.result, aborted)
+        // A query lands in at most one of the two tallies (a counted hit
+        // can never age past the deadline before its scheduled completion
+        // event is processed), so the two thresholds cannot both be met.
+        debug_assert!(!(self.aborted && self.accepted), "contradictory budget verdicts");
+        let verdict = if self.aborted {
+            BudgetVerdict::ProvedInfeasible
+        } else if self.accepted {
+            BudgetVerdict::ProvedFeasible
+        } else {
+            BudgetVerdict::Completed
+        };
+        (self.result, verdict)
     }
 }
 
@@ -714,11 +807,16 @@ pub fn simulate_with_routing(
     result
 }
 
-/// Budgeted open-loop simulation for feasibility checks: aborts as soon
-/// as enough queries are *guaranteed* to miss the SLO that the final P99
-/// provably exceeds it (see `BudgetState` for the exact bound). Returns
-/// the (partial, when aborted) result and the abort flag. A non-aborted
-/// run is bit-identical to [`simulate`].
+/// Budgeted open-loop simulation for feasibility checks, symmetric in
+/// both directions: stops as soon as enough queries are *guaranteed* to
+/// miss the SLO that the final P99 provably exceeds it, or as soon as
+/// enough queries have *provably met* it that P99 <= SLO is certain even
+/// if every remaining query misses (see `BudgetState` for the exact
+/// bounds; both lean on the clamped interpolated-quantile definition of
+/// `util::stats::quantile`). Returns the (partial, when stopped early)
+/// result and the [`BudgetVerdict`]. A `Completed` run is bit-identical
+/// to [`simulate`], and either proof agrees bit-exactly with the verdict
+/// the full run's `p99 <= slo` comparison would reach.
 pub fn simulate_budgeted(
     spec: &PipelineSpec,
     profiles: &ProfileSet,
@@ -727,8 +825,8 @@ pub fn simulate_budgeted(
     slo: f64,
     params: &SimParams,
     routing: Option<&RoutingPlan>,
-) -> (SimResult, bool) {
-    let (mut result, aborted) = Engine::new(spec, profiles, config, params).run_ext(
+) -> (SimResult, BudgetVerdict) {
+    let (mut result, verdict) = Engine::new(spec, profiles, config, params).run_ext(
         trace,
         config,
         None,
@@ -736,5 +834,5 @@ pub fn simulate_budgeted(
         Some(AbortBudget { slo }),
     );
     result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
-    (result, aborted)
+    (result, verdict)
 }

@@ -30,18 +30,27 @@
 //!   and shared (`Arc`) across every candidate simulation and worker
 //!   thread, instead of re-forking the per-query RNG for each of the
 //!   hundreds of `feasible()` calls in an Algorithm-2 search.
-//! * **Early-abort feasibility** ([`check_feasible`]): feasibility only
-//!   needs the sign of `P99 − SLO`, not the exact P99. The budgeted
-//!   simulation counts *guaranteed* misses — completed queries over the
-//!   SLO plus in-flight queries already older than the SLO (the
-//!   queue-divergence bailout: when a stage's queues grow without bound,
-//!   queries age past the SLO immediately and the count explodes) — and
-//!   aborts the moment the count provably pushes the interpolated P99
-//!   over the SLO (just over 1% of the trace). Hopeless candidates cost a
-//!   fraction of the horizon; decisions are bit-identical to the
-//!   unbudgeted path ([`feasible_unbudgeted`]). Configurations whose mean
-//!   throughput cannot cover the arrival rate at all are rejected even
-//!   earlier, before any simulation, by [`throughput_bound_ok`].
+//! * **Early-abort / fast-accept feasibility** ([`check_feasible`]):
+//!   feasibility only needs the sign of `P99 − SLO`, not the exact P99.
+//!   The budgeted simulation runs two symmetric tallies. It counts
+//!   *guaranteed* misses — completed queries over the SLO plus in-flight
+//!   queries already older than the SLO (the queue-divergence bailout:
+//!   when a stage's queues grow without bound, queries age past the SLO
+//!   immediately and the count explodes) — and aborts the moment the
+//!   count provably pushes the interpolated P99 over the SLO (just over
+//!   1% of the trace). Symmetrically it counts *guaranteed* hits —
+//!   completed queries at or under the SLO plus in-flight queries whose
+//!   final batch is already scheduled to finish under it — and accepts
+//!   the moment P99 <= SLO is certain even if every remaining query
+//!   misses, skipping the tail of the trace, the backlog drain after the
+//!   last arrival, and the final P99 selection. Both proofs lean on the
+//!   *clamped* interpolated quantile (`sorted[floor(pos)] <= P99 <=
+//!   sorted[ceil(pos)]` holds bit-exactly), so decisions are
+//!   bit-identical to the unbudgeted path ([`feasible_unbudgeted`]) —
+//!   locked down by `tests/feasibility_conformance.rs`. Configurations
+//!   whose mean throughput cannot cover the arrival rate at all are
+//!   rejected even earlier, before any simulation, by
+//!   [`throughput_bound_ok`].
 //! * **O(n) quantiles**: P99 extraction uses `select_nth_unstable`-based
 //!   selection (`util::stats::quantile_in_place`) instead of sorting the
 //!   whole latency vector.
@@ -51,7 +60,8 @@ mod engine;
 mod routing;
 
 pub use engine::{
-    simulate, simulate_budgeted, simulate_with_routing, SimParams, SimResult, StageStats,
+    simulate, simulate_budgeted, simulate_with_routing, BudgetVerdict, SimParams, SimResult,
+    StageStats,
 };
 pub use routing::RoutingPlan;
 
@@ -104,15 +114,20 @@ pub struct FeasibilityCheck {
     /// True when the simulation early-aborted: enough queries were
     /// guaranteed to miss that P99 > SLO was already proven.
     pub aborted: bool,
+    /// True when the simulation early-accepted: enough queries had
+    /// provably met the SLO that P99 <= SLO was already proven.
+    pub accepted: bool,
     /// The exact Estimator P99 — available only when the simulation ran
-    /// to completion (aborted runs know just the sign of `P99 − SLO`).
+    /// to completion (aborted and accepted runs know just the sign of
+    /// `P99 − SLO`).
     pub p99: Option<f64>,
 }
 
-/// Budgeted feasibility check: simulate with the early-abort budget and
-/// an optional shared routing plan. The decision is bit-identical to
-/// [`feasible_unbudgeted`] minus the analytic throughput prune, which the
-/// caller is expected to apply first (as [`feasible`] does).
+/// Budgeted feasibility check: simulate with the symmetric early-abort /
+/// fast-accept budget and an optional shared routing plan. The decision
+/// is bit-identical to [`feasible_unbudgeted`] minus the analytic
+/// throughput prune, which the caller is expected to apply first (as
+/// [`feasible`] does).
 pub fn check_feasible(
     spec: &PipelineSpec,
     profiles: &ProfileSet,
@@ -122,13 +137,24 @@ pub fn check_feasible(
     params: &SimParams,
     routing: Option<&RoutingPlan>,
 ) -> FeasibilityCheck {
-    let (mut result, aborted) =
+    let (mut result, verdict) =
         simulate_budgeted(spec, profiles, config, trace, slo, params, routing);
-    if aborted {
-        FeasibilityCheck { feasible: false, aborted: true, p99: None }
-    } else {
-        let p99 = stats::p99_in_place(&mut result.latencies);
-        FeasibilityCheck { feasible: p99 <= slo, aborted: false, p99: Some(p99) }
+    match verdict {
+        BudgetVerdict::ProvedInfeasible => {
+            FeasibilityCheck { feasible: false, aborted: true, accepted: false, p99: None }
+        }
+        BudgetVerdict::ProvedFeasible => {
+            FeasibilityCheck { feasible: true, aborted: false, accepted: true, p99: None }
+        }
+        BudgetVerdict::Completed => {
+            let p99 = stats::p99_in_place(&mut result.latencies);
+            FeasibilityCheck {
+                feasible: p99 <= slo,
+                aborted: false,
+                accepted: false,
+                p99: Some(p99),
+            }
+        }
     }
 }
 

@@ -1,0 +1,215 @@
+//! Persistence tests for the cross-process [`EstimatorCache`]:
+//! save → load → plan must be bit-identical to a cold run; corrupted,
+//! version-mismatched, or otherwise malformed cache files must be
+//! rejected wholesale (never silently trusted); foreign-fingerprint
+//! entries must be inert; and concurrent sweep shards sharing one warm
+//! cache must not drift.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use inferline::config::pipelines;
+use inferline::experiments::{sweep_grid, sweep_grid_with_cache};
+use inferline::planner::{EstimatorCache, Planner};
+use inferline::profiler::analytic::paper_profiles;
+use inferline::util::json::Json;
+use inferline::workload::gamma_trace;
+
+/// A per-test scratch file under the target dir (kept unique so the
+/// test binary's threads don't collide).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("inferline-cache-tests");
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+#[test]
+fn save_load_plan_is_bit_identical_to_cold() {
+    let spec = pipelines::social_media();
+    let profiles = paper_profiles();
+    let trace = gamma_trace(110.0, 1.0, 25.0, 17);
+    let slo = 0.3;
+    let path = scratch("roundtrip.json");
+
+    let cold_cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    let cold = Planner::new(&spec, &profiles)
+        .with_shared_cache(cold_cache.clone())
+        .plan(&trace, slo)
+        .unwrap();
+    let saved = cold_cache.save(&path).unwrap();
+    assert!(saved > 0, "search must persist entries");
+
+    let warm_cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    let loaded = warm_cache.load_from(&path).unwrap();
+    assert_eq!(loaded, saved, "every persisted entry loads");
+    let warm = Planner::new(&spec, &profiles)
+        .with_shared_cache(warm_cache)
+        .plan(&trace, slo)
+        .unwrap();
+
+    assert_eq!(warm.config, cold.config);
+    assert_eq!(warm.actions_taken, cold.actions_taken);
+    assert_eq!(warm.iterations, cold.iterations);
+    assert_eq!(warm.cost_per_hour.to_bits(), cold.cost_per_hour.to_bits());
+    assert_eq!(warm.estimated_p99.to_bits(), cold.estimated_p99.to_bits());
+    // The warm planner answers (nearly) everything from the loaded file.
+    assert!(
+        warm.telemetry.hit_rate() > 0.9,
+        "warm-start hit rate {} too low",
+        warm.telemetry.hit_rate()
+    );
+    assert!(warm.telemetry.cache_hits > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serialization_is_canonical_and_roundtrips() {
+    let spec = pipelines::image_processing();
+    let profiles = paper_profiles();
+    let trace = gamma_trace(90.0, 1.0, 20.0, 5);
+    let cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    Planner::new(&spec, &profiles)
+        .with_shared_cache(cache.clone())
+        .plan(&trace, 0.25)
+        .unwrap();
+    let doc = cache.to_json();
+    let text = doc.to_string();
+    // Parse → merge into a fresh cache → re-serialize: byte-identical
+    // (floats round-trip exactly; entries are key-sorted).
+    let reparsed = Json::parse(&text).unwrap();
+    let fresh = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    let n = fresh.merge_json(&reparsed).unwrap();
+    assert!(n > 0);
+    assert_eq!(fresh.to_json().to_string(), text, "canonical bytes must be stable");
+}
+
+#[test]
+fn corrupt_and_mismatched_files_are_rejected() {
+    let cache = EstimatorCache::shared(64);
+    let path = scratch("bad.json");
+
+    // Unreadable: no such file.
+    let missing = scratch("does-not-exist.json");
+    let _ = std::fs::remove_file(&missing);
+    assert!(cache.load_from(&missing).is_err());
+
+    // Unparsable garbage.
+    std::fs::write(&path, "{not json at all").unwrap();
+    assert!(cache.load_from(&path).unwrap_err().contains("parse"));
+
+    // Valid JSON, wrong format marker.
+    std::fs::write(&path, r#"{"format":"something-else","version":1,"entries":[]}"#).unwrap();
+    assert!(cache.load_from(&path).unwrap_err().contains("format"));
+
+    // Version from the future must be rejected, not silently trusted.
+    std::fs::write(
+        &path,
+        r#"{"format":"inferline-estimator-cache","version":999,"entries":[]}"#,
+    )
+    .unwrap();
+    assert!(cache.load_from(&path).unwrap_err().contains("version"));
+
+    // Malformed entries reject the whole file: bad fingerprint, unknown
+    // hardware tier, zero replicas, non-finite value, no knowledge.
+    for entry in [
+        r#"{"fp":"xyz","config":[[0,1,1]],"exact":0.1}"#,
+        r#"{"fp":"00000000000000ab","config":[[9,1,1]],"exact":0.1}"#,
+        r#"{"fp":"00000000000000ab","config":[[0,1,0]],"exact":0.1}"#,
+        r#"{"fp":"00000000000000ab","config":[[0,1,1]],"exact":"oops"}"#,
+        r#"{"fp":"00000000000000ab","config":[[0,1,1]]}"#,
+    ] {
+        let text = format!(
+            r#"{{"format":"inferline-estimator-cache","version":1,"entries":[{entry}]}}"#
+        );
+        std::fs::write(&path, &text).unwrap();
+        assert!(cache.load_from(&path).is_err(), "accepted malformed entry {entry}");
+    }
+
+    // A partially bad file must not be partially merged.
+    let good = r#"{"fp":"00000000000000ab","config":[[0,1,1]],"exact":0.1}"#;
+    let bad = r#"{"fp":"short","config":[[0,1,1]],"exact":0.1}"#;
+    let text = format!(
+        r#"{{"format":"inferline-estimator-cache","version":1,"entries":[{good},{bad}]}}"#
+    );
+    std::fs::write(&path, &text).unwrap();
+    assert!(cache.load_from(&path).is_err());
+    assert!(cache.is_empty(), "rejected file leaked entries into the cache");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn foreign_fingerprint_cache_is_inert() {
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let other_spec = pipelines::tf_cascade();
+    let other_trace = gamma_trace(140.0, 2.0, 25.0, 99);
+    let path = scratch("foreign.json");
+
+    // Persist knowledge from a completely different planning context.
+    let foreign = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    Planner::new(&other_spec, &profiles)
+        .with_shared_cache(foreign.clone())
+        .plan(&other_trace, 0.4)
+        .unwrap();
+    foreign.save(&path).unwrap();
+
+    // Loading it is fine — and changes nothing about this context's plan.
+    // Serial planners: cache-telemetry counts are only deterministic
+    // without candidate-evaluation races.
+    let trace = gamma_trace(90.0, 1.0, 20.0, 3);
+    let warm_cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    assert!(warm_cache.load_from(&path).unwrap() > 0);
+    let warm = Planner::serial(&spec, &profiles)
+        .with_shared_cache(warm_cache)
+        .plan(&trace, 0.25)
+        .unwrap();
+    let cold = Planner::serial(&spec, &profiles).plan(&trace, 0.25).unwrap();
+    assert_eq!(warm.config, cold.config);
+    assert_eq!(warm.actions_taken, cold.actions_taken);
+    assert_eq!(warm.estimated_p99.to_bits(), cold.estimated_p99.to_bits());
+    // Foreign entries can never answer this context's queries.
+    assert_eq!(warm.telemetry.cache_hits, cold.telemetry.cache_hits);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn concurrent_sweep_shards_share_warm_cache_without_drift() {
+    let lambdas = [60.0, 120.0];
+    let cvs = [1.0];
+    let slos = [0.2, 0.35];
+    let path = scratch("sweep.json");
+
+    // Cold reference sweep, persisting its cache.
+    let cache = EstimatorCache::shared(1 << 16);
+    let cold = sweep_grid_with_cache(&lambdas, &cvs, &slos, 20.0, Arc::clone(&cache));
+    cache.save(&path).unwrap();
+
+    // Warm sweep: every parallel shard shares the one loaded cache.
+    let warm_cache = EstimatorCache::shared(1 << 16);
+    assert!(warm_cache.load_from(&path).unwrap() > 0);
+    let warm = sweep_grid_with_cache(&lambdas, &cvs, &slos, 20.0, warm_cache);
+
+    // And an entirely cache-free reference.
+    let plain = sweep_grid(&lambdas, &cvs, &slos, 20.0);
+
+    assert_eq!(cold.len(), warm.len());
+    assert_eq!(plain.len(), warm.len());
+    for ((a, b), c) in cold.iter().zip(&warm).zip(&plain) {
+        assert_eq!(a.pipeline, b.pipeline);
+        match (&a.outcome, &b.outcome, &c.outcome) {
+            (Ok(x), Ok(y), Ok(z)) => {
+                assert_eq!(x.cost_per_hour.to_bits(), y.cost_per_hour.to_bits());
+                assert_eq!(x.cost_per_hour.to_bits(), z.cost_per_hour.to_bits());
+                assert_eq!(x.estimated_p99.to_bits(), y.estimated_p99.to_bits());
+                assert_eq!(x.iterations, y.iterations);
+                assert_eq!(x.total_replicas, y.total_replicas);
+            }
+            (Err(x), Err(y), Err(z)) => {
+                assert_eq!(x, y);
+                assert_eq!(x, z);
+            }
+            _ => panic!("warm/cold outcome mismatch for {}", a.pipeline),
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}

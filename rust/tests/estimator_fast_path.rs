@@ -127,9 +127,104 @@ fn budgeted_sim_aborts_early_on_mass_misses() {
     // 1 ms SLO is below the batch-1 service path: every query misses.
     let check = simulator::check_feasible(&spec, &profiles, &config, &trace, 0.001, &params, None);
     assert!(check.aborted, "expected an early abort");
+    assert!(!check.accepted);
     assert!(!check.feasible);
     assert!(check.p99.is_none(), "aborted runs know only the sign of P99 - SLO");
     assert!(!simulator::feasible_unbudgeted(&spec, &profiles, &config, &trace, 0.001, &params));
+}
+
+/// The symmetric case: a clearly feasible configuration at a loose SLO
+/// fast-accepts without simulating the whole trace, and the verdict
+/// matches the full simulation.
+#[test]
+fn budgeted_sim_accepts_early_on_feasible_config() {
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let params = SimParams::default();
+    let trace = gamma_trace(100.0, 1.0, 60.0, 9);
+    let planner = Planner::new(&spec, &profiles);
+    // Feasible at 250 ms and then over-provisioned further, checked
+    // against a 1 s SLO: every query hits comfortably.
+    let mut config = planner.initialize(&trace, 0.25).unwrap();
+    for s in &mut config.stages {
+        s.replicas += 2;
+    }
+    let check = simulator::check_feasible(&spec, &profiles, &config, &trace, 1.0, &params, None);
+    assert!(check.accepted, "expected a fast accept");
+    assert!(!check.aborted);
+    assert!(check.feasible);
+    assert!(check.p99.is_none(), "accepted runs know only the sign of P99 - SLO");
+    assert!(simulator::feasible_unbudgeted(&spec, &profiles, &config, &trace, 1.0, &params));
+}
+
+/// Loose-SLO searches actually exercise the fast-accept path (telemetry).
+#[test]
+fn searches_report_early_accepts() {
+    let profiles = paper_profiles();
+    let mut total_accepts = 0usize;
+    for spec in pipelines::all() {
+        let trace = gamma_trace(120.0, 1.0, 30.0, 12);
+        if let Ok(plan) = Planner::new(&spec, &profiles).plan(&trace, 0.5) {
+            total_accepts += plan.telemetry.early_accepts;
+        }
+    }
+    assert!(total_accepts > 0, "no search fast-accepted a single feasible candidate");
+}
+
+/// Regression for the late-arrival bug class around both budget proofs:
+/// the thresholds must come from the *full* trace length, so stragglers
+/// that only arrive after the decision point can never flip a verdict.
+/// An accept implementation that reasoned about "completions so far"
+/// would accept the burst-only prefix here and then be contradicted by
+/// the straggler cohort, whose every query misses.
+#[test]
+fn straggler_misses_after_accept_window_block_the_accept() {
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let params = SimParams::default();
+    // 2000-query burst the config digests comfortably, then 100
+    // stragglers arriving in an instantaneous spike 60 s later: the spike
+    // queues far past the 300 ms SLO on a single replica chain, dragging
+    // the full-trace P99 (position ~0.99 * 2099) into the misses.
+    let mut arrivals: Vec<f64> = (0..2000).map(|i| i as f64 * 0.02).collect();
+    arrivals.extend((0..100).map(|_| 100.0));
+    let trace = Trace::new(arrivals);
+    let planner = Planner::new(&spec, &profiles);
+    let config = planner.initialize(&gamma_trace(50.0, 1.0, 30.0, 8), 0.3).unwrap();
+    let slo = 0.3;
+    let check = simulator::check_feasible(&spec, &profiles, &config, &trace, slo, &params, None);
+    let reference = simulator::estimate_p99(&spec, &profiles, &config, &trace, &params) <= slo;
+    assert_eq!(check.feasible, reference, "straggler cohort flipped the verdict");
+    assert!(
+        !check.accepted || reference,
+        "fast-accept fired on a trace the full simulation rejects"
+    );
+}
+
+/// The abort-side twin: an overloaded burst proves infeasibility before
+/// a straggler cohort (which would all hit) arrives — the early decision
+/// must match the full simulation that does serve the stragglers.
+#[test]
+fn straggler_hits_after_abort_window_do_not_unabort() {
+    let profiles = paper_profiles();
+    let spec = pipelines::image_processing();
+    let params = SimParams::default();
+    // 400-query instantaneous spike (hopeless on this config at 50 ms),
+    // then 4000 easy stragglers: 99% of the trace hits, but position
+    // 0.99 * 4399 lands inside the 400 spike misses.
+    let mut arrivals: Vec<f64> = vec![0.0; 400];
+    arrivals.extend((0..4000).map(|i| 120.0 + i as f64 * 0.05));
+    let trace = Trace::new(arrivals);
+    let planner = Planner::new(&spec, &profiles);
+    let config = planner.initialize(&gamma_trace(50.0, 1.0, 30.0, 8), 0.3).unwrap();
+    let slo = 0.05;
+    let check = simulator::check_feasible(&spec, &profiles, &config, &trace, slo, &params, None);
+    let full_p99 = simulator::estimate_p99(&spec, &profiles, &config, &trace, &params);
+    assert_eq!(check.feasible, full_p99 <= slo, "straggler cohort flipped the verdict");
+    assert!(
+        !check.aborted || full_p99 > slo,
+        "early-abort fired on a trace the full simulation accepts"
+    );
 }
 
 /// Tight-SLO searches actually exercise the early-abort path (telemetry).

@@ -1,0 +1,206 @@
+//! Differential conformance suite for the budgeted feasibility path.
+//!
+//! The early-abort and fast-accept optimizations are only safe to carry
+//! on the planner hot path because their verdicts are *bit-identical* to
+//! the reference semantics. This suite locks that down over a seeded grid
+//! of (pipeline, scenario-family, SLO, configuration) cells spanning
+//! clearly-feasible, clearly-infeasible, and near-boundary candidates:
+//!
+//! * `check_feasible(...).feasible` must equal the full simulation's
+//!   `p99 <= slo` comparison, bit for bit, on every cell;
+//! * the fast-accept must never fire on a configuration the full
+//!   simulation rejects, and the early-abort must never fire on one it
+//!   accepts;
+//! * when the budgeted run completes (neither proof fired), its exact P99
+//!   must equal the full simulation's P99 bit for bit;
+//! * the pruned planner predicates [`simulator::feasible`] and
+//!   [`simulator::feasible_unbudgeted`] must agree on every cell.
+
+use inferline::config::{PipelineConfig, PipelineSpec};
+use inferline::profiler::analytic::paper_profiles;
+use inferline::profiler::ProfileSet;
+use inferline::simulator::{self, SimParams};
+use inferline::workload::scenarios::Scenario;
+use inferline::workload::Trace;
+
+/// The scenario families the grid draws traces from: steady Gamma, a
+/// regime-switching MMPP burst and a flash crowd (each seed-deterministic
+/// via `Scenario::build`).
+fn family_trace(family: &str, seed: u64) -> Trace {
+    let dur = 15.0;
+    let scenario = match family {
+        "steady" => Scenario::Gamma { lambda: 90.0, cv: 1.0, duration: dur },
+        "bursty-mmpp" => Scenario::Mmpp {
+            rates: vec![50.0, 220.0],
+            dwell: vec![6.0, 3.0],
+            duration: dur,
+        },
+        "flash-crowd" => Scenario::FlashCrowd {
+            base: 80.0,
+            peak: 260.0,
+            start: 4.0,
+            ramp: 1.0,
+            hold: 3.0,
+            decay: 2.0,
+            cv: 1.0,
+            duration: dur,
+        },
+        other => panic!("unknown conformance family {other:?}"),
+    };
+    scenario.build(seed).expect("scenario builds")
+}
+
+const FAMILIES: &[&str] = &["steady", "bursty-mmpp", "flash-crowd"];
+
+/// Candidate configurations on both sides of the feasibility boundary:
+/// the Algorithm-1 starting point at a loose SLO (feasible-ish), a
+/// deliberately starved single-replica variant (infeasible under load),
+/// and a generously over-replicated variant (clearly feasible).
+fn candidate_configs(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    trace: &Trace,
+) -> Vec<PipelineConfig> {
+    let planner = inferline::planner::Planner::new(spec, profiles);
+    let base = planner.initialize(trace, 1.0).expect("loose-SLO init");
+    let mut starved = base.clone();
+    for s in &mut starved.stages {
+        s.replicas = 1;
+    }
+    let mut generous = base.clone();
+    for s in &mut generous.stages {
+        s.replicas += 2;
+    }
+    vec![base, starved, generous]
+}
+
+/// One conformance cell: budgeted check vs the unbudgeted reference, plus
+/// the agreement obligations between the two proof paths.
+fn assert_cell_conforms(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+    ctx: &str,
+) -> (bool, bool) {
+    let check = simulator::check_feasible(spec, profiles, config, trace, slo, params, None);
+    let full_p99 = simulator::estimate_p99(spec, profiles, config, trace, params);
+    let reference = full_p99 <= slo;
+    assert_eq!(check.feasible, reference, "{ctx}: verdict diverged (full p99 {full_p99})");
+    assert!(
+        !(check.accepted && check.aborted),
+        "{ctx}: contradictory accept + abort proofs"
+    );
+    if check.accepted {
+        assert!(
+            reference,
+            "{ctx}: fast-accept fired but the full simulation rejects (p99 {full_p99} > {slo})"
+        );
+        assert!(check.p99.is_none(), "{ctx}: accepted runs know only the sign of P99 - SLO");
+    }
+    if check.aborted {
+        assert!(
+            !reference,
+            "{ctx}: early-abort fired but the full simulation accepts (p99 {full_p99} <= {slo})"
+        );
+        assert!(check.p99.is_none(), "{ctx}: aborted runs know only the sign of P99 - SLO");
+    }
+    if let Some(p99) = check.p99 {
+        assert_eq!(
+            p99.to_bits(),
+            full_p99.to_bits(),
+            "{ctx}: completed budgeted run must reproduce the exact P99"
+        );
+    }
+    // The planner-facing predicates (throughput prune applied on both
+    // sides) must agree as well.
+    assert_eq!(
+        simulator::feasible(spec, profiles, config, trace, slo, params),
+        simulator::feasible_unbudgeted(spec, profiles, config, trace, slo, params),
+        "{ctx}: pruned predicates diverged"
+    );
+    (check.accepted, check.aborted)
+}
+
+/// The full conformance grid. SLOs span clearly-infeasible (50 ms is
+/// under most batch-1 service paths), mid, and clearly-feasible (1 s)
+/// targets; per-cell near-boundary SLOs are exercised by the dedicated
+/// test below.
+#[test]
+fn budgeted_verdicts_conform_across_grid() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let mut accepts = 0usize;
+    let mut aborts = 0usize;
+    let mut cells = 0usize;
+    for spec in inferline::config::pipelines::all() {
+        for (f_idx, family) in FAMILIES.iter().enumerate() {
+            let trace = family_trace(family, 4200 + f_idx as u64);
+            for config in candidate_configs(&spec, &profiles, &trace) {
+                for &slo in &[0.05, 0.2, 0.35, 1.0] {
+                    let ctx = format!("{} / {family} / slo={slo}", spec.name);
+                    let (accepted, aborted) = assert_cell_conforms(
+                        &spec, &profiles, &config, &trace, slo, &params, &ctx,
+                    );
+                    accepts += accepted as usize;
+                    aborts += aborted as usize;
+                    cells += 1;
+                }
+            }
+        }
+    }
+    // The grid must actually exercise both proof paths, or the suite
+    // silently degenerates into testing only the completed-run path.
+    assert!(accepts > 0, "no cell fast-accepted across {cells} cells");
+    assert!(aborts > 0, "no cell early-aborted across {cells} cells");
+}
+
+/// Near-boundary conformance: SLOs placed *exactly* at a configuration's
+/// full-simulation P99 and one ULP / one part-per-thousand around it —
+/// the adversarial band where an unsound bound or a missing quantile
+/// clamp would flip a verdict.
+#[test]
+fn near_boundary_slos_conform() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    for spec in [
+        inferline::config::pipelines::image_processing(),
+        inferline::config::pipelines::social_media(),
+    ] {
+        let trace = family_trace("bursty-mmpp", 77);
+        for config in candidate_configs(&spec, &profiles, &trace) {
+            let p99 = simulator::estimate_p99(&spec, &profiles, &config, &trace, &params);
+            let ulp_up = f64::from_bits(p99.to_bits() + 1);
+            let ulp_down = f64::from_bits(p99.to_bits() - 1);
+            for slo in [p99, ulp_up, ulp_down, p99 * 0.999, p99 * 1.001] {
+                let ctx = format!("{} near-boundary slo={slo:e}", spec.name);
+                assert_cell_conforms(&spec, &profiles, &config, &trace, slo, &params, &ctx);
+            }
+        }
+    }
+}
+
+/// Straggler regression (the late-arrival bug class): both proof
+/// thresholds derive from the *full* trace length, so queries that only
+/// arrive after the decision point — here a burst followed by a long
+/// silent gap and a final straggler cohort — must never let a proof fire
+/// that the full simulation contradicts.
+#[test]
+fn stragglers_after_decision_point_conform() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = inferline::config::pipelines::image_processing();
+    // 300-query burst at 100 QPS, then 20 stragglers arriving one per
+    // second starting 30 s later.
+    let mut arrivals: Vec<f64> = (0..300).map(|i| i as f64 * 0.01).collect();
+    arrivals.extend((0..20).map(|i| 33.0 + i as f64));
+    let trace = Trace::new(arrivals);
+    for config in candidate_configs(&spec, &profiles, &trace) {
+        for &slo in &[0.02, 0.1, 0.3, 1.0] {
+            let ctx = format!("stragglers slo={slo}");
+            assert_cell_conforms(&spec, &profiles, &config, &trace, slo, &params, &ctx);
+        }
+    }
+}

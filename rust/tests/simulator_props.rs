@@ -191,6 +191,140 @@ fn more_replicas_never_hurt_p99() {
     });
 }
 
+/// Fisher–Yates shuffle on top of the in-repo RNG (the accept bound must
+/// hold for *any* arrangement of the latency vector, not sorted input).
+fn shuffle(v: &mut [f64], rng: &mut Rng) {
+    for i in (1..v.len()).rev() {
+        v.swap(i, rng.usize(i + 1));
+    }
+}
+
+/// Quantile-clamp monotonicity, accept side: whenever at least
+/// `ceil(0.99 (n-1)) + 1` samples are at or under the SLO — exactly the
+/// guaranteed-hit count at which the fast-accept fires — the interpolated
+/// P99 of the *full* vector is at or under the SLO, no matter what the
+/// remaining samples are. This is the bit-level contract the engine's
+/// accept threshold leans on (the clamp pins P99 <= sorted[ceil(pos)]).
+#[test]
+fn accept_hit_threshold_bounds_full_quantile() {
+    use inferline::util::stats;
+    prop::check("accept bound", 200, |rng| {
+        let n = 2 + rng.usize(400);
+        let slo = 0.05 + rng.f64();
+        let hi = (0.99 * (n - 1) as f64).ceil() as usize;
+        let need = hi + 1;
+        assert!(need <= n, "threshold must be reachable");
+        let hits = need + rng.usize(n - need + 1);
+        let mut v: Vec<f64> = (0..n)
+            .map(|i| {
+                if i < hits {
+                    // At or under the SLO, including exact ties.
+                    if rng.bool(0.2) { slo } else { slo * rng.f64() }
+                } else {
+                    // Strictly above, from barely to wildly.
+                    f64::from_bits(slo.to_bits() + 1) + rng.f64() * 10.0
+                }
+            })
+            .collect();
+        shuffle(&mut v, rng);
+        let p99 = stats::quantile(&v, 0.99);
+        assert!(p99 <= slo, "n={n} hits={hits} p99={p99} > slo={slo}");
+    });
+}
+
+/// Quantile-clamp monotonicity, abort side (the mirror bound): whenever
+/// at least `n - floor(0.99 (n-1))` samples are strictly above the SLO,
+/// the interpolated P99 is strictly above it.
+#[test]
+fn abort_miss_threshold_bounds_full_quantile() {
+    use inferline::util::stats;
+    prop::check("abort bound", 200, |rng| {
+        let n = 2 + rng.usize(400);
+        let slo = 0.05 + rng.f64();
+        let lo = (0.99 * (n - 1) as f64).floor() as usize;
+        let need = (n - lo).max(1);
+        let misses = need + rng.usize(n - need + 1);
+        let mut v: Vec<f64> = (0..n)
+            .map(|i| {
+                if i < misses {
+                    f64::from_bits(slo.to_bits() + 1) + rng.f64() * 10.0
+                } else {
+                    slo * rng.f64()
+                }
+            })
+            .collect();
+        shuffle(&mut v, rng);
+        let p99 = stats::quantile(&v, 0.99);
+        assert!(p99 > slo, "n={n} misses={misses} p99={p99} <= slo={slo}");
+    });
+}
+
+/// The adversarial straddle: every sample within a few ULPs of the SLO,
+/// so the interpolation bracket `[sorted[floor(pos)], sorted[ceil(pos)]]`
+/// straddles the decision boundary and an unclamped lerp could land an
+/// ULP outside it. With the hit threshold met, P99 must still be <= SLO.
+#[test]
+fn accept_bound_survives_ulp_straddle() {
+    use inferline::util::stats;
+    prop::check("ulp straddle", 200, |rng| {
+        let n = 2 + rng.usize(300);
+        let slo = 0.05 + rng.f64();
+        let hi = (0.99 * (n - 1) as f64).ceil() as usize;
+        let need = hi + 1;
+        let hits = need + rng.usize(n - need + 1);
+        let mut v: Vec<f64> = (0..n)
+            .map(|i| {
+                let ulps = rng.usize(4) as u64;
+                if i < hits {
+                    f64::from_bits(slo.to_bits() - ulps)
+                } else {
+                    f64::from_bits(slo.to_bits() + 1 + ulps)
+                }
+            })
+            .collect();
+        shuffle(&mut v, rng);
+        let p99 = stats::quantile(&v, 0.99);
+        assert!(p99 <= slo, "n={n} hits={hits} p99={p99:e} > slo={slo:e}");
+        // And the mirror: drop below the hit threshold by flooding the
+        // tail with misses; the quantile must then sit strictly above.
+        let mut w: Vec<f64> = (0..n)
+            .map(|_| f64::from_bits(slo.to_bits() + 1 + rng.usize(4) as u64))
+            .collect();
+        shuffle(&mut w, rng);
+        assert!(stats::quantile(&w, 0.99) > slo);
+    });
+}
+
+/// Simulation-level accept/abort soundness on randomized pipelines: if a
+/// budgeted run proves a verdict, the full-trace P99 computed with
+/// `util::stats::quantile` agrees — and completed runs reproduce it bit
+/// for bit.
+#[test]
+fn budgeted_verdicts_agree_with_full_quantile_on_random_pipelines() {
+    use inferline::util::stats;
+    prop::check("budget verdict soundness", 30, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let lambda = 40.0 + rng.f64() * 120.0;
+        let trace = gamma_trace(lambda, 0.5 + rng.f64() * 3.0, 8.0, rng.next_u64());
+        let params = SimParams::default();
+        let slo = 0.002 + rng.f64() * 0.5;
+        let check =
+            simulator::check_feasible(&spec, &profiles, &config, &trace, slo, &params, None);
+        let full = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+        let p99 = stats::quantile(&full.latencies, 0.99);
+        assert_eq!(check.feasible, p99 <= slo, "verdict diverged (p99 {p99}, slo {slo})");
+        if check.accepted {
+            assert!(p99 <= slo, "accept fired at slo {slo} but full p99 is {p99}");
+        }
+        if check.aborted {
+            assert!(p99 > slo, "abort fired at slo {slo} but full p99 is {p99}");
+        }
+        if let Some(budgeted_p99) = check.p99 {
+            assert_eq!(budgeted_p99.to_bits(), p99.to_bits());
+        }
+    });
+}
+
 #[test]
 fn horizon_covers_trace() {
     prop::check("horizon bound", 20, |rng| {
