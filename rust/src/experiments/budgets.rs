@@ -1,0 +1,880 @@
+//! SLO budget ledger: per-scenario regression budgets over the
+//! robustness matrix, gated in CI.
+//!
+//! The paper's headline claims are comparative — up to 7.6x lower cost
+//! and 34.5x lower SLO miss rate than coarse-grained autoscaling — but a
+//! robustness report alone has no memory: a change that doubles the
+//! flash-crowd miss rate ships silently unless something in CI knows
+//! what "good" looked like. This module is that memory. A checked-in
+//! `BUDGETS.json` records, per scenario family, the worst acceptable
+//! miss rate, serving-cost overhead, absolute cost, and
+//! baseline-cost-ratio floor; `inferline budget check` compares a
+//! `robustness.json` report against it and exits nonzero naming every
+//! violated scenario, and `inferline budget update` re-baselines the
+//! ledger intentionally after a reviewed change.
+//!
+//! ## `BUDGETS.json` format
+//!
+//! ```json
+//! {
+//!   "format": "inferline-budgets-v1",
+//!   "quick": {
+//!     "seed": 42,
+//!     "slo": 0.35,
+//!     "miss_slack": 0.02,
+//!     "cost_slack": 1.25,
+//!     "ratio_slack": 0.8,
+//!     "scenarios": {
+//!       "steady": {
+//!         "max_miss_rate": 0.05,
+//!         "max_cost_overhead": 2.5,
+//!         "max_cost_per_hour": null,
+//!         "min_peak_cost_ratio": 0.5
+//!       }
+//!     }
+//!   },
+//!   "full": { ... }
+//! }
+//! ```
+//!
+//! Quick-mode (CI) and full-mode budgets are **separate sections**: the
+//! two modes serve different horizons, so their numbers are not
+//! comparable. `budget check` picks the section matching the report's
+//! own `quick` flag.
+//!
+//! ## Seed + tolerance semantics
+//!
+//! Robustness reports are bit-reproducible per seed, so every budget
+//! section names the `seed` (and `slo`) it was measured at; `check`
+//! refuses a report from a different seed rather than comparing
+//! incomparable numbers. Because a re-run at the same seed reproduces
+//! the baseline exactly, the slacks are *not* noise margins — they are
+//! the drift a PR may introduce without an intentional re-baseline:
+//!
+//! * `miss_slack` — absolute headroom on miss rates
+//!   (pass iff `observed <= max_miss_rate + miss_slack`);
+//! * `cost_slack` — multiplicative headroom on cost ceilings
+//!   (pass iff `observed <= ceiling * cost_slack`);
+//! * `ratio_slack` — multiplicative forgiveness on the baseline
+//!   cost-ratio floor (pass iff `observed >= floor * ratio_slack`).
+//!
+//! A scenario metric that is `null` in the report (an empty run, a
+//! ratio with a zero denominator) is **no data** and fails the check —
+//! it must never read as a pass. Budgeted scenarios missing from the
+//! report, and report scenarios missing from the ledger, are violations
+//! too: the ledger and the matrix move together.
+//!
+//! The ceilings are per-scenario worst cases *across pipelines*
+//! (`max`/`min` over the scenario's cells), so a single regressed
+//! pipeline trips its scenario. `max_cost_per_hour` may be `null` (no
+//! absolute ceiling yet — the scale-free `max_cost_overhead` still
+//! applies); `budget update` fills it from the measured run.
+//!
+//! ## Re-baselining workflow
+//!
+//! ```text
+//! inferline experiment robustness --quick          # writes results/robustness.json
+//! inferline budget check                           # compare vs BUDGETS.json
+//! inferline budget update                          # intentional re-baseline
+//! ```
+//!
+//! `update` sets the report's mode section to the observed values
+//! exactly (slack is applied at check time), preserving the other
+//! mode's section and the section's slack settings; review the
+//! `BUDGETS.json` diff like any other regression-test change.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{opt_f64_at, req_f64_at as req_f64, Json};
+
+/// Format tag of `BUDGETS.json`; files with any other tag are rejected
+/// wholesale (same policy as the estimator cache file).
+pub const FORMAT: &str = "inferline-budgets-v1";
+
+/// The baseline system whose cost ratio the ledger floors.
+pub const PEAK_BASELINE: &str = "CG-Peak+AutoScale";
+
+/// Slacks used when `budget update` creates a section from scratch.
+pub const DEFAULT_MISS_SLACK: f64 = 0.02;
+pub const DEFAULT_COST_SLACK: f64 = 1.25;
+pub const DEFAULT_RATIO_SLACK: f64 = 0.8;
+
+/// The budget of one scenario family (worst case across pipelines).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioBudget {
+    /// Ceiling on the InferLine miss rate.
+    pub max_miss_rate: f64,
+    /// Ceiling on serving cost relative to the planned cost.
+    pub max_cost_overhead: f64,
+    /// Absolute ceiling on mean $/hr (`None` = not yet baselined).
+    pub max_cost_per_hour: Option<f64>,
+    /// Floor on the CG-Peak-to-InferLine cost ratio (the headline
+    /// "InferLine is cheaper" claim; > 1 means cheaper).
+    pub min_peak_cost_ratio: f64,
+}
+
+/// One mode section (quick or full) of the ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModeBudgets {
+    pub seed: u64,
+    pub slo: f64,
+    pub miss_slack: f64,
+    pub cost_slack: f64,
+    pub ratio_slack: f64,
+    pub scenarios: BTreeMap<String, ScenarioBudget>,
+}
+
+/// The parsed `BUDGETS.json` document.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BudgetFile {
+    pub quick: Option<ModeBudgets>,
+    pub full: Option<ModeBudgets>,
+}
+
+/// Seeds live in JSON as f64: accept only exact non-negative integers
+/// below 2^53 (the CLI enforces the same bound when producing reports),
+/// so the per-seed budget pin can never compare silently mangled values.
+fn seed_from(x: f64, what: &str) -> Result<u64, String> {
+    if x < 0.0 || x.fract() != 0.0 || x >= 9_007_199_254_740_992.0 {
+        return Err(format!("{what}: seed must be an integer in [0, 2^53), got {x}"));
+    }
+    Ok(x as u64)
+}
+
+impl ScenarioBudget {
+    fn parse(node: &Json, path: &str) -> Result<ScenarioBudget, String> {
+        let max_cost_per_hour = opt_f64_at(node, "max_cost_per_hour", path)?;
+        Ok(ScenarioBudget {
+            max_miss_rate: req_f64(node, "max_miss_rate", path)?,
+            max_cost_overhead: req_f64(node, "max_cost_overhead", path)?,
+            max_cost_per_hour,
+            min_peak_cost_ratio: req_f64(node, "min_peak_cost_ratio", path)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("max_miss_rate", self.max_miss_rate)
+            .set("max_cost_overhead", self.max_cost_overhead)
+            .set(
+                "max_cost_per_hour",
+                self.max_cost_per_hour.map_or(Json::Null, Json::Num),
+            )
+            .set("min_peak_cost_ratio", self.min_peak_cost_ratio);
+        o
+    }
+}
+
+impl ModeBudgets {
+    fn parse(node: &Json, path: &str) -> Result<ModeBudgets, String> {
+        let scenarios_node = node
+            .get("scenarios")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| format!("{path}: missing object field \"scenarios\""))?;
+        let mut scenarios = BTreeMap::new();
+        for (name, v) in scenarios_node {
+            let budget = ScenarioBudget::parse(v, &format!("{path}.scenarios.{name}"))?;
+            scenarios.insert(name.clone(), budget);
+        }
+        Ok(ModeBudgets {
+            seed: seed_from(req_f64(node, "seed", path)?, path)?,
+            slo: req_f64(node, "slo", path)?,
+            miss_slack: req_f64(node, "miss_slack", path)?,
+            cost_slack: req_f64(node, "cost_slack", path)?,
+            ratio_slack: req_f64(node, "ratio_slack", path)?,
+            scenarios,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut scenarios = Json::obj();
+        for (name, b) in &self.scenarios {
+            scenarios.set(name, b.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("seed", self.seed as usize)
+            .set("slo", self.slo)
+            .set("miss_slack", self.miss_slack)
+            .set("cost_slack", self.cost_slack)
+            .set("ratio_slack", self.ratio_slack)
+            .set("scenarios", scenarios);
+        o
+    }
+}
+
+impl BudgetFile {
+    /// Parse the document; any malformed node rejects the whole file
+    /// (a half-read ledger must not gate CI).
+    pub fn parse(doc: &Json) -> Result<BudgetFile, String> {
+        let format = doc.get("format").and_then(Json::as_str).unwrap_or("<missing>");
+        if format != FORMAT {
+            return Err(format!("budget file format {format:?} (expected {FORMAT:?})"));
+        }
+        let mut file = BudgetFile::default();
+        if let Some(q) = doc.get("quick") {
+            file.quick = Some(ModeBudgets::parse(q, "quick")?);
+        }
+        if let Some(f) = doc.get("full") {
+            file.full = Some(ModeBudgets::parse(f, "full")?);
+        }
+        Ok(file)
+    }
+
+    pub fn parse_str(text: &str) -> Result<BudgetFile, String> {
+        Self::parse(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<BudgetFile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse_str(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("format", FORMAT);
+        if let Some(q) = &self.quick {
+            doc.set("quick", q.to_json());
+        }
+        if let Some(f) = &self.full {
+            doc.set("full", f.to_json());
+        }
+        doc
+    }
+
+    /// Write the ledger pretty-printed: re-baselines must produce
+    /// reviewable line-level diffs, not one rewritten 2 KB line.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty_string())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report summarization
+// ---------------------------------------------------------------------------
+
+/// Worst-case observations for one scenario across its pipeline cells.
+/// `None` means no cell produced that metric — "no data", which the
+/// checker treats as a failure, never a pass.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioObserved {
+    /// Cells without usable data, as "pipeline: reason" strings.
+    pub no_data: Vec<String>,
+    pub worst_miss_rate: Option<f64>,
+    pub worst_cost_overhead: Option<f64>,
+    pub worst_cost_per_hour: Option<f64>,
+    pub min_peak_cost_ratio: Option<f64>,
+}
+
+/// A parsed robustness report, reduced to what the ledger compares.
+#[derive(Debug, Clone)]
+pub struct ReportSummary {
+    pub quick: bool,
+    pub seed: u64,
+    pub slo: f64,
+    pub scenarios: BTreeMap<String, ScenarioObserved>,
+}
+
+fn fold_max(slot: &mut Option<f64>, x: f64) {
+    *slot = Some(slot.map_or(x, |cur| cur.max(x)));
+}
+
+fn fold_min(slot: &mut Option<f64>, x: f64) {
+    *slot = Some(slot.map_or(x, |cur| cur.min(x)));
+}
+
+/// Reduce a `robustness.json` document to per-scenario worst cases.
+/// `null` metrics (NaN-safe serialization of empty windows or
+/// zero-denominator ratios) surface in `no_data`, not in the folds.
+pub fn summarize_report(report: &Json) -> Result<ReportSummary, String> {
+    let format = report.get("format").and_then(Json::as_str).unwrap_or("<missing>");
+    if format != crate::experiments::robustness::REPORT_FORMAT {
+        return Err(format!(
+            "unrecognized robustness report format {format:?} (expected {:?}; \
+             re-run `inferline experiment robustness`)",
+            crate::experiments::robustness::REPORT_FORMAT
+        ));
+    }
+    let quick = report
+        .get("quick")
+        .and_then(Json::as_bool)
+        .ok_or("report missing boolean field \"quick\"")?;
+    let seed = seed_from(
+        report
+            .get("seed")
+            .and_then(Json::as_f64)
+            .ok_or("report missing numeric field \"seed\"")?,
+        "report",
+    )?;
+    let slo = report
+        .get("slo")
+        .and_then(Json::as_f64)
+        .ok_or("report missing numeric field \"slo\"")?;
+    let cells = report
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or("report missing array field \"cells\"")?;
+    let mut scenarios: BTreeMap<String, ScenarioObserved> = BTreeMap::new();
+    for cell in cells {
+        let scenario = cell
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or("report cell missing \"scenario\"")?
+            .to_string();
+        let pipeline = cell.get("pipeline").and_then(Json::as_str).unwrap_or("?").to_string();
+        let obs = scenarios.entry(scenario).or_default();
+        if let Some(err) = cell.get("error").and_then(Json::as_str) {
+            obs.no_data.push(format!("{pipeline}: {err}"));
+            continue;
+        }
+        match cell.get("miss_rate").and_then(Json::as_f64) {
+            Some(x) => fold_max(&mut obs.worst_miss_rate, x),
+            None => obs.no_data.push(format!("{pipeline}: miss_rate has no data")),
+        }
+        match cell.get("cost_overhead").and_then(Json::as_f64) {
+            Some(x) => fold_max(&mut obs.worst_cost_overhead, x),
+            None => obs.no_data.push(format!("{pipeline}: cost_overhead has no data")),
+        }
+        match cell.get("mean_cost_per_hour").and_then(Json::as_f64) {
+            Some(x) => fold_max(&mut obs.worst_cost_per_hour, x),
+            None => obs.no_data.push(format!("{pipeline}: mean_cost_per_hour has no data")),
+        }
+        let peak_ratio = cell
+            .get("baselines")
+            .and_then(Json::as_arr)
+            .and_then(|bs| {
+                bs.iter().find(|b| {
+                    b.get("system").and_then(Json::as_str) == Some(PEAK_BASELINE)
+                })
+            })
+            .and_then(|b| b.get("cost_ratio"))
+            .and_then(Json::as_f64);
+        match peak_ratio {
+            Some(x) => fold_min(&mut obs.min_peak_cost_ratio, x),
+            None => obs
+                .no_data
+                .push(format!("{pipeline}: {PEAK_BASELINE} cost_ratio has no data")),
+        }
+    }
+    Ok(ReportSummary { quick, seed, slo, scenarios })
+}
+
+// ---------------------------------------------------------------------------
+// Check
+// ---------------------------------------------------------------------------
+
+/// One budget violation; `scenario` is `"<ledger>"` for file-level
+/// mismatches (missing section, seed/slo drift).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub scenario: String,
+    pub what: String,
+}
+
+/// Outcome of a check: human-readable per-scenario lines plus the
+/// violations (empty = within budget).
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// Which ledger section was compared ("quick" or "full").
+    pub mode: &'static str,
+    pub lines: Vec<String>,
+    pub violations: Vec<Violation>,
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    x.map_or_else(|| "no-data".to_string(), |v| format!("{v:.4}"))
+}
+
+/// Compare a robustness report against the ledger. `Err` is reserved
+/// for unreadable inputs; a readable report that breaks its budgets
+/// yields `Ok` with violations.
+pub fn check(report: &Json, budgets: &BudgetFile) -> Result<CheckReport, String> {
+    let summary = summarize_report(report)?;
+    let mode = if summary.quick { "quick" } else { "full" };
+    let section = if summary.quick { budgets.quick.as_ref() } else { budgets.full.as_ref() };
+    let Some(mb) = section else {
+        return Ok(CheckReport {
+            mode,
+            lines: Vec::new(),
+            violations: vec![Violation {
+                scenario: "<ledger>".to_string(),
+                what: format!(
+                    "BUDGETS.json has no {mode}-mode section; baseline it with \
+                     `inferline budget update`"
+                ),
+            }],
+        });
+    };
+    let mut violations = Vec::new();
+    let mut lines = Vec::new();
+    if summary.seed != mb.seed {
+        violations.push(Violation {
+            scenario: "<ledger>".to_string(),
+            what: format!(
+                "report seed {} != budget seed {} (budgets are per-seed; re-run the \
+                 harness with --seed {} or re-baseline)",
+                summary.seed, mb.seed, mb.seed
+            ),
+        });
+    }
+    if (summary.slo - mb.slo).abs() > 1e-12 {
+        violations.push(Violation {
+            scenario: "<ledger>".to_string(),
+            what: format!("report slo {} != budget slo {}", summary.slo, mb.slo),
+        });
+    }
+    // A seed/SLO mismatch makes every number incomparable: refuse the
+    // comparison outright instead of emitting per-scenario "violations"
+    // computed against a baseline the report was never measured at.
+    if !violations.is_empty() {
+        return Ok(CheckReport { mode, lines, violations });
+    }
+    for (name, budget) in &mb.scenarios {
+        let Some(obs) = summary.scenarios.get(name) else {
+            violations.push(Violation {
+                scenario: name.clone(),
+                what: "budgeted scenario absent from report".to_string(),
+            });
+            continue;
+        };
+        let before = violations.len();
+        for entry in &obs.no_data {
+            violations.push(Violation {
+                scenario: name.clone(),
+                what: format!("no data: {entry}"),
+            });
+        }
+        let miss_limit = budget.max_miss_rate + mb.miss_slack;
+        if let Some(x) = obs.worst_miss_rate {
+            if x > miss_limit {
+                violations.push(Violation {
+                    scenario: name.clone(),
+                    what: format!(
+                        "miss rate {x:.4} exceeds budget {:.4} + slack {:.4}",
+                        budget.max_miss_rate, mb.miss_slack
+                    ),
+                });
+            }
+        }
+        let overhead_limit = budget.max_cost_overhead * mb.cost_slack;
+        if let Some(x) = obs.worst_cost_overhead {
+            if x > overhead_limit {
+                violations.push(Violation {
+                    scenario: name.clone(),
+                    what: format!(
+                        "cost overhead {x:.3} exceeds budget {:.3} x slack {:.2}",
+                        budget.max_cost_overhead, mb.cost_slack
+                    ),
+                });
+            }
+        }
+        if let (Some(ceiling), Some(x)) = (budget.max_cost_per_hour, obs.worst_cost_per_hour) {
+            if x > ceiling * mb.cost_slack {
+                violations.push(Violation {
+                    scenario: name.clone(),
+                    what: format!(
+                        "mean cost ${x:.2}/hr exceeds budget ${ceiling:.2}/hr x slack {:.2}",
+                        mb.cost_slack
+                    ),
+                });
+            }
+        }
+        let ratio_limit = budget.min_peak_cost_ratio * mb.ratio_slack;
+        if let Some(x) = obs.min_peak_cost_ratio {
+            if x < ratio_limit {
+                violations.push(Violation {
+                    scenario: name.clone(),
+                    what: format!(
+                        "{PEAK_BASELINE} cost ratio {x:.3} below floor {:.3} x slack {:.2}",
+                        budget.min_peak_cost_ratio, mb.ratio_slack
+                    ),
+                });
+            }
+        }
+        let verdict = if violations.len() == before { "ok" } else { "FAIL" };
+        lines.push(format!(
+            "  {name:<22} miss {} (<= {miss_limit:.4})  overhead {} (<= {overhead_limit:.3})  \
+             peak-ratio {} (>= {ratio_limit:.3})  {verdict}",
+            fmt_opt(obs.worst_miss_rate),
+            fmt_opt(obs.worst_cost_overhead),
+            fmt_opt(obs.min_peak_cost_ratio),
+        ));
+    }
+    for name in summary.scenarios.keys() {
+        if !mb.scenarios.contains_key(name) {
+            violations.push(Violation {
+                scenario: name.clone(),
+                what: "unbudgeted scenario (add it with `inferline budget update`)".to_string(),
+            });
+        }
+    }
+    Ok(CheckReport { mode, lines, violations })
+}
+
+// ---------------------------------------------------------------------------
+// Update (re-baseline)
+// ---------------------------------------------------------------------------
+
+/// Re-baseline the report's mode section to the observed values (slack
+/// is applied at check time, so the ledger records the measured run
+/// exactly). Preserves the other mode's section and this section's
+/// slack settings. Refuses to baseline from a report with no-data
+/// cells — a ledger must never be seeded from a broken run.
+pub fn update(report: &Json, budgets: &mut BudgetFile) -> Result<&'static str, String> {
+    let summary = summarize_report(report)?;
+    let mode = if summary.quick { "quick" } else { "full" };
+    let slot = if summary.quick { &mut budgets.quick } else { &mut budgets.full };
+    let (miss_slack, cost_slack, ratio_slack) = slot.as_ref().map_or(
+        (DEFAULT_MISS_SLACK, DEFAULT_COST_SLACK, DEFAULT_RATIO_SLACK),
+        |mb| (mb.miss_slack, mb.cost_slack, mb.ratio_slack),
+    );
+    let mut scenarios = BTreeMap::new();
+    for (name, obs) in &summary.scenarios {
+        if !obs.no_data.is_empty() {
+            return Err(format!(
+                "cannot baseline {name:?}: {}",
+                obs.no_data.join("; ")
+            ));
+        }
+        scenarios.insert(
+            name.clone(),
+            ScenarioBudget {
+                max_miss_rate: obs.worst_miss_rate.unwrap_or(0.0),
+                max_cost_overhead: obs.worst_cost_overhead.unwrap_or(1.0),
+                max_cost_per_hour: obs.worst_cost_per_hour,
+                min_peak_cost_ratio: obs.min_peak_cost_ratio.unwrap_or(0.0),
+            },
+        );
+    }
+    *slot = Some(ModeBudgets {
+        seed: summary.seed,
+        slo: summary.slo,
+        miss_slack,
+        cost_slack,
+        ratio_slack,
+        scenarios,
+    });
+    Ok(mode)
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry points
+// ---------------------------------------------------------------------------
+
+fn load_report(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        format!("{}: {e} (run `inferline experiment robustness` first)", path.display())
+    })?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// CLI `budget check`: true iff the report is within budget.
+pub fn run_check(report_path: &Path, budgets_path: &Path) -> bool {
+    crate::util::bench::figure_header(
+        "Budget check",
+        "robustness report vs the checked-in per-scenario SLO budget ledger",
+    );
+    let report = match load_report(report_path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let budgets = match BudgetFile::load(budgets_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let outcome = match check(&report, &budgets) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    for line in &outcome.lines {
+        println!("{line}");
+    }
+    if outcome.violations.is_empty() {
+        println!(
+            "  budget check OK: {} scenarios within {}-mode budgets ({})",
+            outcome.lines.len(),
+            outcome.mode,
+            budgets_path.display()
+        );
+        true
+    } else {
+        for v in &outcome.violations {
+            eprintln!("  BUDGET VIOLATION [{}] {}", v.scenario, v.what);
+        }
+        eprintln!(
+            "  budget check FAILED: {} violation(s) against {}-mode budgets ({})",
+            outcome.violations.len(),
+            outcome.mode,
+            budgets_path.display()
+        );
+        false
+    }
+}
+
+/// CLI `budget update`: re-baseline the ledger from a report and write
+/// it back (creating the file if absent).
+pub fn run_update(report_path: &Path, budgets_path: &Path) -> bool {
+    let report = match load_report(report_path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let mut budgets = if budgets_path.exists() {
+        match BudgetFile::load(budgets_path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return false;
+            }
+        }
+    } else {
+        BudgetFile::default()
+    };
+    let mode = match update(&report, &mut budgets) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    match budgets.save(budgets_path) {
+        Ok(()) => {
+            let n = match mode {
+                "quick" => budgets.quick.as_ref().map_or(0, |m| m.scenarios.len()),
+                _ => budgets.full.as_ref().map_or(0, |m| m.scenarios.len()),
+            };
+            println!(
+                "re-baselined {n} {mode}-mode scenario budgets from {} into {}",
+                report_path.display(),
+                budgets_path.display()
+            );
+            true
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal well-formed report: two scenarios, one pipeline each.
+    fn report(miss: f64, overhead: f64, cost: f64, ratio: f64) -> Json {
+        let mut doc = Json::obj();
+        doc.set("format", crate::experiments::robustness::REPORT_FORMAT)
+            .set("seed", 42usize)
+            .set("slo", 0.35)
+            .set("quick", true);
+        let mut cells = Vec::new();
+        for scenario in ["steady", "flash-crowd"] {
+            let mut peak = Json::obj();
+            peak.set("system", PEAK_BASELINE)
+                .set("cost_ratio", Json::num_or_null(ratio))
+                .set("miss_ratio", Json::Null);
+            let mut cell = Json::obj();
+            cell.set("scenario", scenario)
+                .set("pipeline", "image-processing")
+                .set("miss_rate", Json::num_or_null(miss))
+                .set("cost_overhead", Json::num_or_null(overhead))
+                .set("mean_cost_per_hour", Json::num_or_null(cost))
+                .set("baselines", Json::Arr(vec![peak]));
+            cells.push(cell);
+        }
+        doc.set("cells", Json::Arr(cells));
+        doc
+    }
+
+    fn budgets_for(report: &Json) -> BudgetFile {
+        let mut b = BudgetFile::default();
+        update(report, &mut b).unwrap();
+        b
+    }
+
+    #[test]
+    fn update_then_check_passes() {
+        let r = report(0.02, 1.3, 25.0, 2.5);
+        let b = budgets_for(&r);
+        let mb = b.quick.as_ref().unwrap();
+        assert_eq!(mb.seed, 42);
+        assert_eq!(mb.scenarios.len(), 2);
+        assert_eq!(mb.scenarios["steady"].max_miss_rate, 0.02);
+        assert_eq!(mb.scenarios["steady"].max_cost_per_hour, Some(25.0));
+        assert!(b.full.is_none(), "update must not invent a full section");
+        let outcome = check(&r, &b).unwrap();
+        assert_eq!(outcome.mode, "quick");
+        assert!(outcome.violations.is_empty(), "{:?}", outcome.violations);
+        assert_eq!(outcome.lines.len(), 2);
+    }
+
+    #[test]
+    fn each_budget_dimension_trips_and_names_the_scenario() {
+        let base = report(0.02, 1.3, 25.0, 2.5);
+        let b = budgets_for(&base);
+        // (worse report, expected substring in the violation)
+        let cases = [
+            (report(0.2, 1.3, 25.0, 2.5), "miss rate"),
+            (report(0.02, 2.5, 25.0, 2.5), "cost overhead"),
+            (report(0.02, 1.3, 60.0, 2.5), "mean cost"),
+            (report(0.02, 1.3, 25.0, 0.9), "cost ratio"),
+        ];
+        for (bad, needle) in cases {
+            let outcome = check(&bad, &b).unwrap();
+            assert!(!outcome.violations.is_empty(), "{needle}: should have tripped");
+            for v in &outcome.violations {
+                assert!(v.what.contains(needle), "{needle}: got {:?}", v.what);
+                assert!(
+                    v.scenario == "steady" || v.scenario == "flash-crowd",
+                    "violation must name the scenario, got {:?}",
+                    v.scenario
+                );
+            }
+        }
+        // Small drift within slack passes without re-baselining.
+        let drift = report(0.03, 1.4, 28.0, 2.2);
+        assert!(check(&drift, &b).unwrap().violations.is_empty());
+    }
+
+    #[test]
+    fn null_metrics_are_no_data_not_a_pass() {
+        let base = report(0.02, 1.3, 25.0, 2.5);
+        let b = budgets_for(&base);
+        // NaN serializes to null; the checker must flag it, not skip it.
+        let nan_miss = report(f64::NAN, 1.3, 25.0, 2.5);
+        let outcome = check(&nan_miss, &b).unwrap();
+        assert!(
+            outcome.violations.iter().any(|v| v.what.contains("no data")),
+            "{:?}",
+            outcome.violations
+        );
+        // And update refuses to baseline from such a run.
+        let mut fresh = BudgetFile::default();
+        assert!(update(&nan_miss, &mut fresh).is_err());
+        // An errored cell is no data too.
+        let mut errored = report(0.02, 1.3, 25.0, 2.5);
+        if let Json::Obj(m) = &mut errored {
+            let cells = m.get_mut("cells").unwrap();
+            if let Json::Arr(v) = cells {
+                let mut cell = Json::obj();
+                cell.set("scenario", "steady")
+                    .set("pipeline", "tf-cascade")
+                    .set("error", "no feasible configuration");
+                v.push(cell);
+            }
+        }
+        let outcome = check(&errored, &b).unwrap();
+        assert!(
+            outcome
+                .violations
+                .iter()
+                .any(|v| v.scenario == "steady" && v.what.contains("no feasible")),
+            "{:?}",
+            outcome.violations
+        );
+    }
+
+    #[test]
+    fn ledger_level_mismatches_trip() {
+        let r = report(0.02, 1.3, 25.0, 2.5);
+        let b = budgets_for(&r);
+        // Seed drift.
+        let mut other_seed = r.clone();
+        other_seed.set("seed", 43usize);
+        let outcome = check(&other_seed, &b).unwrap();
+        assert!(outcome.violations.iter().any(|v| v.what.contains("seed")));
+        // Missing mode section.
+        let mut full_report = r.clone();
+        full_report.set("quick", false);
+        let outcome = check(&full_report, &b).unwrap();
+        assert_eq!(outcome.mode, "full");
+        assert!(outcome.violations.iter().any(|v| v.what.contains("no full-mode")));
+        // Budgeted scenario absent from the report.
+        let mut extra = b.clone();
+        extra.quick.as_mut().unwrap().scenarios.insert(
+            "diurnal".to_string(),
+            ScenarioBudget {
+                max_miss_rate: 0.1,
+                max_cost_overhead: 2.0,
+                max_cost_per_hour: None,
+                min_peak_cost_ratio: 0.5,
+            },
+        );
+        let outcome = check(&r, &extra).unwrap();
+        assert!(outcome
+            .violations
+            .iter()
+            .any(|v| v.scenario == "diurnal" && v.what.contains("absent")));
+        // Report scenario missing from the ledger.
+        let mut pruned = b.clone();
+        pruned.quick.as_mut().unwrap().scenarios.remove("flash-crowd");
+        let outcome = check(&r, &pruned).unwrap();
+        assert!(outcome
+            .violations
+            .iter()
+            .any(|v| v.scenario == "flash-crowd" && v.what.contains("unbudgeted")));
+        // Unknown report format is unreadable, not a pass.
+        let mut alien = r.clone();
+        alien.set("format", "robustness-v99");
+        assert!(check(&alien, &b).is_err());
+    }
+
+    #[test]
+    fn budget_file_roundtrips_canonically() {
+        let r = report(0.02, 1.3, 25.0, 2.5);
+        let mut b = budgets_for(&r);
+        // A null absolute ceiling survives the roundtrip.
+        b.quick.as_mut().unwrap().scenarios.get_mut("steady").unwrap().max_cost_per_hour =
+            None;
+        let text = b.to_json().to_string();
+        let back = BudgetFile::parse_str(&text).unwrap();
+        assert_eq!(back, b);
+        assert_eq!(back.to_json().to_string(), text, "canonical bytes");
+        // The pretty form (what `save` writes) parses back identically
+        // and is genuinely line-oriented for reviewable diffs.
+        let pretty = b.to_json().to_pretty_string();
+        assert_eq!(BudgetFile::parse_str(&pretty).unwrap(), b);
+        assert!(pretty.lines().count() > 10, "{pretty}");
+        // Seeds must be exact non-negative integers.
+        for bad_seed in ["42.5", "-1"] {
+            let doc = format!(
+                r#"{{"format": "inferline-budgets-v1",
+                    "quick": {{"seed": {bad_seed}, "slo": 0.35, "miss_slack": 0.02,
+                              "cost_slack": 1.25, "ratio_slack": 0.8,
+                              "scenarios": {{}}}}}}"#
+            );
+            let err = BudgetFile::parse_str(&doc).unwrap_err();
+            assert!(err.contains("seed"), "{err}");
+        }
+        // Wholesale rejection of malformed documents.
+        for bad in [
+            r#"{"quick": {}}"#,
+            r#"{"format": "inferline-budgets-v0", "quick": {}}"#,
+            r#"{"format": "inferline-budgets-v1", "quick": {"seed": 1}}"#,
+        ] {
+            assert!(BudgetFile::parse_str(bad).is_err(), "{bad}");
+        }
+        let err = BudgetFile::parse_str(
+            r#"{"format": "inferline-budgets-v1",
+                "quick": {"seed": 1, "slo": 0.35, "miss_slack": 0.02,
+                          "cost_slack": 1.25, "ratio_slack": 0.8,
+                          "scenarios": {"steady": {"max_miss_rate": 0.1}}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("quick.scenarios.steady"), "{err}");
+    }
+}

@@ -66,6 +66,17 @@ impl Ctx {
     }
 }
 
+/// One CSV cell for a possibly-undefined metric: NaN/∞ (empty windows,
+/// ratios with a zero denominator) become the empty field — "no data" —
+/// so downstream tooling never parses a fabricated number.
+pub fn csv_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        String::new()
+    }
+}
+
 /// Summary of one serving run under a (planner, tuner) combination.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
@@ -281,6 +292,14 @@ mod tests {
         let s = run_coarse(&spec, &profiles, &sample, &live, 0.3, CoarseTarget::Peak, true);
         assert!(s.p99 > 0.0);
         assert_eq!(s.system, "CG-Peak+AutoScale");
+    }
+
+    #[test]
+    fn csv_num_is_nan_safe() {
+        assert_eq!(csv_num(1.5), "1.5");
+        assert_eq!(csv_num(0.0), "0");
+        assert_eq!(csv_num(f64::NAN), "");
+        assert_eq!(csv_num(f64::INFINITY), "");
     }
 
     #[test]

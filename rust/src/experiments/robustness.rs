@@ -13,6 +13,10 @@
 //!
 //! Mechanics:
 //!
+//! * the scenario matrix is **data**: every family is a checked-in
+//!   [`ScenarioSpec`] JSON document under `scenarios/` at the repository
+//!   root, embedded at compile time ([`SCENARIO_FILES`]) and enumerated
+//!   in [`FAMILIES`];
 //! * the grid is sharded over [`parallel_map_indexed`] (one cell per
 //!   task), with planner-internal parallelism adaptively set to the cores
 //!   the fan-out cannot fill ([`shard_planner_threads`]);
@@ -21,20 +25,34 @@
 //!   once and every other cell's feasibility queries are cache hits; the
 //!   CLI run persists that cache across processes (disable with
 //!   `--no-cache`), so repeated invocations warm-start;
+//! * every cell serves the **baselines through the same closed loop**:
+//!   the coarse-grained CG-Mean / CG-Peak plans under the AutoScale
+//!   reactive tuner ([`crate::baselines`]), reporting per-baseline cost
+//!   ratio and miss-rate ratio vs InferLine — the paper's Fig 5/Fig 9
+//!   comparative claims (up to 7.6x cost, 34.5x miss rate) as a tracked
+//!   per-scenario artifact;
 //! * every cell reports SLO miss rate, measured P99, the cost trajectory
 //!   (mean $/hr, total $, downsampled replica timeline) and the Tuner's
 //!   action counts ([`CountingController`]);
-//! * the report is written as machine-readable JSON (`robustness.json`).
+//! * the report is written as machine-readable JSON (`robustness.json`,
+//!   format tag [`REPORT_FORMAT`]) plus a flat per-system CSV
+//!   (`robustness_baselines.csv`); `inferline budget check`
+//!   ([`super::budgets`]) gates CI on it.
 //!
 //! Determinism: traces derive from the base seed via
 //! [`scenarios::child_seed`], plans are bit-identical regardless of
-//! thread count or cache state, and the JSON encoder orders keys
-//! canonically — the same seed always produces a byte-identical report
+//! thread count or cache state, baseline runs are closed-form functions
+//! of (spec, sample, live), and the JSON encoder orders keys canonically
+//! — the same seed always produces a byte-identical report
 //! (regression-tested below). Telemetry that depends on thread
-//! scheduling (cache hit rates) is deliberately excluded.
+//! scheduling (cache hit rates) is deliberately excluded. Metrics that
+//! can be undefined (miss-rate ratios with a zero denominator, P99 of an
+//! empty run) are serialized as `null`, never NaN — the budget checker
+//! treats them as "no data".
 
 use std::sync::Arc;
 
+use crate::baselines::coarse::CoarseTarget;
 use crate::config::{pipelines, PipelineSpec};
 use crate::planner::{EstimatorCache, Planner};
 use crate::profiler::analytic::paper_profiles;
@@ -44,20 +62,44 @@ use crate::tuner::{Tuner, TunerInputs};
 use crate::util::json::Json;
 use crate::util::par::{default_workers, parallel_map_indexed};
 use crate::util::stats;
-use crate::workload::scenarios::{self, Scenario};
+use crate::workload::scenarios::{self, Scenario, ScenarioSpec};
 use crate::workload::{gamma_trace, Trace};
 
-use super::common::{shard_planner_threads, Ctx};
+use super::common::{csv_num, shard_planner_threads, Ctx};
 
 /// SLO all cells are planned and judged against (loose enough that every
 /// paper pipeline is feasible at the nominal λ = 100 QPS sample).
 pub const DEFAULT_SLO: f64 = 0.35;
 
+/// Format tag stamped into `robustness.json`; the budget checker
+/// ([`super::budgets`]) refuses reports it does not recognize.
+pub const REPORT_FORMAT: &str = "inferline-robustness-v2";
+
 /// Nominal planning rate: every scenario family stresses deviations from
 /// this assumed workload.
 const NOMINAL_LAMBDA: f64 = 100.0;
 
-/// The built-in scenario families, in report order.
+/// The checked-in scenario matrix, embedded at compile time so the
+/// binary needs no runtime data directory (`scenarios/` at the repo
+/// root; see its README). `rust/tests/budget_ledger.rs` keeps the
+/// directory, this table and [`FAMILIES`] in sync.
+const SCENARIO_FILES: &[(&str, &str)] = &[
+    ("steady", include_str!("../../../scenarios/steady.json")),
+    ("bursty-mmpp", include_str!("../../../scenarios/bursty-mmpp.json")),
+    ("diurnal", include_str!("../../../scenarios/diurnal.json")),
+    ("flash-crowd", include_str!("../../../scenarios/flash-crowd.json")),
+    ("heavy-tail-pareto", include_str!("../../../scenarios/heavy-tail-pareto.json")),
+    ("heavy-tail-lognormal", include_str!("../../../scenarios/heavy-tail-lognormal.json")),
+    ("cv-shift", include_str!("../../../scenarios/cv-shift.json")),
+    ("flash-on-diurnal", include_str!("../../../scenarios/flash-on-diurnal.json")),
+    ("regime-splice", include_str!("../../../scenarios/regime-splice.json")),
+    ("thinned-autoscale", include_str!("../../../scenarios/thinned-autoscale.json")),
+    ("heavy-tail-superpose", include_str!("../../../scenarios/heavy-tail-superpose.json")),
+    ("surge-crossfade", include_str!("../../../scenarios/surge-crossfade.json")),
+];
+
+/// The scenario families, in report order. Position is part of the seed
+/// derivation (`child_seed(seed, 100 + idx)`), so new families append.
 pub const FAMILIES: &[&str] = &[
     "steady",
     "bursty-mmpp",
@@ -66,56 +108,29 @@ pub const FAMILIES: &[&str] = &[
     "heavy-tail-pareto",
     "heavy-tail-lognormal",
     "cv-shift",
+    "flash-on-diurnal",
+    "regime-splice",
+    "thinned-autoscale",
+    "heavy-tail-superpose",
+    "surge-crossfade",
 ];
 
+/// The parsed spec of one checked-in family (`None` for unknown names).
+/// Panics on a malformed embedded file — that is a build artifact error
+/// a unit test catches, not a runtime condition.
+pub fn family_spec(family: &str) -> Option<ScenarioSpec> {
+    let (_, text) = SCENARIO_FILES.iter().find(|(name, _)| *name == family)?;
+    match ScenarioSpec::parse_str(text) {
+        Ok(spec) => Some(spec),
+        Err(e) => panic!("embedded scenario {family:?} is malformed: {e}"),
+    }
+}
+
 /// The declarative scenario for one family (`None` for unknown names).
-/// Quick mode shrinks the served horizon so CI completes in seconds.
+/// Quick mode serves the spec's explicit quick node or its
+/// schedule-compressed full node, so CI completes in seconds.
 pub fn family_scenario(family: &str, quick: bool) -> Option<Scenario> {
-    let dur = if quick { 120.0 } else { 600.0 };
-    let s = match family {
-        // The control: live traffic matches the planning assumption.
-        "steady" => Scenario::Gamma { lambda: NOMINAL_LAMBDA, cv: 1.0, duration: dur },
-        // Markov-modulated bursts: long calm regime, short hot regime,
-        // same long-run mean as the nominal plan.
-        "bursty-mmpp" => Scenario::Mmpp {
-            rates: vec![60.0, 240.0],
-            dwell: vec![40.0, 12.0],
-            duration: dur,
-        },
-        // Two compressed diurnal cycles around the nominal rate.
-        "diurnal" => Scenario::Diurnal {
-            base: NOMINAL_LAMBDA,
-            amplitude: 0.5,
-            period: dur / 2.0,
-            cv: 1.0,
-            duration: dur,
-        },
-        // A 3.2x flash crowd: sharp ramp, sustained hold, linear decay.
-        "flash-crowd" => Scenario::FlashCrowd {
-            base: NOMINAL_LAMBDA,
-            peak: 320.0,
-            start: dur * 0.25,
-            ramp: 5.0,
-            hold: dur * 0.15,
-            decay: dur * 0.10,
-            cv: 1.0,
-            duration: dur,
-        },
-        // Heavy-tailed renewals at the nominal mean rate.
-        "heavy-tail-pareto" => {
-            Scenario::Pareto { lambda: NOMINAL_LAMBDA, shape: 1.7, duration: dur }
-        }
-        "heavy-tail-lognormal" => {
-            Scenario::Lognormal { lambda: NOMINAL_LAMBDA, sigma: 1.4, duration: dur }
-        }
-        // The Fig 11 class: same rate, burstiness jumps mid-trace.
-        "cv-shift" => Scenario::Splice(vec![
-            Scenario::Gamma { lambda: NOMINAL_LAMBDA, cv: 1.0, duration: dur / 2.0 },
-            Scenario::Gamma { lambda: NOMINAL_LAMBDA, cv: 4.0, duration: dur / 2.0 },
-        ]),
-        _ => return None,
-    };
-    Some(s)
+    family_spec(family).map(|spec| spec.scenario_for(quick))
 }
 
 /// The (planning sample, live trace) pair for one family. The sample is
@@ -138,6 +153,27 @@ pub fn family_traces(family: &str, seed: u64, quick: bool) -> Option<(Trace, Tra
     Some((sample, live))
 }
 
+/// Closed-loop metrics of one baseline system serving the same
+/// (scenario, pipeline) cell as InferLine, plus the two comparative
+/// ratios the paper's headline claims are made of. Ratios with a zero
+/// denominator are NaN in memory and `null` in the report ("no data").
+#[derive(Debug, Clone)]
+pub struct BaselineMetrics {
+    /// System label (`CG-Mean+AutoScale`, `CG-Peak+AutoScale`).
+    pub system: String,
+    pub queries: usize,
+    pub p99: f64,
+    pub miss_rate: f64,
+    pub mean_cost_per_hour: f64,
+    pub total_cost: f64,
+    /// Baseline mean $/hr divided by InferLine mean $/hr (> 1 means
+    /// InferLine is cheaper — the paper's up-to-7.6x claim).
+    pub cost_ratio: f64,
+    /// Baseline miss rate divided by InferLine miss rate (> 1 means
+    /// InferLine misses less — the paper's up-to-34.5x claim).
+    pub miss_ratio: f64,
+}
+
 /// Closed-loop metrics of one (scenario, pipeline) cell.
 #[derive(Debug, Clone)]
 pub struct CellMetrics {
@@ -155,6 +191,17 @@ pub struct CellMetrics {
     pub final_replicas: usize,
     /// Downsampled (time, total provisioned replicas) cost trajectory.
     pub replica_timeline: Vec<(f64, usize)>,
+    /// The baseline systems serving the same cell (same sample, same
+    /// live trace, their own planners and reactive tuner).
+    pub baselines: Vec<BaselineMetrics>,
+}
+
+impl CellMetrics {
+    /// Serving cost relative to the planned configuration's cost (the
+    /// tuner's cost overhead; 1.0 = the Tuner never left the plan).
+    pub fn cost_overhead(&self) -> f64 {
+        self.mean_cost_per_hour / self.planned_cost_per_hour
+    }
 }
 
 /// One grid cell: a scenario family served by a pipeline, or the reason
@@ -255,20 +302,42 @@ fn run_cell(
         &mut counting,
     );
     let hours = (result.horizon / 3600.0).max(1e-12);
+    let il_miss = result.miss_rate(slo);
+    let il_cost_per_hour = result.cost_dollars / hours;
+    // The baselines serve the exact same cell: coarse-grained planning
+    // on the nominal sample, the AutoScale reactive tuner in the loop.
+    let baselines = [CoarseTarget::Mean, CoarseTarget::Peak]
+        .into_iter()
+        .map(|target| {
+            let s = super::common::run_coarse(spec, profiles, sample, live, slo, target, true);
+            BaselineMetrics {
+                system: s.system.clone(),
+                queries: s.result.latencies.len(),
+                p99: s.p99,
+                miss_rate: s.miss_rate,
+                mean_cost_per_hour: s.mean_cost_per_hour,
+                total_cost: s.total_cost,
+                cost_ratio: s.mean_cost_per_hour / il_cost_per_hour,
+                // 0/0 and x/0 are deliberate NaN/∞: "no data" downstream.
+                miss_ratio: s.miss_rate / il_miss,
+            }
+        })
+        .collect();
     Ok(CellMetrics {
         planned_cost_per_hour: plan.cost_per_hour,
         planned_replicas: plan.config.total_replicas(),
         estimated_p99: plan.estimated_p99,
         queries: result.latencies.len(),
         p99: stats::p99(&result.latencies),
-        miss_rate: result.miss_rate(slo),
-        mean_cost_per_hour: result.cost_dollars / hours,
+        miss_rate: il_miss,
+        mean_cost_per_hour: il_cost_per_hour,
         total_cost: result.cost_dollars,
         scale_ups: counting.scale_ups,
         scale_downs: counting.scale_downs,
         max_replicas: result.replica_timeline.iter().map(|&(_, r)| r).max().unwrap_or(0),
         final_replicas: result.replica_timeline.last().map_or(0, |&(_, r)| r),
         replica_timeline: downsample(&result.replica_timeline, 24),
+        baselines,
     })
 }
 
@@ -277,7 +346,8 @@ fn run_cell(
 /// deterministic function of the seed, so the byte stream is too.
 pub fn report_json(seed: u64, slo: f64, quick: bool, cells: &[Cell]) -> Json {
     let mut doc = Json::obj();
-    doc.set("seed", seed as usize)
+    doc.set("format", REPORT_FORMAT)
+        .set("seed", seed as usize)
         .set("slo", slo)
         .set("quick", quick)
         .set(
@@ -315,9 +385,10 @@ pub fn report_json(seed: u64, slo: f64, quick: bool, cells: &[Cell]) -> Json {
                         .set("planned_replicas", m.planned_replicas)
                         .set("estimated_p99", m.estimated_p99)
                         .set("queries", m.queries)
-                        .set("p99", m.p99)
-                        .set("miss_rate", m.miss_rate)
+                        .set("p99", Json::num_or_null(m.p99))
+                        .set("miss_rate", Json::num_or_null(m.miss_rate))
                         .set("mean_cost_per_hour", m.mean_cost_per_hour)
+                        .set("cost_overhead", Json::num_or_null(m.cost_overhead()))
                         .set("total_cost", m.total_cost)
                         .set("scale_ups", m.scale_ups)
                         .set("scale_downs", m.scale_downs)
@@ -330,6 +401,26 @@ pub fn report_json(seed: u64, slo: f64, quick: bool, cells: &[Cell]) -> Json {
                                     .iter()
                                     .map(|&(t, r)| {
                                         Json::Arr(vec![Json::Num(t), Json::Num(r as f64)])
+                                    })
+                                    .collect(),
+                            ),
+                        )
+                        .set(
+                            "baselines",
+                            Json::Arr(
+                                m.baselines
+                                    .iter()
+                                    .map(|b| {
+                                        let mut bo = Json::obj();
+                                        bo.set("system", b.system.as_str())
+                                            .set("queries", b.queries)
+                                            .set("p99", Json::num_or_null(b.p99))
+                                            .set("miss_rate", Json::num_or_null(b.miss_rate))
+                                            .set("mean_cost_per_hour", b.mean_cost_per_hour)
+                                            .set("total_cost", b.total_cost)
+                                            .set("cost_ratio", Json::num_or_null(b.cost_ratio))
+                                            .set("miss_ratio", Json::num_or_null(b.miss_ratio));
+                                        bo
                                     })
                                     .collect(),
                             ),
@@ -364,20 +455,39 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
     super::common::persist_cache(ctx, &cache);
     for c in &cells {
         match &c.outcome {
-            Ok(m) => println!(
-                "  {:<22} {:<18} p99 {:>7.1}ms  miss {:>6.2}%  ${:>6.2}/hr  \
-                 up {:>3} down {:>3}  replicas {:>3}→{:<3} (max {})",
-                c.scenario,
-                c.pipeline,
-                m.p99 * 1e3,
-                m.miss_rate * 100.0,
-                m.mean_cost_per_hour,
-                m.scale_ups,
-                m.scale_downs,
-                m.planned_replicas,
-                m.final_replicas,
-                m.max_replicas,
-            ),
+            Ok(m) => {
+                println!(
+                    "  {:<22} {:<18} p99 {:>7.1}ms  miss {:>6.2}%  ${:>6.2}/hr  \
+                     up {:>3} down {:>3}  replicas {:>3}→{:<3} (max {})",
+                    c.scenario,
+                    c.pipeline,
+                    m.p99 * 1e3,
+                    m.miss_rate * 100.0,
+                    m.mean_cost_per_hour,
+                    m.scale_ups,
+                    m.scale_downs,
+                    m.planned_replicas,
+                    m.final_replicas,
+                    m.max_replicas,
+                );
+                for b in &m.baselines {
+                    println!(
+                        "  {:<22} {:<18} p99 {:>7.1}ms  miss {:>6.2}%  ${:>6.2}/hr  \
+                         cost {:>5.2}x  miss {}x vs InferLine",
+                        "",
+                        b.system,
+                        b.p99 * 1e3,
+                        b.miss_rate * 100.0,
+                        b.mean_cost_per_hour,
+                        b.cost_ratio,
+                        if b.miss_ratio.is_finite() {
+                            format!("{:.1}", b.miss_ratio)
+                        } else {
+                            "--".to_string()
+                        },
+                    );
+                }
+            }
             Err(e) => println!("  {:<22} {:<18} {e}", c.scenario, c.pipeline),
         }
     }
@@ -388,6 +498,13 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
         cells.len(),
         DEFAULT_SLO * 1e3
     );
+    ctx.write_csv(
+        "robustness_baselines.csv",
+        "scenario,pipeline,system,queries,p99_ms,miss_rate,mean_cost_per_hour,\
+         cost_ratio_vs_inferline,miss_ratio_vs_inferline",
+        &baseline_rows(&cells),
+    );
+    println!("  wrote {}", ctx.results_dir.join("robustness_baselines.csv").display());
     let doc = report_json(seed, DEFAULT_SLO, ctx.quick, &cells);
     let path = ctx.results_dir.join("robustness.json");
     match std::fs::write(&path, doc.to_string()) {
@@ -400,6 +517,42 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
             false
         }
     }
+}
+
+/// Flatten the grid into the Fig-9-style per-system comparison rows
+/// (one row per completed cell and system, InferLine first with unit
+/// ratios). Undefined ratios serialize as empty CSV fields, not NaN.
+pub fn baseline_rows(cells: &[Cell]) -> Vec<String> {
+    let mut rows = Vec::new();
+    for c in cells {
+        let Ok(m) = &c.outcome else { continue };
+        rows.push(format!(
+            "{},{},InferLine,{},{},{},{},{},{}",
+            c.scenario,
+            c.pipeline,
+            m.queries,
+            csv_num(m.p99 * 1e3),
+            csv_num(m.miss_rate),
+            csv_num(m.mean_cost_per_hour),
+            csv_num(1.0),
+            csv_num(1.0),
+        ));
+        for b in &m.baselines {
+            rows.push(format!(
+                "{},{},{},{},{},{},{},{},{}",
+                c.scenario,
+                c.pipeline,
+                b.system,
+                b.queries,
+                csv_num(b.p99 * 1e3),
+                csv_num(b.miss_rate),
+                csv_num(b.mean_cost_per_hour),
+                csv_num(b.cost_ratio),
+                csv_num(b.miss_ratio),
+            ));
+        }
+    }
+    rows
 }
 
 #[cfg(test)]
@@ -420,6 +573,27 @@ mod tests {
             assert_ne!(live, family_traces(family, 2, true).unwrap().1, "{family}");
         }
         assert!(family_traces("no-such-family", 1, true).is_none());
+    }
+
+    #[test]
+    fn embedded_matrix_matches_families() {
+        assert!(FAMILIES.len() >= 12, "matrix shrank to {}", FAMILIES.len());
+        assert_eq!(SCENARIO_FILES.len(), FAMILIES.len());
+        for (idx, family) in FAMILIES.iter().enumerate() {
+            assert_eq!(SCENARIO_FILES[idx].0, *family, "order is part of seed derivation");
+            let spec = family_spec(family).unwrap();
+            assert_eq!(spec.name, *family, "{family}: spec name mismatch");
+            // Quick mode serves a genuinely shorter schedule.
+            let full = spec.scenario_for(false).build(1).unwrap();
+            let quick = spec.scenario_for(true).build(1).unwrap();
+            assert!(
+                quick.duration() < 0.5 * full.duration(),
+                "{family}: quick {} vs full {}",
+                quick.duration(),
+                full.duration()
+            );
+        }
+        assert!(family_spec("no-such-family").is_none());
     }
 
     #[test]
@@ -449,11 +623,36 @@ mod tests {
             assert!(m.total_cost > 0.0);
             assert!(m.planned_replicas > 0);
             assert!(!m.replica_timeline.is_empty());
+            assert!(m.cost_overhead() > 0.0);
+            // Both baselines served the same cell through the loop.
+            assert_eq!(m.baselines.len(), 2, "{}", c.scenario);
+            assert_eq!(m.baselines[0].system, "CG-Mean+AutoScale");
+            assert_eq!(m.baselines[1].system, "CG-Peak+AutoScale");
+            for b in &m.baselines {
+                assert!(b.queries > 0, "{}: {}", c.scenario, b.system);
+                assert!(b.mean_cost_per_hour > 0.0);
+                assert!(b.cost_ratio > 0.0 && b.cost_ratio.is_finite());
+                // miss_ratio may be NaN (0/0) — but never negative.
+                assert!(b.miss_ratio.is_nan() || b.miss_ratio >= 0.0, "{}", b.miss_ratio);
+            }
         }
         // The flash crowd must actually exercise the tuner.
         let flash = a[1].outcome.as_ref().unwrap();
         assert!(flash.scale_ups > 0, "flash crowd never scaled up");
         assert!(flash.max_replicas > flash.planned_replicas);
+        // The report is valid JSON (NaN ratios become null, never bare
+        // NaN bytes) and round-trips through the parser.
+        let parsed = crate::util::json::Json::parse(&ja).expect("report must be valid JSON");
+        assert_eq!(parsed.req("format").as_str(), Some(REPORT_FORMAT));
+        let cells = parsed.req("cells").as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].req("baselines").as_arr().unwrap().len(), 2);
+        // The CSV artifact has one InferLine + two baseline rows per cell
+        // and no NaN tokens.
+        let rows = baseline_rows(&a);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| !r.contains("NaN")), "{rows:?}");
+        assert!(rows[0].contains(",InferLine,"));
     }
 
     #[test]

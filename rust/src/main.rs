@@ -105,7 +105,13 @@ COMMANDS:
               (sweep persists its estimator cache across runs; override
               the file with --cache <file> or disable with --no-cache)
   experiment  robustness [--quick] [--seed <n>] [--cache <file>|--no-cache]
-              (closed-loop Planner+Tuner scenario matrix -> robustness.json)
+              (closed-loop Planner+Tuner scenario matrix vs the coarse
+              baselines -> robustness.json + robustness_baselines.csv;
+              the matrix is the checked-in scenarios/*.json specs)
+  budget      check|update [--report <robustness.json>] [--budgets <BUDGETS.json>]
+              (check: compare a robustness report against the checked-in
+              per-scenario SLO budget ledger, exit nonzero on regression;
+              update: re-baseline the ledger from the report)
   bench       estimator [--out <file.json>] [--quick]
               (writes the Estimator/Planner perf-trajectory JSON)
   trace       --kind gamma|big-spike|instant-spike --out <file>
@@ -130,6 +136,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
+        "budget" => cmd_budget(&args),
         "bench" => cmd_bench(&args),
         "trace" => cmd_trace(&args),
         "pipelines" => {
@@ -390,7 +397,25 @@ fn cmd_experiment(args: &Args) -> bool {
         // Separately dispatched so the seed flag reaches the harness (the
         // report is bit-reproducible per seed; parse as u64, not via f64,
         // so every seed value round-trips exactly).
-        let seed = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42u64);
+        let seed: u64 = match args.get("seed") {
+            None => 42,
+            // A typo'd seed must not silently fall back to the default
+            // and masquerade as a run at the requested seed.
+            Some(v) => match v.parse() {
+                Ok(s) => s,
+                Err(_) => {
+                    eprintln!("--seed {v:?} is not an unsigned integer");
+                    return false;
+                }
+            },
+        };
+        // Report and budget-ledger seeds are JSON numbers (f64): only
+        // integers below 2^53 round-trip exactly, and the budget gate
+        // pins budgets to an exact seed.
+        if seed >= (1u64 << 53) {
+            eprintln!("--seed {seed} exceeds 2^53 and cannot round-trip through the report");
+            return false;
+        }
         let ctx = inferline::experiments::Ctx::new(quick).with_cache(args.cache_path(true));
         return inferline::experiments::robustness::run(&ctx, seed);
     }
@@ -407,6 +432,23 @@ fn cmd_experiment(args: &Args) -> bool {
         return false;
     }
     true
+}
+
+/// `budget check` / `budget update`: the SLO budget ledger over the
+/// robustness report (see `experiments::budgets` for file format and
+/// re-baselining workflow). `check` is the CI gate: nonzero exit on any
+/// violated scenario budget.
+fn cmd_budget(args: &Args) -> bool {
+    let report = PathBuf::from(args.get("report").unwrap_or("results/robustness.json"));
+    let budgets = PathBuf::from(args.get("budgets").unwrap_or("BUDGETS.json"));
+    match args.positional.first().map(String::as_str) {
+        Some("check") | None => inferline::experiments::budgets::run_check(&report, &budgets),
+        Some("update") => inferline::experiments::budgets::run_update(&report, &budgets),
+        Some(other) => {
+            eprintln!("unknown budget action {other:?} (available: check, update)");
+            false
+        }
+    }
 }
 
 fn cmd_bench(args: &Args) -> bool {

@@ -84,6 +84,68 @@ impl Json {
         }
     }
 
+    /// A number, or `null` when `x` is not finite. JSON has no encoding
+    /// for NaN/∞; consumers (figures, the budget checker) must see "no
+    /// data", never a fabricated value. `Display` has the same backstop
+    /// for a bare `Json::Num(NAN)`; this constructor states the intent
+    /// at the call site. Use it for any metric that can be undefined
+    /// (miss rates over empty windows, ratios with a zero denominator).
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Pretty-printed encoding (2-space indent, canonical key order,
+    /// trailing newline) for checked-in, human-reviewed documents like
+    /// `BUDGETS.json` — a re-baseline must produce a reviewable diff.
+    /// [`Json::parse`] accepts both forms; `to_string` stays compact
+    /// for machine artifacts.
+    pub fn to_pretty_string(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(depth + 1));
+                    x.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(depth + 1));
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push('}');
+            }
+            other => out.push_str(&other.to_string()),
+        }
+    }
+
     /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -139,7 +201,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // Backstop: NaN/∞ have no JSON representation, and
+                    // emitting them would corrupt the whole document.
+                    // Encode as null ("no data"), like num_or_null.
+                    write!(f, "null")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
                     write!(f, "{x}")
@@ -185,6 +252,27 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
         }
     }
     write!(f, "\"")
+}
+
+/// Required numeric field with a path-prefixed error message — the
+/// shared shape of the scenario-spec and budget-ledger parsers, so
+/// their "name the offending node" error convention cannot drift.
+pub fn req_f64_at(node: &Json, key: &str, path: &str) -> Result<f64, String> {
+    node.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{path}: missing numeric field {key:?}"))
+}
+
+/// Optional numeric field: `None` when absent or JSON `null`, the same
+/// path-prefixed error as [`req_f64_at`] when present but non-numeric.
+pub fn opt_f64_at(node: &Json, key: &str, path: &str) -> Result<Option<f64>, String> {
+    match node.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| format!("{path}: field {key:?} must be a number")),
+    }
 }
 
 struct Parser<'a> {
@@ -420,6 +508,36 @@ mod tests {
         for text in ["", "{", "[1,", "{\"a\"}", "tru", "1 2", "{\"a\":}"] {
             assert!(Json::parse(text).is_err(), "{text}");
         }
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_is_line_oriented() {
+        let v = Json::parse(
+            r#"{"b": [1, {"x": null}, "s"], "a": 2.5, "empty_arr": [], "empty_obj": {}}"#,
+        )
+        .unwrap();
+        let pretty = v.to_pretty_string();
+        assert_eq!(Json::parse(&pretty).unwrap(), v, "{pretty}");
+        assert!(pretty.ends_with('\n'));
+        assert!(pretty.lines().count() > 5, "{pretty}");
+        // Empty containers stay compact; scalars are unchanged.
+        assert!(pretty.contains("\"empty_arr\": []"), "{pretty}");
+        assert!(pretty.contains("\"empty_obj\": {}"), "{pretty}");
+        assert_eq!(Json::Num(2.0).to_pretty_string(), "2\n");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::num_or_null(0.25), Json::Num(0.25));
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num_or_null(f64::NEG_INFINITY), Json::Null);
+        // Even a Num constructed directly must never emit invalid JSON.
+        let mut o = Json::obj();
+        o.set("miss", Json::Num(f64::NAN)).set("ratio", Json::Num(f64::INFINITY));
+        let text = o.to_string();
+        assert_eq!(text, r#"{"miss":null,"ratio":null}"#);
+        assert!(Json::parse(&text).is_ok(), "{text}");
     }
 
     #[test]

@@ -53,15 +53,29 @@
 //! | `flash_crowd`  | `base`, `peak`, `start`, `ramp`, `hold`, `decay`, `cv`?, `duration` |
 //! | `pareto`       | `lambda`, `shape` (α > 1), `duration`                    |
 //! | `lognormal`    | `lambda`, `sigma`, `duration`                            |
-//! | `replay`       | `path`, `time_scale`?, `target_rate`?                    |
+//! | `replay`       | `path`, `time_scale`? ⊕ `target_rate`?                   |
+//! | `autoscale`    | `workload` (big_spike\|instant_spike), `max_qps`, `time_scale`? ⊕ `target_rate`? |
 //! | `superpose`    | `of` [nodes]                                             |
 //! | `splice`       | `of` [nodes]                                             |
 //! | `thin`         | `p`, `of` node                                           |
 //! | `ramp_between` | `from` node, `to` node, `overlap`                        |
+//!
+//! `time_scale` and `target_rate` are mutually exclusive (⊕):
+//! `target_rate` renormalizes the mean rate after any time scaling, so
+//! combining them would erase the `time_scale` exactly and silently.
+//!
+//! A spec may also carry an optional top-level `"quick"` node — an
+//! alternative scenario served in quick (CI) mode when plain duration
+//! scaling ([`Scenario::scaled`]) does not fit, e.g. replayed timelines
+//! whose horizon is fixed by the source trace.
+//!
+//! Parse errors name the offending node by its path from the document
+//! root (`scenario.of[1]: mmpp dwell must be > 0`), so a malformed
+//! checked-in spec is actionable from the CLI error alone.
 
 use std::path::Path;
 
-use crate::util::json::Json;
+use crate::util::json::{opt_f64_at, req_f64_at as req_num, Json};
 use crate::util::rng::Rng;
 
 use super::Trace;
@@ -316,6 +330,18 @@ pub fn rescale_to_rate(trace: &Trace, target_qps: f64) -> Trace {
     rescale_time(trace, rate / target_qps)
 }
 
+/// Post-process a replayed trace (`replay` / `autoscale` nodes):
+/// compress or stretch time, then pin the mean rate if requested.
+fn apply_replay_scaling(mut trace: Trace, time_scale: f64, target_rate: Option<f64>) -> Trace {
+    if (time_scale - 1.0).abs() > 1e-12 {
+        trace = rescale_time(&trace, time_scale);
+    }
+    if let Some(target) = target_rate {
+        trace = rescale_to_rate(&trace, target);
+    }
+    trace
+}
+
 // ---------------------------------------------------------------------------
 // Declarative scenario tree
 // ---------------------------------------------------------------------------
@@ -341,169 +367,230 @@ pub enum Scenario {
     Pareto { lambda: f64, shape: f64, duration: f64 },
     Lognormal { lambda: f64, sigma: f64, duration: f64 },
     Replay { path: String, time_scale: f64, target_rate: Option<f64> },
+    /// Replay of one of the paper's AutoScale-derived workloads
+    /// ([`crate::workload::autoscale`]), synthesized at `max_qps` peak
+    /// and optionally compressed / rescaled like [`Scenario::Replay`].
+    /// Unlike a `replay` file node it needs no on-disk trace, so
+    /// checked-in scenario specs can reference the paper workloads.
+    AutoScale { workload: String, max_qps: f64, time_scale: f64, target_rate: Option<f64> },
     Superpose(Vec<Scenario>),
     Splice(Vec<Scenario>),
     Thin { p: f64, of: Box<Scenario> },
     RampBetween { from: Box<Scenario>, to: Box<Scenario>, overlap: f64 },
 }
 
-fn req_num(node: &Json, key: &str) -> Result<f64, String> {
-    node.get(key)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| format!("scenario node missing numeric field {key:?}"))
-}
-
 /// Range check performed at parse time, so a malformed-but-numeric spec
-/// surfaces as a CLI error instead of tripping a generator assertion.
-fn check(cond: bool, what: &str) -> Result<(), String> {
+/// surfaces as a CLI error (naming the node at `path`) instead of
+/// tripping a generator assertion.
+fn check(cond: bool, path: &str, what: &str) -> Result<(), String> {
     if cond {
         Ok(())
     } else {
-        Err(format!("scenario field out of range: {what}"))
+        Err(format!("{path}: out of range: {what}"))
     }
 }
 
-fn opt_num(node: &Json, key: &str, default: f64) -> Result<f64, String> {
+fn opt_num(node: &Json, key: &str, default: f64, path: &str) -> Result<f64, String> {
     match node.get(key) {
         None => Ok(default),
         Some(v) => v
             .as_f64()
-            .ok_or_else(|| format!("scenario field {key:?} must be a number")),
+            .ok_or_else(|| format!("{path}: field {key:?} must be a number")),
     }
 }
 
-fn num_array(node: &Json, key: &str) -> Result<Vec<f64>, String> {
+fn req_str(node: &Json, key: &str, path: &str) -> Result<String, String> {
+    node.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("{path}: missing string field {key:?}"))
+}
+
+fn num_array(node: &Json, key: &str, path: &str) -> Result<Vec<f64>, String> {
     let arr = node
         .get(key)
         .and_then(Json::as_arr)
-        .ok_or_else(|| format!("scenario node missing array field {key:?}"))?;
+        .ok_or_else(|| format!("{path}: missing array field {key:?}"))?;
     arr.iter()
-        .map(|v| v.as_f64().ok_or_else(|| format!("{key:?} must contain numbers")))
+        .map(|v| v.as_f64().ok_or_else(|| format!("{path}: {key:?} must contain numbers")))
         .collect()
 }
 
-fn node_list(node: &Json, key: &str) -> Result<Vec<Scenario>, String> {
+fn node_list(node: &Json, key: &str, path: &str) -> Result<Vec<Scenario>, String> {
     let arr = node
         .get(key)
         .and_then(Json::as_arr)
-        .ok_or_else(|| format!("scenario node missing array field {key:?}"))?;
+        .ok_or_else(|| format!("{path}: missing array field {key:?}"))?;
     if arr.is_empty() {
-        return Err(format!("scenario field {key:?} must not be empty"));
+        return Err(format!("{path}: field {key:?} must not be empty"));
     }
-    arr.iter().map(Scenario::parse).collect()
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| Scenario::parse_at(v, &format!("{path}.{key}[{i}]")))
+        .collect()
 }
 
-fn sub_node(node: &Json, key: &str) -> Result<Box<Scenario>, String> {
+/// Shared `time_scale` / `target_rate` fields of the replay-style kinds
+/// (`replay`, `autoscale`). Mutually exclusive: `rescale_to_rate`
+/// renormalizes the mean rate after any time scaling, which would erase
+/// a `time_scale` exactly and silently — reject the combination at
+/// parse instead.
+fn replay_scaling(node: &Json, path: &str, kind: &str) -> Result<(f64, Option<f64>), String> {
+    let time_scale = opt_num(node, "time_scale", 1.0, path)?;
+    check(time_scale > 0.0, path, &format!("{kind} time_scale must be > 0"))?;
+    let target_rate = opt_f64_at(node, "target_rate", path)?;
+    check(
+        target_rate.map_or(true, |r| r > 0.0),
+        path,
+        &format!("{kind} target_rate must be > 0"),
+    )?;
+    if (time_scale - 1.0).abs() > 1e-12 && target_rate.is_some() {
+        return Err(format!(
+            "{path}: {kind} \"time_scale\" and \"target_rate\" are mutually exclusive \
+             (target_rate renormalizes the mean rate, erasing time_scale exactly)"
+        ));
+    }
+    Ok((time_scale, target_rate))
+}
+
+fn sub_node(node: &Json, key: &str, path: &str) -> Result<Box<Scenario>, String> {
     let sub = node
         .get(key)
-        .ok_or_else(|| format!("scenario node missing field {key:?}"))?;
-    Ok(Box::new(Scenario::parse(sub)?))
+        .ok_or_else(|| format!("{path}: missing field {key:?}"))?;
+    Ok(Box::new(Scenario::parse_at(sub, &format!("{path}.{key}"))?))
 }
 
 impl Scenario {
     /// Parse one scenario node from its JSON form (see the module docs
-    /// for the schema).
+    /// for the schema). Errors name the offending node by its path from
+    /// the document root.
     pub fn parse(node: &Json) -> Result<Scenario, String> {
+        Self::parse_at(node, "scenario")
+    }
+
+    fn parse_at(node: &Json, path: &str) -> Result<Scenario, String> {
         let kind = node
             .get("kind")
             .and_then(Json::as_str)
-            .ok_or("scenario node missing string field \"kind\"")?;
+            .ok_or_else(|| format!("{path}: missing string field \"kind\""))?;
         match kind {
             "gamma" => {
-                let (lambda, cv) = (req_num(node, "lambda")?, opt_num(node, "cv", 1.0)?);
-                let duration = req_num(node, "duration")?;
-                check(lambda > 0.0, "gamma lambda must be > 0")?;
-                check(cv > 0.0, "gamma cv must be > 0")?;
-                check(duration > 0.0, "gamma duration must be > 0")?;
+                let lambda = req_num(node, "lambda", path)?;
+                let cv = opt_num(node, "cv", 1.0, path)?;
+                let duration = req_num(node, "duration", path)?;
+                check(lambda > 0.0, path, "gamma lambda must be > 0")?;
+                check(cv > 0.0, path, "gamma cv must be > 0")?;
+                check(duration > 0.0, path, "gamma duration must be > 0")?;
                 Ok(Scenario::Gamma { lambda, cv, duration })
             }
             "mmpp" => {
-                let rates = num_array(node, "rates")?;
-                let dwell = num_array(node, "dwell")?;
+                let rates = num_array(node, "rates", path)?;
+                let dwell = num_array(node, "dwell", path)?;
                 if rates.is_empty() || rates.len() != dwell.len() {
-                    return Err("mmpp needs matching non-empty \"rates\" and \"dwell\"".into());
+                    return Err(format!(
+                        "{path}: mmpp needs matching non-empty \"rates\" and \"dwell\""
+                    ));
                 }
-                let duration = req_num(node, "duration")?;
-                check(rates.iter().all(|&r| r > 0.0), "mmpp rates must be > 0")?;
-                check(dwell.iter().all(|&d| d > 0.0), "mmpp dwell must be > 0")?;
-                check(duration > 0.0, "mmpp duration must be > 0")?;
+                let duration = req_num(node, "duration", path)?;
+                check(rates.iter().all(|&r| r > 0.0), path, "mmpp rates must be > 0")?;
+                check(dwell.iter().all(|&d| d > 0.0), path, "mmpp dwell must be > 0")?;
+                check(duration > 0.0, path, "mmpp duration must be > 0")?;
                 Ok(Scenario::Mmpp { rates, dwell, duration })
             }
             "diurnal" => {
-                let (base, amplitude) = (req_num(node, "base")?, req_num(node, "amplitude")?);
-                let (period, cv) = (req_num(node, "period")?, opt_num(node, "cv", 1.0)?);
-                let duration = req_num(node, "duration")?;
-                check(base > 0.0, "diurnal base must be > 0")?;
-                check((0.0..1.0).contains(&amplitude), "diurnal amplitude must be in [0, 1)")?;
-                check(period > 0.0 && cv > 0.0, "diurnal period and cv must be > 0")?;
-                check(duration > 0.0, "diurnal duration must be > 0")?;
+                let base = req_num(node, "base", path)?;
+                let amplitude = req_num(node, "amplitude", path)?;
+                let period = req_num(node, "period", path)?;
+                let cv = opt_num(node, "cv", 1.0, path)?;
+                let duration = req_num(node, "duration", path)?;
+                check(base > 0.0, path, "diurnal base must be > 0")?;
+                check(
+                    (0.0..1.0).contains(&amplitude),
+                    path,
+                    "diurnal amplitude must be in [0, 1)",
+                )?;
+                check(period > 0.0 && cv > 0.0, path, "diurnal period and cv must be > 0")?;
+                check(duration > 0.0, path, "diurnal duration must be > 0")?;
                 Ok(Scenario::Diurnal { base, amplitude, period, cv, duration })
             }
             "flash_crowd" => {
-                let (base, peak) = (req_num(node, "base")?, req_num(node, "peak")?);
-                let (start, ramp) = (req_num(node, "start")?, opt_num(node, "ramp", 1.0)?);
-                let (hold, decay) = (req_num(node, "hold")?, opt_num(node, "decay", 1.0)?);
-                let (cv, duration) = (opt_num(node, "cv", 1.0)?, req_num(node, "duration")?);
-                check(base > 0.0 && peak > 0.0, "flash_crowd rates must be > 0")?;
+                let base = req_num(node, "base", path)?;
+                let peak = req_num(node, "peak", path)?;
+                let start = req_num(node, "start", path)?;
+                let ramp = opt_num(node, "ramp", 1.0, path)?;
+                let hold = req_num(node, "hold", path)?;
+                let decay = opt_num(node, "decay", 1.0, path)?;
+                let cv = opt_num(node, "cv", 1.0, path)?;
+                let duration = req_num(node, "duration", path)?;
+                check(base > 0.0 && peak > 0.0, path, "flash_crowd rates must be > 0")?;
                 check(
                     start >= 0.0 && ramp >= 0.0 && hold >= 0.0 && decay >= 0.0,
+                    path,
                     "flash_crowd phases must be >= 0",
                 )?;
-                check(cv > 0.0 && duration > 0.0, "flash_crowd cv and duration must be > 0")?;
+                check(
+                    cv > 0.0 && duration > 0.0,
+                    path,
+                    "flash_crowd cv and duration must be > 0",
+                )?;
                 Ok(Scenario::FlashCrowd { base, peak, start, ramp, hold, decay, cv, duration })
             }
             "pareto" => {
-                let (lambda, shape) = (req_num(node, "lambda")?, req_num(node, "shape")?);
-                let duration = req_num(node, "duration")?;
-                check(lambda > 0.0, "pareto lambda must be > 0")?;
-                check(shape > 1.0, "pareto shape must be > 1 (finite mean)")?;
-                check(duration > 0.0, "pareto duration must be > 0")?;
+                let lambda = req_num(node, "lambda", path)?;
+                let shape = req_num(node, "shape", path)?;
+                let duration = req_num(node, "duration", path)?;
+                check(lambda > 0.0, path, "pareto lambda must be > 0")?;
+                check(shape > 1.0, path, "pareto shape must be > 1 (finite mean)")?;
+                check(duration > 0.0, path, "pareto duration must be > 0")?;
                 Ok(Scenario::Pareto { lambda, shape, duration })
             }
             "lognormal" => {
-                let (lambda, sigma) = (req_num(node, "lambda")?, req_num(node, "sigma")?);
-                let duration = req_num(node, "duration")?;
-                check(lambda > 0.0 && sigma > 0.0, "lognormal lambda and sigma must be > 0")?;
-                check(duration > 0.0, "lognormal duration must be > 0")?;
+                let lambda = req_num(node, "lambda", path)?;
+                let sigma = req_num(node, "sigma", path)?;
+                let duration = req_num(node, "duration", path)?;
+                check(
+                    lambda > 0.0 && sigma > 0.0,
+                    path,
+                    "lognormal lambda and sigma must be > 0",
+                )?;
+                check(duration > 0.0, path, "lognormal duration must be > 0")?;
                 Ok(Scenario::Lognormal { lambda, sigma, duration })
             }
             "replay" => {
-                let path = node
-                    .get("path")
-                    .and_then(Json::as_str)
-                    .ok_or("replay node missing string field \"path\"")?
-                    .to_string();
-                let target_rate = match node.get("target_rate") {
-                    None => None,
-                    Some(v) => Some(
-                        v.as_f64().ok_or("\"target_rate\" must be a number")?,
-                    ),
-                };
-                let time_scale = opt_num(node, "time_scale", 1.0)?;
-                check(time_scale > 0.0, "replay time_scale must be > 0")?;
-                check(
-                    target_rate.map_or(true, |r| r > 0.0),
-                    "replay target_rate must be > 0",
-                )?;
-                Ok(Scenario::Replay { path, time_scale, target_rate })
+                let file = req_str(node, "path", path)?;
+                let (time_scale, target_rate) = replay_scaling(node, path, "replay")?;
+                Ok(Scenario::Replay { path: file, time_scale, target_rate })
             }
-            "superpose" => Ok(Scenario::Superpose(node_list(node, "of")?)),
-            "splice" => Ok(Scenario::Splice(node_list(node, "of")?)),
+            "autoscale" => {
+                let workload = req_str(node, "workload", path)?;
+                if !matches!(workload.as_str(), "big_spike" | "instant_spike") {
+                    return Err(format!(
+                        "{path}: unknown autoscale workload {workload:?} \
+                         (expected \"big_spike\" or \"instant_spike\")"
+                    ));
+                }
+                let max_qps = req_num(node, "max_qps", path)?;
+                check(max_qps > 0.0, path, "autoscale max_qps must be > 0")?;
+                let (time_scale, target_rate) = replay_scaling(node, path, "autoscale")?;
+                Ok(Scenario::AutoScale { workload, max_qps, time_scale, target_rate })
+            }
+            "superpose" => Ok(Scenario::Superpose(node_list(node, "of", path)?)),
+            "splice" => Ok(Scenario::Splice(node_list(node, "of", path)?)),
             "thin" => {
-                let p = req_num(node, "p")?;
-                check((0.0..=1.0).contains(&p), "thin p must be in [0, 1]")?;
-                Ok(Scenario::Thin { p, of: sub_node(node, "of")? })
+                let p = req_num(node, "p", path)?;
+                check((0.0..=1.0).contains(&p), path, "thin p must be in [0, 1]")?;
+                Ok(Scenario::Thin { p, of: sub_node(node, "of", path)? })
             }
             "ramp_between" => {
-                let overlap = req_num(node, "overlap")?;
-                check(overlap >= 0.0, "ramp_between overlap must be >= 0")?;
+                let overlap = req_num(node, "overlap", path)?;
+                check(overlap >= 0.0, path, "ramp_between overlap must be >= 0")?;
                 Ok(Scenario::RampBetween {
-                    from: sub_node(node, "from")?,
-                    to: sub_node(node, "to")?,
+                    from: sub_node(node, "from", path)?,
+                    to: sub_node(node, "to", path)?,
                     overlap,
                 })
             }
-            other => Err(format!("unknown scenario kind {other:?}")),
+            other => Err(format!("{path}: unknown scenario kind {other:?}")),
         }
     }
 
@@ -533,14 +620,17 @@ impl Scenario {
                 Ok(lognormal_trace(*lambda, *sigma, *duration, seed))
             }
             Scenario::Replay { path, time_scale, target_rate } => {
-                let mut trace = Trace::load(Path::new(path))?;
-                if (*time_scale - 1.0).abs() > 1e-12 {
-                    trace = rescale_time(&trace, *time_scale);
-                }
-                if let Some(target) = target_rate {
-                    trace = rescale_to_rate(&trace, *target);
-                }
-                Ok(trace)
+                let trace = Trace::load(Path::new(path))?;
+                Ok(apply_replay_scaling(trace, *time_scale, *target_rate))
+            }
+            Scenario::AutoScale { workload, max_qps, time_scale, target_rate } => {
+                let minutes = match workload.as_str() {
+                    "big_spike" => super::autoscale::big_spike_minutes(),
+                    "instant_spike" => super::autoscale::instant_spike_minutes(),
+                    other => return Err(format!("unknown autoscale workload {other:?}")),
+                };
+                let trace = super::autoscale::synthesize(&minutes, *max_qps, seed);
+                Ok(apply_replay_scaling(trace, *time_scale, *target_rate))
             }
             Scenario::Superpose(parts) => {
                 let traces = parts
@@ -569,6 +659,71 @@ impl Scenario {
             }
         }
     }
+
+    /// Compress the scenario's *schedule* by `factor` (< 1 shortens):
+    /// every duration, period, phase boundary, dwell time and overlap is
+    /// scaled while rates are left untouched, so a 600 s scenario at
+    /// 100 QPS becomes a 120 s scenario at 100 QPS with the same shape.
+    /// This is how quick (CI) mode derives its matrix from the
+    /// checked-in full-mode specs. Replayed timelines
+    /// ([`Scenario::Replay`] / [`Scenario::AutoScale`]) keep their own
+    /// horizon — compressing them would multiply the rate instead — so
+    /// specs built on them declare an explicit `"quick"` node.
+    pub fn scaled(&self, factor: f64) -> Scenario {
+        assert!(factor > 0.0, "scale factor {factor}");
+        match self {
+            Scenario::Gamma { lambda, cv, duration } => {
+                Scenario::Gamma { lambda: *lambda, cv: *cv, duration: duration * factor }
+            }
+            Scenario::Mmpp { rates, dwell, duration } => Scenario::Mmpp {
+                rates: rates.clone(),
+                dwell: dwell.iter().map(|d| d * factor).collect(),
+                duration: duration * factor,
+            },
+            Scenario::Diurnal { base, amplitude, period, cv, duration } => Scenario::Diurnal {
+                base: *base,
+                amplitude: *amplitude,
+                period: period * factor,
+                cv: *cv,
+                duration: duration * factor,
+            },
+            Scenario::FlashCrowd { base, peak, start, ramp, hold, decay, cv, duration } => {
+                Scenario::FlashCrowd {
+                    base: *base,
+                    peak: *peak,
+                    start: start * factor,
+                    ramp: ramp * factor,
+                    hold: hold * factor,
+                    decay: decay * factor,
+                    cv: *cv,
+                    duration: duration * factor,
+                }
+            }
+            Scenario::Pareto { lambda, shape, duration } => {
+                Scenario::Pareto { lambda: *lambda, shape: *shape, duration: duration * factor }
+            }
+            Scenario::Lognormal { lambda, sigma, duration } => Scenario::Lognormal {
+                lambda: *lambda,
+                sigma: *sigma,
+                duration: duration * factor,
+            },
+            Scenario::Replay { .. } | Scenario::AutoScale { .. } => self.clone(),
+            Scenario::Superpose(parts) => {
+                Scenario::Superpose(parts.iter().map(|p| p.scaled(factor)).collect())
+            }
+            Scenario::Splice(parts) => {
+                Scenario::Splice(parts.iter().map(|p| p.scaled(factor)).collect())
+            }
+            Scenario::Thin { p, of } => {
+                Scenario::Thin { p: *p, of: Box::new(of.scaled(factor)) }
+            }
+            Scenario::RampBetween { from, to, overlap } => Scenario::RampBetween {
+                from: Box::new(from.scaled(factor)),
+                to: Box::new(to.scaled(factor)),
+                overlap: overlap * factor,
+            },
+        }
+    }
 }
 
 /// A named, seeded scenario document: the on-disk unit the CLI loads.
@@ -577,15 +732,26 @@ pub struct ScenarioSpec {
     pub name: String,
     pub seed: u64,
     pub scenario: Scenario,
+    /// Optional explicit quick-mode (CI) scenario. When absent, quick
+    /// mode serves `scenario.scaled(Self::QUICK_FACTOR)`.
+    pub quick: Option<Scenario>,
 }
 
 impl ScenarioSpec {
-    /// Parse a full spec document (`{"name", "seed", "scenario"}`; name
-    /// defaults to `"scenario"`, seed to 42).
+    /// Schedule-compression factor quick mode applies to specs without
+    /// an explicit `"quick"` node (600 s full scenarios become 120 s).
+    pub const QUICK_FACTOR: f64 = 0.2;
+
+    /// Parse a full spec document (`{"name", "seed", "scenario",
+    /// "quick"?}`; name defaults to `"scenario"`, seed to 42).
     pub fn parse(doc: &Json) -> Result<ScenarioSpec, String> {
         let scenario = doc
             .get("scenario")
             .ok_or("spec missing field \"scenario\"")?;
+        let quick = match doc.get("quick") {
+            None => None,
+            Some(q) => Some(Scenario::parse_at(q, "quick")?),
+        };
         Ok(ScenarioSpec {
             name: doc
                 .get("name")
@@ -594,7 +760,21 @@ impl ScenarioSpec {
                 .to_string(),
             seed: doc.get("seed").and_then(Json::as_f64).unwrap_or(42.0) as u64,
             scenario: Scenario::parse(scenario)?,
+            quick,
         })
+    }
+
+    /// The scenario to serve in the given mode: the full node, the
+    /// explicit quick node, or the schedule-compressed full node (see
+    /// [`Scenario::scaled`]).
+    pub fn scenario_for(&self, quick: bool) -> Scenario {
+        if !quick {
+            return self.scenario.clone();
+        }
+        match &self.quick {
+            Some(q) => q.clone(),
+            None => self.scenario.scaled(Self::QUICK_FACTOR),
+        }
     }
 
     pub fn parse_str(text: &str) -> Result<ScenarioSpec, String> {
@@ -780,6 +960,128 @@ mod tests {
         ] {
             assert!(ScenarioSpec::parse_str(text).is_err(), "{text}");
         }
+    }
+
+    #[test]
+    fn parse_errors_name_the_offending_node() {
+        let cases = [
+            (
+                r#"{"scenario": {"kind": "superpose", "of": [
+                    {"kind": "gamma", "lambda": 60, "duration": 60},
+                    {"kind": "mmpp", "rates": [0, 5], "dwell": [1, 1], "duration": 10}
+                ]}}"#,
+                "scenario.of[1]",
+            ),
+            (
+                r#"{"scenario": {"kind": "thin", "p": 0.5,
+                    "of": {"kind": "gamma", "cv": 1.0}}}"#,
+                "scenario.of",
+            ),
+            (
+                r#"{"scenario": {"kind": "ramp_between", "overlap": 5,
+                    "from": {"kind": "gamma", "lambda": 10, "duration": 5},
+                    "to": {"kind": "nope"}}}"#,
+                "scenario.to",
+            ),
+            (
+                r#"{"scenario": {"kind": "gamma", "lambda": 10, "duration": 5},
+                    "quick": {"kind": "gamma", "lambda": -1, "duration": 5}}"#,
+                "quick",
+            ),
+            (
+                r#"{"scenario": {"kind": "autoscale", "workload": "huge_spike",
+                    "max_qps": 50}}"#,
+                "unknown autoscale workload",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = ScenarioSpec::parse_str(text).unwrap_err();
+            assert!(err.contains(needle), "{err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn autoscale_node_builds_and_rescales() {
+        let spec = ScenarioSpec::parse_str(
+            r#"{"scenario": {"kind": "autoscale", "workload": "big_spike",
+                "max_qps": 40, "target_rate": 100}}"#,
+        )
+        .unwrap();
+        let a = spec.scenario.build(3).unwrap();
+        assert_eq!(a, spec.scenario.build(3).unwrap());
+        assert_ne!(a, spec.scenario.build(4).unwrap());
+        assert!((a.mean_rate() - 100.0).abs() < 5.0, "rate {}", a.mean_rate());
+        // The big spike survives the rescale: the peak window rate is
+        // well above the mean.
+        assert!(a.peak_rate(10.0) > 1.5 * a.mean_rate(), "peak {}", a.peak_rate(10.0));
+        // Malformed nodes are rejected at parse with the range named.
+        for text in [
+            r#"{"scenario": {"kind": "autoscale", "max_qps": 40}}"#,
+            r#"{"scenario": {"kind": "autoscale", "workload": "big_spike", "max_qps": 0}}"#,
+            r#"{"scenario": {"kind": "autoscale", "workload": "big_spike",
+                "max_qps": 40, "target_rate": -5}}"#,
+        ] {
+            assert!(ScenarioSpec::parse_str(text).is_err(), "{text}");
+        }
+        // time_scale + target_rate together would be a silent no-op
+        // (the rate renormalization erases the time scaling exactly), so
+        // the combination is rejected at parse with both fields named.
+        let err = ScenarioSpec::parse_str(
+            r#"{"scenario": {"kind": "autoscale", "workload": "big_spike",
+                "max_qps": 40, "time_scale": 0.2, "target_rate": 100}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn scaled_compresses_schedule_not_rates() {
+        let full = Scenario::Splice(vec![
+            Scenario::Gamma { lambda: 100.0, cv: 1.0, duration: 300.0 },
+            Scenario::Diurnal {
+                base: 100.0,
+                amplitude: 0.5,
+                period: 150.0,
+                cv: 1.0,
+                duration: 300.0,
+            },
+        ]);
+        let quick = full.scaled(0.2);
+        let tr = quick.build(5).unwrap();
+        assert!(tr.duration() < 130.0, "duration {}", tr.duration());
+        assert!((tr.mean_rate() - 100.0).abs() < 20.0, "rate {}", tr.mean_rate());
+        // Replayed timelines are left untouched.
+        let replay = Scenario::AutoScale {
+            workload: "big_spike".into(),
+            max_qps: 40.0,
+            time_scale: 1.0,
+            target_rate: Some(100.0),
+        };
+        assert_eq!(replay.scaled(0.2), replay);
+    }
+
+    #[test]
+    fn explicit_quick_node_wins() {
+        let spec = ScenarioSpec::parse_str(
+            r#"{"seed": 3,
+                "scenario": {"kind": "gamma", "lambda": 100, "duration": 600},
+                "quick": {"kind": "gamma", "lambda": 100, "duration": 90}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.scenario_for(false), spec.scenario);
+        assert_eq!(
+            spec.scenario_for(true),
+            Scenario::Gamma { lambda: 100.0, cv: 1.0, duration: 90.0 }
+        );
+        // Without a quick node, quick mode compresses the schedule.
+        let plain = ScenarioSpec::parse_str(
+            r#"{"scenario": {"kind": "gamma", "lambda": 100, "duration": 600}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            plain.scenario_for(true),
+            Scenario::Gamma { lambda: 100.0, cv: 1.0, duration: 120.0 }
+        );
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! SLO-budget-ledger integration: the checked-in `scenarios/` matrix,
+//! the checked-in `BUDGETS.json`, and the `budget check` gate against a
+//! real robustness grid report.
+//!
+//! Three invariants ride here:
+//!
+//! 1. every `scenarios/*.json` file on disk parses, names itself after
+//!    its file stem, builds a nonempty trace in both modes, and the
+//!    directory matches `robustness::FAMILIES` exactly (the embedded
+//!    copies are `include_str!` of these same files, so disk and binary
+//!    cannot drift — but a file missing from the registration tables
+//!    can);
+//! 2. `BUDGETS.json` parses and both mode sections cover the matrix
+//!    exactly, at the seed and SLO CI actually runs;
+//! 3. a grid report round-trips the ledger machinery end to end:
+//!    re-baseline → check passes; a tightened budget fails naming the
+//!    offending scenario.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use inferline::config::pipelines;
+use inferline::experiments::budgets::{self, BudgetFile};
+use inferline::experiments::robustness::{self, FAMILIES};
+use inferline::workload::scenarios::ScenarioSpec;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+#[test]
+fn every_checked_in_scenario_parses_and_builds() {
+    let dir = repo_root().join("scenarios");
+    let mut found = BTreeSet::new();
+    for entry in std::fs::read_dir(&dir).expect("scenarios/ directory at the repo root") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let stem = path.file_stem().unwrap().to_str().unwrap().to_string();
+        let spec =
+            ScenarioSpec::load(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(spec.name, stem, "{}: spec name must match the file stem", path.display());
+        for quick in [false, true] {
+            let trace = spec
+                .scenario_for(quick)
+                .build(7)
+                .unwrap_or_else(|e| panic!("{stem} (quick={quick}): {e}"));
+            assert!(!trace.is_empty(), "{stem} (quick={quick}): empty trace");
+            assert!(
+                trace.duration() > 30.0,
+                "{stem} (quick={quick}): only {:.1}s of arrivals",
+                trace.duration()
+            );
+            assert!(trace.mean_rate() > 10.0, "{stem} (quick={quick}): near-idle trace");
+        }
+        found.insert(stem);
+    }
+    let families: BTreeSet<String> = FAMILIES.iter().map(|f| f.to_string()).collect();
+    assert_eq!(found, families, "scenarios/*.json and robustness::FAMILIES must match 1:1");
+    assert!(families.len() >= 12, "matrix shrank to {}", families.len());
+}
+
+#[test]
+fn checked_in_budgets_cover_the_matrix() {
+    let path = repo_root().join("BUDGETS.json");
+    let file = BudgetFile::load(&path).expect("BUDGETS.json must parse");
+    for (mode, section) in [("quick", &file.quick), ("full", &file.full)] {
+        let mb = section.as_ref().unwrap_or_else(|| panic!("missing {mode} section"));
+        // CI runs the harness at the default seed and SLO; a ledger
+        // pinned to anything else could never gate.
+        assert_eq!(mb.seed, 42, "{mode}: seed must match the harness default");
+        assert!(
+            (mb.slo - robustness::DEFAULT_SLO).abs() < 1e-12,
+            "{mode}: slo {} vs harness {}",
+            mb.slo,
+            robustness::DEFAULT_SLO
+        );
+        assert!(mb.miss_slack > 0.0 && mb.miss_slack < 0.5, "{mode}: miss_slack");
+        assert!(mb.cost_slack >= 1.0, "{mode}: cost_slack");
+        assert!(mb.ratio_slack > 0.0 && mb.ratio_slack <= 1.0, "{mode}: ratio_slack");
+        let budgeted: BTreeSet<&str> = mb.scenarios.keys().map(String::as_str).collect();
+        let families: BTreeSet<&str> = FAMILIES.iter().copied().collect();
+        assert_eq!(budgeted, families, "{mode}: the ledger must cover the matrix exactly");
+        for (name, b) in &mb.scenarios {
+            assert!(
+                b.max_miss_rate >= 0.0 && b.max_miss_rate <= 1.0,
+                "{mode}/{name}: max_miss_rate {}",
+                b.max_miss_rate
+            );
+            assert!(b.max_cost_overhead >= 1.0, "{mode}/{name}: max_cost_overhead");
+            assert!(b.min_peak_cost_ratio >= 0.0, "{mode}/{name}: min_peak_cost_ratio");
+            if let Some(c) = b.max_cost_per_hour {
+                assert!(c > 0.0, "{mode}/{name}: max_cost_per_hour {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_report_gates_through_the_ledger() {
+    let specs = [pipelines::image_processing()];
+    let families = ["steady", "flash-crowd"];
+    let cells =
+        robustness::run_grid(&families, &specs, 42, robustness::DEFAULT_SLO, true);
+    let report = robustness::report_json(42, robustness::DEFAULT_SLO, true, &cells);
+    // Re-baseline a fresh ledger from the run, then check: must pass.
+    let mut ledger = BudgetFile::default();
+    assert_eq!(budgets::update(&report, &mut ledger).unwrap(), "quick");
+    let outcome = budgets::check(&report, &ledger).unwrap();
+    assert_eq!(outcome.mode, "quick");
+    assert!(outcome.violations.is_empty(), "{:?}", outcome.violations);
+    assert_eq!(outcome.lines.len(), families.len());
+    // Round-trip through disk exactly like the CLI does.
+    let dir = std::env::temp_dir().join("inferline-budget-ledger-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BUDGETS.json");
+    ledger.save(&path).unwrap();
+    assert_eq!(BudgetFile::load(&path).unwrap(), ledger);
+    // Tightening a budget past the observation fails, naming the
+    // scenario (the CI gate's one job).
+    let mut tight = ledger.clone();
+    tight.quick.as_mut().unwrap().scenarios.get_mut("flash-crowd").unwrap().max_miss_rate =
+        -1.0;
+    let outcome = budgets::check(&report, &tight).unwrap();
+    assert!(
+        outcome
+            .violations
+            .iter()
+            .any(|v| v.scenario == "flash-crowd" && v.what.contains("miss rate")),
+        "{:?}",
+        outcome.violations
+    );
+    assert!(
+        !outcome.violations.iter().any(|v| v.scenario == "steady"),
+        "steady was within budget: {:?}",
+        outcome.violations
+    );
+    // The baselines genuinely met the matrix: both systems ran in every
+    // cell with live comparative ratios.
+    for c in &cells {
+        let m = c.outcome.as_ref().unwrap();
+        let peak = m
+            .baselines
+            .iter()
+            .find(|b| b.system == budgets::PEAK_BASELINE)
+            .expect("CG-Peak baseline in every cell");
+        assert!(peak.cost_ratio.is_finite() && peak.cost_ratio > 0.0, "{}", c.scenario);
+    }
+}
