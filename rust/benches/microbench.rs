@@ -6,7 +6,10 @@
 //! * traffic-envelope construction + live rate monitoring — the Tuner's
 //!   per-arrival / per-tick work;
 //! * a full planner run — the end-to-end low-frequency path;
-//! * workload generation (Gamma sampling).
+//! * workload generation (Gamma sampling);
+//! * the event core in isolation — old-style heap churn (owned `Vec`
+//!   payloads, one record per hop) vs the slab queue with coalesced
+//!   delivery, on an identical synthetic workload.
 
 use inferline::config::pipelines;
 use inferline::planner::Planner;
@@ -91,4 +94,22 @@ fn main() {
     bench("workload: generate 1h @150qps CV=4 gamma trace", 1, 10, || {
         black_box(gamma_trace(150.0, 4.0, 3600.0, 7).len());
     });
+
+    // --- Event core in isolation: heap churn, old queue vs slab queue. ------
+    // Both drivers process the same 10^6-hop synthetic batch/fan-out
+    // workload and fold every hop into a checksum (equal checksums =>
+    // identical work in identical order, asserted in event_core's tests).
+    let hops = 1_000_000usize;
+    let reference = bench("event core: 1M hops, reference heap (Vec payloads)", 1, 5, || {
+        black_box(simulator::event_core::churn_reference(hops));
+    });
+    let core = bench("event core: 1M hops, slab queue + coalesced delivery", 1, 5, || {
+        black_box(simulator::event_core::churn_event_core(hops));
+    });
+    println!(
+        "  -> event-core speedup {:.2}x ({:.2} M hops/sec vs {:.2} M hops/sec)",
+        reference.mean_s / core.mean_s,
+        hops as f64 / core.mean_s / 1e6,
+        hops as f64 / reference.mean_s / 1e6
+    );
 }

@@ -1,0 +1,601 @@
+//! Estimator perf ledger: the checked-in `BENCH_estimator.json` baseline,
+//! gated by `inferline bench check` the way `BUDGETS.json` gates SLO
+//! drift (`experiments::budgets`).
+//!
+//! The perf-trajectory artifact gives successive PRs a comparable perf
+//! trail, but a trail alone has no teeth: a change that halves Estimator
+//! throughput ships silently unless something in CI knows what "fast"
+//! looked like. This module is that memory. The repo root carries a
+//! checked-in copy of the `bench estimator` report with one extra
+//! `check` stanza:
+//!
+//! ```json
+//! { "bench": "estimator", "quick": true, ...,
+//!   "check": { "min_ratio": 0.5 } }
+//! ```
+//!
+//! `inferline bench check` measures the current tree (or reads a
+//! `--current` report), then requires every throughput/speedup metric to
+//! hold `current >= baseline * min_ratio` — a ratio threshold, because
+//! wall-clock numbers move with the host; `min_ratio` says how much of
+//! the baselined performance any host must retain. It exits nonzero
+//! naming each regressed metric. `inferline bench update` re-baselines
+//! the file from a fresh run (preserving `min_ratio`); review the diff
+//! like any other regression-test change.
+//!
+//! Compared metrics, all higher-is-better:
+//!
+//! * `sim_queries_per_sec` — raw Estimator throughput;
+//! * `fast_accept.speedup` — budgeted feasibility vs full reference;
+//! * `event_core.speedup` — slab queue vs old-style heap churn;
+//! * `warm_start.speedup` — persisted-cache warm plan vs cold;
+//! * `pipelines.<name>.plans_per_sec` — end-to-end `plan()` rate per
+//!   pipeline.
+//!
+//! A `null`/missing metric is **no data** and fails the check — it must
+//! never read as a pass. Pipelines the baseline knows but the current
+//! run lacks (and vice versa) are violations too: the ledger and the
+//! bench move together. `warm_start.bit_identical` must be `true` in the
+//! current run — a fast-but-wrong warm start is not a perf win. Quick-
+//! and full-mode numbers are not comparable, so `check` refuses a
+//! current/baseline mode mismatch outright.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Expected `bench` tag; reports with any other tag are rejected
+/// wholesale (same policy as the SLO budget ledger).
+pub const BENCH_TAG: &str = "estimator";
+
+/// `min_ratio` used when `bench update` creates a baseline from scratch:
+/// any host must retain at least half the baselined performance.
+pub const DEFAULT_MIN_RATIO: f64 = 0.5;
+
+/// The scalar (non-pipeline) metrics the ledger compares, as
+/// (display name, JSON path) pairs.
+const SCALAR_METRICS: &[(&str, &[&str])] = &[
+    ("sim_queries_per_sec", &["sim_queries_per_sec"]),
+    ("fast_accept.speedup", &["fast_accept", "speedup"]),
+    ("event_core.speedup", &["event_core", "speedup"]),
+    ("warm_start.speedup", &["warm_start", "speedup"]),
+];
+
+fn num_at(doc: &Json, path: &[&str]) -> Option<f64> {
+    let mut node = doc;
+    for key in path {
+        node = node.get(key)?;
+    }
+    node.as_f64()
+}
+
+/// One ledger violation: which metric, and what went wrong.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub metric: String,
+    pub what: String,
+}
+
+/// Outcome of a check: human-readable per-metric lines plus the
+/// violations (empty = within the ledger).
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    pub lines: Vec<String>,
+    pub violations: Vec<Violation>,
+}
+
+/// Validate the `bench` tag; both sides of a comparison and every
+/// baseline written by `update` must carry it.
+fn require_tag(doc: &Json, what: &str) -> Result<(), String> {
+    let tag = doc.get("bench").and_then(Json::as_str).unwrap_or("<missing>");
+    if tag != BENCH_TAG {
+        return Err(format!("{what}: bench tag {tag:?} (expected {BENCH_TAG:?})"));
+    }
+    Ok(())
+}
+
+fn quick_flag(doc: &Json, what: &str) -> Result<bool, String> {
+    doc.get("quick")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("{what}: missing boolean field \"quick\""))
+}
+
+/// The baseline's ratio threshold (`check.min_ratio`), defaulting when
+/// the stanza is absent. Rejects non-positive or >1 thresholds — a
+/// ratio of 0 gates nothing and a ratio above 1 would fail a perfect
+/// reproduction of the baseline.
+pub fn min_ratio(baseline: &Json) -> Result<f64, String> {
+    match num_at(baseline, &["check", "min_ratio"]) {
+        None => Ok(DEFAULT_MIN_RATIO),
+        Some(r) if r > 0.0 && r <= 1.0 => Ok(r),
+        Some(r) => Err(format!("baseline check.min_ratio must be in (0, 1], got {r}")),
+    }
+}
+
+/// Compare one higher-is-better metric; `None` = no data on that side.
+fn compare(
+    name: &str,
+    base: Option<f64>,
+    cur: Option<f64>,
+    ratio: f64,
+    lines: &mut Vec<String>,
+    violations: &mut Vec<Violation>,
+) {
+    let (b, c) = match (base, cur) {
+        (Some(b), Some(c)) => (b, c),
+        (None, _) => {
+            violations.push(Violation {
+                metric: name.to_string(),
+                what: "no data in baseline (run `inferline bench update`)".to_string(),
+            });
+            return;
+        }
+        (_, None) => {
+            violations.push(Violation {
+                metric: name.to_string(),
+                what: "no data in current run".to_string(),
+            });
+            return;
+        }
+    };
+    let floor = b * ratio;
+    // NaN on either side must trip, so test for the pass and negate.
+    let ok = c >= floor;
+    if !ok {
+        violations.push(Violation {
+            metric: name.to_string(),
+            what: format!("{c:.4} below {floor:.4} (baseline {b:.4} x min_ratio {ratio})"),
+        });
+    }
+    lines.push(format!(
+        "  {name:<34} {c:>12.4} vs baseline {b:>12.4}  (floor {floor:.4})  {}",
+        if ok { "ok" } else { "FAIL" }
+    ));
+}
+
+/// Compare a current `bench estimator` report against the checked-in
+/// baseline. `Err` is reserved for unreadable inputs; a readable report
+/// that regresses yields `Ok` with violations.
+pub fn check(current: &Json, baseline: &Json) -> Result<CheckReport, String> {
+    require_tag(current, "current report")?;
+    require_tag(baseline, "baseline")?;
+    let ratio = min_ratio(baseline)?;
+    let mut lines = Vec::new();
+    let mut violations = Vec::new();
+    let cur_quick = quick_flag(current, "current report")?;
+    let base_quick = quick_flag(baseline, "baseline")?;
+    if cur_quick != base_quick {
+        // Quick- and full-mode numbers are incomparable: refuse outright
+        // instead of emitting per-metric "regressions" against a baseline
+        // the run was never measured at.
+        violations.push(Violation {
+            metric: "<ledger>".to_string(),
+            what: format!(
+                "current quick={cur_quick} but baseline quick={base_quick}; \
+                 re-run with the matching mode or re-baseline"
+            ),
+        });
+        return Ok(CheckReport { lines, violations });
+    }
+    for &(name, path) in SCALAR_METRICS {
+        let base = num_at(baseline, path);
+        let cur = num_at(current, path);
+        compare(name, base, cur, ratio, &mut lines, &mut violations);
+    }
+    let bit_identical = current
+        .get("warm_start")
+        .and_then(|w| w.get("bit_identical"))
+        .and_then(Json::as_bool);
+    match bit_identical {
+        Some(true) => {}
+        Some(false) => violations.push(Violation {
+            metric: "warm_start.bit_identical".to_string(),
+            what: "warm-started plan diverged from the cold plan".to_string(),
+        }),
+        None => violations.push(Violation {
+            metric: "warm_start.bit_identical".to_string(),
+            what: "no data in current run".to_string(),
+        }),
+    }
+    let Some(base_map) = baseline.get("pipelines").and_then(Json::as_obj) else {
+        return Err("baseline: \"pipelines\" missing or not an object".to_string());
+    };
+    let Some(cur_map) = current.get("pipelines").and_then(Json::as_obj) else {
+        return Err("current report: \"pipelines\" missing or not an object".to_string());
+    };
+    for (name, entry) in base_map {
+        let metric = format!("pipelines.{name}.plans_per_sec");
+        if let Some(err) = entry.get("error").and_then(Json::as_str) {
+            violations.push(Violation {
+                metric,
+                what: format!("baseline recorded an error ({err}); re-baseline"),
+            });
+            continue;
+        }
+        match cur_map.get(name) {
+            None => violations.push(Violation {
+                metric,
+                what: "pipeline absent from current run".to_string(),
+            }),
+            Some(cur_entry) => {
+                if let Some(err) = cur_entry.get("error").and_then(Json::as_str) {
+                    violations.push(Violation {
+                        metric,
+                        what: format!("current run failed to plan ({err})"),
+                    });
+                    continue;
+                }
+                compare(
+                    &metric,
+                    entry.get("plans_per_sec").and_then(Json::as_f64),
+                    cur_entry.get("plans_per_sec").and_then(Json::as_f64),
+                    ratio,
+                    &mut lines,
+                    &mut violations,
+                );
+            }
+        }
+    }
+    for name in cur_map.keys() {
+        if !base_map.contains_key(name) {
+            violations.push(Violation {
+                metric: format!("pipelines.{name}"),
+                what: "unbaselined pipeline (add it with `inferline bench update`)".to_string(),
+            });
+        }
+    }
+    Ok(CheckReport { lines, violations })
+}
+
+/// Build a new baseline document from a current run: the report itself
+/// plus the `check` stanza, whose `min_ratio` is preserved from the old
+/// baseline when one is given. Refuses reports with no-data metrics or
+/// errored pipelines — a ledger must never be seeded from a broken run.
+pub fn update(current: &Json, old_baseline: Option<&Json>) -> Result<Json, String> {
+    require_tag(current, "current report")?;
+    quick_flag(current, "current report")?;
+    for &(name, path) in SCALAR_METRICS {
+        if num_at(current, path).is_none() {
+            return Err(format!("cannot baseline: metric {name} has no data"));
+        }
+    }
+    let bit_identical = current
+        .get("warm_start")
+        .and_then(|w| w.get("bit_identical"))
+        .and_then(Json::as_bool);
+    if bit_identical != Some(true) {
+        return Err("cannot baseline: warm_start.bit_identical is not true".to_string());
+    }
+    let pipelines = current
+        .get("pipelines")
+        .and_then(Json::as_obj)
+        .ok_or("cannot baseline: missing object field \"pipelines\"")?;
+    for (name, entry) in pipelines {
+        if let Some(err) = entry.get("error").and_then(Json::as_str) {
+            return Err(format!("cannot baseline: pipeline {name} errored ({err})"));
+        }
+        if entry.get("plans_per_sec").and_then(Json::as_f64).is_none() {
+            return Err(format!("cannot baseline: pipeline {name} has no plans_per_sec"));
+        }
+    }
+    let ratio = match old_baseline {
+        Some(b) => min_ratio(b)?,
+        None => DEFAULT_MIN_RATIO,
+    };
+    let mut doc = current.clone();
+    let mut stanza = Json::obj();
+    stanza.set("min_ratio", ratio);
+    doc.set("check", stanza);
+    Ok(doc)
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry points
+// ---------------------------------------------------------------------------
+
+fn load_doc(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Obtain the current report: read `--current` when given, else run the
+/// benchmark in-process at the requested mode.
+fn current_doc(
+    current_path: Option<&Path>,
+    baseline_path: &Path,
+    quick: bool,
+) -> Result<Json, String> {
+    match current_path {
+        Some(p) => load_doc(p),
+        None => {
+            let cache_file = baseline_path.with_file_name("BENCH_estimator_cache.json");
+            Ok(super::estbench::collect(quick, &cache_file))
+        }
+    }
+}
+
+/// CLI `bench check`: true iff the current run holds the baseline's
+/// ratio floor on every metric.
+pub fn run_check(current_path: Option<&Path>, baseline_path: &Path, quick: bool) -> bool {
+    crate::util::bench::figure_header(
+        "Bench check",
+        "current estimator bench vs the checked-in perf baseline",
+    );
+    let baseline = match load_doc(baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e} (baseline missing? create it with `inferline bench update`)");
+            return false;
+        }
+    };
+    let current = match current_doc(current_path, baseline_path, quick) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let outcome = match check(&current, &baseline) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    for line in &outcome.lines {
+        println!("{line}");
+    }
+    if outcome.violations.is_empty() {
+        println!(
+            "  bench check OK: {} metrics within ratio floor ({})",
+            outcome.lines.len(),
+            baseline_path.display()
+        );
+        true
+    } else {
+        for v in &outcome.violations {
+            eprintln!("  BENCH REGRESSION [{}] {}", v.metric, v.what);
+        }
+        eprintln!(
+            "  bench check FAILED: {} violation(s) against {}",
+            outcome.violations.len(),
+            baseline_path.display()
+        );
+        false
+    }
+}
+
+/// CLI `bench update`: re-baseline the checked-in report from a current
+/// run (preserving `check.min_ratio` when the file already exists).
+pub fn run_update(current_path: Option<&Path>, baseline_path: &Path, quick: bool) -> bool {
+    let old = if baseline_path.exists() {
+        match load_doc(baseline_path) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("{e}");
+                return false;
+            }
+        }
+    } else {
+        None
+    };
+    let current = match current_doc(current_path, baseline_path, quick) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    let doc = match update(&current, old.as_ref()) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return false;
+        }
+    };
+    match std::fs::write(baseline_path, doc.to_pretty_string()) {
+        Ok(()) => {
+            println!("re-baselined estimator perf ledger into {}", baseline_path.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("{}: {e}", baseline_path.display());
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal well-formed report with uniform speedups and two
+    /// pipelines at `pps` plans/sec.
+    fn report(qps: f64, speedup: f64, pps: f64) -> Json {
+        let mut doc = Json::obj();
+        doc.set("bench", BENCH_TAG)
+            .set("quick", true)
+            .set("sim_queries_per_sec", qps);
+        for section in ["fast_accept", "event_core"] {
+            let mut s = Json::obj();
+            s.set("speedup", speedup);
+            doc.set(section, s);
+        }
+        let mut ws = Json::obj();
+        ws.set("speedup", speedup).set("bit_identical", true);
+        doc.set("warm_start", ws);
+        let mut pipelines = Json::obj();
+        for name in ["image-processing", "social-media"] {
+            let mut p = Json::obj();
+            p.set("plans_per_sec", pps);
+            pipelines.set(name, p);
+        }
+        doc.set("pipelines", pipelines);
+        doc
+    }
+
+    fn baseline_for(r: &Json) -> Json {
+        update(r, None).unwrap()
+    }
+
+    #[test]
+    fn update_then_check_passes() {
+        let r = report(2e5, 2.0, 0.5);
+        let b = baseline_for(&r);
+        assert_eq!(min_ratio(&b).unwrap(), DEFAULT_MIN_RATIO);
+        let outcome = check(&r, &b).unwrap();
+        assert!(outcome.violations.is_empty(), "{:?}", outcome.violations);
+        // 4 scalar metrics + 2 pipelines.
+        assert_eq!(outcome.lines.len(), 6);
+        // Drift down to the floor (exactly half here) still passes;
+        // drift below it fails.
+        let half = report(1e5, 1.0, 0.25);
+        assert!(check(&half, &b).unwrap().violations.is_empty());
+        let worse = report(0.9e5, 0.9, 0.2);
+        assert!(!check(&worse, &b).unwrap().violations.is_empty());
+    }
+
+    #[test]
+    fn each_regressed_metric_is_named() {
+        let base = report(2e5, 2.0, 0.5);
+        let b = baseline_for(&base);
+        // (bad report, expected metric substring)
+        let cases = [
+            (report(0.5e5, 2.0, 0.5), "sim_queries_per_sec"),
+            (report(2e5, 0.5, 0.5), "speedup"),
+            (report(2e5, 2.0, 0.1), "plans_per_sec"),
+        ];
+        for (bad, needle) in cases {
+            let outcome = check(&bad, &b).unwrap();
+            assert!(!outcome.violations.is_empty(), "{needle}: should have tripped");
+            for v in &outcome.violations {
+                assert!(v.metric.contains(needle), "{needle}: got {:?}", v.metric);
+            }
+        }
+    }
+
+    #[test]
+    fn mode_mismatch_refuses_comparison() {
+        let base = report(2e5, 2.0, 0.5);
+        let b = baseline_for(&base);
+        let mut full = report(2e5, 2.0, 0.5);
+        full.set("quick", false);
+        let outcome = check(&full, &b).unwrap();
+        assert_eq!(outcome.violations.len(), 1);
+        assert_eq!(outcome.violations[0].metric, "<ledger>");
+        assert!(outcome.lines.is_empty(), "no per-metric noise on a refused comparison");
+    }
+
+    #[test]
+    fn no_data_fails_instead_of_passing() {
+        let base = report(2e5, 2.0, 0.5);
+        let b = baseline_for(&base);
+        // NaN serializes to null and parses back as no data; build the
+        // gap directly: a current run missing a section entirely.
+        let mut gap = report(2e5, 2.0, 0.5);
+        if let Json::Obj(m) = &mut gap {
+            m.remove("event_core");
+        }
+        let outcome = check(&gap, &b).unwrap();
+        assert!(
+            outcome
+                .violations
+                .iter()
+                .any(|v| v.metric == "event_core.speedup" && v.what.contains("no data")),
+            "{:?}",
+            outcome.violations
+        );
+        // And update refuses to baseline such a run.
+        assert!(update(&gap, None).is_err());
+        // A diverged warm start is a violation even when fast.
+        let mut diverged = report(2e5, 2.0, 0.5);
+        if let Json::Obj(m) = &mut diverged {
+            m.get_mut("warm_start").unwrap().set("bit_identical", false);
+        }
+        let outcome = check(&diverged, &b).unwrap();
+        assert!(outcome
+            .violations
+            .iter()
+            .any(|v| v.metric == "warm_start.bit_identical"));
+        assert!(update(&diverged, None).is_err());
+    }
+
+    #[test]
+    fn pipeline_set_must_match_the_ledger() {
+        let base = report(2e5, 2.0, 0.5);
+        let b = baseline_for(&base);
+        // Baselined pipeline absent from the current run.
+        let mut missing = report(2e5, 2.0, 0.5);
+        if let Json::Obj(m) = &mut missing {
+            if let Some(Json::Obj(p)) = m.get_mut("pipelines") {
+                p.remove("social-media");
+            }
+        }
+        let outcome = check(&missing, &b).unwrap();
+        assert!(outcome
+            .violations
+            .iter()
+            .any(|v| v.metric.contains("social-media") && v.what.contains("absent")));
+        // Current pipeline the ledger has never seen.
+        let mut extra = report(2e5, 2.0, 0.5);
+        if let Some(p) = extra.get("pipelines") {
+            let mut p = p.clone();
+            let mut entry = Json::obj();
+            entry.set("plans_per_sec", 1.0);
+            p.set("tf-cascade", entry);
+            extra.set("pipelines", p);
+        }
+        let outcome = check(&extra, &b).unwrap();
+        assert!(outcome
+            .violations
+            .iter()
+            .any(|v| v.metric.contains("tf-cascade") && v.what.contains("unbaselined")));
+        // A current-run planning error is a violation, and update refuses
+        // to baseline from it.
+        let mut errored = report(2e5, 2.0, 0.5);
+        if let Json::Obj(m) = &mut errored {
+            if let Some(Json::Obj(p)) = m.get_mut("pipelines") {
+                let mut entry = Json::obj();
+                entry.set("error", "no feasible configuration");
+                p.insert("social-media".to_string(), entry);
+            }
+        }
+        let outcome = check(&errored, &b).unwrap();
+        assert!(outcome
+            .violations
+            .iter()
+            .any(|v| v.metric.contains("social-media") && v.what.contains("failed to plan")));
+        assert!(update(&errored, None).is_err());
+    }
+
+    #[test]
+    fn baseline_stanza_is_preserved_and_validated() {
+        let r = report(2e5, 2.0, 0.5);
+        let mut b = baseline_for(&r);
+        // Tighten the ratio, then re-baseline: the stanza must survive.
+        if let Some(stanza) = b.get("check") {
+            let mut stanza = stanza.clone();
+            stanza.set("min_ratio", 0.8);
+            b.set("check", stanza);
+        }
+        let again = update(&r, Some(&b)).unwrap();
+        assert_eq!(min_ratio(&again).unwrap(), 0.8);
+        // The tightened floor actually bites: 0.7x of baseline fails.
+        let drift = report(1.4e5, 1.4, 0.35);
+        assert!(!check(&drift, &b).unwrap().violations.is_empty());
+        // Out-of-range ratios are rejected, not silently used.
+        let mut bad = b.clone();
+        if let Some(stanza) = bad.get("check") {
+            let mut stanza = stanza.clone();
+            stanza.set("min_ratio", 1.5);
+            bad.set("check", stanza);
+        }
+        assert!(check(&r, &bad).is_err());
+        // Wrong bench tag is unreadable, not a pass.
+        let mut alien = r.clone();
+        alien.set("bench", "planner");
+        assert!(check(&alien, &b).is_err());
+        assert!(update(&alien, None).is_err());
+    }
+}

@@ -4,11 +4,16 @@
 //! Measures (1) raw Estimator throughput (simulated queries per second on
 //! a long trace), (2) end-to-end `plan()` latency per pipeline with the
 //! fast path on and off, (3) the feasibility fast-accept against a full
-//! reference simulation on a feasible (accept-heavy) workload, and (4)
+//! reference simulation on a feasible (accept-heavy) workload, (4)
 //! the persistent-cache warm-start: a second identical `plan()` that
-//! loads the first run's cache file from disk. Everything is written as
-//! JSON (by default `BENCH_estimator.json`) so successive PRs leave a
-//! comparable perf trail. CI runs it as a non-gating step with `--quick`.
+//! loads the first run's cache file from disk, and (5) the event core in
+//! isolation: the old-style heap churn driver vs the slab queue with
+//! coalesced delivery on an identical synthetic workload. Everything is
+//! written as JSON (by default `BENCH_estimator.json`) so successive PRs
+//! leave a comparable perf trail; the checked-in copy of that file is the
+//! baseline `inferline bench check` compares against (see
+//! `experiments::benchcheck`). CI runs it as a non-gating step with
+//! `--quick`.
 
 use std::path::Path;
 
@@ -22,6 +27,18 @@ use crate::workload::gamma_trace;
 
 /// Run the estimator benchmark and write the JSON report to `out`.
 pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
+    let cache_file = out.with_file_name("BENCH_estimator_cache.json");
+    let doc = collect(quick, &cache_file);
+    std::fs::write(out, format!("{doc}\n"))?;
+    println!("  wrote {}", out.display());
+    Ok(())
+}
+
+/// Run every benchmark section and return the report document.
+/// `cache_file` is scratch space for the warm-start section (written,
+/// re-read and removed). `bench check` calls this directly to measure
+/// the current tree against the checked-in baseline.
+pub fn collect(quick: bool, cache_file: &Path) -> Json {
     let profiles = paper_profiles();
     let params = SimParams::default();
     let samples = if quick { 3 } else { 5 };
@@ -162,7 +179,6 @@ pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
     // sample then loads that file into a *fresh* cache (measuring the real
     // cross-process path, file parse included) and re-plans the identical
     // problem. Plans are bit-identical; only the time differs.
-    let cache_file = out.with_file_name("BENCH_estimator_cache.json");
     let warm_spec = pipelines::social_media();
     let warm_sample = gamma_trace(150.0, 1.0, plan_secs, 3);
     let cold_cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
@@ -210,7 +226,28 @@ pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
         warm_hit_rate * 100.0
     );
 
-    std::fs::write(out, format!("{doc}\n"))?;
-    println!("  wrote {}", out.display());
-    Ok(())
+    // --- Event core in isolation: heap churn, old queue vs slab queue. -----
+    // Both drivers process the same synthetic batch/fan-out workload and
+    // fold every hop into a checksum (equal checksums => identical work in
+    // identical order, asserted in event_core's unit tests), so the ratio
+    // is the isolated event-core win, free of planner logic.
+    let hops = if quick { 200_000 } else { 1_000_000 };
+    let reference = bench("event core: churn, reference heap (Vec payloads)", 1, samples, || {
+        black_box(simulator::event_core::churn_reference(hops));
+    });
+    let core = bench("event core: churn, slab queue + coalesced delivery", 1, samples, || {
+        black_box(simulator::event_core::churn_event_core(hops));
+    });
+    let mut ec = Json::obj();
+    ec.set("hops", hops);
+    ec.set("reference_mean_s", reference.mean_s);
+    ec.set("core_mean_s", core.mean_s);
+    ec.set("speedup", reference.mean_s / core.mean_s);
+    doc.set("event_core", ec);
+    println!(
+        "  -> event-core churn speedup {:.2}x over the reference heap",
+        reference.mean_s / core.mean_s
+    );
+
+    doc
 }

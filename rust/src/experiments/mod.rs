@@ -6,6 +6,7 @@
 //! `cargo bench` runs the quick variants; `inferline experiment <id>`
 //! runs paper-scale parameters.
 
+pub mod benchcheck;
 pub mod budgets;
 pub mod common;
 pub mod estbench;

@@ -114,6 +114,11 @@ COMMANDS:
               update: re-baseline the ledger from the report)
   bench       estimator [--out <file.json>] [--quick]
               (writes the Estimator/Planner perf-trajectory JSON)
+  bench       check|update [--current <file.json>] [--baseline <file.json>] [--quick]
+              (check: measure the current tree — or read --current — and
+              compare against the checked-in BENCH_estimator.json perf
+              baseline, exit nonzero naming each regressed metric;
+              update: re-baseline the file from a fresh run)
   trace       --kind gamma|big-spike|instant-spike --out <file>
               [--lambda <qps>] [--cv <v>] [--duration <s>]
   trace       scenario <spec.json> [--out <file>] [--seed <n>]
@@ -464,8 +469,22 @@ fn cmd_bench(args: &Args) -> bool {
                 }
             }
         }
+        // The perf ledger over the checked-in baseline (see
+        // `experiments::benchcheck` for the ratio-threshold semantics and
+        // re-baselining workflow). With no --current, both actions run
+        // the benchmark in-process at the requested mode.
+        "check" | "update" => {
+            let baseline = PathBuf::from(args.get("baseline").unwrap_or("BENCH_estimator.json"));
+            let current = args.get("current").map(PathBuf::from);
+            let run = if what == "check" {
+                inferline::experiments::benchcheck::run_check
+            } else {
+                inferline::experiments::benchcheck::run_update
+            };
+            run(current.as_deref(), &baseline, args.bool("quick"))
+        }
         other => {
-            eprintln!("unknown bench {other:?} (available: estimator)");
+            eprintln!("unknown bench {other:?} (available: estimator, check, update)");
             false
         }
     }

@@ -2,6 +2,14 @@
 //! autoscaler) observes the arrival stream and adjusts per-stage
 //! replication while queries flow, with realistic replica activation
 //! delays (paper §5, §7.1 "High-Frequency Tuning" experiments).
+//!
+//! Scaling actions ride on the engine's event core: scale-ups schedule
+//! cancelable `ReplicaUp` records (`event_core::UpHandle`), scale-downs
+//! cancel the earliest-scheduled ones directly, and a subsequent scale-up
+//! revives cancelled records at their *original* activation time — so a
+//! rate flap inside the activation window pays no second delay. See
+//! `tests/controlled_conformance.rs` for the bit-identity coverage of
+//! these paths (flap timelines, DS2 halt/resume, query conservation).
 
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;

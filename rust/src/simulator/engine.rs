@@ -1,14 +1,21 @@
-//! Core discrete-event engine shared by the open-loop Estimator and the
-//! controlled (tuner-in-the-loop) simulation.
+//! The discrete-event engine shared by the open-loop Estimator and the
+//! controlled (tuner-in-the-loop) simulation, built on the
+//! [`event_core`](super::event_core) queue: small `Copy` event records in
+//! the heap, batch qid slices in a recycled side arena, one coalesced
+//! `Delivery` record per routed batch, and generation-checked
+//! cancellation for scheduled replica activations. See the module docs
+//! of [`super`] and [`super::event_core`] for the architecture; the
+//! invariant that governs every choice here is that simulated outcomes
+//! are bit-identical to the pre-event-core engine.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;
 use crate::workload::Trace;
 
 use super::control::{ControlAction, ControlState, Controller};
+use super::event_core::{EventKind, EventQueue, SliceArena, UpHandle};
 use super::routing::RoutingPlan;
 
 /// Simulation parameters.
@@ -102,59 +109,21 @@ impl SimResult {
     }
 }
 
-#[derive(Debug, Clone)]
-enum EventKind {
-    /// Query lands in a stage queue (after RPC hop).
-    Enqueue { stage: u16, qid: u32 },
-    /// A replica finished a batch at a stage.
-    BatchDone { stage: u16, qids: Vec<u32> },
-    /// A provisioned replica comes online.
-    ReplicaUp { stage: u16 },
-    /// Controller tick (controlled mode).
-    ControlTick,
-    /// End of a DS2-style pipeline halt: dispatch everywhere.
-    Resume,
-}
-
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    // Reverse ordering: BinaryHeap is a max-heap, we want earliest first.
-    fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
 struct StageState {
     queue: VecDeque<u32>,
     idle: usize,
     /// Online replicas (busy + idle).
     online: usize,
-    /// Replicas requested but not yet online.
-    pending: usize,
+    /// Live scheduled activations, earliest first (the queue-side records
+    /// are cancelable through these handles).
+    pending_up: VecDeque<UpHandle>,
     /// Busy replicas that must retire upon finishing their batch.
     retire_debt: usize,
-    /// Pending activations cancelled by a scale-down before coming online.
-    pending_cancel: usize,
+    /// Cancelled-but-still-scheduled activations, most recent last. A
+    /// scale-up revives from the top (latest activation time — exactly
+    /// the record the old count-based bookkeeping would have left live);
+    /// handles whose tombstone already popped go stale and drop out.
+    cancelled_up: Vec<UpHandle>,
     batch: usize,
     /// latency_table[n] = batch-processing latency for a batch of n.
     latency_table: Vec<f64>,
@@ -164,7 +133,7 @@ struct StageState {
 
 impl StageState {
     fn provisioned(&self) -> usize {
-        self.online + self.pending - self.retire_debt.min(self.online)
+        self.online + self.pending_up.len() - self.retire_debt.min(self.online)
     }
 }
 
@@ -278,14 +247,12 @@ pub(super) struct Engine<'a> {
     params: &'a SimParams,
     stages: Vec<StageState>,
     queries: Vec<QueryState>,
-    events: BinaryHeap<Event>,
-    seq: u64,
+    events: EventQueue,
+    /// Recycled qid-slice storage; only `u32` handles enter the heap.
+    arena: SliceArena,
     rpc: f64,
     /// DS2-style halt: no dispatch until this time.
     halted_until: f64,
-    /// Free list of batch qid buffers (perf: recycles the per-batch Vec;
-    /// one allocation per *concurrent* batch instead of per batch).
-    qid_pool: Vec<Vec<u32>>,
     /// Early-abort / fast-accept accounting for budgeted feasibility runs.
     budget: Option<BudgetState>,
     aborted: bool,
@@ -321,9 +288,9 @@ impl<'a> Engine<'a> {
                     queue: VecDeque::new(),
                     idle: c.replicas,
                     online: c.replicas,
-                    pending: 0,
+                    pending_up: VecDeque::new(),
                     retire_debt: 0,
-                    pending_cancel: 0,
+                    cancelled_up: Vec::new(),
                     batch: c.batch,
                     latency_table,
                     stats: super::StageStats::default(),
@@ -337,11 +304,10 @@ impl<'a> Engine<'a> {
             params,
             stages,
             queries: Vec::new(),
-            events: BinaryHeap::new(),
-            seq: 0,
+            events: EventQueue::new(),
+            arena: SliceArena::new(),
             rpc: spec.framework.rpc_overhead(),
             halted_until: 0.0,
-            qid_pool: Vec::new(),
             budget: None,
             aborted: false,
             accepted: false,
@@ -356,11 +322,6 @@ impl<'a> Engine<'a> {
             last_cost_time: 0.0,
             cost_rate_per_hour: cost0,
         }
-    }
-
-    fn push(&mut self, time: f64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Event { time, seq: self.seq, kind });
     }
 
     /// Populate per-query state from a routing plan — either one shared
@@ -431,13 +392,13 @@ impl<'a> Engine<'a> {
                 }
             }
             // Batch-at-a-time: an idle replica immediately takes up to its
-            // maximum batch size off the centralized queue. The qid buffer
-            // is recycled through the pool (perf: no per-batch allocation).
-            let mut qids = self.qid_pool.pop().unwrap_or_default();
-            qids.clear();
+            // maximum batch size off the centralized queue. The qid slice
+            // lives in the recycled arena; only its handle travels through
+            // the event heap.
+            let slice = self.arena.alloc();
             let st = &mut self.stages[stage];
             let n = st.batch.min(st.queue.len());
-            qids.extend(st.queue.drain(..n));
+            self.arena.get_mut(slice).extend(st.queue.drain(..n));
             st.idle -= 1;
             let latency = st.latency_table[n];
             st.stats.batches += 1;
@@ -454,7 +415,7 @@ impl<'a> Engine<'a> {
                 // at the BatchDone event (whose time is this very `done`
                 // value), so counting it now as a guaranteed hit is
                 // bit-exact, not just sound in real arithmetic.
-                for &qid in &qids {
+                for &qid in self.arena.get(slice) {
                     let q = &mut self.queries[qid as usize];
                     if q.remaining == 1 && !q.hit_counted && done - q.arrival <= b.slo {
                         q.hit_counted = true;
@@ -464,7 +425,7 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
-            self.push(done, EventKind::BatchDone { stage: stage as u16, qids });
+            self.events.push(done, EventKind::BatchDone { stage: stage as u16, slice });
         }
     }
 
@@ -475,13 +436,10 @@ impl<'a> Engine<'a> {
         self.try_dispatch(stage, now);
     }
 
-    fn complete_stage_visit(&mut self, stage: usize, qid: u32, now: f64) {
-        // Route to visited children after an RPC hop.
-        for &c in &self.spec.stages[stage].children {
-            if self.queries[qid as usize].visited & (1 << c) != 0 {
-                self.push(now + self.rpc, EventKind::Enqueue { stage: c as u16, qid });
-            }
-        }
+    /// One stage visit finished for `qid` at `now`. Routing to children
+    /// is *not* done here — the BatchDone handler emits one coalesced
+    /// Delivery record for the whole batch instead.
+    fn complete_query_visit(&mut self, qid: u32, now: f64) {
         let q = &mut self.queries[qid as usize];
         q.remaining -= 1;
         if q.remaining == 0 {
@@ -545,10 +503,10 @@ impl<'a> Engine<'a> {
                     //  1. retiring replicas — still online finishing
                     //     their current batch; cancelling the retirement
                     //     restores them instantly;
-                    //  2. cancelled-but-inflight activations — their
-                    //     ReplicaUp event is already scheduled, so
-                    //     un-cancelling brings them online at the
-                    //     original (earlier) activation time.
+                    //  2. cancelled-but-still-scheduled activations —
+                    //     un-cancelling the queue record brings them
+                    //     online at the original (earlier) activation
+                    //     time, latest-scheduled first.
                     // Only what remains is genuinely new and pays the
                     // full activation delay.
                     {
@@ -556,28 +514,41 @@ impl<'a> Engine<'a> {
                         let reclaim = add.min(st.retire_debt);
                         st.retire_debt -= reclaim;
                         add -= reclaim;
-                        let uncancel = add.min(st.pending_cancel);
-                        st.pending_cancel -= uncancel;
-                        st.pending += uncancel;
-                        add -= uncancel;
+                    }
+                    while add > 0 {
+                        let Some(h) = self.stages[stage].cancelled_up.pop() else { break };
+                        if self.events.uncancel(h) {
+                            // Revived records have the earliest activation
+                            // times of any live pending activation, so the
+                            // front keeps `pending_up` in pop order.
+                            self.stages[stage].pending_up.push_front(h);
+                            add -= 1;
+                        }
+                        // Stale handle: its tombstone already popped;
+                        // simply drop it and keep reclaiming.
                     }
                     if add > 0 {
-                        self.stages[stage].pending += add;
                         let when = now + self.params.replica_activation_delay;
                         for _ in 0..add {
-                            self.push(when, EventKind::ReplicaUp { stage: stage as u16 });
+                            let h = self.events.push_replica_up(when, stage as u16);
+                            self.stages[stage].pending_up.push_back(h);
                         }
                     }
                 } else if target < current {
-                    // Remove: cancel pending activations first, then idle
+                    // Remove: cancel pending activations first (earliest-
+                    // scheduled first — the ones the old stale-event
+                    // bookkeeping would have swallowed), then idle
                     // replicas, then mark busy replicas to retire on their
                     // current batch's completion.
-                    let st = &mut self.stages[stage];
                     let mut to_remove = current - target;
-                    let cancel = to_remove.min(st.pending);
-                    st.pending -= cancel;
-                    st.pending_cancel += cancel;
-                    to_remove -= cancel;
+                    while to_remove > 0 {
+                        let Some(h) = self.stages[stage].pending_up.pop_front() else { break };
+                        let cancelled = self.events.cancel(h);
+                        debug_assert!(cancelled, "pending activation handle went stale");
+                        self.stages[stage].cancelled_up.push(h);
+                        to_remove -= 1;
+                    }
+                    let st = &mut self.stages[stage];
                     let idle_remove = to_remove.min(st.idle);
                     st.idle -= idle_remove;
                     st.online -= idle_remove;
@@ -590,7 +561,7 @@ impl<'a> Engine<'a> {
             }
             ControlAction::Halt { duration } => {
                 self.halted_until = self.halted_until.max(now + duration);
-                self.push(self.halted_until, EventKind::Resume);
+                self.events.push(self.halted_until, EventKind::Resume);
             }
         }
     }
@@ -625,7 +596,7 @@ impl<'a> Engine<'a> {
         self.budget = budget.map(|b| BudgetState::new(b, trace.len()));
         self.seed_arrivals(trace, routing);
         if controller.is_some() {
-            self.push(self.params.control_interval, EventKind::ControlTick);
+            self.events.push(self.params.control_interval, EventKind::ControlTick);
             self.result
                 .replica_timeline
                 .push((0.0, self.total_provisioned()));
@@ -636,11 +607,13 @@ impl<'a> Engine<'a> {
         // heap then only holds in-flight events (hundreds) instead of the
         // whole trace (hundreds of thousands) — log-factor win on every
         // push/pop. Ties break toward the arrival (matching the previous
-        // all-arrivals-pushed-first ordering).
+        // all-arrivals-pushed-first ordering). Cancelled-activation
+        // tombstones keep their place in the merge: peek_time sees them
+        // until they pop, exactly like the old stale events.
         let mut next_arrival = 0usize;
         loop {
             let arrival_time = trace.arrivals.get(next_arrival).copied();
-            let event_time = self.events.peek().map(|e| e.time);
+            let event_time = self.events.peek_time();
             let take_arrival = match (arrival_time, event_time) {
                 (Some(a), Some(e)) => a <= e,
                 (Some(_), None) => true,
@@ -658,8 +631,10 @@ impl<'a> Engine<'a> {
                 if let Some(c) = controller.as_deref_mut() {
                     c.on_arrival(now);
                 }
-                let roots = self.spec.roots.clone();
-                for r in roots {
+                // Roots are read through the long-lived spec reference —
+                // no per-arrival clone of the root list.
+                let spec = self.spec;
+                for &r in &spec.roots {
                     self.enqueue(r, qid, now);
                 }
                 self.result.horizon = now;
@@ -672,10 +647,7 @@ impl<'a> Engine<'a> {
                 break;
             }
             match ev.kind {
-                EventKind::Enqueue { stage, qid } => {
-                    self.enqueue(stage as usize, qid, now);
-                }
-                EventKind::BatchDone { stage, qids } => {
+                EventKind::BatchDone { stage, slice } => {
                     let s = stage as usize;
                     {
                         let st = &mut self.stages[s];
@@ -686,27 +658,83 @@ impl<'a> Engine<'a> {
                             st.idle += 1;
                         }
                     }
+                    // Completions are recorded at the batch's finish
+                    // time; the routed hops land one RPC later through a
+                    // single coalesced Delivery record reusing this very
+                    // qid slice — unless nothing routes anywhere, in
+                    // which case the slice goes straight back to the
+                    // pool (an empty Delivery would keep controlled runs
+                    // alive past their old termination point).
+                    let spec = self.spec;
+                    let qids = std::mem::take(self.arena.get_mut(slice));
+                    let mut routes = false;
                     for &qid in &qids {
-                        self.complete_stage_visit(s, qid, now);
+                        if !routes {
+                            let visited = self.queries[qid as usize].visited;
+                            for &c in &spec.stages[s].children {
+                                if visited & (1 << c) != 0 {
+                                    routes = true;
+                                    break;
+                                }
+                            }
+                        }
+                        self.complete_query_visit(qid, now);
                         if self.queries[qid as usize].remaining == 0 {
                             outstanding -= 1;
                         }
                     }
-                    // Recycle the batch buffer.
-                    self.qid_pool.push(qids);
+                    *self.arena.get_mut(slice) = qids;
+                    if routes {
+                        self.events.push(now + self.rpc, EventKind::Delivery { stage, slice });
+                    } else {
+                        self.arena.free(slice);
+                    }
                     self.try_dispatch(s, now);
                 }
-                EventKind::ReplicaUp { stage } => {
+                EventKind::Delivery { stage, slice } => {
                     let s = stage as usize;
-                    let st = &mut self.stages[s];
-                    if st.pending_cancel > 0 {
-                        // This activation was cancelled by a scale-down.
-                        st.pending_cancel -= 1;
+                    let spec = self.spec;
+                    let qids = std::mem::take(self.arena.get_mut(slice));
+                    // This one record stands in for the per-hop Enqueue
+                    // records the old engine pushed back-to-back: they
+                    // were seq-contiguous at a single time, so nothing
+                    // could interleave between them, and replaying the
+                    // hops qid-major, child-minor is order-identical.
+                    // The budget-proof check between hops replicates the
+                    // main loop's per-record check (the deadline sweep
+                    // is a no-op at an unchanged `now`, so only the
+                    // proof flags matter); the first hop is covered by
+                    // the check the loop already ran for this record.
+                    let mut first = true;
+                    'hops: for &qid in &qids {
+                        let visited = self.queries[qid as usize].visited;
+                        for &c in &spec.stages[s].children {
+                            if visited & (1 << c) == 0 {
+                                continue;
+                            }
+                            if !first && (self.aborted || self.accepted) {
+                                break 'hops;
+                            }
+                            first = false;
+                            self.enqueue(c, qid, now);
+                        }
+                    }
+                    *self.arena.get_mut(slice) = qids;
+                    self.arena.free(slice);
+                }
+                EventKind::ReplicaUp { stage, slot } => {
+                    // Retire the cancel slot; `false` means a scale-down
+                    // cancelled this activation and never revived it —
+                    // swallow the tombstone exactly where the old
+                    // stale-event count consumed it (skipping the
+                    // horizon update and termination checks below).
+                    if !self.events.resolve_up(slot) {
                         continue;
                     }
-                    if st.pending > 0 {
-                        st.pending -= 1;
-                    }
+                    let s = stage as usize;
+                    let st = &mut self.stages[s];
+                    let h = st.pending_up.pop_front();
+                    debug_assert!(h.is_some_and(|h| h.slot() == slot), "activation order skew");
                     st.online += 1;
                     st.idle += 1;
                     self.try_dispatch(s, now);
@@ -728,7 +756,8 @@ impl<'a> Engine<'a> {
                             self.apply_action(a, config_hw, now);
                         }
                         if outstanding > 0 {
-                            self.push(now + self.params.control_interval, EventKind::ControlTick);
+                            let next = now + self.params.control_interval;
+                            self.events.push(next, EventKind::ControlTick);
                         }
                     }
                 }
@@ -742,7 +771,12 @@ impl<'a> Engine<'a> {
             if outstanding == 0 && controller.is_none() {
                 break;
             }
-            if outstanding == 0 && self.events.iter().all(|e| matches!(e.kind, EventKind::ControlTick)) {
+            // Controlled-mode termination: nothing left but control
+            // ticks. The non-tick counter includes cancelled-activation
+            // tombstones still scheduled — they keep the run (and its
+            // ticks) alive until their activation time passes, exactly
+            // as the old whole-heap scan did, but in O(1).
+            if outstanding == 0 && self.events.non_tick_len() == 0 {
                 break;
             }
         }

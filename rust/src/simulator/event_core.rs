@@ -1,0 +1,504 @@
+//! The engine's event core: a slab-backed queue of small `Copy` event
+//! records, a recycled side arena for batch qid slices, and an indexed
+//! cancelable slot table for scheduled replica activations.
+//!
+//! Three structural decisions, each preserving the old engine's simulated
+//! outcomes bit for bit while removing its hot-loop overheads:
+//!
+//! * **Slab records.** [`EventRecord`] is a 24-byte `Copy` struct
+//!   (`{time, seq, kind}` with `u32` payload handles). The old engine's
+//!   heap moved an enum whose largest variant dragged a `Vec<u32>`
+//!   through every sift — every push/pop paid the largest variant's size
+//!   and a possible allocation. Batch qid slices now live in a
+//!   [`SliceArena`] and only their handle travels through the heap.
+//!   Ordering is unchanged: earliest `time` first, ties broken by lowest
+//!   `seq` (FIFO among simultaneous events).
+//!
+//! * **Coalesced delivery.** After a batch completes, every routed
+//!   (query, child) hop lands at the same `now + rpc`, so the engine
+//!   emits one [`EventKind::Delivery`] record carrying the batch's qid
+//!   slice instead of one `Enqueue` record per query per hop — a batch of
+//!   32 into 2 children is one heap op, not 64. The delivery handler
+//!   replays the hops in exactly the order the individual records would
+//!   have popped (they were seq-contiguous at one time, so nothing could
+//!   interleave between them).
+//!
+//! * **Indexed cancellation.** Scheduled `ReplicaUp` events are pushed
+//!   through [`EventQueue::push_replica_up`], which hands back a
+//!   generation-checked [`UpHandle`]. Scale-down cancels the handle
+//!   directly; a later scale-up can revive it (the record is still
+//!   scheduled at its original activation time, so a rate flap pays no
+//!   second activation delay). Cancelled records stay in the heap as
+//!   tombstones and are swallowed when they pop — deliberately, because
+//!   the old stale-event scheme kept controlled runs (and their control
+//!   ticks) alive until those events drained, and termination must not
+//!   change. The queue also maintains an O(1) count of non-tick records
+//!   (tombstones included) so the controlled-mode termination check is a
+//!   counter read instead of an O(heap) scan.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Event payload. Batch qid slices are [`SliceArena`] handles; `slot`
+/// indexes the queue's cancelable slot table. Every variant is `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A replica finished a batch at `stage`; its qids are in `slice`.
+    BatchDone { stage: u16, slice: u32 },
+    /// Coalesced routing hop: the batch in `slice` (completed at `stage`
+    /// one RPC earlier) lands at its routed children now.
+    Delivery { stage: u16, slice: u32 },
+    /// A provisioned replica comes online (cancelable via `slot`).
+    ReplicaUp { stage: u16, slot: u32 },
+    /// Controller tick (controlled mode).
+    ControlTick,
+    /// End of a DS2-style pipeline halt: dispatch everywhere.
+    Resume,
+}
+
+/// A small `Copy` event record. `seq` is stamped by the queue on push and
+/// makes the ordering total: earliest `time` pops first, ties go to the
+/// lowest `seq` (insertion order).
+#[derive(Debug, Clone, Copy)]
+pub struct EventRecord {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for EventRecord {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for EventRecord {}
+impl PartialOrd for EventRecord {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EventRecord {
+    // Reverse ordering: BinaryHeap is a max-heap, we want earliest first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Generation-checked handle to a scheduled (cancelable) `ReplicaUp`
+/// record. Stale handles — whose record already popped — fail every
+/// operation instead of aliasing a reused slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UpHandle {
+    slot: u32,
+    gen: u32,
+}
+
+impl UpHandle {
+    /// The slot index carried by the corresponding `ReplicaUp` record.
+    pub fn slot(&self) -> u32 {
+        self.slot
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CancelSlot {
+    gen: u32,
+    live: bool,
+}
+
+/// The event queue: a binary heap of [`EventRecord`]s plus the slot table
+/// backing [`UpHandle`] cancellation and the O(1) non-tick counter.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<EventRecord>,
+    seq: u64,
+    /// Records in the heap that are not `ControlTick` — including
+    /// cancelled-activation tombstones until they pop. Controlled-mode
+    /// termination reads this instead of scanning the heap.
+    non_tick: usize,
+    slots: Vec<CancelSlot>,
+    free_slots: Vec<u32>,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Push a record at `time`, stamping the next sequence number.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        if !matches!(kind, EventKind::ControlTick) {
+            self.non_tick += 1;
+        }
+        self.heap.push(EventRecord { time, seq: self.seq, kind });
+    }
+
+    /// Schedule a cancelable `ReplicaUp` for `stage` at `time`.
+    pub fn push_replica_up(&mut self, time: f64, stage: u16) -> UpHandle {
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.slots[s as usize].live = true;
+                s
+            }
+            None => {
+                self.slots.push(CancelSlot { gen: 0, live: true });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.push(time, EventKind::ReplicaUp { stage, slot });
+        UpHandle { slot, gen: self.slots[slot as usize].gen }
+    }
+
+    /// Cancel a scheduled activation. The record stays in the heap as a
+    /// tombstone (swallowed on pop); returns false on a stale handle.
+    pub fn cancel(&mut self, h: UpHandle) -> bool {
+        match self.slots.get_mut(h.slot as usize) {
+            Some(s) if s.gen == h.gen && s.live => {
+                s.live = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Revive a cancelled activation: the record is still scheduled at
+    /// its original time, so the replica comes online with no new delay.
+    /// Returns false on a stale handle (the tombstone already popped).
+    pub fn uncancel(&mut self, h: UpHandle) -> bool {
+        match self.slots.get_mut(h.slot as usize) {
+            Some(s) if s.gen == h.gen && !s.live => {
+                s.live = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Retire a popped `ReplicaUp` record's slot; returns whether the
+    /// activation was still live (false = cancelled tombstone: swallow).
+    /// Bumps the generation so outstanding handles to this slot go stale.
+    pub fn resolve_up(&mut self, slot: u32) -> bool {
+        let s = &mut self.slots[slot as usize];
+        let was_live = s.live;
+        s.gen = s.gen.wrapping_add(1);
+        s.live = false;
+        self.free_slots.push(slot);
+        was_live
+    }
+
+    /// Earliest scheduled time, tombstones included — cancelled records
+    /// must still win arrival-merge ties exactly as live ones would, and
+    /// may yet be revived before they pop.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Pop the earliest record (physical: tombstones pop too; the caller
+    /// routes `ReplicaUp` records through [`Self::resolve_up`]).
+    pub fn pop(&mut self) -> Option<EventRecord> {
+        let rec = self.heap.pop();
+        if let Some(r) = &rec {
+            if !matches!(r.kind, EventKind::ControlTick) {
+                self.non_tick -= 1;
+            }
+        }
+        rec
+    }
+
+    /// Number of non-`ControlTick` records still in the heap (tombstones
+    /// included): the controlled-mode termination test in O(1).
+    pub fn non_tick_len(&self) -> usize {
+        self.non_tick
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Recycled arena for batch qid slices. A slice is allocated when a batch
+/// dispatches, travels through [`BatchDone`](EventKind::BatchDone) and
+/// (if the batch routes anywhere) [`Delivery`](EventKind::Delivery) by
+/// `u32` handle, and is freed back to the pool afterwards — one live
+/// allocation per *concurrent* batch, none per batch.
+#[derive(Default)]
+pub struct SliceArena {
+    slots: Vec<Vec<u32>>,
+    free: Vec<u32>,
+}
+
+impl SliceArena {
+    pub fn new() -> Self {
+        SliceArena::default()
+    }
+
+    /// Allocate an empty slice and return its handle.
+    pub fn alloc(&mut self) -> u32 {
+        match self.free.pop() {
+            Some(h) => h,
+            None => {
+                self.slots.push(Vec::new());
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    pub fn get(&self, h: u32) -> &[u32] {
+        &self.slots[h as usize]
+    }
+
+    pub fn get_mut(&mut self, h: u32) -> &mut Vec<u32> {
+        &mut self.slots[h as usize]
+    }
+
+    /// Return a slice to the pool (its buffer keeps its capacity).
+    pub fn free(&mut self, h: u32) {
+        self.slots[h as usize].clear();
+        self.free.push(h);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Synthetic churn drivers for the event-core microbenchmark and the perf
+// ledger. Both simulate the same logical workload — batches of BATCH
+// qids fanning out to FANOUT children, hops re-aggregating into new
+// batches — and fold every processed hop into a checksum, so equal
+// checksums mean equal work in identical order. `churn_reference`
+// models the *old* engine's queue (boxed `Vec<u32>` payloads in the
+// heap, one record per hop); `churn_event_core` runs the same workload
+// through the slab queue with coalesced delivery. The measured ratio is
+// the isolated event-core win, free of planner logic.
+// ---------------------------------------------------------------------
+
+const CHURN_BATCH: usize = 16;
+const CHURN_FANOUT: u32 = 2;
+
+fn fold(checksum: u64, hop: u64) -> u64 {
+    checksum.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(hop)
+}
+
+/// Old-style queue: an enum event whose batch variant owns a `Vec<u32>`,
+/// one heap record per (query, child) hop.
+pub fn churn_reference(target_hops: usize) -> u64 {
+    enum RefKind {
+        Batch(Vec<u32>),
+        Hop(u32),
+    }
+    struct RefEvent {
+        time: f64,
+        seq: u64,
+        kind: RefKind,
+    }
+    impl PartialEq for RefEvent {
+        fn eq(&self, other: &Self) -> bool {
+            self.time == other.time && self.seq == other.seq
+        }
+    }
+    impl Eq for RefEvent {}
+    impl PartialOrd for RefEvent {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for RefEvent {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .time
+                .partial_cmp(&self.time)
+                .unwrap_or(Ordering::Equal)
+                .then(other.seq.cmp(&self.seq))
+        }
+    }
+    let mut heap: BinaryHeap<RefEvent> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut push = |heap: &mut BinaryHeap<RefEvent>, time: f64, kind: RefKind| {
+        seq += 1;
+        heap.push(RefEvent { time, seq, kind });
+    };
+    let mut checksum = 0u64;
+    let mut hops = 0usize;
+    let mut pending: Vec<u32> = Vec::new();
+    push(&mut heap, 0.0, RefKind::Batch((0..CHURN_BATCH as u32).collect()));
+    while hops < target_hops {
+        let ev = heap.pop().expect("churn workload drained early");
+        match ev.kind {
+            RefKind::Batch(qids) => {
+                for &q in &qids {
+                    for c in 0..CHURN_FANOUT {
+                        push(&mut heap, ev.time + 1.0, RefKind::Hop(q ^ c));
+                    }
+                }
+            }
+            RefKind::Hop(q) => {
+                checksum = fold(checksum, q as u64);
+                hops += 1;
+                pending.push(q);
+                if pending.len() == CHURN_BATCH {
+                    push(&mut heap, ev.time + 0.5, RefKind::Batch(std::mem::take(&mut pending)));
+                }
+            }
+        }
+    }
+    checksum
+}
+
+/// The same workload through the slab queue: one `BatchDone` and one
+/// coalesced `Delivery` record per batch, hops processed inline.
+pub fn churn_event_core(target_hops: usize) -> u64 {
+    let mut queue = EventQueue::new();
+    let mut arena = SliceArena::new();
+    let mut checksum = 0u64;
+    let mut hops = 0usize;
+    let mut pending: Vec<u32> = Vec::new();
+    let seed = arena.alloc();
+    arena.get_mut(seed).extend(0..CHURN_BATCH as u32);
+    queue.push(0.0, EventKind::BatchDone { stage: 0, slice: seed });
+    while hops < target_hops {
+        let ev = queue.pop().expect("churn workload drained early");
+        match ev.kind {
+            EventKind::BatchDone { slice, .. } => {
+                queue.push(ev.time + 1.0, EventKind::Delivery { stage: 0, slice });
+            }
+            EventKind::Delivery { slice, .. } => {
+                let qids = std::mem::take(arena.get_mut(slice));
+                for &q in &qids {
+                    for c in 0..CHURN_FANOUT {
+                        if hops >= target_hops {
+                            break;
+                        }
+                        checksum = fold(checksum, (q ^ c) as u64);
+                        hops += 1;
+                        pending.push(q ^ c);
+                        if pending.len() == CHURN_BATCH {
+                            let h = arena.alloc();
+                            arena.get_mut(h).append(&mut pending);
+                            queue.push(ev.time + 0.5, EventKind::BatchDone { stage: 0, slice: h });
+                        }
+                    }
+                }
+                *arena.get_mut(slice) = qids;
+                arena.free(slice);
+            }
+            _ => unreachable!("churn workload only uses batch/delivery records"),
+        }
+    }
+    checksum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_earliest_time_then_lowest_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::Resume);
+        q.push(1.0, EventKind::ControlTick);
+        q.push(1.0, EventKind::Resume);
+        q.push(0.5, EventKind::BatchDone { stage: 3, slice: 7 });
+        let mut order = Vec::new();
+        while let Some(e) = q.pop() {
+            order.push((e.time, e.seq));
+        }
+        assert_eq!(order, vec![(0.5, 4), (1.0, 2), (1.0, 3), (2.0, 1)]);
+    }
+
+    #[test]
+    fn non_tick_counter_tracks_pushes_pops_and_tombstones() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.non_tick_len(), 0);
+        q.push(1.0, EventKind::ControlTick);
+        assert_eq!(q.non_tick_len(), 0);
+        q.push(2.0, EventKind::Resume);
+        let h = q.push_replica_up(3.0, 0);
+        assert_eq!(q.non_tick_len(), 2);
+        // A cancelled activation is a tombstone: still counted until it
+        // physically pops (it keeps controlled runs alive, as the old
+        // stale-event scheme did).
+        assert!(q.cancel(h));
+        assert_eq!(q.non_tick_len(), 2);
+        q.pop(); // tick
+        assert_eq!(q.non_tick_len(), 2);
+        q.pop(); // resume
+        assert_eq!(q.non_tick_len(), 1);
+        let up = q.pop().unwrap(); // tombstone pops physically
+        assert!(matches!(up.kind, EventKind::ReplicaUp { .. }));
+        assert_eq!(q.non_tick_len(), 0);
+    }
+
+    #[test]
+    fn cancel_revive_and_stale_handles() {
+        let mut q = EventQueue::new();
+        let h = q.push_replica_up(5.0, 1);
+        assert!(!q.uncancel(h), "live activation cannot be revived");
+        assert!(q.cancel(h));
+        assert!(!q.cancel(h), "double-cancel must fail");
+        assert!(q.uncancel(h), "cancelled activation revives");
+        assert!(q.cancel(h));
+        let rec = q.pop().unwrap();
+        let EventKind::ReplicaUp { stage, slot } = rec.kind else {
+            panic!("expected ReplicaUp");
+        };
+        assert_eq!(stage, 1);
+        // Popped while cancelled: resolve reports it dead...
+        assert!(!q.resolve_up(slot));
+        // ...and the handle is stale for every further operation, even
+        // after the slot is recycled for a new activation.
+        assert!(!q.uncancel(h));
+        assert!(!q.cancel(h));
+        let h2 = q.push_replica_up(6.0, 2);
+        assert_eq!(h2.slot(), h.slot(), "slot should be recycled");
+        assert!(!q.cancel(h), "stale handle must not alias the recycled slot");
+        let rec2 = q.pop().unwrap();
+        let EventKind::ReplicaUp { slot, .. } = rec2.kind else {
+            panic!("expected ReplicaUp");
+        };
+        assert!(q.resolve_up(slot), "live activation resolves live");
+    }
+
+    #[test]
+    fn peek_time_includes_tombstones() {
+        let mut q = EventQueue::new();
+        let h = q.push_replica_up(1.0, 0);
+        q.push(2.0, EventKind::Resume);
+        assert!(q.cancel(h));
+        // The tombstone at t=1 still owns the head of the queue: arrival
+        // merging (and potential revival) must see its original time.
+        assert_eq!(q.peek_time(), Some(1.0));
+    }
+
+    #[test]
+    fn arena_recycles_slots_and_keeps_contents_isolated() {
+        let mut a = SliceArena::new();
+        let h1 = a.alloc();
+        a.get_mut(h1).extend([1, 2, 3]);
+        let h2 = a.alloc();
+        a.get_mut(h2).extend([9]);
+        assert_eq!(a.get(h1), &[1, 2, 3]);
+        assert_eq!(a.get(h2), &[9]);
+        a.free(h1);
+        let h3 = a.alloc();
+        assert_eq!(h3, h1, "freed slot is reused");
+        assert!(a.get(h3).is_empty(), "recycled slice starts empty");
+        assert_eq!(a.get(h2), &[9], "other slices untouched");
+    }
+
+    #[test]
+    fn churn_drivers_do_identical_work() {
+        // Equal checksums mean the coalesced-delivery driver processed
+        // exactly the hops the per-hop reference did, in the same order —
+        // the benchmark compares equal work, not shortcuts.
+        for &n in &[1usize, 100, 5_000, 40_000] {
+            assert_eq!(churn_reference(n), churn_event_core(n), "hops={n}");
+        }
+    }
+}

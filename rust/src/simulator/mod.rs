@@ -17,6 +17,37 @@
 //! milliseconds (validated in `benches/microbench.rs`; the paper makes the
 //! same claim in §4.2).
 //!
+//! ## Event core
+//!
+//! The engine runs on the [`event_core`] queue — three structural choices
+//! that make the event loop fast without changing any simulated outcome
+//! (the conformance suites in `tests/` hold bit-identically across the
+//! old and new cores):
+//!
+//! * **Slab records**: heap entries are small `Copy`
+//!   `{time, seq, kind}` records; batch qid slices live in a recycled
+//!   side arena ([`event_core::SliceArena`]) and only `u32` handles
+//!   travel through the heap, so sift operations move 24 bytes instead
+//!   of a large enum with an owned `Vec`.
+//! * **Coalesced delivery**: a completed batch emits *one*
+//!   `Delivery` record carrying its qid slice — not one `Enqueue`
+//!   record per query per routed hop. The hops all land at the same
+//!   `now + rpc` and were seq-contiguous in the old engine, so replaying
+//!   them inside the delivery handler (query-major, child-minor) is
+//!   provably order-identical. One record per *batch* (rather than per
+//!   child stage) is deliberate: a per-child split would permute
+//!   tie-breaking among simultaneous hops in multi-child fan-out.
+//!   Pipelines are trees with conditional branches (per-query visit
+//!   sets); stages never share a downstream child.
+//! * **Indexed cancellation**: scheduled replica activations are
+//!   cancelable through generation-checked handles
+//!   ([`event_core::UpHandle`]), so scale-down cancels the queue record
+//!   directly and a rate flap can revive it at its original activation
+//!   time — replacing the old count-based stale-event bookkeeping.
+//!   Cancelled records remain as tombstones until they pop, preserving
+//!   the old termination behavior of controlled runs, and an O(1)
+//!   non-tick counter replaces the former whole-heap termination scan.
+//!
 //! ## Estimator fast path
 //!
 //! Planner candidate evaluation funnels every decision through
@@ -57,6 +88,7 @@
 
 pub mod control;
 mod engine;
+pub mod event_core;
 mod routing;
 
 pub use engine::{

@@ -14,6 +14,11 @@
 //! hand it to every candidate simulation (and every worker thread) of the
 //! planning run. Simulations with and without a precomputed plan are
 //! bit-identical (`tests/estimator_fast_path.rs`).
+//!
+//! The visit bitmasks double as the engine's routing table: the event
+//! core's coalesced `Delivery` records replay per-query hops straight off
+//! `visited & (1 << child)` tests, so no per-hop allocation or RNG access
+//! survives into the event loop.
 
 use crate::config::PipelineSpec;
 use crate::util::rng::Rng;

@@ -290,6 +290,75 @@ fn estimator_cache_is_bounded() {
     assert!(!cache.is_empty());
 }
 
+/// A three-way conditional fan-out tree (deeper and wider than the paper
+/// pipelines — the adversarial shape for coalesced delivery, where one
+/// finished batch feeds up to three children with per-query visit sets).
+fn branchy_tree_spec() -> inferline::config::PipelineSpec {
+    let stage = |name: &str, model: &str, s: f64, children: Vec<usize>| {
+        inferline::config::StageSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            scale_factor: s,
+            children,
+        }
+    };
+    inferline::config::PipelineSpec {
+        name: "branchy-tree".to_string(),
+        stages: vec![
+            stage("ingest", "preprocess", 1.0, vec![1, 2, 3]),
+            stage("detect", "yolo_lite", 0.7, vec![4]),
+            stage("translate", "nmt_lite", 0.5, vec![5]),
+            stage("fast", "tf_fast", 0.3, vec![]),
+            stage("identify", "idmodel_lite", 0.35, vec![6]),
+            stage("classify", "resnet_lite", 0.25, vec![]),
+            stage("alpr", "alpr_lite", 0.2, vec![]),
+        ],
+        roots: vec![0],
+        framework: inferline::config::Framework::Clipper,
+    }
+}
+
+/// Routing-plan reuse stays bit-identical on multi-child conditional
+/// fan-out, and the budgeted predicate still agrees with the unbudgeted
+/// reference there — the DAG twin of the all-pipelines checks above.
+#[test]
+fn branchy_tree_routing_reuse_and_budgeted_verdicts_are_bit_identical() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = branchy_tree_spec();
+    let trace = gamma_trace(110.0, 2.0, 30.0, 13);
+    let planner = Planner::new(&spec, &profiles);
+    let config = planner.initialize(&trace, 0.5).unwrap();
+
+    let plain = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+    let routing = RoutingPlan::build(&spec, &trace, params.routing_seed);
+    let shared = simulator::simulate_with_routing(
+        &spec,
+        &profiles,
+        &config,
+        &trace,
+        &params,
+        Some(&routing),
+    );
+    assert_eq!(plain.latencies.len(), shared.latencies.len());
+    for (a, b) in plain.latencies.iter().zip(&shared.latencies) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(plain.horizon.to_bits(), shared.horizon.to_bits());
+
+    let mut under = config.clone();
+    for s in &mut under.stages {
+        s.replicas = 1;
+    }
+    for cand in [&config, &under] {
+        for &slo in &[0.05, 0.1, 0.2, 0.3, 0.5, 1.0] {
+            let fast = simulator::feasible(&spec, &profiles, cand, &trace, slo, &params);
+            let slow = simulator::feasible_unbudgeted(&spec, &profiles, cand, &trace, slo, &params);
+            assert_eq!(fast, slow, "branchy-tree slo={slo}");
+        }
+    }
+}
+
 /// Windows with zero completions report NaN (no data), not a fabricated
 /// perfect-attainment 0.0.
 #[test]

@@ -182,6 +182,64 @@ fn near_boundary_slos_conform() {
     }
 }
 
+/// A deeper, wider conditional tree than any of the four paper
+/// pipelines: three conditional branches off the root, one of them two
+/// levels deep, every edge probabilistic. This is the adversarial shape
+/// for delivery coalescing — one finished batch fans out to up to three
+/// children with *per-query* visit sets — so the budgeted proofs must
+/// conform here exactly as on the paper topologies.
+fn branchy_tree_spec() -> PipelineSpec {
+    let stage = |name: &str, model: &str, s: f64, children: Vec<usize>| {
+        inferline::config::StageSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            scale_factor: s,
+            children,
+        }
+    };
+    PipelineSpec {
+        name: "branchy-tree".to_string(),
+        stages: vec![
+            stage("ingest", "preprocess", 1.0, vec![1, 2, 3]),
+            stage("detect", "yolo_lite", 0.7, vec![4]),
+            stage("translate", "nmt_lite", 0.5, vec![5]),
+            stage("fast", "tf_fast", 0.3, vec![]),
+            stage("identify", "idmodel_lite", 0.35, vec![6]),
+            stage("classify", "resnet_lite", 0.25, vec![]),
+            stage("alpr", "alpr_lite", 0.2, vec![]),
+        ],
+        roots: vec![0],
+        framework: inferline::config::Framework::Clipper,
+    }
+}
+
+/// The conformance grid on the branchy conditional tree: budgeted
+/// verdicts, proof soundness, and exact-P99 reproduction must all hold on
+/// multi-child conditional fan-out, not just the paper pipelines.
+#[test]
+fn branchy_conditional_tree_conforms() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = branchy_tree_spec();
+    let mut accepts = 0usize;
+    let mut aborts = 0usize;
+    for (f_idx, family) in FAMILIES.iter().enumerate() {
+        let trace = family_trace(family, 8600 + f_idx as u64);
+        for config in candidate_configs(&spec, &profiles, &trace) {
+            for &slo in &[0.05, 0.2, 0.35, 1.0] {
+                let ctx = format!("branchy-tree / {family} / slo={slo}");
+                let (accepted, aborted) = assert_cell_conforms(
+                    &spec, &profiles, &config, &trace, slo, &params, &ctx,
+                );
+                accepts += accepted as usize;
+                aborts += aborted as usize;
+            }
+        }
+    }
+    assert!(accepts > 0, "no branchy-tree cell fast-accepted");
+    assert!(aborts > 0, "no branchy-tree cell early-aborted");
+}
+
 /// Straggler regression (the late-arrival bug class): both proof
 /// thresholds derive from the *full* trace length, so queries that only
 /// arrive after the decision point — here a burst followed by a long
