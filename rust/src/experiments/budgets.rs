@@ -29,7 +29,8 @@
 //!         "max_miss_rate": 0.05,
 //!         "max_cost_overhead": 2.5,
 //!         "max_cost_per_hour": null,
-//!         "min_peak_cost_ratio": 0.5
+//!         "min_peak_cost_ratio": 0.5,
+//!         "max_shed_rate": 0.1
 //!       }
 //!     }
 //!   },
@@ -112,6 +113,10 @@ pub struct ScenarioBudget {
     /// Floor on the CG-Peak-to-InferLine cost ratio (the headline
     /// "InferLine is cheaper" claim; > 1 means cheaper).
     pub min_peak_cost_ratio: f64,
+    /// Ceiling on the deadline-shed rate of chaos families (`None` =
+    /// unbudgeted — fault-free families and pre-fault ledgers). Checked
+    /// with `miss_slack` (both are absolute rates).
+    pub max_shed_rate: Option<f64>,
 }
 
 /// One mode section (quick or full) of the ledger.
@@ -145,11 +150,13 @@ fn seed_from(x: f64, what: &str) -> Result<u64, String> {
 impl ScenarioBudget {
     fn parse(node: &Json, path: &str) -> Result<ScenarioBudget, String> {
         let max_cost_per_hour = opt_f64_at(node, "max_cost_per_hour", path)?;
+        let max_shed_rate = opt_f64_at(node, "max_shed_rate", path)?;
         Ok(ScenarioBudget {
             max_miss_rate: req_f64(node, "max_miss_rate", path)?,
             max_cost_overhead: req_f64(node, "max_cost_overhead", path)?,
             max_cost_per_hour,
             min_peak_cost_ratio: req_f64(node, "min_peak_cost_ratio", path)?,
+            max_shed_rate,
         })
     }
 
@@ -162,6 +169,10 @@ impl ScenarioBudget {
                 self.max_cost_per_hour.map_or(Json::Null, Json::Num),
             )
             .set("min_peak_cost_ratio", self.min_peak_cost_ratio);
+        // Emitted only when budgeted, so pre-fault ledgers round-trip.
+        if let Some(s) = self.max_shed_rate {
+            o.set("max_shed_rate", s);
+        }
         o
     }
 }
@@ -266,6 +277,10 @@ pub struct ScenarioObserved {
     pub worst_cost_overhead: Option<f64>,
     pub worst_cost_per_hour: Option<f64>,
     pub min_peak_cost_ratio: Option<f64>,
+    /// Worst deadline-shed rate across cells; `None` when no cell
+    /// carries the metric (fault-free reports) — only a violation when
+    /// the ledger actually budgets `max_shed_rate`.
+    pub worst_shed_rate: Option<f64>,
 }
 
 /// A parsed robustness report, reduced to what the ledger compares.
@@ -340,6 +355,12 @@ pub fn summarize_report(report: &Json) -> Result<ReportSummary, String> {
         match cell.get("mean_cost_per_hour").and_then(Json::as_f64) {
             Some(x) => fold_max(&mut obs.worst_cost_per_hour, x),
             None => obs.no_data.push(format!("{pipeline}: mean_cost_per_hour has no data")),
+        }
+        // shed_rate is optional per cell: fault-free cells report 0.0,
+        // but a missing key (older minimal reports) is simply no fold —
+        // the check only demands data when the ledger budgets it.
+        if let Some(x) = cell.get("shed_rate").and_then(Json::as_f64) {
+            fold_max(&mut obs.worst_shed_rate, x);
         }
         let peak_ratio = cell
             .get("baselines")
@@ -493,6 +514,23 @@ pub fn check(report: &Json, budgets: &BudgetFile) -> Result<CheckReport, String>
                 });
             }
         }
+        if let Some(ceiling) = budget.max_shed_rate {
+            match obs.worst_shed_rate {
+                Some(x) if x > ceiling + mb.miss_slack => violations.push(Violation {
+                    scenario: name.clone(),
+                    what: format!(
+                        "shed rate {x:.4} exceeds budget {ceiling:.4} + slack {:.4}",
+                        mb.miss_slack
+                    ),
+                }),
+                Some(_) => {}
+                None => violations.push(Violation {
+                    scenario: name.clone(),
+                    what: "shed rate budgeted but report carries no shed_rate data"
+                        .to_string(),
+                }),
+            }
+        }
         let verdict = if violations.len() == before { "ok" } else { "FAIL" };
         lines.push(format!(
             "  {name:<22} miss {} (<= {miss_limit:.4})  overhead {} (<= {overhead_limit:.3})  \
@@ -545,6 +583,7 @@ pub fn update(report: &Json, budgets: &mut BudgetFile) -> Result<&'static str, S
                 max_cost_overhead: obs.worst_cost_overhead.unwrap_or(1.0),
                 max_cost_per_hour: obs.worst_cost_per_hour,
                 min_peak_cost_ratio: obs.min_peak_cost_ratio.unwrap_or(0.0),
+                max_shed_rate: obs.worst_shed_rate,
             },
         );
     }
@@ -812,6 +851,7 @@ mod tests {
                 max_cost_overhead: 2.0,
                 max_cost_per_hour: None,
                 min_peak_cost_ratio: 0.5,
+                max_shed_rate: None,
             },
         );
         let outcome = check(&r, &extra).unwrap();
@@ -831,6 +871,50 @@ mod tests {
         let mut alien = r.clone();
         alien.set("format", "robustness-v99");
         assert!(check(&alien, &b).is_err());
+    }
+
+    #[test]
+    fn shed_budget_trips_and_tolerates_pre_fault_ledgers() {
+        // A chaos-style report: cells carry shed_rate.
+        let shed_report = |shed: f64| {
+            let mut r = report(0.02, 1.3, 25.0, 2.5);
+            if let Json::Obj(m) = &mut r {
+                if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                    for cell in cells {
+                        cell.set("shed_rate", Json::num_or_null(shed));
+                    }
+                }
+            }
+            r
+        };
+        let base = shed_report(0.05);
+        let b = budgets_for(&base);
+        let mb = b.quick.as_ref().unwrap();
+        assert_eq!(mb.scenarios["steady"].max_shed_rate, Some(0.05));
+        assert!(check(&base, &b).unwrap().violations.is_empty());
+        // Regressed shed rate trips the ceiling (+ miss_slack).
+        let worse = shed_report(0.2);
+        let outcome = check(&worse, &b).unwrap();
+        assert!(
+            outcome.violations.iter().any(|v| v.what.contains("shed rate")),
+            "{:?}",
+            outcome.violations
+        );
+        // Budgeted shed with a report that lost the metric = no data.
+        let stripped = report(0.02, 1.3, 25.0, 2.5);
+        let outcome = check(&stripped, &b).unwrap();
+        assert!(
+            outcome.violations.iter().any(|v| v.what.contains("shed_rate")),
+            "{:?}",
+            outcome.violations
+        );
+        // A pre-fault ledger (no max_shed_rate) ignores shed data, and
+        // the budget round-trips with the key present.
+        let pre_fault = budgets_for(&report(0.02, 1.3, 25.0, 2.5));
+        assert!(check(&base, &pre_fault).unwrap().violations.is_empty());
+        let text = b.to_json().to_string();
+        assert!(text.contains("max_shed_rate"));
+        assert_eq!(BudgetFile::parse_str(&text).unwrap(), b);
     }
 
     #[test]

@@ -10,7 +10,9 @@ use crate::baselines::coarse::{self, CoarseTarget};
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::planner::{EstimatorCache, Plan, PlanError, Planner};
 use crate::profiler::ProfileSet;
-use crate::simulator::{self, control::simulate_controlled, control::Controller, SimParams, SimResult};
+use crate::simulator::control::{simulate_controlled, simulate_controlled_with_faults, Controller};
+use crate::simulator::faults::FaultPlan;
+use crate::simulator::{self, SimParams, SimResult};
 use crate::tuner::{Tuner, TunerInputs};
 use crate::util::stats;
 use crate::workload::Trace;
@@ -209,6 +211,23 @@ pub fn run_coarse(
     target: CoarseTarget,
     tune: bool,
 ) -> RunSummary {
+    run_coarse_with_faults(spec, profiles, sample, live, slo, target, tune, None)
+}
+
+/// [`run_coarse`] with an optional fault plan injected into the serving
+/// run, so the chaos families compare baselines against InferLine under
+/// the *same* failure schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn run_coarse_with_faults(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    sample: &Trace,
+    live: &Trace,
+    slo: f64,
+    target: CoarseTarget,
+    tune: bool,
+    faults: Option<&FaultPlan>,
+) -> RunSummary {
     let cg = coarse::plan(spec, profiles, sample, slo, target);
     let label = match (target, tune) {
         (CoarseTarget::Mean, true) => "CG-Mean+AutoScale",
@@ -216,12 +235,23 @@ pub fn run_coarse(
         (CoarseTarget::Mean, false) => "CG-Mean",
         (CoarseTarget::Peak, false) => "CG-Peak",
     };
+    let params = SimParams::default();
     let result = if tune {
         let mut tuner = AutoScaleTuner::new(cg.unit_throughput, cg.units);
-        simulate_controlled(spec, profiles, &cg.config, live, &SimParams::default(), &mut tuner)
+        match faults {
+            Some(plan) => simulate_controlled_with_faults(
+                spec, profiles, &cg.config, live, &params, &mut tuner, plan,
+            ),
+            None => simulate_controlled(spec, profiles, &cg.config, live, &params, &mut tuner),
+        }
     } else {
         let mut null = crate::simulator::control::NullController;
-        simulate_controlled(spec, profiles, &cg.config, live, &SimParams::default(), &mut null)
+        match faults {
+            Some(plan) => simulate_controlled_with_faults(
+                spec, profiles, &cg.config, live, &params, &mut null, plan,
+            ),
+            None => simulate_controlled(spec, profiles, &cg.config, live, &params, &mut null),
+        }
     };
     RunSummary::from_result(label, result, slo)
 }

@@ -65,6 +65,53 @@ pub fn collect(quick: bool, cache_file: &Path) -> Json {
     doc.set("sim_queries_per_sec", sim_qps);
     println!("  -> {:.2} M simulated queries/sec", sim_qps / 1e6);
 
+    // --- Fault injection: no-fault vs crash-storm throughput. --------------
+    // Same trace and configuration as the raw-throughput section, plus a
+    // whole-run crash storm with retries and a shed policy — the cost of
+    // the fault runtime (queue pruning, requeue, doomed-batch tracking)
+    // on the engine's hottest loop. The no-fault number is the section
+    // above; a fault-free run takes zero fault branches by construction
+    // (bit-identity is asserted in the conformance suites, so this
+    // section only has to price the *active* plan).
+    let storm = crate::simulator::faults::FaultSpec {
+        nodes: vec![crate::simulator::faults::FaultNode::CrashStorm {
+            stage: None,
+            start: 0.0,
+            end: sim_secs,
+            rate: 0.05,
+        }],
+        max_retries: 2,
+        shed_after: Some(1.0),
+    };
+    let storm_plan = storm.compile(spec.n_stages(), 9);
+    let storm_result = simulator::simulate_with_faults(
+        &spec, &profiles, &warm_plan.config, &long_trace, &params, &storm_plan,
+    );
+    let rf = bench("estimator: long trace under crash storm", 1, samples, || {
+        black_box(
+            simulator::simulate_with_faults(
+                &spec, &profiles, &warm_plan.config, &long_trace, &params, &storm_plan,
+            )
+            .latencies
+            .len(),
+        );
+    });
+    let storm_qps = long_trace.len() as f64 / rf.mean_s;
+    let mut fl = Json::obj();
+    fl.set("no_fault_queries_per_sec", sim_qps);
+    fl.set("crash_storm_queries_per_sec", storm_qps);
+    fl.set("overhead_ratio", r.mean_s / rf.mean_s);
+    fl.set("crashes", storm_result.crashes as usize);
+    fl.set("retries", storm_result.retries as usize);
+    fl.set("shed", storm_result.shed as usize);
+    doc.set("faults", fl);
+    println!(
+        "  -> crash-storm throughput {:.2} M queries/sec ({:.2}x of no-fault, {} crashes)",
+        storm_qps / 1e6,
+        r.mean_s / rf.mean_s,
+        storm_result.crashes
+    );
+
     // --- Feasibility fast-accept on a feasible-heavy workload. -------------
     // The planned configuration meets a loose SLO on the long trace, so
     // the budgeted check early-accepts (skipping the trace tail, the

@@ -9,7 +9,11 @@
 //! workload was), then serves a scenario trace from
 //! [`crate::workload::scenarios`] — flash crowds, MMPP regime switching,
 //! diurnal cycles, heavy-tailed renewals, CV shifts — with the Tuner in
-//! the control loop ([`simulate_controlled`]).
+//! the control loop ([`simulate_controlled`]). Chaos families additionally
+//! carry a fault spec ([`crate::simulator::faults`]): replica crash
+//! storms, stage brownouts and correlated outages injected into the same
+//! closed loop (and into the baselines — same failure schedule, fair
+//! comparison), with per-cell crash/retry/shed telemetry in the report.
 //!
 //! Mechanics:
 //!
@@ -56,7 +60,10 @@ use crate::baselines::coarse::CoarseTarget;
 use crate::config::{pipelines, PipelineSpec};
 use crate::planner::{EstimatorCache, Planner};
 use crate::profiler::analytic::paper_profiles;
-use crate::simulator::control::{simulate_controlled, CountingController};
+use crate::simulator::control::{
+    simulate_controlled, simulate_controlled_with_faults, CountingController,
+};
+use crate::simulator::faults::FaultPlan;
 use crate::simulator::{self, SimParams};
 use crate::tuner::{Tuner, TunerInputs};
 use crate::util::json::Json;
@@ -73,7 +80,7 @@ pub const DEFAULT_SLO: f64 = 0.35;
 
 /// Format tag stamped into `robustness.json`; the budget checker
 /// ([`super::budgets`]) refuses reports it does not recognize.
-pub const REPORT_FORMAT: &str = "inferline-robustness-v2";
+pub const REPORT_FORMAT: &str = "inferline-robustness-v3";
 
 /// Nominal planning rate: every scenario family stresses deviations from
 /// this assumed workload.
@@ -96,6 +103,12 @@ const SCENARIO_FILES: &[(&str, &str)] = &[
     ("thinned-autoscale", include_str!("../../../scenarios/thinned-autoscale.json")),
     ("heavy-tail-superpose", include_str!("../../../scenarios/heavy-tail-superpose.json")),
     ("surge-crossfade", include_str!("../../../scenarios/surge-crossfade.json")),
+    ("replica-crash-storm", include_str!("../../../scenarios/replica-crash-storm.json")),
+    ("slow-stage-brownout", include_str!("../../../scenarios/slow-stage-brownout.json")),
+    (
+        "outage-during-flash-crowd",
+        include_str!("../../../scenarios/outage-during-flash-crowd.json"),
+    ),
 ];
 
 /// The scenario families, in report order. Position is part of the seed
@@ -113,6 +126,9 @@ pub const FAMILIES: &[&str] = &[
     "thinned-autoscale",
     "heavy-tail-superpose",
     "surge-crossfade",
+    "replica-crash-storm",
+    "slow-stage-brownout",
+    "outage-during-flash-crowd",
 ];
 
 /// The parsed spec of one checked-in family (`None` for unknown names).
@@ -153,6 +169,23 @@ pub fn family_traces(family: &str, seed: u64, quick: bool) -> Option<(Trace, Tra
     Some((sample, live))
 }
 
+/// The compiled fault plan of one family's chaos spec for a pipeline of
+/// `n_stages` stages (`None` for fault-free families or unknown names).
+/// Quick mode compresses the failure schedule alongside the arrival
+/// schedule; the storm seed derives from `seed` and the family position
+/// (`child_seed(seed, 200 + idx)` — disjoint from the trace stream).
+pub fn family_fault_plan(
+    family: &str,
+    seed: u64,
+    quick: bool,
+    n_stages: usize,
+) -> Option<FaultPlan> {
+    let spec = family_spec(family)?;
+    let idx = FAMILIES.iter().position(|f| *f == family)? as u64;
+    let fault_spec = spec.faults_for(quick)?;
+    Some(fault_spec.compile(n_stages, scenarios::child_seed(seed, 200 + idx)))
+}
+
 /// Closed-loop metrics of one baseline system serving the same
 /// (scenario, pipeline) cell as InferLine, plus the two comparative
 /// ratios the paper's headline claims are made of. Ratios with a zero
@@ -189,6 +222,14 @@ pub struct CellMetrics {
     pub scale_downs: usize,
     pub max_replicas: usize,
     pub final_replicas: usize,
+    /// Replica crashes injected by the cell's fault plan (0 for
+    /// fault-free families).
+    pub crashes: u64,
+    /// Queries requeued after their in-flight batch was crashed.
+    pub retries: u64,
+    /// Queries dropped by the deadline-shed policy (counted separately
+    /// from SLO misses — a shed query completes no latency sample).
+    pub shed: u64,
     /// Downsampled (time, total provisioned replicas) cost trajectory.
     pub replica_timeline: Vec<(f64, usize)>,
     /// The baseline systems serving the same cell (same sample, same
@@ -201,6 +242,12 @@ impl CellMetrics {
     /// tuner's cost overhead; 1.0 = the Tuner never left the plan).
     pub fn cost_overhead(&self) -> f64 {
         self.mean_cost_per_hour / self.planned_cost_per_hour
+    }
+
+    /// Fraction of arrived queries the shed policy dropped
+    /// (`shed / (completed + shed)`; NaN when the cell served nothing).
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / (self.queries as f64 + self.shed as f64)
     }
 }
 
@@ -270,11 +317,14 @@ pub fn run_grid_with_cache(
                 outcome: Err(format!("unknown scenario family {family:?}")),
             };
         };
-        let outcome = run_cell(spec, &profiles, &sample, &live, slo, inner, &cache);
+        let fault_plan = family_fault_plan(family, seed, quick, spec.stages.len());
+        let outcome =
+            run_cell(spec, &profiles, &sample, &live, slo, inner, &cache, fault_plan.as_ref());
         Cell { scenario: family.to_string(), pipeline: spec.name.clone(), outcome }
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_cell(
     spec: &PipelineSpec,
     profiles: &crate::profiler::ProfileSet,
@@ -283,6 +333,7 @@ fn run_cell(
     slo: f64,
     planner_threads: usize,
     cache: &Arc<EstimatorCache>,
+    fault_plan: Option<&FaultPlan>,
 ) -> Result<CellMetrics, String> {
     let plan = Planner::new(spec, profiles)
         .with_threads(planner_threads)
@@ -293,23 +344,31 @@ fn run_cell(
     let inputs = TunerInputs::from_plan(spec, profiles, &plan.config, sample, st);
     let mut tuner = Tuner::new(inputs);
     let mut counting = CountingController::new(&mut tuner);
-    let result = simulate_controlled(
-        spec,
-        profiles,
-        &plan.config,
-        live,
-        &SimParams::default(),
-        &mut counting,
-    );
+    let params = SimParams::default();
+    let result = match fault_plan {
+        Some(faults) => simulate_controlled_with_faults(
+            spec,
+            profiles,
+            &plan.config,
+            live,
+            &params,
+            &mut counting,
+            faults,
+        ),
+        None => simulate_controlled(spec, profiles, &plan.config, live, &params, &mut counting),
+    };
     let hours = (result.horizon / 3600.0).max(1e-12);
     let il_miss = result.miss_rate(slo);
     let il_cost_per_hour = result.cost_dollars / hours;
     // The baselines serve the exact same cell: coarse-grained planning
-    // on the nominal sample, the AutoScale reactive tuner in the loop.
+    // on the nominal sample, the AutoScale reactive tuner in the loop —
+    // and, in chaos families, the same compiled failure schedule.
     let baselines = [CoarseTarget::Mean, CoarseTarget::Peak]
         .into_iter()
         .map(|target| {
-            let s = super::common::run_coarse(spec, profiles, sample, live, slo, target, true);
+            let s = super::common::run_coarse_with_faults(
+                spec, profiles, sample, live, slo, target, true, fault_plan,
+            );
             BaselineMetrics {
                 system: s.system.clone(),
                 queries: s.result.latencies.len(),
@@ -336,6 +395,9 @@ fn run_cell(
         scale_downs: counting.scale_downs,
         max_replicas: result.replica_timeline.iter().map(|&(_, r)| r).max().unwrap_or(0),
         final_replicas: result.replica_timeline.last().map_or(0, |&(_, r)| r),
+        crashes: result.crashes,
+        retries: result.retries,
+        shed: result.shed,
         replica_timeline: downsample(&result.replica_timeline, 24),
         baselines,
     })
@@ -394,6 +456,10 @@ pub fn report_json(seed: u64, slo: f64, quick: bool, cells: &[Cell]) -> Json {
                         .set("scale_downs", m.scale_downs)
                         .set("max_replicas", m.max_replicas)
                         .set("final_replicas", m.final_replicas)
+                        .set("crashes", m.crashes as usize)
+                        .set("retries", m.retries as usize)
+                        .set("shed", m.shed as usize)
+                        .set("shed_rate", Json::num_or_null(m.shed_rate()))
                         .set(
                             "replica_timeline",
                             Json::Arr(
@@ -470,6 +536,17 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
                     m.final_replicas,
                     m.max_replicas,
                 );
+                if m.crashes > 0 || m.shed > 0 {
+                    println!(
+                        "  {:<22} {:<18} crashes {:>3}  retries {:>4}  shed {:>4} ({:.2}%)",
+                        "",
+                        "(faults)",
+                        m.crashes,
+                        m.retries,
+                        m.shed,
+                        m.shed_rate() * 100.0,
+                    );
+                }
                 for b in &m.baselines {
                     println!(
                         "  {:<22} {:<18} p99 {:>7.1}ms  miss {:>6.2}%  ${:>6.2}/hr  \
@@ -653,6 +730,58 @@ mod tests {
         assert_eq!(rows.len(), 6);
         assert!(rows.iter().all(|r| !r.contains("NaN")), "{rows:?}");
         assert!(rows[0].contains(",InferLine,"));
+    }
+
+    #[test]
+    fn chaos_families_compile_fault_plans() {
+        for family in
+            ["replica-crash-storm", "slow-stage-brownout", "outage-during-flash-crowd"]
+        {
+            let plan = family_fault_plan(family, 1, true, 4).expect("chaos family has faults");
+            assert!(!plan.is_empty(), "{family}: empty plan");
+            assert_eq!(
+                plan,
+                family_fault_plan(family, 1, true, 4).unwrap(),
+                "{family}: compile not deterministic"
+            );
+            // Quick mode compresses the failure schedule with the trace.
+            let full = family_fault_plan(family, 1, false, 4).unwrap();
+            let last = |p: &FaultPlan| p.entries.iter().map(|e| e.time).fold(0.0, f64::max);
+            assert!(
+                last(&plan) < last(&full),
+                "{family}: quick schedule not compressed ({} vs {})",
+                last(&plan),
+                last(&full)
+            );
+        }
+        assert!(family_fault_plan("steady", 1, true, 4).is_none(), "steady is fault-free");
+        assert!(family_fault_plan("no-such-family", 1, true, 4).is_none());
+    }
+
+    #[test]
+    fn chaos_cell_reports_fault_telemetry() {
+        let families = ["replica-crash-storm"];
+        let specs = [pipelines::image_processing()];
+        let cells = run_grid(&families, &specs, 3, DEFAULT_SLO, true);
+        let m = cells[0].outcome.as_ref().expect("chaos cell should plan and run");
+        assert!(m.queries > 0);
+        // Retries only exist downstream of crashes; sheds need a policy.
+        if m.crashes == 0 {
+            assert_eq!(m.retries, 0, "retries without any applied crash");
+        }
+        let doc = report_json(3, DEFAULT_SLO, true, &cells).to_string();
+        let parsed = crate::util::json::Json::parse(&doc).unwrap();
+        let cell = &parsed.req("cells").as_arr().unwrap()[0];
+        for key in ["crashes", "retries", "shed"] {
+            assert!(
+                cell.req(key).as_f64().is_some_and(|v| v >= 0.0),
+                "report cell missing {key}"
+            );
+        }
+        assert!(cell.get("shed_rate").is_some(), "report cell missing shed_rate");
+        // Same seed, same report — fault injection included.
+        let again = run_grid(&families, &specs, 3, DEFAULT_SLO, true);
+        assert_eq!(doc, report_json(3, DEFAULT_SLO, true, &again).to_string());
     }
 
     #[test]

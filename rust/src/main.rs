@@ -98,6 +98,10 @@ COMMANDS:
               warm-starts; default file results/estimator_cache.json)
   profile     --artifacts <dir> [--out <file.json>] [--max-batch <b>]
   simulate    --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
+              [--faults <spec.json>] [--seed <n>]
+              (--faults injects a chaos plan — crashes, slowdowns,
+              outages; see simulator::faults for the JSON schema — and
+              reports crash/retry/shed counts alongside the latencies)
   serve       --pipeline <name> --lambda <qps> --duration <s>
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
   experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
@@ -312,7 +316,29 @@ fn cmd_simulate(args: &Args) -> bool {
             return false;
         }
     };
-    let result = simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default());
+    // Optional chaos plan: compiled deterministically from the spec file,
+    // the pipeline's stage count and --seed (default 42).
+    let fault_plan = match args.get("faults") {
+        None => None,
+        Some(path) => {
+            match inferline::simulator::faults::FaultSpec::load(std::path::Path::new(path)) {
+                Ok(fs) => {
+                    let seed = args.f64("seed", 42.0) as u64;
+                    Some(fs.compile(spec.n_stages(), seed))
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    return false;
+                }
+            }
+        }
+    };
+    let result = match &fault_plan {
+        Some(faults) => simulator::simulate_with_faults(
+            &spec, &profiles, &plan.config, &live, &SimParams::default(), faults,
+        ),
+        None => simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default()),
+    };
     println!("config: {}", plan.config.summary(&spec));
     println!(
         "simulated {} queries: p50 {:.1} ms, p99 {:.1} ms, miss rate {:.3}%, cost ${:.2}",
@@ -322,6 +348,12 @@ fn cmd_simulate(args: &Args) -> bool {
         result.miss_rate(slo) * 100.0,
         result.cost_dollars
     );
+    if fault_plan.is_some() {
+        println!(
+            "faults: {} crashes, {} retries, {} shed",
+            result.crashes, result.retries, result.shed
+        );
+    }
     for (i, st) in result.stage_stats.iter().enumerate() {
         println!(
             "  stage {:<14} batches {:>6}  mean batch {:>5.2}  max queue {:>5}",

@@ -16,6 +16,7 @@ use crate::profiler::ProfileSet;
 use crate::workload::Trace;
 
 use super::engine::{Engine, SimParams, SimResult};
+use super::faults::FaultPlan;
 
 /// Scaling actions a controller may issue.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -64,6 +65,26 @@ pub fn simulate_controlled(
     controller: &mut dyn Controller,
 ) -> SimResult {
     Engine::new(spec, profiles, initial, params).run(trace, initial, Some(controller))
+}
+
+/// [`simulate_controlled`] with a fault plan injected (see
+/// [`super::faults`]). With an empty plan the run is bit-identical to
+/// [`simulate_controlled`]; with a real plan the controller sees crashes
+/// through the reduced provisioned counts in its [`ControlState`] and
+/// recovers capacity through its normal actions (the Tuner restores its
+/// planned floor, paying the activation delay).
+pub fn simulate_controlled_with_faults(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    initial: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+    controller: &mut dyn Controller,
+    faults: &FaultPlan,
+) -> SimResult {
+    Engine::new(spec, profiles, initial, params)
+        .with_faults(Some(faults))
+        .run(trace, initial, Some(controller))
 }
 
 /// A controller that never acts (for A/B comparisons of "Planner only").

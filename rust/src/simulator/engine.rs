@@ -16,6 +16,7 @@ use crate::workload::Trace;
 
 use super::control::{ControlAction, ControlState, Controller};
 use super::event_core::{EventKind, EventQueue, SliceArena, UpHandle};
+use super::faults::{FaultAction, FaultEntry, FaultPlan};
 use super::routing::RoutingPlan;
 
 /// Simulation parameters.
@@ -72,6 +73,14 @@ pub struct SimResult {
     pub cost_dollars: f64,
     /// (time, total provisioned replicas) timeline (controlled mode).
     pub replica_timeline: Vec<(f64, usize)>,
+    /// Replica crashes applied (fault injection only; 0 otherwise).
+    pub crashes: u64,
+    /// Crashed-batch query requeues (bounded by the plan's `max_retries`).
+    pub retries: u64,
+    /// Queries dropped by the deadline-shed policy or retry exhaustion.
+    /// Shed queries never complete: they are counted here, separately
+    /// from SLO misses, and appear in no latency vector.
+    pub shed: u64,
 }
 
 impl SimResult {
@@ -148,6 +157,12 @@ struct QueryState {
     /// SLO hit at dispatch time (its final batch was in flight with a
     /// known completion time), so completion must not count it again.
     hit_counted: bool,
+    /// Fault runs only: dropped by the deadline-shed policy or retry
+    /// exhaustion. A shed query never completes and is skipped wherever
+    /// it still sits (queues, in-flight batches, delivery hops).
+    shed: bool,
+    /// Fault runs only: crashed-batch requeues consumed so far.
+    retries: u8,
 }
 
 /// Early-abort budget for feasibility simulations: the SLO the run is
@@ -240,6 +255,30 @@ impl BudgetState {
     }
 }
 
+/// Fault-injection state, allocated only for a non-empty [`FaultPlan`].
+/// Every fault branch in the hot loop is gated on `Engine::faults` being
+/// `Some`, so fault-free runs are bit-identical to the pre-fault engine
+/// (enforced by the conformance suites).
+struct FaultRuntime {
+    /// Compiled injections, time-sorted; `EventKind::Fault { idx }`
+    /// indexes into this list.
+    entries: Vec<FaultEntry>,
+    /// Requeue bound for a crashed batch's queries (then shed).
+    max_retries: u32,
+    /// Deadline-shed bound: drop queries older than this at dispatch.
+    shed_after: Option<f64>,
+    /// Per-stage batch-latency multiplier (1.0 = nominal).
+    slow: Vec<f64>,
+    /// Per-stage outage depth; dispatch is frozen while > 0.
+    outage: Vec<u32>,
+    /// In-flight batch slices per stage in dispatch order; a crash kills
+    /// the replica that dispatched most recently (pops the back).
+    inflight: Vec<Vec<u32>>,
+    /// Slices whose replica crashed mid-batch: their stale `BatchDone`
+    /// is swallowed when it pops.
+    doomed: Vec<u32>,
+}
+
 /// The simulation engine. Public entry points are [`simulate`] (open loop)
 /// and [`super::control::simulate_controlled`].
 pub(super) struct Engine<'a> {
@@ -257,6 +296,11 @@ pub(super) struct Engine<'a> {
     budget: Option<BudgetState>,
     aborted: bool,
     accepted: bool,
+    /// Fault-injection runtime (`None` ⇔ empty plan ⇔ the zero-overhead
+    /// fault-free path).
+    faults: Option<FaultRuntime>,
+    /// Queries not yet completed or shed (run-loop termination).
+    outstanding: usize,
     result: SimResult,
     // Cost accounting (controlled mode).
     last_cost_time: f64,
@@ -311,6 +355,8 @@ impl<'a> Engine<'a> {
             budget: None,
             aborted: false,
             accepted: false,
+            faults: None,
+            outstanding: 0,
             result: SimResult {
                 latencies: Vec::new(),
                 completions: Vec::new(),
@@ -318,10 +364,34 @@ impl<'a> Engine<'a> {
                 horizon: 0.0,
                 cost_dollars: 0.0,
                 replica_timeline: Vec::new(),
+                crashes: 0,
+                retries: 0,
+                shed: 0,
             },
             last_cost_time: 0.0,
             cost_rate_per_hour: cost0,
         }
+    }
+
+    /// Activate fault injection for a non-empty plan. An empty (or
+    /// absent) plan allocates nothing and leaves every fault branch cold,
+    /// keeping the run bit-identical to the fault-free engine.
+    pub(super) fn with_faults(mut self, plan: Option<&FaultPlan>) -> Self {
+        if let Some(p) = plan {
+            if !p.is_empty() {
+                let n = self.stages.len();
+                self.faults = Some(FaultRuntime {
+                    entries: p.entries.clone(),
+                    max_retries: p.max_retries,
+                    shed_after: p.shed_after,
+                    slow: vec![1.0; n],
+                    outage: vec![0; n],
+                    inflight: vec![Vec::new(); n],
+                    doomed: Vec::new(),
+                });
+            }
+        }
+        self
     }
 
     /// Populate per-query state from a routing plan — either one shared
@@ -349,6 +419,8 @@ impl<'a> Engine<'a> {
                 visited,
                 remaining,
                 hit_counted: false,
+                shed: false,
+                retries: 0,
             })
             .collect();
         self.result.latencies.reserve(trace.len());
@@ -370,7 +442,11 @@ impl<'a> Engine<'a> {
     fn sweep_deadlines(&mut self, arrivals: &[f64], now: f64) {
         let Some(b) = &mut self.budget else { return };
         while b.deadline_idx < self.queries.len() && now - arrivals[b.deadline_idx] > b.slo {
-            if self.queries[b.deadline_idx].remaining > 0 {
+            // Shed queries were already counted as guaranteed misses when
+            // they were dropped ([`Self::shed_query`]); counting them
+            // again here would double-book the miss ceiling.
+            let q = &self.queries[b.deadline_idx];
+            if q.remaining > 0 && !q.shed {
                 b.misses += 1;
                 if b.misses >= b.threshold {
                     self.aborted = true;
@@ -380,11 +456,69 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Drop `qid` from the run: the deadline-shed policy fired or its
+    /// crashed batch exhausted `max_retries`. Shed queries are counted
+    /// separately from SLO misses in the result; the feasibility budget
+    /// books them as guaranteed misses (they will never produce a
+    /// latency at or under the SLO) unless the deadline sweep already
+    /// counted them while they aged in a queue.
+    fn shed_query(&mut self, qid: u32) {
+        let q = &mut self.queries[qid as usize];
+        if q.shed || q.remaining == 0 {
+            return;
+        }
+        q.shed = true;
+        self.result.shed += 1;
+        self.outstanding -= 1;
+        if let Some(b) = &mut self.budget {
+            if (qid as usize) >= b.deadline_idx {
+                b.misses += 1;
+                if b.misses >= b.threshold {
+                    self.aborted = true;
+                }
+            }
+        }
+    }
+
+    /// Fault runs only: clear the head of a stage queue of queries that
+    /// no longer need a batch slot — already-shed queries and, when the
+    /// plan carries a `shed_after` policy, queries older than the bound
+    /// (the same `now - arrival` float expression the deadline sweep
+    /// uses). Only heads are pruned: FIFO order makes older queries
+    /// surface first, so nothing sheddable hides behind the head.
+    fn prune_queue_head(&mut self, stage: usize, now: f64) {
+        let shed_after = match &self.faults {
+            Some(f) => f.shed_after,
+            None => return,
+        };
+        while let Some(&qid) = self.stages[stage].queue.front() {
+            let q = &self.queries[qid as usize];
+            if q.shed {
+                self.stages[stage].queue.pop_front();
+            } else if shed_after.is_some_and(|bound| now - q.arrival > bound) {
+                self.stages[stage].queue.pop_front();
+                self.shed_query(qid);
+            } else {
+                break;
+            }
+        }
+    }
+
     fn try_dispatch(&mut self, stage: usize, now: f64) {
         if now < self.halted_until {
             return;
         }
+        if let Some(f) = &self.faults {
+            // An outage freezes dispatch at this stage; the matching
+            // OutageEnd event re-dispatches.
+            if f.outage[stage] > 0 {
+                return;
+            }
+        }
         loop {
+            if self.faults.is_some() {
+                self.prune_queue_head(stage, now);
+            }
             {
                 let st = &self.stages[stage];
                 if st.idle == 0 || st.queue.is_empty() {
@@ -396,34 +530,45 @@ impl<'a> Engine<'a> {
             // lives in the recycled arena; only its handle travels through
             // the event heap.
             let slice = self.arena.alloc();
+            let slow = self.faults.as_ref().map_or(1.0, |f| f.slow[stage]);
             let st = &mut self.stages[stage];
             let n = st.batch.min(st.queue.len());
             self.arena.get_mut(slice).extend(st.queue.drain(..n));
             st.idle -= 1;
-            let latency = st.latency_table[n];
+            // Multiplying by the nominal 1.0 factor is bit-exact, so the
+            // fault-free path is unchanged.
+            let latency = st.latency_table[n] * slow;
             st.stats.batches += 1;
             st.stats.queries += n;
             st.batch_size_sum += n;
             st.stats.busy_time += latency;
             let done = now + latency;
-            if let Some(b) = &mut self.budget {
-                // Fast-accept in-flight sweep: a query whose *final*
-                // outstanding visit is in this batch completes exactly at
-                // `done` (open-loop batches are never cancelled), so its
-                // latency is already decided. `done - arrival` is the
-                // *same* float expression the completion path evaluates
-                // at the BatchDone event (whose time is this very `done`
-                // value), so counting it now as a guaranteed hit is
-                // bit-exact, not just sound in real arithmetic.
-                for &qid in self.arena.get(slice) {
-                    let q = &mut self.queries[qid as usize];
-                    if q.remaining == 1 && !q.hit_counted && done - q.arrival <= b.slo {
-                        q.hit_counted = true;
-                        if b.count_hit() {
-                            self.accepted = true;
+            if self.faults.is_none() {
+                if let Some(b) = &mut self.budget {
+                    // Fast-accept in-flight sweep: a query whose *final*
+                    // outstanding visit is in this batch completes exactly at
+                    // `done` (open-loop batches are never cancelled), so its
+                    // latency is already decided. `done - arrival` is the
+                    // *same* float expression the completion path evaluates
+                    // at the BatchDone event (whose time is this very `done`
+                    // value), so counting it now as a guaranteed hit is
+                    // bit-exact, not just sound in real arithmetic. With
+                    // faults active the premise fails — a crash *can* cancel
+                    // this batch and retry its queries later — so the sweep
+                    // is disabled and hits are only counted at completion,
+                    // never twice.
+                    for &qid in self.arena.get(slice) {
+                        let q = &mut self.queries[qid as usize];
+                        if q.remaining == 1 && !q.hit_counted && done - q.arrival <= b.slo {
+                            q.hit_counted = true;
+                            if b.count_hit() {
+                                self.accepted = true;
+                            }
                         }
                     }
                 }
+            } else if let Some(f) = &mut self.faults {
+                f.inflight[stage].push(slice);
             }
             self.events.push(done, EventKind::BatchDone { stage: stage as u16, slice });
         }
@@ -441,6 +586,12 @@ impl<'a> Engine<'a> {
     /// Delivery record for the whole batch instead.
     fn complete_query_visit(&mut self, qid: u32, now: f64) {
         let q = &mut self.queries[qid as usize];
+        // A shed query may still ride along in batches that were formed
+        // before it was dropped (or on parallel branches): its visits are
+        // no-ops — it was already removed from every tally it can affect.
+        if q.shed {
+            return;
+        }
         q.remaining -= 1;
         if q.remaining == 0 {
             let latency = now - q.arrival;
@@ -544,7 +695,11 @@ impl<'a> Engine<'a> {
                     while to_remove > 0 {
                         let Some(h) = self.stages[stage].pending_up.pop_front() else { break };
                         let cancelled = self.events.cancel(h);
-                        debug_assert!(cancelled, "pending activation handle went stale");
+                        // Checked in release builds too: a stale handle here
+                        // (possible only through an accounting bug, e.g.
+                        // under fault-driven churn) would silently corrupt
+                        // the replica bookkeeping from this point on.
+                        assert!(cancelled, "pending activation handle went stale");
                         self.stages[stage].cancelled_up.push(h);
                         to_remove -= 1;
                     }
@@ -564,6 +719,102 @@ impl<'a> Engine<'a> {
                 self.events.push(self.halted_until, EventKind::Resume);
             }
         }
+    }
+
+    /// Apply the compiled fault entry `idx` (a `Fault` event popped).
+    fn apply_fault(&mut self, idx: usize, config_hw: &PipelineConfig, now: f64) {
+        let entry = self.faults.as_ref().expect("fault event without a plan").entries[idx];
+        match entry.action {
+            FaultAction::Crash { stage } => self.apply_crash(stage as usize, config_hw, now),
+            FaultAction::SlowdownStart { stage, factor } => {
+                // Affects batches dispatched from now on; batches already
+                // in flight keep their scheduled completion.
+                self.faults.as_mut().unwrap().slow[stage as usize] = factor;
+            }
+            FaultAction::SlowdownEnd { stage } => {
+                self.faults.as_mut().unwrap().slow[stage as usize] = 1.0;
+            }
+            FaultAction::OutageStart { stage } => {
+                self.faults.as_mut().unwrap().outage[stage as usize] += 1;
+            }
+            FaultAction::OutageEnd { stage } => {
+                let s = stage as usize;
+                let f = self.faults.as_mut().unwrap();
+                f.outage[s] = f.outage[s].saturating_sub(1);
+                if f.outage[s] == 0 {
+                    self.try_dispatch(s, now);
+                }
+            }
+        }
+    }
+
+    /// Kill one replica of stage `s`. Prefers a busy replica (the one
+    /// that dispatched most recently): its in-flight batch is lost, the
+    /// stale `BatchDone` is doomed, and the batch's queries are requeued
+    /// at the *head* of the stage queue in original order (each retry
+    /// counted; a query past `max_retries` is shed instead). Replacement
+    /// capacity is the controller's job — open-loop and null-controlled
+    /// runs stay degraded; the Tuner restores its planned floor through
+    /// the normal activation path, paying `replica_activation_delay`.
+    ///
+    /// A crash never removes a stage's *last* replica (when none is
+    /// pending activation either): with no completion or activation
+    /// event left, a dead stage could wedge a controlled run's tick loop
+    /// forever. Total stage death is modeled by `outage` windows, which
+    /// always end.
+    fn apply_crash(&mut self, s: usize, config_hw: &PipelineConfig, now: f64) {
+        {
+            let st = &self.stages[s];
+            if st.online == 0 || (st.online == 1 && st.pending_up.is_empty()) {
+                return;
+            }
+        }
+        self.accrue_cost(now);
+        self.result.crashes += 1;
+        let busy = self.stages[s].online - self.stages[s].idle;
+        if busy > 0 {
+            {
+                let st = &mut self.stages[s];
+                st.online -= 1;
+                // A pending retirement wanted a busy replica gone; the
+                // crash delivered one. Without this, a later scale-up
+                // could "reclaim" capacity the crash already destroyed.
+                if st.retire_debt > 0 {
+                    st.retire_debt -= 1;
+                }
+            }
+            let f = self.faults.as_mut().expect("crash without fault runtime");
+            let slice = f.inflight[s].pop().expect("busy stage with no in-flight batch");
+            f.doomed.push(slice);
+            let max_retries = f.max_retries;
+            let qids = std::mem::take(self.arena.get_mut(slice));
+            // Reverse iteration + push_front keeps the batch's original
+            // order at the head of the queue.
+            for &qid in qids.iter().rev() {
+                if self.queries[qid as usize].shed {
+                    continue;
+                }
+                if self.queries[qid as usize].retries as u32 >= max_retries {
+                    self.shed_query(qid);
+                } else {
+                    self.queries[qid as usize].retries =
+                        self.queries[qid as usize].retries.saturating_add(1);
+                    self.result.retries += 1;
+                    self.stages[s].queue.push_front(qid);
+                }
+            }
+            *self.arena.get_mut(slice) = qids;
+            let st = &mut self.stages[s];
+            st.stats.max_queue = st.stats.max_queue.max(st.queue.len());
+        } else {
+            let st = &mut self.stages[s];
+            st.online -= 1;
+            st.idle -= 1;
+        }
+        self.recompute_cost_rate(config_hw);
+        let t = self.total_provisioned();
+        self.result.replica_timeline.push((now, t));
+        self.try_dispatch(s, now);
     }
 
     /// Run to completion. `controller` is optional (open-loop Estimator
@@ -595,13 +846,21 @@ impl<'a> Engine<'a> {
         );
         self.budget = budget.map(|b| BudgetState::new(b, trace.len()));
         self.seed_arrivals(trace, routing);
+        // Schedule the compiled fault plan. An inactive runtime pushes
+        // nothing, so the event stream — every record and every seq
+        // number — is identical to the fault-free engine's.
+        let n_faults = self.faults.as_ref().map_or(0, |f| f.entries.len());
+        for i in 0..n_faults {
+            let t = self.faults.as_ref().unwrap().entries[i].time;
+            self.events.push(t, EventKind::Fault { idx: i as u32 });
+        }
         if controller.is_some() {
             self.events.push(self.params.control_interval, EventKind::ControlTick);
             self.result
                 .replica_timeline
                 .push((0.0, self.total_provisioned()));
         }
-        let mut outstanding = self.queries.len();
+        self.outstanding = self.queries.len();
         // Perf: arrivals are already time-sorted, so they are merged
         // lazily against the event heap instead of being pre-pushed. The
         // heap then only holds in-flight events (hundreds) instead of the
@@ -649,47 +908,70 @@ impl<'a> Engine<'a> {
             match ev.kind {
                 EventKind::BatchDone { stage, slice } => {
                     let s = stage as usize;
-                    {
-                        let st = &mut self.stages[s];
-                        if st.retire_debt > 0 {
-                            st.retire_debt -= 1;
-                            st.online -= 1;
-                        } else {
-                            st.idle += 1;
-                        }
-                    }
-                    // Completions are recorded at the batch's finish
-                    // time; the routed hops land one RPC later through a
-                    // single coalesced Delivery record reusing this very
-                    // qid slice — unless nothing routes anywhere, in
-                    // which case the slice goes straight back to the
-                    // pool (an empty Delivery would keep controlled runs
-                    // alive past their old termination point).
-                    let spec = self.spec;
-                    let qids = std::mem::take(self.arena.get_mut(slice));
-                    let mut routes = false;
-                    for &qid in &qids {
-                        if !routes {
-                            let visited = self.queries[qid as usize].visited;
-                            for &c in &spec.stages[s].children {
-                                if visited & (1 << c) != 0 {
-                                    routes = true;
-                                    break;
-                                }
+                    let doomed = match &mut self.faults {
+                        Some(f) => match f.doomed.iter().position(|&d| d == slice) {
+                            Some(pos) => {
+                                f.doomed.swap_remove(pos);
+                                true
+                            }
+                            None => false,
+                        },
+                        None => false,
+                    };
+                    if doomed {
+                        // The replica crashed mid-batch: its queries were
+                        // requeued (or shed) at crash time and the replica
+                        // already left the stage bookkeeping, so the stale
+                        // completion only returns the slice to the pool.
+                        self.arena.free(slice);
+                    } else {
+                        if let Some(f) = &mut self.faults {
+                            if let Some(pos) = f.inflight[s].iter().position(|&x| x == slice) {
+                                f.inflight[s].remove(pos);
                             }
                         }
-                        self.complete_query_visit(qid, now);
-                        if self.queries[qid as usize].remaining == 0 {
-                            outstanding -= 1;
+                        {
+                            let st = &mut self.stages[s];
+                            if st.retire_debt > 0 {
+                                st.retire_debt -= 1;
+                                st.online -= 1;
+                            } else {
+                                st.idle += 1;
+                            }
                         }
+                        // Completions are recorded at the batch's finish
+                        // time; the routed hops land one RPC later through a
+                        // single coalesced Delivery record reusing this very
+                        // qid slice — unless nothing routes anywhere, in
+                        // which case the slice goes straight back to the
+                        // pool (an empty Delivery would keep controlled runs
+                        // alive past their old termination point).
+                        let spec = self.spec;
+                        let qids = std::mem::take(self.arena.get_mut(slice));
+                        let mut routes = false;
+                        for &qid in &qids {
+                            if !routes {
+                                let visited = self.queries[qid as usize].visited;
+                                for &c in &spec.stages[s].children {
+                                    if visited & (1 << c) != 0 {
+                                        routes = true;
+                                        break;
+                                    }
+                                }
+                            }
+                            self.complete_query_visit(qid, now);
+                            if self.queries[qid as usize].remaining == 0 {
+                                self.outstanding -= 1;
+                            }
+                        }
+                        *self.arena.get_mut(slice) = qids;
+                        if routes {
+                            self.events.push(now + self.rpc, EventKind::Delivery { stage, slice });
+                        } else {
+                            self.arena.free(slice);
+                        }
+                        self.try_dispatch(s, now);
                     }
-                    *self.arena.get_mut(slice) = qids;
-                    if routes {
-                        self.events.push(now + self.rpc, EventKind::Delivery { stage, slice });
-                    } else {
-                        self.arena.free(slice);
-                    }
-                    self.try_dispatch(s, now);
                 }
                 EventKind::Delivery { stage, slice } => {
                     let s = stage as usize;
@@ -707,6 +989,12 @@ impl<'a> Engine<'a> {
                     // the check the loop already ran for this record.
                     let mut first = true;
                     'hops: for &qid in &qids {
+                        if self.faults.is_some() && self.queries[qid as usize].shed {
+                            // Shed queries route nowhere: dropping the hop
+                            // here saves the downstream queue traffic the
+                            // head-prune would discard anyway.
+                            continue;
+                        }
                         let visited = self.queries[qid as usize].visited;
                         for &c in &spec.stages[s].children {
                             if visited & (1 << c) == 0 {
@@ -755,7 +1043,7 @@ impl<'a> Engine<'a> {
                         for a in &actions {
                             self.apply_action(a, config_hw, now);
                         }
-                        if outstanding > 0 {
+                        if self.outstanding > 0 {
                             let next = now + self.params.control_interval;
                             self.events.push(next, EventKind::ControlTick);
                         }
@@ -766,9 +1054,12 @@ impl<'a> Engine<'a> {
                         self.try_dispatch(s, now);
                     }
                 }
+                EventKind::Fault { idx } => {
+                    self.apply_fault(idx as usize, config_hw, now);
+                }
             }
             self.result.horizon = now;
-            if outstanding == 0 && controller.is_none() {
+            if self.outstanding == 0 && controller.is_none() {
                 break;
             }
             // Controlled-mode termination: nothing left but control
@@ -776,7 +1067,7 @@ impl<'a> Engine<'a> {
             // tombstones still scheduled — they keep the run (and its
             // ticks) alive until their activation time passes, exactly
             // as the old whole-heap scan did, but in O(1).
-            if outstanding == 0 && self.events.non_tick_len() == 0 {
+            if self.outstanding == 0 && self.events.non_tick_len() == 0 {
                 break;
             }
         }
@@ -867,6 +1158,51 @@ pub fn simulate_budgeted(
         routing,
         Some(AbortBudget { slo }),
     );
+    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
+    (result, verdict)
+}
+
+/// [`simulate`] with a fault plan injected (see [`super::faults`]). With
+/// an *empty* plan the run is bit-identical to [`simulate`] — no fault
+/// state is allocated and no fault event is pushed (asserted across the
+/// conformance suites). Shed queries appear in no latency vector; the
+/// crash/retry/shed telemetry is in the result's counters.
+pub fn simulate_with_faults(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+    faults: &FaultPlan,
+) -> SimResult {
+    let (mut result, _) = Engine::new(spec, profiles, config, params)
+        .with_faults(Some(faults))
+        .run_ext(trace, config, None, None, None);
+    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
+    result
+}
+
+/// [`simulate_budgeted`] with a fault plan injected. The dispatch-time
+/// fast-accept sweep is disabled while faults are active (a crash can
+/// cancel an in-flight batch, so "already scheduled" completions are no
+/// longer guaranteed); hits are counted only at completion, misses by
+/// the deadline sweep, and shed queries against the miss ceiling — so a
+/// `ProvedFeasible` verdict still guarantees P99 <= SLO even when every
+/// shed or unfinished query is charged as a miss.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_budgeted_with_faults(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+    routing: Option<&RoutingPlan>,
+    faults: &FaultPlan,
+) -> (SimResult, BudgetVerdict) {
+    let (mut result, verdict) = Engine::new(spec, profiles, config, params)
+        .with_faults(Some(faults))
+        .run_ext(trace, config, None, routing, Some(AbortBudget { slo }));
     result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
     (result, verdict)
 }

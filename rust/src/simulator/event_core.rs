@@ -54,6 +54,10 @@ pub enum EventKind {
     ControlTick,
     /// End of a DS2-style pipeline halt: dispatch everywhere.
     Resume,
+    /// Scheduled fault injection: `idx` indexes the run's compiled
+    /// [`FaultPlan`](super::faults::FaultPlan) entries. Pushed only when
+    /// a non-empty plan is active, so fault-free runs pay nothing.
+    Fault { idx: u32 },
 }
 
 /// A small `Copy` event record. `seq` is stamped by the queue on push and

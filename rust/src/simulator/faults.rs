@@ -1,0 +1,499 @@
+//! Deterministic fault injection for the simulator: seed-derived chaos
+//! plans threaded through the event core.
+//!
+//! Two layers, mirroring the scenario subsystem
+//! ([`crate::workload::scenarios`]):
+//!
+//! * [`FaultSpec`] — the declarative, JSON-loadable description: crash
+//!   instants, seed-expanded crash storms, transient per-stage slowdowns
+//!   and correlated stage outages, plus the recovery-policy knobs
+//!   (`max_retries`, `shed_after`).
+//! * [`FaultPlan`] — the compiled, time-sorted injection list the engine
+//!   consumes ([`FaultSpec::compile`]). Compilation is bit-deterministic
+//!   in (spec, stage count, seed): storms expand through a dedicated
+//!   [`Rng`] stream per node (derived via
+//!   [`child_seed`](crate::workload::scenarios::child_seed)), so the same
+//!   inputs always yield the same plan, byte for byte — property-tested
+//!   in `tests/simulator_props.rs`.
+//!
+//! The engine contract is strict: an **empty plan injects nothing**. A
+//! run with [`FaultPlan::default()`] (or a spec with no events and no
+//! shed policy) pushes zero fault events and takes zero fault branches,
+//! so it is bit-identical to a run without fault plumbing at all — the
+//! invariant the conformance suites assert across the whole grid.
+//!
+//! Recovery semantics live in the engine (`simulator::engine`): a crashed
+//! replica's in-flight batch is requeued at the head of its stage queue
+//! in original order (bounded by `max_retries` per query, then shed);
+//! replacement capacity is the *controller's* job — the Tuner restores a
+//! crashed stage to the Planner's floor, paying the normal
+//! `replica_activation_delay`, while open-loop and null-controlled runs
+//! stay degraded (degraded-mode serving, not silent wedging: a crash
+//! never removes a stage's last replica — total stage death is modeled
+//! by `outage` windows, which always end). Queries older than
+//! `shed_after` seconds are dropped at dispatch time instead of wasting
+//! batch slots they can no longer use; sheds are counted separately from
+//! SLO misses.
+//!
+//! ## JSON schema (`"faults"` node of a scenario spec, or a standalone doc)
+//!
+//! ```json
+//! {
+//!   "max_retries": 2,
+//!   "shed_after": 1.5,
+//!   "events": [
+//!     { "kind": "crash", "stage": 1, "time": 120 },
+//!     { "kind": "crash_storm", "start": 60, "end": 180, "rate": 0.2 },
+//!     { "kind": "slowdown", "stage": 0, "start": 200, "end": 260, "factor": 3 },
+//!     { "kind": "outage", "stage": 2, "start": 300, "end": 315 }
+//!   ]
+//! }
+//! ```
+//!
+//! Event kinds (fields beyond `kind`):
+//!
+//! | kind          | fields                                                      |
+//! |---------------|-------------------------------------------------------------|
+//! | `crash`       | `stage`, `time`                                             |
+//! | `crash_storm` | `stage`? (absent = random stage per crash), `start`, `end`, `rate` (crashes/s) |
+//! | `slowdown`    | `stage`, `start`, `end`, `factor` (>= 1, batch-latency multiplier) |
+//! | `outage`      | `stage`, `start`, `end`                                     |
+//!
+//! `stage` indices are clamped to the served pipeline's stage count at
+//! compile time, so one chaos family can run against pipelines of
+//! different widths (the robustness matrix does exactly that). Parse
+//! errors name the offending node by its path from the document root
+//! (`faults.events[1]: ...`), matching the scenario-spec convention.
+
+use std::path::Path;
+
+use crate::util::json::{opt_f64_at, req_f64_at as req_num, Json};
+use crate::util::rng::Rng;
+use crate::workload::scenarios::child_seed;
+
+/// One declarative fault node of a [`FaultSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultNode {
+    /// Kill one replica of `stage` at `time`.
+    Crash { stage: usize, time: f64 },
+    /// Poisson rain of crashes at `rate` per second over `[start, end)`,
+    /// each hitting `stage` (or a seed-derived random stage when absent).
+    CrashStorm { stage: Option<usize>, start: f64, end: f64, rate: f64 },
+    /// Multiply `stage`'s batch latencies by `factor` over `[start, end)`
+    /// (batches already in flight keep their scheduled completion).
+    Slowdown { stage: usize, start: f64, end: f64, factor: f64 },
+    /// Freeze dispatch at `stage` over `[start, end)`: queries queue but
+    /// no batch starts (correlated whole-stage unavailability).
+    Outage { stage: usize, start: f64, end: f64 },
+}
+
+/// Declarative fault-injection spec: the JSON-loadable unit, parallel to
+/// [`crate::workload::scenarios::ScenarioSpec`]. Compile with
+/// [`Self::compile`] to get the engine-ready [`FaultPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub nodes: Vec<FaultNode>,
+    /// Times a crashed batch's queries are requeued before being shed.
+    pub max_retries: u32,
+    /// Deadline-shed policy: drop queries older than this many seconds at
+    /// dispatch time (None = never shed).
+    pub shed_after: Option<f64>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { nodes: Vec::new(), max_retries: Self::DEFAULT_MAX_RETRIES, shed_after: None }
+    }
+}
+
+/// Range check at parse time (same convention as the scenario parser):
+/// malformed-but-numeric specs surface as path-named CLI errors instead
+/// of generator assertions.
+fn check(cond: bool, path: &str, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(format!("{path}: out of range: {what}"))
+    }
+}
+
+fn opt_num(node: &Json, key: &str, default: f64, path: &str) -> Result<f64, String> {
+    match node.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("{path}: field {key:?} must be a number")),
+    }
+}
+
+fn req_stage(node: &Json, path: &str) -> Result<usize, String> {
+    let s = req_num(node, "stage", path)?;
+    check(
+        s >= 0.0 && s.fract() == 0.0,
+        path,
+        "stage must be a non-negative integer",
+    )?;
+    Ok(s as usize)
+}
+
+/// Shared `start` / `end` window of the interval kinds.
+fn req_window(node: &Json, path: &str, kind: &str) -> Result<(f64, f64), String> {
+    let start = req_num(node, "start", path)?;
+    let end = req_num(node, "end", path)?;
+    check(start >= 0.0, path, &format!("{kind} start must be >= 0"))?;
+    check(end > start, path, &format!("{kind} end must be > start"))?;
+    Ok((start, end))
+}
+
+impl FaultSpec {
+    /// Default retry bound for a crashed batch's queries.
+    pub const DEFAULT_MAX_RETRIES: u32 = 2;
+
+    /// Parse a faults node (see the module docs for the schema). Errors
+    /// name the offending node by its path from the document root.
+    pub fn parse_at(node: &Json, path: &str) -> Result<FaultSpec, String> {
+        let max_retries = opt_num(node, "max_retries", Self::DEFAULT_MAX_RETRIES as f64, path)?;
+        check(
+            max_retries >= 0.0 && max_retries.fract() == 0.0,
+            path,
+            "max_retries must be a non-negative integer",
+        )?;
+        let shed_after = opt_f64_at(node, "shed_after", path)?;
+        check(
+            shed_after.map_or(true, |s| s > 0.0),
+            path,
+            "shed_after must be > 0",
+        )?;
+        let nodes = match node.get("events") {
+            None => Vec::new(),
+            Some(events) => {
+                let arr = events
+                    .as_arr()
+                    .ok_or_else(|| format!("{path}: field \"events\" must be an array"))?;
+                arr.iter()
+                    .enumerate()
+                    .map(|(i, ev)| Self::parse_event(ev, &format!("{path}.events[{i}]")))
+                    .collect::<Result<Vec<_>, _>>()?
+            }
+        };
+        Ok(FaultSpec { nodes, max_retries: max_retries as u32, shed_after })
+    }
+
+    fn parse_event(node: &Json, path: &str) -> Result<FaultNode, String> {
+        let kind = node
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{path}: missing string field \"kind\""))?;
+        match kind {
+            "crash" => {
+                let stage = req_stage(node, path)?;
+                let time = req_num(node, "time", path)?;
+                check(time >= 0.0, path, "crash time must be >= 0")?;
+                Ok(FaultNode::Crash { stage, time })
+            }
+            "crash_storm" => {
+                let stage = match node.get("stage") {
+                    None => None,
+                    Some(_) => Some(req_stage(node, path)?),
+                };
+                let (start, end) = req_window(node, path, "crash_storm")?;
+                let rate = req_num(node, "rate", path)?;
+                check(rate > 0.0, path, "crash_storm rate must be > 0")?;
+                Ok(FaultNode::CrashStorm { stage, start, end, rate })
+            }
+            "slowdown" => {
+                let stage = req_stage(node, path)?;
+                let (start, end) = req_window(node, path, "slowdown")?;
+                let factor = req_num(node, "factor", path)?;
+                check(factor >= 1.0, path, "slowdown factor must be >= 1")?;
+                Ok(FaultNode::Slowdown { stage, start, end, factor })
+            }
+            "outage" => {
+                let stage = req_stage(node, path)?;
+                let (start, end) = req_window(node, path, "outage")?;
+                Ok(FaultNode::Outage { stage, start, end })
+            }
+            other => Err(format!("{path}: unknown fault kind {other:?}")),
+        }
+    }
+
+    /// Parse a standalone document: either a bare faults object or a doc
+    /// carrying a top-level `"faults"` node (a full scenario spec works).
+    pub fn parse_str(text: &str) -> Result<FaultSpec, String> {
+        let doc = Json::parse(text)?;
+        let node = doc.get("faults").unwrap_or(&doc);
+        Self::parse_at(node, "faults")
+    }
+
+    /// Load a standalone spec file (see [`Self::parse_str`]).
+    pub fn load(path: &Path) -> Result<FaultSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse_str(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Compress the fault *schedule* by `factor` (< 1 shortens), the same
+    /// transform quick (CI) mode applies to the arrival schedule
+    /// ([`crate::workload::scenarios::Scenario::scaled`]): crash times and
+    /// interval bounds scale, storm rates divide (preserving the expected
+    /// crash count per storm). `shed_after` is a latency bound relative
+    /// to the SLO, not a schedule time, so it is left untouched.
+    pub fn scaled(&self, factor: f64) -> FaultSpec {
+        assert!(factor > 0.0, "scale factor {factor}");
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| match *n {
+                FaultNode::Crash { stage, time } => {
+                    FaultNode::Crash { stage, time: time * factor }
+                }
+                FaultNode::CrashStorm { stage, start, end, rate } => FaultNode::CrashStorm {
+                    stage,
+                    start: start * factor,
+                    end: end * factor,
+                    rate: rate / factor,
+                },
+                FaultNode::Slowdown { stage, start, end, factor: f } => FaultNode::Slowdown {
+                    stage,
+                    start: start * factor,
+                    end: end * factor,
+                    factor: f,
+                },
+                FaultNode::Outage { stage, start, end } => FaultNode::Outage {
+                    stage,
+                    start: start * factor,
+                    end: end * factor,
+                },
+            })
+            .collect();
+        FaultSpec { nodes, max_retries: self.max_retries, shed_after: self.shed_after }
+    }
+
+    /// Compile into the engine-ready, time-sorted [`FaultPlan`] for a
+    /// pipeline with `n_stages` stages. Deterministic in (self, n_stages,
+    /// seed): each storm node expands through its own seeded stream
+    /// (`child_seed(seed, node_index)`), drawing the crash time and then
+    /// (when the node names no stage) the stage. Stage indices are
+    /// clamped into range so one spec serves pipelines of any width.
+    pub fn compile(&self, n_stages: usize, seed: u64) -> FaultPlan {
+        assert!(n_stages > 0, "compile needs at least one stage");
+        let clamp = |s: usize| s.min(n_stages - 1) as u16;
+        let mut entries = Vec::new();
+        for (idx, node) in self.nodes.iter().enumerate() {
+            match *node {
+                FaultNode::Crash { stage, time } => {
+                    entries.push(FaultEntry {
+                        time,
+                        action: FaultAction::Crash { stage: clamp(stage) },
+                    });
+                }
+                FaultNode::CrashStorm { stage, start, end, rate } => {
+                    let mut rng = Rng::new(child_seed(seed, idx as u64));
+                    let mut t = start;
+                    loop {
+                        t += rng.exp(rate);
+                        if t >= end {
+                            break;
+                        }
+                        let s = match stage {
+                            Some(s) => clamp(s),
+                            None => rng.usize(n_stages) as u16,
+                        };
+                        entries.push(FaultEntry {
+                            time: t,
+                            action: FaultAction::Crash { stage: s },
+                        });
+                    }
+                }
+                FaultNode::Slowdown { stage, start, end, factor } => {
+                    let s = clamp(stage);
+                    entries.push(FaultEntry {
+                        time: start,
+                        action: FaultAction::SlowdownStart { stage: s, factor },
+                    });
+                    entries.push(FaultEntry {
+                        time: end,
+                        action: FaultAction::SlowdownEnd { stage: s },
+                    });
+                }
+                FaultNode::Outage { stage, start, end } => {
+                    let s = clamp(stage);
+                    entries.push(FaultEntry {
+                        time: start,
+                        action: FaultAction::OutageStart { stage: s },
+                    });
+                    entries.push(FaultEntry {
+                        time: end,
+                        action: FaultAction::OutageEnd { stage: s },
+                    });
+                }
+            }
+        }
+        // Stable sort: simultaneous faults keep spec order.
+        entries.sort_by(|a, b| a.time.total_cmp(&b.time));
+        FaultPlan { entries, max_retries: self.max_retries, shed_after: self.shed_after }
+    }
+}
+
+/// One compiled injection the engine applies at `time`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEntry {
+    pub time: f64,
+    pub action: FaultAction,
+}
+
+/// The engine-level fault actions a [`FaultEntry`] carries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Kill one replica of `stage` (prefers a busy one; its in-flight
+    /// batch is requeued — see the engine's crash handler).
+    Crash { stage: u16 },
+    /// Begin multiplying `stage`'s batch latencies by `factor`.
+    SlowdownStart { stage: u16, factor: f64 },
+    /// Restore `stage` to nominal batch latency.
+    SlowdownEnd { stage: u16 },
+    /// Freeze dispatch at `stage`.
+    OutageStart { stage: u16 },
+    /// Unfreeze dispatch at `stage` (outages may nest; dispatch resumes
+    /// when the last one ends).
+    OutageEnd { stage: u16 },
+}
+
+/// A compiled, time-sorted fault schedule plus the recovery-policy knobs.
+/// [`Self::is_empty`] is the engine's zero-overhead gate: an empty plan
+/// activates no fault plumbing at all.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Injections in non-decreasing time order.
+    pub entries: Vec<FaultEntry>,
+    /// Times a crashed batch's queries are requeued before being shed.
+    pub max_retries: u32,
+    /// Deadline-shed bound in seconds (None = never shed).
+    pub shed_after: Option<f64>,
+}
+
+impl FaultPlan {
+    /// True when the plan changes nothing: no injections and no shed
+    /// policy. The engine treats such a plan exactly like no plan.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty() && self.shed_after.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn storm_spec() -> FaultSpec {
+        FaultSpec {
+            nodes: vec![
+                FaultNode::CrashStorm { stage: None, start: 10.0, end: 100.0, rate: 0.3 },
+                FaultNode::Slowdown { stage: 1, start: 40.0, end: 80.0, factor: 2.5 },
+                FaultNode::Outage { stage: 0, start: 90.0, end: 95.0 },
+            ],
+            max_retries: 2,
+            shed_after: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn compile_is_bit_deterministic_per_seed() {
+        let spec = storm_spec();
+        let a = spec.compile(4, 7);
+        let b = spec.compile(4, 7);
+        assert_eq!(a, b, "same (spec, stages, seed) must compile identically");
+        assert!(!a.entries.is_empty(), "storm produced no crashes");
+        let c = spec.compile(4, 8);
+        assert_ne!(a, c, "different seed should move the storm");
+    }
+
+    #[test]
+    fn compile_sorts_by_time_and_clamps_stages() {
+        let spec = FaultSpec {
+            nodes: vec![
+                FaultNode::Crash { stage: 99, time: 50.0 },
+                FaultNode::Crash { stage: 0, time: 5.0 },
+                FaultNode::Outage { stage: 42, start: 1.0, end: 60.0 },
+            ],
+            ..FaultSpec::default()
+        };
+        let plan = spec.compile(3, 1);
+        for w in plan.entries.windows(2) {
+            assert!(w[0].time <= w[1].time, "entries not time-sorted");
+        }
+        for e in &plan.entries {
+            let stage = match e.action {
+                FaultAction::Crash { stage }
+                | FaultAction::SlowdownStart { stage, .. }
+                | FaultAction::SlowdownEnd { stage }
+                | FaultAction::OutageStart { stage }
+                | FaultAction::OutageEnd { stage } => stage,
+            };
+            assert!(stage < 3, "stage {stage} not clamped");
+        }
+    }
+
+    #[test]
+    fn scaled_compresses_schedule_and_preserves_storm_mass() {
+        let spec = storm_spec();
+        let scaled = spec.scaled(0.2);
+        match (&spec.nodes[0], &scaled.nodes[0]) {
+            (
+                FaultNode::CrashStorm { start: s0, end: e0, rate: r0, .. },
+                FaultNode::CrashStorm { start: s1, end: e1, rate: r1, .. },
+            ) => {
+                assert!((s1 - s0 * 0.2).abs() < 1e-12 && (e1 - e0 * 0.2).abs() < 1e-12);
+                // Expected crash count (end − start) · rate is invariant.
+                assert!(((e1 - s1) * r1 - (e0 - s0) * r0).abs() < 1e-9);
+            }
+            other => panic!("unexpected nodes {other:?}"),
+        }
+        assert_eq!(scaled.shed_after, spec.shed_after, "shed_after is not a schedule time");
+    }
+
+    #[test]
+    fn empty_spec_compiles_to_an_empty_plan() {
+        let spec = FaultSpec { shed_after: None, ..FaultSpec::default() };
+        assert!(spec.compile(3, 42).is_empty());
+        assert!(FaultPlan::default().is_empty());
+        let shed_only = FaultSpec { shed_after: Some(0.5), ..FaultSpec::default() };
+        assert!(!shed_only.compile(3, 42).is_empty(), "a shed policy is not a no-op");
+    }
+
+    #[test]
+    fn parse_round_trips_the_schema() {
+        let text = r#"{
+            "max_retries": 1,
+            "shed_after": 1.5,
+            "events": [
+                { "kind": "crash", "stage": 1, "time": 120 },
+                { "kind": "crash_storm", "start": 60, "end": 180, "rate": 0.2 },
+                { "kind": "slowdown", "stage": 0, "start": 200, "end": 260, "factor": 3 },
+                { "kind": "outage", "stage": 2, "start": 300, "end": 315 }
+            ]
+        }"#;
+        let spec = FaultSpec::parse_str(text).unwrap();
+        assert_eq!(spec.max_retries, 1);
+        assert_eq!(spec.shed_after, Some(1.5));
+        assert_eq!(spec.nodes.len(), 4);
+        assert_eq!(spec.nodes[0], FaultNode::Crash { stage: 1, time: 120.0 });
+        assert_eq!(
+            spec.nodes[1],
+            FaultNode::CrashStorm { stage: None, start: 60.0, end: 180.0, rate: 0.2 }
+        );
+    }
+
+    #[test]
+    fn parse_errors_name_the_offending_node() {
+        let bad = r#"{ "events": [ { "kind": "slowdown", "stage": 0,
+                       "start": 10, "end": 5, "factor": 2 } ] }"#;
+        let err = FaultSpec::parse_str(bad).unwrap_err();
+        assert!(err.contains("faults.events[0]"), "err: {err}");
+        let unknown = r#"{ "events": [ { "kind": "meteor", "stage": 0 } ] }"#;
+        let err = FaultSpec::parse_str(unknown).unwrap_err();
+        assert!(err.contains("unknown fault kind"), "err: {err}");
+        let shed = r#"{ "shed_after": 0 }"#;
+        let err = FaultSpec::parse_str(shed).unwrap_err();
+        assert!(err.contains("shed_after"), "err: {err}");
+    }
+}

@@ -89,11 +89,12 @@
 pub mod control;
 mod engine;
 pub mod event_core;
+pub mod faults;
 mod routing;
 
 pub use engine::{
-    simulate, simulate_budgeted, simulate_with_routing, BudgetVerdict, SimParams, SimResult,
-    StageStats,
+    simulate, simulate_budgeted, simulate_budgeted_with_faults, simulate_with_faults,
+    simulate_with_routing, BudgetVerdict, SimParams, SimResult, StageStats,
 };
 pub use routing::RoutingPlan;
 
@@ -171,6 +172,45 @@ pub fn check_feasible(
 ) -> FeasibilityCheck {
     let (mut result, verdict) =
         simulate_budgeted(spec, profiles, config, trace, slo, params, routing);
+    match verdict {
+        BudgetVerdict::ProvedInfeasible => {
+            FeasibilityCheck { feasible: false, aborted: true, accepted: false, p99: None }
+        }
+        BudgetVerdict::ProvedFeasible => {
+            FeasibilityCheck { feasible: true, aborted: false, accepted: true, p99: None }
+        }
+        BudgetVerdict::Completed => {
+            let p99 = stats::p99_in_place(&mut result.latencies);
+            FeasibilityCheck {
+                feasible: p99 <= slo,
+                aborted: false,
+                accepted: false,
+                p99: Some(p99),
+            }
+        }
+    }
+}
+
+/// [`check_feasible`] under a fault plan (see [`faults`]): the budgeted
+/// simulation injects the plan, counting shed queries against the miss
+/// ceiling and disabling the dispatch-time fast-accept sweep (an
+/// in-flight batch is no longer guaranteed to complete as scheduled when
+/// crashes can cancel it). With an empty plan the decision — and the
+/// whole simulation — is bit-identical to [`check_feasible`].
+#[allow(clippy::too_many_arguments)]
+pub fn check_feasible_with_faults(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    slo: f64,
+    params: &SimParams,
+    routing: Option<&RoutingPlan>,
+    fault_plan: &faults::FaultPlan,
+) -> FeasibilityCheck {
+    let (mut result, verdict) = simulate_budgeted_with_faults(
+        spec, profiles, config, trace, slo, params, routing, fault_plan,
+    );
     match verdict {
         BudgetVerdict::ProvedInfeasible => {
             FeasibilityCheck { feasible: false, aborted: true, accepted: false, p99: None }

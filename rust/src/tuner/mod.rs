@@ -162,6 +162,7 @@ impl Controller for Tuner {
 
     fn on_tick(&mut self, now: f64, state: &ControlState) -> Vec<ControlAction> {
         let mut actions = Vec::new();
+        let mut acted = vec![false; state.provisioned.len()];
         let warm = self
             .first_arrival
             .map_or(false, |t0| now - t0 >= self.down_span);
@@ -173,6 +174,7 @@ impl Controller for Tuner {
             {
                 if target > current {
                     actions.push(ControlAction::SetReplicas { stage, replicas: target });
+                    acted[stage] = true;
                 }
             }
         } else if warm && now - self.last_change >= self.downscale_delay {
@@ -194,7 +196,24 @@ impl Controller for Tuner {
                 // Removal only when strictly lower.
                 if target < current {
                     actions.push(ControlAction::SetReplicas { stage, replicas: target });
+                    acted[stage] = true;
                 }
+            }
+        }
+        // Failure recovery: a stage under the Planner's floor lost
+        // capacity it never chose to give up (replica crashes — scaling
+        // actions themselves never undercut the floor), so restore the
+        // validated baseline immediately. The envelope detector cannot
+        // see this: it reacts to *traffic* exceeding the sample, not to
+        // *capacity* falling out from under nominal traffic. Skipping
+        // stages already acted on this tick keeps the two branches from
+        // issuing contradictory targets; under no-fault serving
+        // provisioned counts never fall below the floor, so this branch
+        // never fires and fault-free runs are bit-identical.
+        for (stage, &current) in state.provisioned.iter().enumerate() {
+            let floor = self.inputs.planned_replicas[stage].max(1);
+            if !acted[stage] && current < floor {
+                actions.push(ControlAction::SetReplicas { stage, replicas: floor });
             }
         }
         if !actions.is_empty() {

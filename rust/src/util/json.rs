@@ -153,7 +153,7 @@ impl Json {
         let v = p.value()?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
-            return Err(format!("trailing data at byte {}", p.pos));
+            return Err(format!("trailing data at {}", p.at(p.pos)));
         }
         Ok(v)
     }
@@ -293,15 +293,28 @@ impl<'a> Parser<'a> {
         self.bytes.get(self.pos).copied()
     }
 
+    /// "line L, byte B" for error messages. Line is 1-based, counted
+    /// by newlines before `pos`, so errors in a multi-line document
+    /// (a scenario spec, a budget ledger) name the offending line
+    /// directly instead of just a byte offset.
+    fn at(&self, pos: usize) -> String {
+        let line = self.bytes[..pos.min(self.bytes.len())]
+            .iter()
+            .filter(|&&b| b == b'\n')
+            .count()
+            + 1;
+        format!("line {line}, byte {pos}")
+    }
+
     fn expect(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
         } else {
             Err(format!(
-                "expected {:?} at byte {} got {:?}",
+                "expected {:?} at {} got {:?}",
                 c as char,
-                self.pos,
+                self.at(self.pos),
                 self.peek().map(|b| b as char)
             ))
         }
@@ -317,7 +330,7 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {other:?} at byte {}", self.pos)),
+            other => Err(format!("unexpected {other:?} at {}", self.at(self.pos))),
         }
     }
 
@@ -326,7 +339,7 @@ impl<'a> Parser<'a> {
             self.pos += word.len();
             Ok(val)
         } else {
-            Err(format!("bad literal at byte {}", self.pos))
+            Err(format!("bad literal at {}", self.at(self.pos)))
         }
     }
 
@@ -343,7 +356,7 @@ impl<'a> Parser<'a> {
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+            .ok_or_else(|| format!("bad number at {}", self.at(start)))
     }
 
     fn string(&mut self) -> Result<String, String> {
@@ -415,7 +428,12 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Arr(v));
                 }
-                other => return Err(format!("expected , or ] got {other:?}")),
+                other => {
+                    return Err(format!(
+                        "expected , or ] at {} got {other:?}",
+                        self.at(self.pos)
+                    ))
+                }
             }
         }
     }
@@ -444,7 +462,12 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(m));
                 }
-                other => return Err(format!("expected , or }} got {other:?}")),
+                other => {
+                    return Err(format!(
+                        "expected , or }} at {} got {other:?}",
+                        self.at(self.pos)
+                    ))
+                }
             }
         }
     }
@@ -508,6 +531,20 @@ mod tests {
         for text in ["", "{", "[1,", "{\"a\"}", "tru", "1 2", "{\"a\":}"] {
             assert!(Json::parse(text).is_err(), "{text}");
         }
+    }
+
+    #[test]
+    fn parse_errors_name_the_offending_line() {
+        // The bad literal sits on line 3 of a multi-line document.
+        let text = "{\n  \"a\": 1,\n  \"b\": nope\n}";
+        let err = Json::parse(text).unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        // Trailing data after a complete value, on line 2.
+        let err = Json::parse("1\n2").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        // Single-line input still reads naturally.
+        let err = Json::parse("{\"a\":}").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
     }
 
     #[test]

@@ -135,19 +135,45 @@ impl Trace {
         std::fs::write(path, out)
     }
 
-    /// Load a saved trace, validating it: a file with non-numeric,
-    /// non-finite or unsorted timestamps is rejected with a descriptive
-    /// error instead of tripping a debug-only assertion downstream.
+    /// Load a saved trace, validating it line by line: a file with
+    /// non-numeric, non-finite or unsorted timestamps is rejected with
+    /// an error naming the offending line (1-based, blank lines
+    /// included in the count) instead of tripping a debug-only
+    /// assertion downstream.
     pub fn load(path: &std::path::Path) -> Result<Trace, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("{}: {e}", path.display()))?;
-        let arrivals = text
-            .lines()
-            .filter(|l| !l.trim().is_empty())
-            .map(|l| l.trim().parse::<f64>().map_err(|e| e.to_string()))
-            .collect::<Result<Vec<_>, _>>()
-            .map_err(|e| format!("{}: {e}", path.display()))?;
-        Trace::try_new(arrivals).map_err(|e| format!("{}: {e}", path.display()))
+        let mut arrivals = Vec::new();
+        let mut prev: Option<(usize, f64)> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = idx + 1;
+            let t: f64 = line.parse().map_err(|e| {
+                format!("{}: line {lineno}: {e}: {line:?}", path.display())
+            })?;
+            // parse() accepts "nan"/"inf"; a trace must not.
+            if !t.is_finite() {
+                return Err(format!(
+                    "{}: line {lineno}: arrival is not finite: {line:?}",
+                    path.display()
+                ));
+            }
+            if let Some((prev_line, prev_t)) = prev {
+                if prev_t > t {
+                    return Err(format!(
+                        "{}: line {lineno}: arrivals out of order: \
+                         {prev_t} (line {prev_line}) > {t}",
+                        path.display()
+                    ));
+                }
+            }
+            prev = Some((lineno, t));
+            arrivals.push(t);
+        }
+        Ok(Trace::new(arrivals))
     }
 }
 
@@ -314,8 +340,14 @@ mod tests {
         std::fs::write(&path, "1.0\n3.0\n2.0\n").unwrap();
         let err = Trace::load(&path).unwrap_err();
         assert!(err.contains("out of order"), "{err}");
+        assert!(err.contains("line 3"), "{err}");
         std::fs::write(&path, "1.0\nnan\n2.0\n").unwrap();
-        assert!(Trace::load(&path).is_err());
+        let err = Trace::load(&path).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        std::fs::write(&path, "1.0\n\n2.0\nbogus\n").unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        // Blank lines are skipped but still counted.
+        assert!(err.contains("line 4"), "{err}");
     }
 
     #[test]

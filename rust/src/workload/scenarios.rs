@@ -735,6 +735,11 @@ pub struct ScenarioSpec {
     /// Optional explicit quick-mode (CI) scenario. When absent, quick
     /// mode serves `scenario.scaled(Self::QUICK_FACTOR)`.
     pub quick: Option<Scenario>,
+    /// Optional fault-injection spec (chaos families): the failure
+    /// schedule served alongside the arrival schedule. Quick mode
+    /// compresses fault times by the same [`Self::QUICK_FACTOR`], so
+    /// faults keep landing at the same *relative* points of the run.
+    pub faults: Option<crate::simulator::faults::FaultSpec>,
 }
 
 impl ScenarioSpec {
@@ -743,7 +748,7 @@ impl ScenarioSpec {
     pub const QUICK_FACTOR: f64 = 0.2;
 
     /// Parse a full spec document (`{"name", "seed", "scenario",
-    /// "quick"?}`; name defaults to `"scenario"`, seed to 42).
+    /// "quick"?, "faults"?}`; name defaults to `"scenario"`, seed to 42).
     pub fn parse(doc: &Json) -> Result<ScenarioSpec, String> {
         let scenario = doc
             .get("scenario")
@@ -751,6 +756,10 @@ impl ScenarioSpec {
         let quick = match doc.get("quick") {
             None => None,
             Some(q) => Some(Scenario::parse_at(q, "quick")?),
+        };
+        let faults = match doc.get("faults") {
+            None => None,
+            Some(f) => Some(crate::simulator::faults::FaultSpec::parse_at(f, "faults")?),
         };
         Ok(ScenarioSpec {
             name: doc
@@ -761,6 +770,7 @@ impl ScenarioSpec {
             seed: doc.get("seed").and_then(Json::as_f64).unwrap_or(42.0) as u64,
             scenario: Scenario::parse(scenario)?,
             quick,
+            faults,
         })
     }
 
@@ -775,6 +785,21 @@ impl ScenarioSpec {
             Some(q) => q.clone(),
             None => self.scenario.scaled(Self::QUICK_FACTOR),
         }
+    }
+
+    /// The fault spec to serve in the given mode: quick mode compresses
+    /// the failure schedule with the same factor as the arrival schedule
+    /// (explicit `"quick"` scenario nodes don't change this — a chaos
+    /// spec should rely on uniform compression so faults and traffic
+    /// stay aligned; see `scenarios/README.md`).
+    pub fn faults_for(&self, quick: bool) -> Option<crate::simulator::faults::FaultSpec> {
+        self.faults.as_ref().map(|f| {
+            if quick {
+                f.scaled(Self::QUICK_FACTOR)
+            } else {
+                f.clone()
+            }
+        })
     }
 
     pub fn parse_str(text: &str) -> Result<ScenarioSpec, String> {

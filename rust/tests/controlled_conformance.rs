@@ -23,9 +23,10 @@ use inferline::config::pipelines;
 use inferline::planner::Planner;
 use inferline::profiler::analytic::paper_profiles;
 use inferline::simulator::control::{
-    simulate_controlled, ControlAction, ControlState, Controller, CountingController,
-    NullController,
+    simulate_controlled, simulate_controlled_with_faults, ControlAction, ControlState, Controller,
+    CountingController, NullController,
 };
+use inferline::simulator::faults::{FaultNode, FaultPlan, FaultSpec};
 use inferline::simulator::{self, SimParams, SimResult};
 use inferline::tuner::{Tuner, TunerInputs};
 use inferline::workload::{gamma_trace, scenarios, Trace};
@@ -279,6 +280,114 @@ fn tuner_on_conditional_dag_is_deterministic_and_conserves_queries() {
     let b = run(inputs);
     assert_query_outcomes_identical(&a, &b, "tuner DAG determinism");
     assert_eq!(a.replica_timeline, b.replica_timeline);
+    assert_eq!(a.cost_dollars.to_bits(), b.cost_dollars.to_bits());
+}
+
+/// The fault-injection hook with an empty plan is the no-fault engine,
+/// bit for bit: on every pipeline shape, `simulate_controlled_with_faults`
+/// with an empty `FaultPlan` must reproduce `simulate_controlled` exactly
+/// — query outcomes, cost integral, provisioning timeline — and report
+/// zero crashes, retries and sheds. This is the PR-7 invariant that lets
+/// the fault machinery ride the hot path for free.
+#[test]
+fn empty_fault_plan_is_bit_identical_to_faultless_engine() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let empty = FaultSpec { nodes: Vec::new(), max_retries: 2, shed_after: None }.compile(8, 1);
+    assert!(empty.is_empty());
+    for spec in pipelines::all() {
+        let live = scenarios::flash_crowd_trace(90.0, 280.0, 10.0, 2.0, 8.0, 4.0, 1.0, 45.0, 31);
+        let config = Planner::new(&spec, &profiles).initialize(&live, 0.3).unwrap();
+        let run_plain = || {
+            let mut null = NullController;
+            simulate_controlled(&spec, &profiles, &config, &live, &params, &mut null)
+        };
+        let run_hooked = || {
+            let mut null = NullController;
+            simulate_controlled_with_faults(
+                &spec, &profiles, &config, &live, &params, &mut null, &empty,
+            )
+        };
+        let plain = run_plain();
+        let hooked = run_hooked();
+        assert_query_outcomes_identical(&plain, &hooked, &spec.name);
+        assert_eq!(
+            plain.cost_dollars.to_bits(),
+            hooked.cost_dollars.to_bits(),
+            "{}: empty-plan cost diverged",
+            spec.name
+        );
+        assert_eq!(plain.replica_timeline, hooked.replica_timeline, "{}: timeline", spec.name);
+        assert_eq!((hooked.crashes, hooked.retries, hooked.shed), (0, 0, 0), "{}", spec.name);
+    }
+}
+
+/// Same invariant on the tuner closed loop: the restore-to-floor pass
+/// added for crash recovery must never fire in a fault-free run, so a
+/// tuned run through the fault entry point with an empty plan stays
+/// bit-identical — actions, timeline, cost and all.
+#[test]
+fn empty_fault_plan_is_bit_identical_under_tuner() {
+    let spec = pipelines::social_media();
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let sample = gamma_trace(100.0, 1.0, 30.0, 21);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, 0.3).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st);
+    let live = scenarios::flash_crowd_trace(100.0, 320.0, 30.0, 2.0, 25.0, 10.0, 1.0, 120.0, 57);
+    let empty = FaultSpec { nodes: Vec::new(), max_retries: 0, shed_after: None }.compile(4, 9);
+    let mut tuner = Tuner::new(inputs.clone());
+    let plain = simulate_controlled(&spec, &profiles, &plan.config, &live, &params, &mut tuner);
+    let mut tuner = Tuner::new(inputs);
+    let hooked = simulate_controlled_with_faults(
+        &spec, &profiles, &plan.config, &live, &params, &mut tuner, &empty,
+    );
+    assert_query_outcomes_identical(&plain, &hooked, "tuner empty-plan");
+    assert_eq!(plain.replica_timeline, hooked.replica_timeline, "tuner timeline");
+    assert_eq!(plain.cost_dollars.to_bits(), hooked.cost_dollars.to_bits());
+    assert_eq!((hooked.crashes, hooked.retries, hooked.shed), (0, 0, 0));
+}
+
+/// A crash-storm run under the tuner: deterministic bit-for-bit per
+/// seed, and query-conserving in the degraded-mode sense — every arrival
+/// either completes or is counted shed, never silently dropped.
+#[test]
+fn crash_storm_run_is_deterministic_and_conserves_queries() {
+    let spec = pipelines::image_processing();
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let sample = gamma_trace(100.0, 1.0, 30.0, 11);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, 0.3).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let inputs = TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st);
+    let live = gamma_trace(100.0, 1.0, 60.0, 23);
+    let storm = FaultSpec {
+        nodes: vec![FaultNode::CrashStorm { stage: None, start: 5.0, end: 50.0, rate: 0.2 }],
+        max_retries: 2,
+        shed_after: Some(2.0),
+    };
+    let faults: FaultPlan = storm.compile(spec.stages.len(), 77);
+    assert!(!faults.is_empty(), "storm compiled to an empty plan");
+    let run = || {
+        let mut tuner = Tuner::new(inputs.clone());
+        simulate_controlled_with_faults(
+            &spec, &profiles, &plan.config, &live, &params, &mut tuner, &faults,
+        )
+    };
+    let a = run();
+    assert_eq!(
+        a.latencies.len() as u64 + a.shed,
+        live.len() as u64,
+        "queries neither completed nor shed"
+    );
+    if a.crashes == 0 {
+        assert_eq!(a.retries, 0, "retries without any crash");
+    }
+    let b = run();
+    assert_query_outcomes_identical(&a, &b, "crash-storm determinism");
+    assert_eq!((a.crashes, a.retries, a.shed), (b.crashes, b.retries, b.shed));
+    assert_eq!(a.replica_timeline, b.replica_timeline, "crash-storm timeline diverged");
     assert_eq!(a.cost_dollars.to_bits(), b.cost_dollars.to_bits());
 }
 

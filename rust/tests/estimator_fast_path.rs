@@ -359,6 +359,46 @@ fn branchy_tree_routing_reuse_and_budgeted_verdicts_are_bit_identical() {
     }
 }
 
+/// The open-loop fault entry point with an empty plan is the plain
+/// estimator, bit for bit, on every pipeline: identical latencies,
+/// completion stream, horizon, cost and per-stage stats, with zero
+/// crash/retry/shed telemetry. The fault hook must cost the hot
+/// estimator path nothing when no chaos is configured.
+#[test]
+fn empty_fault_plan_open_loop_is_bit_identical() {
+    use inferline::simulator::faults::FaultSpec;
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let empty = FaultSpec { nodes: Vec::new(), max_retries: 2, shed_after: None }.compile(8, 3);
+    assert!(empty.is_empty());
+    for spec in pipelines::all() {
+        let trace = gamma_trace(100.0, 4.0, 30.0, 11);
+        let planner = Planner::new(&spec, &profiles);
+        let config = planner.initialize(&trace, 0.5).unwrap();
+        let plain = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+        let hooked =
+            simulator::simulate_with_faults(&spec, &profiles, &config, &trace, &params, &empty);
+        assert_eq!(plain.latencies.len(), hooked.latencies.len(), "{}", spec.name);
+        for (a, b) in plain.latencies.iter().zip(&hooked.latencies) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", spec.name);
+        }
+        assert_eq!(plain.completions.len(), hooked.completions.len(), "{}", spec.name);
+        for (a, b) in plain.completions.iter().zip(&hooked.completions) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "{}", spec.name);
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{}", spec.name);
+        }
+        assert_eq!(plain.horizon.to_bits(), hooked.horizon.to_bits(), "{}", spec.name);
+        assert_eq!(plain.cost_dollars.to_bits(), hooked.cost_dollars.to_bits(), "{}", spec.name);
+        for (i, (s1, s2)) in plain.stage_stats.iter().zip(&hooked.stage_stats).enumerate() {
+            assert_eq!(s1.max_queue, s2.max_queue, "{} stage {i}", spec.name);
+            assert_eq!(s1.batches, s2.batches, "{} stage {i}", spec.name);
+            assert_eq!(s1.queries, s2.queries, "{} stage {i}", spec.name);
+            assert_eq!(s1.busy_time.to_bits(), s2.busy_time.to_bits(), "{} stage {i}", spec.name);
+        }
+        assert_eq!((hooked.crashes, hooked.retries, hooked.shed), (0, 0, 0), "{}", spec.name);
+    }
+}
+
 /// Windows with zero completions report NaN (no data), not a fabricated
 /// perfect-attainment 0.0.
 #[test]

@@ -240,6 +240,42 @@ fn branchy_conditional_tree_conforms() {
     assert!(aborts > 0, "no branchy-tree cell early-aborted");
 }
 
+/// The fault-injection entry point with an empty plan must reproduce the
+/// plain budgeted check exactly — same verdict, same proof path (accept /
+/// abort flags), and when the run completes, the identical P99 bits. A
+/// sub-grid of the main conformance grid suffices: any divergence here is
+/// a no-fault perturbation, which the PR-7 invariant forbids outright.
+#[test]
+fn empty_fault_plan_feasibility_matches_plain_check() {
+    use inferline::simulator::faults::FaultSpec;
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let empty = FaultSpec { nodes: Vec::new(), max_retries: 2, shed_after: None }.compile(8, 5);
+    assert!(empty.is_empty());
+    for spec in inferline::config::pipelines::all() {
+        let trace = family_trace("bursty-mmpp", 9300);
+        for config in candidate_configs(&spec, &profiles, &trace) {
+            for &slo in &[0.05, 0.35, 1.0] {
+                let plain = simulator::check_feasible(
+                    &spec, &profiles, &config, &trace, slo, &params, None,
+                );
+                let hooked = simulator::check_feasible_with_faults(
+                    &spec, &profiles, &config, &trace, slo, &params, None, &empty,
+                );
+                let ctx = format!("{} / slo={slo}", spec.name);
+                assert_eq!(plain.feasible, hooked.feasible, "{ctx}: verdict");
+                assert_eq!(plain.accepted, hooked.accepted, "{ctx}: fast-accept path");
+                assert_eq!(plain.aborted, hooked.aborted, "{ctx}: early-abort path");
+                assert_eq!(
+                    plain.p99.map(f64::to_bits),
+                    hooked.p99.map(f64::to_bits),
+                    "{ctx}: completed-run P99 bits"
+                );
+            }
+        }
+    }
+}
+
 /// Straggler regression (the late-arrival bug class): both proof
 /// thresholds derive from the *full* trace length, so queries that only
 /// arrive after the decision point — here a burst followed by a long

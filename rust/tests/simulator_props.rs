@@ -5,6 +5,7 @@
 use inferline::config::{Framework, PipelineConfig, PipelineSpec, StageConfig, StageSpec};
 use inferline::hardware::Hardware;
 use inferline::profiler::{BatchProfile, ProfileSet};
+use inferline::simulator::faults::{FaultNode, FaultSpec};
 use inferline::simulator::{self, SimParams};
 use inferline::util::prop;
 use inferline::util::rng::Rng;
@@ -322,6 +323,127 @@ fn budgeted_verdicts_agree_with_full_quantile_on_random_pipelines() {
         if let Some(budgeted_p99) = check.p99 {
             assert_eq!(budgeted_p99.to_bits(), p99.to_bits());
         }
+    });
+}
+
+/// Random fault spec mixing all four node kinds over a short horizon.
+fn random_fault_spec(rng: &mut Rng, n_stages: usize) -> FaultSpec {
+    let n = 1 + rng.usize(3);
+    let nodes = (0..n)
+        .map(|_| match rng.usize(4) {
+            0 => FaultNode::Crash { stage: rng.usize(n_stages), time: rng.f64() * 8.0 },
+            1 => FaultNode::CrashStorm {
+                stage: if rng.bool(0.5) { Some(rng.usize(n_stages)) } else { None },
+                start: rng.f64() * 2.0,
+                end: 3.0 + rng.f64() * 5.0,
+                rate: 0.1 + rng.f64() * 2.0,
+            },
+            2 => FaultNode::Slowdown {
+                stage: rng.usize(n_stages),
+                start: rng.f64() * 2.0,
+                end: 3.0 + rng.f64() * 5.0,
+                factor: 1.1 + rng.f64() * 2.0,
+            },
+            _ => FaultNode::Outage {
+                stage: rng.usize(n_stages),
+                start: rng.f64() * 2.0,
+                end: 2.5 + rng.f64() * 2.0,
+            },
+        })
+        .collect();
+    FaultSpec {
+        nodes,
+        max_retries: rng.usize(4) as u32,
+        shed_after: if rng.bool(0.5) { Some(0.5 + rng.f64() * 2.0) } else { None },
+    }
+}
+
+/// Fault-plan compilation is bit-deterministic in (spec, stage count,
+/// seed) — the same inputs yield byte-identical plans, with entries
+/// time-sorted — so a chaos cell re-run reproduces exactly.
+#[test]
+fn fault_plan_compilation_is_bit_deterministic() {
+    prop::check("fault plan determinism", 40, |rng| {
+        let n_stages = 1 + rng.usize(5);
+        let spec = random_fault_spec(rng, n_stages);
+        let seed = rng.next_u64();
+        let a = spec.compile(n_stages, seed);
+        let b = spec.compile(n_stages, seed);
+        assert_eq!(a.entries.len(), b.entries.len(), "entry count diverged");
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.time.to_bits(), y.time.to_bits(), "entry time bits diverged");
+            assert_eq!(x.action, y.action, "entry action diverged");
+        }
+        assert_eq!(a.max_retries, b.max_retries);
+        assert_eq!(a.shed_after.map(f64::to_bits), b.shed_after.map(f64::to_bits));
+        for w in a.entries.windows(2) {
+            assert!(w[0].time <= w[1].time, "plan not time-sorted");
+        }
+    });
+}
+
+/// Degraded-mode conservation on random pipelines under random chaos:
+/// every arrival either completes (exactly once — a retried batch must
+/// never double-count its queries) or is counted shed; retries imply
+/// crashes; and the whole faulted run is bit-deterministic.
+#[test]
+fn faulted_runs_conserve_queries_and_are_deterministic() {
+    prop::check("faulted conservation", 25, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let fault_spec = random_fault_spec(rng, spec.stages.len());
+        let faults = fault_spec.compile(spec.stages.len(), rng.next_u64());
+        let lambda = 20.0 + rng.f64() * 60.0;
+        let trace = gamma_trace(lambda, 0.5 + rng.f64() * 2.0, 8.0, rng.next_u64());
+        let params = SimParams::default();
+        let a =
+            simulator::simulate_with_faults(&spec, &profiles, &config, &trace, &params, &faults);
+        assert_eq!(
+            a.latencies.len() as u64 + a.shed,
+            trace.len() as u64,
+            "query neither completed nor shed (crashes={} retries={})",
+            a.crashes,
+            a.retries
+        );
+        if a.retries > 0 {
+            assert!(a.crashes > 0, "retries without any crash");
+        }
+        let b =
+            simulator::simulate_with_faults(&spec, &profiles, &config, &trace, &params, &faults);
+        assert_eq!(a.latencies.len(), b.latencies.len());
+        for (x, y) in a.latencies.iter().zip(&b.latencies) {
+            assert_eq!(x.to_bits(), y.to_bits(), "faulted latencies diverged");
+        }
+        assert_eq!((a.crashes, a.retries, a.shed), (b.crashes, b.retries, b.shed));
+    });
+}
+
+/// Shed queries count against the miss ceiling, never the hit tally: a
+/// root-stage outage spanning the whole trace with an aggressive shed
+/// policy sheds every query, and the budgeted feasibility check must
+/// call that infeasible — an implementation that credited sheds as hits
+/// (or simply ignored them) would prove feasibility of a run that
+/// completed nothing.
+#[test]
+fn all_shed_runs_are_never_proved_feasible() {
+    prop::check("shed is never a hit", 15, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(20.0 + rng.f64() * 40.0, 1.0, 6.0, rng.next_u64());
+        let fault_spec = FaultSpec {
+            nodes: vec![FaultNode::Outage { stage: 0, start: 0.0, end: 16.0 }],
+            max_retries: 1,
+            shed_after: Some(0.001),
+        };
+        let faults = fault_spec.compile(spec.stages.len(), rng.next_u64());
+        let params = SimParams::default();
+        let full =
+            simulator::simulate_with_faults(&spec, &profiles, &config, &trace, &params, &faults);
+        assert_eq!(full.shed, trace.len() as u64, "outage + aggressive shed left survivors");
+        assert!(full.latencies.is_empty(), "shed queries produced completions");
+        let check = simulator::check_feasible_with_faults(
+            &spec, &profiles, &config, &trace, 0.3, &params, None, &faults,
+        );
+        assert!(!check.feasible, "an all-shed run was proved feasible");
+        assert!(!check.accepted, "fast-accept fired on an all-shed run");
     });
 }
 
