@@ -325,21 +325,21 @@ pub fn run_check(current_path: Option<&Path>, baseline_path: &Path, quick: bool)
     let baseline = match load_doc(baseline_path) {
         Ok(b) => b,
         Err(e) => {
-            eprintln!("{e} (baseline missing? create it with `inferline bench update`)");
+            crate::log_error!("{e} (baseline missing? create it with `inferline bench update`)");
             return false;
         }
     };
     let current = match current_doc(current_path, baseline_path, quick) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
     let outcome = match check(&current, &baseline) {
         Ok(o) => o,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
@@ -355,9 +355,9 @@ pub fn run_check(current_path: Option<&Path>, baseline_path: &Path, quick: bool)
         true
     } else {
         for v in &outcome.violations {
-            eprintln!("  BENCH REGRESSION [{}] {}", v.metric, v.what);
+            crate::log_error!("  BENCH REGRESSION [{}] {}", v.metric, v.what);
         }
-        eprintln!(
+        crate::log_error!(
             "  bench check FAILED: {} violation(s) against {}",
             outcome.violations.len(),
             baseline_path.display()
@@ -373,7 +373,7 @@ pub fn run_update(current_path: Option<&Path>, baseline_path: &Path, quick: bool
         match load_doc(baseline_path) {
             Ok(b) => Some(b),
             Err(e) => {
-                eprintln!("{e}");
+                crate::log_error!("{e}");
                 return false;
             }
         }
@@ -383,14 +383,14 @@ pub fn run_update(current_path: Option<&Path>, baseline_path: &Path, quick: bool
     let current = match current_doc(current_path, baseline_path, quick) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
     let doc = match update(&current, old.as_ref()) {
         Ok(d) => d,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
@@ -400,7 +400,7 @@ pub fn run_update(current_path: Option<&Path>, baseline_path: &Path, quick: bool
             true
         }
         Err(e) => {
-            eprintln!("{}: {e}", baseline_path.display());
+            crate::log_error!("{}: {e}", baseline_path.display());
             false
         }
     }

@@ -618,21 +618,21 @@ pub fn run_check(report_path: &Path, budgets_path: &Path) -> bool {
     let report = match load_report(report_path) {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
     let budgets = match BudgetFile::load(budgets_path) {
         Ok(b) => b,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
     let outcome = match check(&report, &budgets) {
         Ok(o) => o,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
@@ -649,9 +649,9 @@ pub fn run_check(report_path: &Path, budgets_path: &Path) -> bool {
         true
     } else {
         for v in &outcome.violations {
-            eprintln!("  BUDGET VIOLATION [{}] {}", v.scenario, v.what);
+            crate::log_error!("  BUDGET VIOLATION [{}] {}", v.scenario, v.what);
         }
-        eprintln!(
+        crate::log_error!(
             "  budget check FAILED: {} violation(s) against {}-mode budgets ({})",
             outcome.violations.len(),
             outcome.mode,
@@ -667,7 +667,7 @@ pub fn run_update(report_path: &Path, budgets_path: &Path) -> bool {
     let report = match load_report(report_path) {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
@@ -675,7 +675,7 @@ pub fn run_update(report_path: &Path, budgets_path: &Path) -> bool {
         match BudgetFile::load(budgets_path) {
             Ok(b) => b,
             Err(e) => {
-                eprintln!("{e}");
+                crate::log_error!("{e}");
                 return false;
             }
         }
@@ -685,7 +685,7 @@ pub fn run_update(report_path: &Path, budgets_path: &Path) -> bool {
     let mode = match update(&report, &mut budgets) {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             return false;
         }
     };
@@ -703,7 +703,7 @@ pub fn run_update(report_path: &Path, budgets_path: &Path) -> bool {
             true
         }
         Err(e) => {
-            eprintln!("{e}");
+            crate::log_error!("{e}");
             false
         }
     }

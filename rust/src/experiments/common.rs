@@ -63,7 +63,7 @@ impl Ctx {
             text.push('\n');
         }
         if let Err(e) = std::fs::write(&path, text) {
-            eprintln!("warning: could not write {path:?}: {e}");
+            crate::log_warn!("warning: could not write {path:?}: {e}");
         }
     }
 }
@@ -131,7 +131,7 @@ pub fn warm_cache_from(path: &Path, cache: &Arc<EstimatorCache>) -> usize {
             n
         }
         Err(e) => {
-            eprintln!("  estimator cache: {e}; starting cold");
+            crate::log_warn!("  estimator cache: {e}; starting cold");
             0
         }
     }
@@ -142,7 +142,7 @@ pub fn warm_cache_from(path: &Path, cache: &Arc<EstimatorCache>) -> usize {
 pub fn persist_cache_to(path: &Path, cache: &Arc<EstimatorCache>) {
     match cache.save(path) {
         Ok(n) => println!("  estimator cache: saved {n} entries to {}", path.display()),
-        Err(e) => eprintln!("  estimator cache: {e}"),
+        Err(e) => crate::log_warn!("  estimator cache: {e}"),
     }
 }
 

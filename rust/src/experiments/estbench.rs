@@ -8,7 +8,10 @@
 //! the persistent-cache warm-start: a second identical `plan()` that
 //! loads the first run's cache file from disk, and (5) the event core in
 //! isolation: the old-style heap churn driver vs the slab queue with
-//! coalesced delivery on an identical synthetic workload. Everything is
+//! coalesced delivery on an identical synthetic workload. Two paired
+//! sections price the engine's optional runtimes against the raw number:
+//! a whole-run crash storm (the fault runtime) and a recording telemetry
+//! probe (per-hop spans + time-series). Everything is
 //! written as JSON (by default `BENCH_estimator.json`) so successive PRs
 //! leave a comparable perf trail; the checked-in copy of that file is the
 //! baseline `inferline bench check` compares against (see
@@ -110,6 +113,35 @@ pub fn collect(quick: bool, cache_file: &Path) -> Json {
         storm_qps / 1e6,
         r.mean_s / rf.mean_s,
         storm_result.crashes
+    );
+
+    // --- Telemetry probe: probe-off vs recording-probe throughput. ---------
+    // Same trace and configuration once more. The probe-off number is the
+    // raw section above — a probe-less engine takes zero probe branches
+    // by construction (bit-identity is asserted in
+    // tests/probe_conformance.rs) — so this section prices the *recording*
+    // path: per-hop span tracking, reservoir sampling and cadenced stage
+    // time-series on the engine's hottest loop.
+    let rp = bench("estimator: long trace with recording probe", 1, samples, || {
+        let mut probe = crate::simulator::probe::RecordingProbe::new(0.3);
+        black_box(
+            simulator::simulate_probed(
+                &spec, &profiles, &warm_plan.config, &long_trace, &params, None, &mut probe,
+            )
+            .latencies
+            .len(),
+        );
+    });
+    let probe_qps = long_trace.len() as f64 / rp.mean_s;
+    let mut po = Json::obj();
+    po.set("off_queries_per_sec", sim_qps);
+    po.set("recording_queries_per_sec", probe_qps);
+    po.set("overhead_ratio", r.mean_s / rp.mean_s);
+    doc.set("probe_overhead", po);
+    println!(
+        "  -> recording-probe throughput {:.2} M queries/sec ({:.2}x of probe-off)",
+        probe_qps / 1e6,
+        r.mean_s / rp.mean_s
     );
 
     // --- Feasibility fast-accept on a feasible-heavy workload. -------------

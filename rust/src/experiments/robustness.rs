@@ -9,7 +9,8 @@
 //! workload was), then serves a scenario trace from
 //! [`crate::workload::scenarios`] — flash crowds, MMPP regime switching,
 //! diurnal cycles, heavy-tailed renewals, CV shifts — with the Tuner in
-//! the control loop ([`simulate_controlled`]). Chaos families additionally
+//! the control loop ([`simulate_controlled_probed`]). Chaos families
+//! additionally
 //! carry a fault spec ([`crate::simulator::faults`]): replica crash
 //! storms, stage brownouts and correlated outages injected into the same
 //! closed loop (and into the baselines — same failure schedule, fair
@@ -38,10 +39,17 @@
 //! * every cell reports SLO miss rate, measured P99, the cost trajectory
 //!   (mean $/hr, total $, downsampled replica timeline) and the Tuner's
 //!   action counts ([`CountingController`]);
+//! * every cell runs under a [`RecordingProbe`] and reports an SLO-miss
+//!   **attribution** blame table ([`MissAttribution`]): the critical-path
+//!   latency of every missed query split into per-stage queueing vs
+//!   service time plus the RPC residual, so a regression in the matrix
+//!   points at the stage (and the regime — queueing vs service) that
+//!   caused it;
 //! * the report is written as machine-readable JSON (`robustness.json`,
-//!   format tag [`REPORT_FORMAT`]) plus a flat per-system CSV
-//!   (`robustness_baselines.csv`); `inferline budget check`
-//!   ([`super::budgets`]) gates CI on it.
+//!   format tag [`REPORT_FORMAT`]) plus flat CSVs
+//!   (`robustness_baselines.csv` per-system,
+//!   `robustness_attribution.csv` per-stage blame); `inferline budget
+//!   check` ([`super::budgets`]) gates CI on it.
 //!
 //! Determinism: traces derive from the base seed via
 //! [`scenarios::child_seed`], plans are bit-identical regardless of
@@ -60,10 +68,9 @@ use crate::baselines::coarse::CoarseTarget;
 use crate::config::{pipelines, PipelineSpec};
 use crate::planner::{EstimatorCache, Planner};
 use crate::profiler::analytic::paper_profiles;
-use crate::simulator::control::{
-    simulate_controlled, simulate_controlled_with_faults, CountingController,
-};
+use crate::simulator::control::{simulate_controlled_probed, CountingController};
 use crate::simulator::faults::FaultPlan;
+use crate::simulator::probe::{MissAttribution, RecordingProbe};
 use crate::simulator::{self, SimParams};
 use crate::tuner::{Tuner, TunerInputs};
 use crate::util::json::Json;
@@ -80,7 +87,7 @@ pub const DEFAULT_SLO: f64 = 0.35;
 
 /// Format tag stamped into `robustness.json`; the budget checker
 /// ([`super::budgets`]) refuses reports it does not recognize.
-pub const REPORT_FORMAT: &str = "inferline-robustness-v3";
+pub const REPORT_FORMAT: &str = "inferline-robustness-v4";
 
 /// Nominal planning rate: every scenario family stresses deviations from
 /// this assumed workload.
@@ -230,6 +237,10 @@ pub struct CellMetrics {
     /// Queries dropped by the deadline-shed policy (counted separately
     /// from SLO misses — a shed query completes no latency sample).
     pub shed: u64,
+    /// Per-stage SLO-miss blame table from the telemetry probe: where
+    /// the missed queries' latency went (critical-path queueing vs
+    /// service per stage, RPC as the remainder). Deterministic per seed.
+    pub attribution: MissAttribution,
     /// Downsampled (time, total provisioned replicas) cost trajectory.
     pub replica_timeline: Vec<(f64, usize)>,
     /// The baseline systems serving the same cell (same sample, same
@@ -345,18 +356,22 @@ fn run_cell(
     let mut tuner = Tuner::new(inputs);
     let mut counting = CountingController::new(&mut tuner);
     let params = SimParams::default();
-    let result = match fault_plan {
-        Some(faults) => simulate_controlled_with_faults(
-            spec,
-            profiles,
-            &plan.config,
-            live,
-            &params,
-            &mut counting,
-            faults,
-        ),
-        None => simulate_controlled(spec, profiles, &plan.config, live, &params, &mut counting),
-    };
+    // The recording probe observes every cell (fixed internal seed, so
+    // the attribution table is as bit-reproducible as the run itself);
+    // probes are read-only, so the metrics are identical to a probe-less
+    // run's.
+    let mut probe = RecordingProbe::new(slo);
+    let result = simulate_controlled_probed(
+        spec,
+        profiles,
+        &plan.config,
+        live,
+        &params,
+        &mut counting,
+        fault_plan,
+        &mut probe,
+    );
+    let attribution = probe.finish().attribution;
     let hours = (result.horizon / 3600.0).max(1e-12);
     let il_miss = result.miss_rate(slo);
     let il_cost_per_hour = result.cost_dollars / hours;
@@ -398,6 +413,7 @@ fn run_cell(
         crashes: result.crashes,
         retries: result.retries,
         shed: result.shed,
+        attribution,
         replica_timeline: downsample(&result.replica_timeline, 24),
         baselines,
     })
@@ -460,6 +476,7 @@ pub fn report_json(seed: u64, slo: f64, quick: bool, cells: &[Cell]) -> Json {
                         .set("retries", m.retries as usize)
                         .set("shed", m.shed as usize)
                         .set("shed_rate", Json::num_or_null(m.shed_rate()))
+                        .set("attribution", m.attribution.to_json())
                         .set(
                             "replica_timeline",
                             Json::Arr(
@@ -536,6 +553,18 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
                     m.final_replicas,
                     m.max_replicas,
                 );
+                if let Some(stage) = m.attribution.blame_stage() {
+                    println!(
+                        "  {:<22} {:<18} {} missed; blame stage {stage}: \
+                         queueing {:>7.1}s service {:>7.1}s ({:.0}% of missed latency)",
+                        "",
+                        "(attribution)",
+                        m.attribution.missed,
+                        m.attribution.queueing[stage],
+                        m.attribution.service[stage],
+                        m.attribution.blame_share(stage) * 100.0,
+                    );
+                }
                 if m.crashes > 0 || m.shed > 0 {
                     println!(
                         "  {:<22} {:<18} crashes {:>3}  retries {:>4}  shed {:>4} ({:.2}%)",
@@ -582,6 +611,13 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
         &baseline_rows(&cells),
     );
     println!("  wrote {}", ctx.results_dir.join("robustness_baselines.csv").display());
+    ctx.write_csv(
+        "robustness_attribution.csv",
+        "scenario,pipeline,stage,missed,queueing_s,service_s,blame_share,\
+         rpc_s_total,missed_latency_s_total",
+        &attribution_rows(&cells),
+    );
+    println!("  wrote {}", ctx.results_dir.join("robustness_attribution.csv").display());
     let doc = report_json(seed, DEFAULT_SLO, ctx.quick, &cells);
     let path = ctx.results_dir.join("robustness.json");
     match std::fs::write(&path, doc.to_string()) {
@@ -590,7 +626,7 @@ pub fn run(ctx: &Ctx, seed: u64) -> bool {
             true
         }
         Err(e) => {
-            eprintln!("could not write {}: {e}", path.display());
+            crate::log_warn!("could not write {}: {e}", path.display());
             false
         }
     }
@@ -626,6 +662,33 @@ pub fn baseline_rows(cells: &[Cell]) -> Vec<String> {
                 csv_num(b.mean_cost_per_hour),
                 csv_num(b.cost_ratio),
                 csv_num(b.miss_ratio),
+            ));
+        }
+    }
+    rows
+}
+
+/// Flatten the per-cell miss-attribution blame tables into CSV rows (one
+/// row per completed cell and stage; the query-level RPC remainder and
+/// the total missed latency repeat on every stage row of a cell).
+/// Undefined shares (cells without misses) are empty fields, not NaN.
+pub fn attribution_rows(cells: &[Cell]) -> Vec<String> {
+    let mut rows = Vec::new();
+    for c in cells {
+        let Ok(m) = &c.outcome else { continue };
+        let a = &m.attribution;
+        for stage in 0..a.queueing.len() {
+            rows.push(format!(
+                "{},{},{},{},{},{},{},{},{}",
+                c.scenario,
+                c.pipeline,
+                stage,
+                a.missed,
+                csv_num(a.queueing[stage]),
+                csv_num(a.service[stage]),
+                csv_num(a.blame_share(stage)),
+                csv_num(a.rpc),
+                csv_num(a.total_latency),
             ));
         }
     }
@@ -730,6 +793,24 @@ mod tests {
         assert_eq!(rows.len(), 6);
         assert!(rows.iter().all(|r| !r.contains("NaN")), "{rows:?}");
         assert!(rows[0].contains(",InferLine,"));
+        // Every cell carries a per-stage miss-attribution blame table.
+        for (cell, c) in cells.iter().zip(&a) {
+            let attr = cell.req("attribution");
+            assert!(attr.req("missed").as_usize().is_some(), "{}", c.scenario);
+            let n_stages = c.outcome.as_ref().unwrap().attribution.queueing.len();
+            assert_eq!(
+                attr.req("stages").as_arr().unwrap().len(),
+                n_stages,
+                "{}: one blame row per stage",
+                c.scenario
+            );
+        }
+        // The attribution CSV has one row per (cell, stage), no NaN tokens.
+        let attr_rows = attribution_rows(&a);
+        let stages: usize =
+            a.iter().map(|c| c.outcome.as_ref().unwrap().attribution.queueing.len()).sum();
+        assert_eq!(attr_rows.len(), stages);
+        assert!(attr_rows.iter().all(|r| !r.contains("NaN")), "{attr_rows:?}");
     }
 
     #[test]
@@ -779,6 +860,11 @@ mod tests {
             );
         }
         assert!(cell.get("shed_rate").is_some(), "report cell missing shed_rate");
+        // Attribution rides along even in chaos cells: completed + shed
+        // counters are real, and the blame table covers every stage.
+        let attr = cell.req("attribution");
+        assert!(attr.req("completed").as_usize().is_some_and(|v| v > 0));
+        assert!(!attr.req("stages").as_arr().unwrap().is_empty());
         // Same seed, same report — fault injection included.
         let again = run_grid(&families, &specs, 3, DEFAULT_SLO, true);
         assert_eq!(doc, report_json(3, DEFAULT_SLO, true, &again).to_string());

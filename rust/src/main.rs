@@ -21,6 +21,7 @@ use inferline::profiler::analytic::paper_profiles;
 use inferline::profiler::ProfileSet;
 use inferline::runtime::Manifest;
 use inferline::serving::{profile as phys_profile, Backend, ServingEngine};
+use inferline::simulator::probe::{ProbeReport, RecordingProbe};
 use inferline::simulator::{self, SimParams};
 use inferline::util::stats;
 use inferline::workload::{autoscale, gamma_trace, scenarios, Trace};
@@ -99,9 +100,14 @@ COMMANDS:
   profile     --artifacts <dir> [--out <file.json>] [--max-batch <b>]
   simulate    --pipeline <name> --slo <s> --lambda <qps> [--cv <v>]
               [--faults <spec.json>] [--seed <n>]
+              [--trace-out <file.json>] [--series-out <file.csv>]
               (--faults injects a chaos plan — crashes, slowdowns,
               outages; see simulator::faults for the JSON schema — and
-              reports crash/retry/shed counts alongside the latencies)
+              reports crash/retry/shed counts alongside the latencies;
+              --trace-out observes the run through the telemetry probe
+              and writes a Perfetto-loadable Chrome trace-event file,
+              --series-out the per-stage time-series CSV, and either
+              flag prints the SLO-miss attribution blame table)
   serve       --pipeline <name> --lambda <qps> --duration <s>
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
   experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
@@ -130,10 +136,14 @@ COMMANDS:
   pipelines   list the built-in paper pipelines
 
 Pipelines: image-processing, video-monitoring, social-media, tf-cascade
+
+Global flags: --verbose raises diagnostics to debug level; the
+INFERLINE_LOG env var (error|warn|info|debug) sets it explicitly.
 ";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    inferline::util::log::init(argv.iter().any(|a| a == "--verbose"));
     let Some(cmd) = argv.first() else {
         eprint!("{USAGE}");
         return ExitCode::FAILURE;
@@ -167,7 +177,7 @@ fn main() -> ExitCode {
             true
         }
         other => {
-            eprintln!("unknown command {other:?}\n{USAGE}");
+            inferline::log_error!("unknown command {other:?}\n{USAGE}");
             false
         }
     };
@@ -183,7 +193,7 @@ fn load_profiles(args: &Args) -> ProfileSet {
         Some(path) => match ProfileSet::load(std::path::Path::new(path)) {
             Ok(p) => p,
             Err(e) => {
-                eprintln!("could not load profiles {path}: {e}; using paper profiles");
+                inferline::log_warn!("could not load profiles {path}: {e}; using paper profiles");
                 paper_profiles()
             }
         },
@@ -195,7 +205,7 @@ fn get_pipeline(args: &Args) -> Option<inferline::config::PipelineSpec> {
     let name = args.get("pipeline").unwrap_or("image-processing");
     let p = pipelines::by_name(name);
     if p.is_none() {
-        eprintln!("unknown pipeline {name:?}; see `inferline pipelines`");
+        inferline::log_error!("unknown pipeline {name:?}; see `inferline pipelines`");
     }
     p
 }
@@ -247,7 +257,7 @@ fn cmd_plan(args: &Args) -> bool {
             true
         }
         Err(e) => {
-            eprintln!("  {e}");
+            inferline::log_error!("  {e}");
             false
         }
     };
@@ -264,7 +274,7 @@ fn cmd_profile(args: &Args) -> bool {
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("{e:#}");
+            inferline::log_error!("{e:#}");
             return false;
         }
     };
@@ -287,7 +297,7 @@ fn cmd_profile(args: &Args) -> bool {
             }
             if let Some(out) = args.get("out") {
                 if let Err(e) = set.save(std::path::Path::new(out)) {
-                    eprintln!("save failed: {e}");
+                    inferline::log_error!("save failed: {e}");
                     return false;
                 }
                 println!("wrote {out}");
@@ -295,7 +305,7 @@ fn cmd_profile(args: &Args) -> bool {
             true
         }
         Err(e) => {
-            eprintln!("{e:#}");
+            inferline::log_error!("{e:#}");
             false
         }
     }
@@ -312,7 +322,7 @@ fn cmd_simulate(args: &Args) -> bool {
     let plan = match Planner::new(&spec, &profiles).plan(&sample, slo) {
         Ok(p) => p,
         Err(e) => {
-            eprintln!("{e}");
+            inferline::log_error!("{e}");
             return false;
         }
     };
@@ -327,17 +337,36 @@ fn cmd_simulate(args: &Args) -> bool {
                     Some(fs.compile(spec.n_stages(), seed))
                 }
                 Err(e) => {
-                    eprintln!("{e}");
+                    inferline::log_error!("{e}");
                     return false;
                 }
             }
         }
     };
-    let result = match &fault_plan {
-        Some(faults) => simulator::simulate_with_faults(
-            &spec, &profiles, &plan.config, &live, &SimParams::default(), faults,
+    // Telemetry exports ride on the recording probe; without either flag
+    // the engine runs probe-less (bit-identical results either way).
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let series_out = args.get("series-out").map(PathBuf::from);
+    let mut probe =
+        (trace_out.is_some() || series_out.is_some()).then(|| RecordingProbe::new(slo));
+    let result = match &mut probe {
+        Some(p) => simulator::simulate_probed(
+            &spec,
+            &profiles,
+            &plan.config,
+            &live,
+            &SimParams::default(),
+            fault_plan.as_ref(),
+            p,
         ),
-        None => simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default()),
+        None => match &fault_plan {
+            Some(faults) => simulator::simulate_with_faults(
+                &spec, &profiles, &plan.config, &live, &SimParams::default(), faults,
+            ),
+            None => {
+                simulator::simulate(&spec, &profiles, &plan.config, &live, &SimParams::default())
+            }
+        },
     };
     println!("config: {}", plan.config.summary(&spec));
     println!(
@@ -360,6 +389,47 @@ fn cmd_simulate(args: &Args) -> bool {
             spec.stages[i].name, st.batches, st.mean_batch, st.max_queue
         );
     }
+    if let Some(p) = probe {
+        let report = p.finish();
+        let a = &report.attribution;
+        if let Some(stage) = a.blame_stage() {
+            println!(
+                "attribution: {} of {} completed queries missed the {slo}s SLO; \
+                 blame stage {stage} ({}) with {:.0}% of missed latency",
+                a.missed,
+                a.completed,
+                spec.stages[stage].name,
+                a.blame_share(stage) * 100.0
+            );
+        } else {
+            println!("attribution: no SLO misses among {} completed queries", a.completed);
+        }
+        if let Some(path) = &trace_out {
+            let doc = report.chrome_trace();
+            if let Err(e) = std::fs::write(path, format!("{doc}\n")) {
+                inferline::log_error!("could not write {}: {e}", path.display());
+                return false;
+            }
+            println!(
+                "wrote {} ({} sampled query span records)",
+                path.display(),
+                report.spans.len()
+            );
+        }
+        if let Some(path) = &series_out {
+            let mut text = String::from(ProbeReport::SERIES_HEADER);
+            for row in report.series_csv() {
+                text.push('\n');
+                text.push_str(&row);
+            }
+            text.push('\n');
+            if let Err(e) = std::fs::write(path, text) {
+                inferline::log_error!("could not write {}: {e}", path.display());
+                return false;
+            }
+            println!("wrote {} ({} time-series points)", path.display(), report.series.len());
+        }
+    }
     true
 }
 
@@ -374,7 +444,7 @@ fn cmd_serve(args: &Args) -> bool {
     let plan = match Planner::new(&spec, &profiles).plan(&sample, slo) {
         Ok(p) => p,
         Err(e) => {
-            eprintln!("{e}");
+            inferline::log_error!("{e}");
             return false;
         }
     };
@@ -386,7 +456,7 @@ fn cmd_serve(args: &Args) -> bool {
             let manifest = match Manifest::load(&dir) {
                 Ok(m) => std::sync::Arc::new(m),
                 Err(e) => {
-                    eprintln!("{e:#}");
+                    inferline::log_error!("{e:#}");
                     return false;
                 }
             };
@@ -406,7 +476,7 @@ fn cmd_serve(args: &Args) -> bool {
     let engine = match ServingEngine::start(&spec, &plan.config, backends) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("{e:#}");
+            inferline::log_error!("{e:#}");
             return false;
         }
     };
@@ -426,7 +496,7 @@ fn cmd_serve(args: &Args) -> bool {
 
 fn cmd_experiment(args: &Args) -> bool {
     let Some(name) = args.positional.first() else {
-        eprintln!("experiment id required: {:?}", inferline::experiments::ALL_FIGURES);
+        inferline::log_error!("experiment id required: {:?}", inferline::experiments::ALL_FIGURES);
         return false;
     };
     let quick = args.bool("quick");
@@ -441,7 +511,7 @@ fn cmd_experiment(args: &Args) -> bool {
             Some(v) => match v.parse() {
                 Ok(s) => s,
                 Err(_) => {
-                    eprintln!("--seed {v:?} is not an unsigned integer");
+                    inferline::log_error!("--seed {v:?} is not an unsigned integer");
                     return false;
                 }
             },
@@ -450,7 +520,9 @@ fn cmd_experiment(args: &Args) -> bool {
         // integers below 2^53 round-trip exactly, and the budget gate
         // pins budgets to an exact seed.
         if seed >= (1u64 << 53) {
-            eprintln!("--seed {seed} exceeds 2^53 and cannot round-trip through the report");
+            inferline::log_error!(
+                "--seed {seed} exceeds 2^53 and cannot round-trip through the report"
+            );
             return false;
         }
         let ctx = inferline::experiments::Ctx::new(quick).with_cache(args.cache_path(true));
@@ -465,7 +537,10 @@ fn cmd_experiment(args: &Args) -> bool {
         return true;
     }
     if !inferline::experiments::run_by_name(name, quick) {
-        eprintln!("unknown experiment {name:?}: {:?}", inferline::experiments::ALL_FIGURES);
+        inferline::log_error!(
+            "unknown experiment {name:?}: {:?}",
+            inferline::experiments::ALL_FIGURES
+        );
         return false;
     }
     true
@@ -482,7 +557,7 @@ fn cmd_budget(args: &Args) -> bool {
         Some("check") | None => inferline::experiments::budgets::run_check(&report, &budgets),
         Some("update") => inferline::experiments::budgets::run_update(&report, &budgets),
         Some(other) => {
-            eprintln!("unknown budget action {other:?} (available: check, update)");
+            inferline::log_error!("unknown budget action {other:?} (available: check, update)");
             false
         }
     }
@@ -496,7 +571,7 @@ fn cmd_bench(args: &Args) -> bool {
             match inferline::experiments::estbench::run(&out, args.bool("quick")) {
                 Ok(()) => true,
                 Err(e) => {
-                    eprintln!("bench failed: {e}");
+                    inferline::log_error!("bench failed: {e}");
                     false
                 }
             }
@@ -516,7 +591,7 @@ fn cmd_bench(args: &Args) -> bool {
             run(current.as_deref(), &baseline, args.bool("quick"))
         }
         other => {
-            eprintln!("unknown bench {other:?} (available: estimator, check, update)");
+            inferline::log_error!("unknown bench {other:?} (available: estimator, check, update)");
             false
         }
     }
@@ -538,7 +613,7 @@ fn cmd_trace(args: &Args) -> bool {
         "big-spike" => autoscale::big_spike_trace(args.f64("seed", 42.0) as u64),
         "instant-spike" => autoscale::instant_spike_trace(args.f64("seed", 42.0) as u64),
         other => {
-            eprintln!("unknown trace kind {other:?}");
+            inferline::log_error!("unknown trace kind {other:?}");
             return false;
         }
     };
@@ -555,7 +630,7 @@ fn cmd_trace(args: &Args) -> bool {
             true
         }
         Err(e) => {
-            eprintln!("write failed: {e}");
+            inferline::log_error!("write failed: {e}");
             false
         }
     }
@@ -566,13 +641,15 @@ fn cmd_trace(args: &Args) -> bool {
 /// seed).
 fn cmd_trace_scenario(args: &Args, out: &std::path::Path) -> bool {
     let Some(spec_path) = args.positional.get(1) else {
-        eprintln!("usage: inferline trace scenario <spec.json> [--out <file>] [--seed <n>]");
+        inferline::log_error!(
+            "usage: inferline trace scenario <spec.json> [--out <file>] [--seed <n>]"
+        );
         return false;
     };
     let spec = match scenarios::ScenarioSpec::load(std::path::Path::new(spec_path)) {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("{e}");
+            inferline::log_error!("{e}");
             return false;
         }
     };
@@ -580,7 +657,7 @@ fn cmd_trace_scenario(args: &Args, out: &std::path::Path) -> bool {
     let trace = match spec.scenario.build(seed) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("scenario {:?} failed to build: {e}", spec.name);
+            inferline::log_error!("scenario {:?} failed to build: {e}", spec.name);
             return false;
         }
     };
@@ -598,7 +675,7 @@ fn cmd_trace_scenario(args: &Args, out: &std::path::Path) -> bool {
             true
         }
         Err(e) => {
-            eprintln!("write failed: {e}");
+            inferline::log_error!("write failed: {e}");
             false
         }
     }

@@ -242,7 +242,7 @@ mod tests {
     #[test]
     fn manifest_loads_and_covers_zoo() {
         if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts`");
+            crate::log_warn!("skipping: run `make artifacts`");
             return;
         }
         let m = Manifest::load(&artifacts_dir()).unwrap();

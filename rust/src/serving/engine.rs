@@ -306,7 +306,7 @@ fn worker_loop(
                     Some(e)
                 }
                 Err(err) => {
-                    eprintln!("worker {model}: executor init failed: {err:#}");
+                    crate::log_error!("worker {model}: executor init failed: {err:#}");
                     shared.stages[stage].workers.fetch_sub(1, Ordering::AcqRel);
                     shared.stages[stage].ready.fetch_add(1, Ordering::AcqRel);
                     return;
@@ -337,7 +337,7 @@ fn worker_loop(
         match (&backend, &executor) {
             (Backend::Pjrt { .. }, Some(exec)) => {
                 if let Err(e) = exec.run(queries.len()) {
-                    eprintln!("worker {model}: execute failed: {e:#}");
+                    crate::log_error!("worker {model}: execute failed: {e:#}");
                 }
             }
             (Backend::Calibrated { profile }, _) => {

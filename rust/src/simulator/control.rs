@@ -17,6 +17,7 @@ use crate::workload::Trace;
 
 use super::engine::{Engine, SimParams, SimResult};
 use super::faults::FaultPlan;
+use super::probe::Probe;
 
 /// Scaling actions a controller may issue.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -84,6 +85,28 @@ pub fn simulate_controlled_with_faults(
 ) -> SimResult {
     Engine::new(spec, profiles, initial, params)
         .with_faults(Some(faults))
+        .run(trace, initial, Some(controller))
+}
+
+/// [`simulate_controlled`] — optionally fault-injected — with a
+/// [`Probe`] observing the run (see [`super::probe`]): controller
+/// actions surface through `Probe::on_action`, fault injections through
+/// `Probe::on_fault`. Probes are read-only, so the result is
+/// bit-identical to the probe-less run's.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_controlled_probed(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    initial: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+    controller: &mut dyn Controller,
+    faults: Option<&FaultPlan>,
+    probe: &mut dyn Probe,
+) -> SimResult {
+    Engine::new(spec, profiles, initial, params)
+        .with_faults(faults)
+        .with_probe(Some(probe))
         .run(trace, initial, Some(controller))
 }
 

@@ -17,6 +17,7 @@ use crate::workload::Trace;
 use super::control::{ControlAction, ControlState, Controller};
 use super::event_core::{EventKind, EventQueue, SliceArena, UpHandle};
 use super::faults::{FaultAction, FaultEntry, FaultPlan};
+use super::probe::{Probe, StageSample};
 use super::routing::RoutingPlan;
 
 /// Simulation parameters.
@@ -299,6 +300,12 @@ pub(super) struct Engine<'a> {
     /// Fault-injection runtime (`None` ⇔ empty plan ⇔ the zero-overhead
     /// fault-free path).
     faults: Option<FaultRuntime>,
+    /// Telemetry observer (`None` ⇔ the zero-overhead probe-less path;
+    /// same gating discipline as `faults`, see [`super::probe`]).
+    probe: Option<&'a mut dyn Probe>,
+    /// Monotone batch id handed to the probe (probe runs only; the
+    /// counter is touched exclusively inside probe-gated branches).
+    batch_seq: u64,
     /// Queries not yet completed or shed (run-loop termination).
     outstanding: usize,
     result: SimResult,
@@ -356,6 +363,8 @@ impl<'a> Engine<'a> {
             aborted: false,
             accepted: false,
             faults: None,
+            probe: None,
+            batch_seq: 0,
             outstanding: 0,
             result: SimResult {
                 latencies: Vec::new(),
@@ -391,6 +400,15 @@ impl<'a> Engine<'a> {
                 });
             }
         }
+        self
+    }
+
+    /// Attach a telemetry probe (a read-only observer; see
+    /// [`super::probe`] for the contract). `None` leaves every probe
+    /// branch cold, keeping the run bit-identical to an engine without
+    /// the plumbing — the same gating discipline as [`Self::with_faults`].
+    pub(super) fn with_probe(mut self, probe: Option<&'a mut dyn Probe>) -> Self {
+        self.probe = probe;
         self
     }
 
@@ -462,7 +480,7 @@ impl<'a> Engine<'a> {
     /// books them as guaranteed misses (they will never produce a
     /// latency at or under the SLO) unless the deadline sweep already
     /// counted them while they aged in a queue.
-    fn shed_query(&mut self, qid: u32) {
+    fn shed_query(&mut self, qid: u32, now: f64) {
         let q = &mut self.queries[qid as usize];
         if q.shed || q.remaining == 0 {
             return;
@@ -470,6 +488,9 @@ impl<'a> Engine<'a> {
         q.shed = true;
         self.result.shed += 1;
         self.outstanding -= 1;
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.on_shed(qid, now);
+        }
         if let Some(b) = &mut self.budget {
             if (qid as usize) >= b.deadline_idx {
                 b.misses += 1;
@@ -497,7 +518,7 @@ impl<'a> Engine<'a> {
                 self.stages[stage].queue.pop_front();
             } else if shed_after.is_some_and(|bound| now - q.arrival > bound) {
                 self.stages[stage].queue.pop_front();
-                self.shed_query(qid);
+                self.shed_query(qid, now);
             } else {
                 break;
             }
@@ -543,6 +564,14 @@ impl<'a> Engine<'a> {
             st.batch_size_sum += n;
             st.stats.busy_time += latency;
             let done = now + latency;
+            if self.probe.is_some() {
+                self.batch_seq += 1;
+                let batch_id = self.batch_seq;
+                let qids = self.arena.get(slice);
+                if let Some(p) = self.probe.as_deref_mut() {
+                    p.on_dispatch(stage, batch_id, qids, now, done);
+                }
+            }
             if self.faults.is_none() {
                 if let Some(b) = &mut self.budget {
                     // Fast-accept in-flight sweep: a query whose *final*
@@ -578,7 +607,31 @@ impl<'a> Engine<'a> {
         let st = &mut self.stages[stage];
         st.queue.push_back(qid);
         st.stats.max_queue = st.stats.max_queue.max(st.queue.len());
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.on_enqueue(stage, qid, now);
+        }
         self.try_dispatch(stage, now);
+    }
+
+    /// Materialize a per-stage snapshot for the probe when it asks for
+    /// one. The `wants_sample` pre-check keeps the snapshot allocation
+    /// off the probe-less (and cadence-idle) path.
+    fn probe_sample(&mut self, now: f64) {
+        if !self.probe.as_ref().is_some_and(|p| p.wants_sample(now)) {
+            return;
+        }
+        let snap: Vec<StageSample> = self
+            .stages
+            .iter()
+            .map(|s| StageSample {
+                queue: s.queue.len(),
+                busy: s.online - s.idle,
+                online: s.online,
+            })
+            .collect();
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.on_sample(now, &snap);
+        }
     }
 
     /// One stage visit finished for `qid` at `now`. Routing to children
@@ -640,6 +693,9 @@ impl<'a> Engine<'a> {
         config_hw: &PipelineConfig,
         now: f64,
     ) {
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.on_action(action, now);
+        }
         match *action {
             ControlAction::SetReplicas { stage, replicas } => {
                 let target = replicas.max(1);
@@ -724,6 +780,18 @@ impl<'a> Engine<'a> {
     /// Apply the compiled fault entry `idx` (a `Fault` event popped).
     fn apply_fault(&mut self, idx: usize, config_hw: &PipelineConfig, now: f64) {
         let entry = self.faults.as_ref().expect("fault event without a plan").entries[idx];
+        if self.probe.is_some() {
+            let (kind, stage) = match entry.action {
+                FaultAction::Crash { stage } => ("crash", stage),
+                FaultAction::SlowdownStart { stage, .. } => ("slowdown-start", stage),
+                FaultAction::SlowdownEnd { stage } => ("slowdown-end", stage),
+                FaultAction::OutageStart { stage } => ("outage-start", stage),
+                FaultAction::OutageEnd { stage } => ("outage-end", stage),
+            };
+            if let Some(p) = self.probe.as_deref_mut() {
+                p.on_fault(kind, Some(stage as usize), now);
+            }
+        }
         match entry.action {
             FaultAction::Crash { stage } => self.apply_crash(stage as usize, config_hw, now),
             FaultAction::SlowdownStart { stage, factor } => {
@@ -795,12 +863,15 @@ impl<'a> Engine<'a> {
                     continue;
                 }
                 if self.queries[qid as usize].retries as u32 >= max_retries {
-                    self.shed_query(qid);
+                    self.shed_query(qid, now);
                 } else {
                     self.queries[qid as usize].retries =
                         self.queries[qid as usize].retries.saturating_add(1);
                     self.result.retries += 1;
                     self.stages[s].queue.push_front(qid);
+                    if let Some(p) = self.probe.as_deref_mut() {
+                        p.on_retry(s, qid, now);
+                    }
                 }
             }
             *self.arena.get_mut(slice) = qids;
@@ -846,6 +917,10 @@ impl<'a> Engine<'a> {
         );
         self.budget = budget.map(|b| BudgetState::new(b, trace.len()));
         self.seed_arrivals(trace, routing);
+        let n_stages = self.stages.len();
+        if let Some(p) = self.probe.as_deref_mut() {
+            p.on_start(n_stages, trace.len());
+        }
         // Schedule the compiled fault plan. An inactive runtime pushes
         // nothing, so the event stream — every record and every seq
         // number — is identical to the fault-free engine's.
@@ -887,6 +962,9 @@ impl<'a> Engine<'a> {
                 }
                 let qid = next_arrival as u32;
                 next_arrival += 1;
+                if let Some(p) = self.probe.as_deref_mut() {
+                    p.on_arrival(qid, now);
+                }
                 if let Some(c) = controller.as_deref_mut() {
                     c.on_arrival(now);
                 }
@@ -897,6 +975,7 @@ impl<'a> Engine<'a> {
                     self.enqueue(r, qid, now);
                 }
                 self.result.horizon = now;
+                self.probe_sample(now);
                 continue;
             }
             let ev = self.events.pop().unwrap();
@@ -960,6 +1039,15 @@ impl<'a> Engine<'a> {
                                 }
                             }
                             self.complete_query_visit(qid, now);
+                            if self.probe.is_some() && !self.queries[qid as usize].shed {
+                                let finished = self.queries[qid as usize].remaining == 0;
+                                if let Some(p) = self.probe.as_deref_mut() {
+                                    p.on_visit_done(s, qid, now);
+                                    if finished {
+                                        p.on_query_done(qid, now);
+                                    }
+                                }
+                            }
                             if self.queries[qid as usize].remaining == 0 {
                                 self.outstanding -= 1;
                             }
@@ -1059,6 +1147,7 @@ impl<'a> Engine<'a> {
                 }
             }
             self.result.horizon = now;
+            self.probe_sample(now);
             if self.outstanding == 0 && controller.is_none() {
                 break;
             }
@@ -1205,4 +1294,26 @@ pub fn simulate_budgeted_with_faults(
         .run_ext(trace, config, None, routing, Some(AbortBudget { slo }));
     result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
     (result, verdict)
+}
+
+/// [`simulate`] — optionally fault-injected — with a [`Probe`] observing
+/// the run (see [`super::probe`] for the trait contract and what the
+/// recording probe captures). Probes are read-only: the returned result
+/// is bit-identical to the probe-less run's, with or without faults
+/// (asserted by `tests/probe_conformance.rs`).
+pub fn simulate_probed(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    trace: &Trace,
+    params: &SimParams,
+    faults: Option<&FaultPlan>,
+    probe: &mut dyn Probe,
+) -> SimResult {
+    let (mut result, _) = Engine::new(spec, profiles, config, params)
+        .with_faults(faults)
+        .with_probe(Some(probe))
+        .run_ext(trace, config, None, None, None);
+    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
+    result
 }

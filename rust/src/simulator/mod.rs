@@ -86,15 +86,31 @@
 //!   selection (`util::stats::quantile_in_place`) instead of sorting the
 //!   whole latency vector.
 
+//! ## Telemetry probes
+//!
+//! Observability threads through the same event loop behind the
+//! [`probe::Probe`] trait — an optional read-only observer gated exactly
+//! like fault injection (`Option` checked per event, every probe branch
+//! cold when absent), so a probe-less run stays bit-identical to the
+//! engine without the plumbing, and an attached probe can never perturb
+//! simulated outcomes (`tests/probe_conformance.rs`). The recording
+//! implementation ([`probe::RecordingProbe`]) captures per-query per-hop
+//! spans (reservoir-sampled), per-stage time-series at a configurable
+//! cadence, and an SLO-miss attribution table splitting missed queries'
+//! latency into per-stage queueing vs service vs RPC — exported as a
+//! Chrome trace-event document (`inferline simulate --trace-out`) and
+//! CSV, and aggregated per cell by the robustness harness.
+
 pub mod control;
 mod engine;
 pub mod event_core;
 pub mod faults;
+pub mod probe;
 mod routing;
 
 pub use engine::{
-    simulate, simulate_budgeted, simulate_budgeted_with_faults, simulate_with_faults,
-    simulate_with_routing, BudgetVerdict, SimParams, SimResult, StageStats,
+    simulate, simulate_budgeted, simulate_budgeted_with_faults, simulate_probed,
+    simulate_with_faults, simulate_with_routing, BudgetVerdict, SimParams, SimResult, StageStats,
 };
 pub use routing::RoutingPlan;
 

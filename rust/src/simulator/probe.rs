@@ -1,0 +1,882 @@
+//! Zero-cost simulation telemetry: per-hop query spans, per-stage
+//! time-series and SLO-miss attribution, observed through the event core.
+//!
+//! ## Trait contract
+//!
+//! A [`Probe`] is a **read-only observer** of the engine's event stream.
+//! The engine owns an `Option<&mut dyn Probe>` (mirroring its
+//! `Option<FaultRuntime>` fault gating): every probe branch in the hot
+//! loop is gated on that option being `Some`, and a probe-less run takes
+//! no probe branch at all — it pushes the same event records with the
+//! same sequence numbers and produces a bit-identical
+//! [`SimResult`](super::SimResult) (asserted across the conformance
+//! suites in `tests/probe_conformance.rs`). Probes can never perturb
+//! simulated outcomes *by construction*: the hooks receive copies of
+//! event data (`qid`s, times, qid slices) and have no path back into
+//! engine state. All hook methods default to no-ops, so an implementor
+//! only pays for what it observes.
+//!
+//! Hooks fire in simulated-time order: `on_arrival` → `on_enqueue` (one
+//! per routed hop) → `on_dispatch` (batch formation, with the scheduled
+//! completion time) → `on_visit_done` → `on_query_done` when the last
+//! visit completes. Fault runs add `on_retry` / `on_shed` / `on_fault`;
+//! controlled runs add `on_action` for every controller decision the
+//! engine applies. Time-series sampling is pull-based: after each event
+//! the engine asks [`Probe::wants_sample`] and, only when it answers
+//! `true`, materializes a per-stage [`StageSample`] snapshot — so the
+//! snapshot cost is paid at the probe's cadence, not per event.
+//!
+//! ## The recording probe
+//!
+//! [`RecordingProbe`] captures three artifacts into a [`ProbeReport`]:
+//!
+//! 1. **Per-query per-hop spans** — (enqueue, dispatch, completion)
+//!    timestamps plus batch id/size per stage visit, for a
+//!    deterministically reservoir-sampled subset of queries (fixed
+//!    internal seed, so the same run always samples the same queries).
+//!    Counters (arrivals / completed / shed) cover *every* query:
+//!    `completed + shed == arrivals` holds for any finished run.
+//! 2. **Per-stage time-series** at a configurable cadence: queue depth,
+//!    busy replicas, online replicas, busy fraction and the
+//!    instantaneous arrival rate over the elapsed window.
+//! 3. **SLO-miss attribution** ([`MissAttribution`]): for every missed
+//!    query the critical path through its hop spans is reconstructed and
+//!    its latency split into per-stage queueing (enqueue→dispatch) and
+//!    service (dispatch→completion), with RPC as the telescoped
+//!    remainder — aggregated into a per-stage blame table.
+//!
+//! ## Trace-event export schema
+//!
+//! [`ProbeReport::chrome_trace`] renders the spans as a Chrome
+//! trace-event JSON document (loadable in Perfetto / `chrome://tracing`):
+//! an object with a `traceEvents` array sorted by timestamp, where every
+//! stage is one `tid` track under `pid` 1 (named via `"M"` metadata
+//! events). Each sampled query contributes a `"queue"` and a `"service"`
+//! duration event (`"ph": "X"`, microsecond `ts`/`dur`, `args` carrying
+//! `qid`, `batch` and `batch_size`); tuner actions and fault injections
+//! are instant events (`"ph": "i"`, global scope). The per-stage
+//! time-series export is a flat CSV ([`ProbeReport::series_csv`]).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::control::ControlAction;
+
+/// Per-stage state snapshot handed to [`Probe::on_sample`].
+#[derive(Debug, Clone, Copy)]
+pub struct StageSample {
+    /// Instantaneous queue depth.
+    pub queue: usize,
+    /// Replicas currently executing a batch.
+    pub busy: usize,
+    /// Online replicas (busy + idle).
+    pub online: usize,
+}
+
+/// Read-only observer of a simulation run. Every method defaults to a
+/// no-op; see the module docs for the contract and hook ordering.
+pub trait Probe {
+    /// The run is about to start: pipeline width and trace length.
+    fn on_start(&mut self, _n_stages: usize, _n_queries: usize) {}
+    /// Query `qid` arrived at the pipeline roots.
+    fn on_arrival(&mut self, _qid: u32, _t: f64) {}
+    /// Query `qid` entered the queue of `stage`.
+    fn on_enqueue(&mut self, _stage: usize, _qid: u32, _t: f64) {}
+    /// A replica of `stage` dispatched batch `batch_id` over `qids`,
+    /// scheduled to complete at `done`.
+    fn on_dispatch(&mut self, _stage: usize, _batch_id: u64, _qids: &[u32], _t: f64, _done: f64) {}
+    /// Query `qid` finished its visit at `stage`.
+    fn on_visit_done(&mut self, _stage: usize, _qid: u32, _t: f64) {}
+    /// Query `qid` completed its last visit (end-to-end completion).
+    fn on_query_done(&mut self, _qid: u32, _t: f64) {}
+    /// Query `qid` was dropped (deadline shed or retry exhaustion).
+    fn on_shed(&mut self, _qid: u32, _t: f64) {}
+    /// Query `qid` was requeued at `stage` after its batch crashed.
+    fn on_retry(&mut self, _stage: usize, _qid: u32, _t: f64) {}
+    /// A compiled fault entry fired (`kind` names the action).
+    fn on_fault(&mut self, _kind: &str, _stage: Option<usize>, _t: f64) {}
+    /// The engine applied a controller action.
+    fn on_action(&mut self, _action: &ControlAction, _t: f64) {}
+    /// Should the engine materialize a [`StageSample`] snapshot now?
+    fn wants_sample(&self, _t: f64) -> bool {
+        false
+    }
+    /// A snapshot requested via [`Probe::wants_sample`].
+    fn on_sample(&mut self, _t: f64, _stages: &[StageSample]) {}
+}
+
+/// The trivially elided probe: every hook inherits the default no-op.
+/// Attaching it must be indistinguishable from attaching nothing.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopProbe;
+
+impl Probe for NoopProbe {}
+
+/// One stage visit of one sampled query. Timestamps are raw simulated
+/// seconds; `dispatched`/`completed` are NaN while the hop is still
+/// queued / in flight (or was voided by a crash and never re-ran).
+#[derive(Debug, Clone, Copy)]
+pub struct HopSpan {
+    pub stage: u16,
+    pub enqueued: f64,
+    pub dispatched: f64,
+    pub completed: f64,
+    pub batch_id: u64,
+    pub batch_size: u32,
+}
+
+/// The full span record of one sampled query.
+#[derive(Debug, Clone)]
+pub struct QuerySpans {
+    pub qid: u32,
+    pub arrival: f64,
+    /// End-to-end completion time (NaN if the query never completed).
+    pub done: f64,
+    pub shed: bool,
+    pub hops: Vec<HopSpan>,
+}
+
+impl QuerySpans {
+    /// End-to-end latency reconstructed from the span chain: the
+    /// completing hop's timestamp minus the arrival — the *same* float
+    /// expression the engine evaluated, so it reproduces the recorded
+    /// latency bit-exactly. NaN for queries that never completed.
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrival
+    }
+}
+
+/// A timeline instant (tuner action or fault injection) for the trace
+/// export.
+#[derive(Debug, Clone)]
+pub struct InstantEvent {
+    pub time: f64,
+    pub name: String,
+    pub detail: String,
+}
+
+/// One point of the per-stage time-series.
+#[derive(Debug, Clone, Copy)]
+pub struct SeriesPoint {
+    pub time: f64,
+    pub stage: u16,
+    pub queue: usize,
+    pub busy: usize,
+    pub online: usize,
+    /// Arrivals per second over the window since the previous sample
+    /// (NaN for a zero-length window).
+    pub arrival_rate: f64,
+}
+
+/// Per-stage blame table over all SLO-missed queries: where did the
+/// latency of the misses go? `queueing[s]` / `service[s]` sum the
+/// critical-path enqueue→dispatch and dispatch→completion seconds spent
+/// at stage `s` across every missed query; `rpc` is the telescoped
+/// remainder (inter-stage RPC hops plus any float residue), so
+/// `queueing + service + rpc` accounts for `total_latency` exactly by
+/// construction.
+#[derive(Debug, Clone, Default)]
+pub struct MissAttribution {
+    /// Completed queries over the SLO.
+    pub missed: usize,
+    /// All completed queries (the miss-rate denominator).
+    pub completed: usize,
+    /// Queries dropped before completion (never in the miss tally).
+    pub shed: usize,
+    /// Per-stage queueing seconds summed over missed queries.
+    pub queueing: Vec<f64>,
+    /// Per-stage service seconds summed over missed queries.
+    pub service: Vec<f64>,
+    /// RPC + residual seconds summed over missed queries.
+    pub rpc: f64,
+    /// Summed end-to-end latency of the missed queries.
+    pub total_latency: f64,
+}
+
+impl MissAttribution {
+    /// The stage carrying the most blame (queueing + service) for the
+    /// misses, or `None` when nothing missed.
+    pub fn blame_stage(&self) -> Option<usize> {
+        if self.missed == 0 {
+            return None;
+        }
+        (0..self.queueing.len()).fold(None, |best, s| {
+            let w = self.queueing[s] + self.service[s];
+            match best {
+                Some((_, bw)) if bw >= w => best,
+                _ => Some((s, w)),
+            }
+        })
+        .map(|(s, _)| s)
+    }
+
+    /// Fraction of the missed queries' total latency attributed to
+    /// stage `s` (NaN when nothing missed).
+    pub fn blame_share(&self, s: usize) -> f64 {
+        (self.queueing[s] + self.service[s]) / self.total_latency
+    }
+
+    /// Canonical JSON encoding for the robustness report (per-cell
+    /// attribution node). NaN shares serialize as `null`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("missed", self.missed)
+            .set("completed", self.completed)
+            .set("shed", self.shed)
+            .set("rpc_s", Json::num_or_null(self.rpc))
+            .set("total_latency_s", Json::num_or_null(self.total_latency))
+            .set(
+                "blame_stage",
+                match self.blame_stage() {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            );
+        let stages: Vec<Json> = (0..self.queueing.len())
+            .map(|s| {
+                let mut e = Json::obj();
+                e.set("stage", s)
+                    .set("queueing_s", Json::num_or_null(self.queueing[s]))
+                    .set("service_s", Json::num_or_null(self.service[s]))
+                    .set("share", Json::num_or_null(self.blame_share(s)));
+                e
+            })
+            .collect();
+        o.set("stages", Json::Arr(stages));
+        o
+    }
+}
+
+/// Everything a [`RecordingProbe`] captured, ready for export.
+#[derive(Debug, Clone)]
+pub struct ProbeReport {
+    /// Reservoir-sampled per-query span records, qid order.
+    pub spans: Vec<QuerySpans>,
+    /// Per-stage time-series, sample-major then stage order.
+    pub series: Vec<SeriesPoint>,
+    /// Tuner actions and fault injections, time order.
+    pub instants: Vec<InstantEvent>,
+    /// Aggregated SLO-miss blame table (over *all* queries, not just
+    /// the sampled ones).
+    pub attribution: MissAttribution,
+    /// Total queries that arrived.
+    pub arrivals: usize,
+    /// Queries that completed end-to-end.
+    pub completed: usize,
+    /// Queries shed before completion.
+    pub shed: usize,
+}
+
+/// Format a possibly-undefined CSV number (non-finite → empty field).
+fn csv_cell(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        String::new()
+    }
+}
+
+impl ProbeReport {
+    /// Header of the per-stage time-series CSV ([`Self::series_csv`]).
+    pub const SERIES_HEADER: &'static str =
+        "time_s,stage,queue_depth,busy_replicas,online_replicas,busy_frac,arrival_rate_qps";
+
+    /// The per-stage time-series as CSV rows (pair with
+    /// [`Self::SERIES_HEADER`]).
+    pub fn series_csv(&self) -> Vec<String> {
+        self.series
+            .iter()
+            .map(|p| {
+                let busy_frac = if p.online > 0 {
+                    p.busy as f64 / p.online as f64
+                } else {
+                    f64::NAN
+                };
+                format!(
+                    "{},{},{},{},{},{},{}",
+                    p.time,
+                    p.stage,
+                    p.queue,
+                    p.busy,
+                    p.online,
+                    csv_cell(busy_frac),
+                    csv_cell(p.arrival_rate),
+                )
+            })
+            .collect()
+    }
+
+    /// Render the sampled spans, instants and stage tracks as a Chrome
+    /// trace-event document (see the module docs for the schema). Events
+    /// are sorted by timestamp with metadata first.
+    pub fn chrome_trace(&self) -> Json {
+        let n_stages = self.attribution.queueing.len();
+        let mut events: Vec<(f64, Json)> = Vec::new();
+        let mut meta = Json::obj();
+        meta.set("name", "process_name")
+            .set("ph", "M")
+            .set("pid", 1usize)
+            .set("tid", 0usize)
+            .set("ts", 0.0)
+            .set("args", {
+                let mut a = Json::obj();
+                a.set("name", "inferline-sim");
+                a
+            });
+        events.push((f64::NEG_INFINITY, meta));
+        for s in 0..n_stages {
+            let mut m = Json::obj();
+            m.set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", 1usize)
+                .set("tid", s + 1)
+                .set("ts", 0.0)
+                .set("args", {
+                    let mut a = Json::obj();
+                    a.set("name", format!("stage {s}"));
+                    a
+                });
+            events.push((f64::NEG_INFINITY, m));
+        }
+        for q in &self.spans {
+            for h in &q.hops {
+                if !h.dispatched.is_finite() {
+                    continue;
+                }
+                let mut args = Json::obj();
+                args.set("qid", q.qid)
+                    .set("batch", h.batch_id as usize)
+                    .set("batch_size", h.batch_size);
+                let mut queue = Json::obj();
+                queue
+                    .set("name", format!("q{} queue", q.qid))
+                    .set("cat", "queue")
+                    .set("ph", "X")
+                    .set("pid", 1usize)
+                    .set("tid", h.stage as usize + 1)
+                    .set("ts", h.enqueued * 1e6)
+                    .set("dur", (h.dispatched - h.enqueued) * 1e6)
+                    .set("args", args.clone());
+                events.push((h.enqueued, queue));
+                if h.completed.is_finite() {
+                    let mut service = Json::obj();
+                    service
+                        .set("name", format!("q{} service", q.qid))
+                        .set("cat", "service")
+                        .set("ph", "X")
+                        .set("pid", 1usize)
+                        .set("tid", h.stage as usize + 1)
+                        .set("ts", h.dispatched * 1e6)
+                        .set("dur", (h.completed - h.dispatched) * 1e6)
+                        .set("args", args);
+                    events.push((h.dispatched, service));
+                }
+            }
+        }
+        for i in &self.instants {
+            let mut e = Json::obj();
+            e.set("name", i.name.as_str())
+                .set("cat", "control")
+                .set("ph", "i")
+                .set("s", "g")
+                .set("pid", 1usize)
+                .set("tid", 0usize)
+                .set("ts", i.time * 1e6)
+                .set("args", {
+                    let mut a = Json::obj();
+                    a.set("detail", i.detail.as_str());
+                    a
+                });
+            events.push((i.time, e));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let mut doc = Json::obj();
+        doc.set("displayTimeUnit", "ms")
+            .set("traceEvents", Json::Arr(events.into_iter().map(|(_, e)| e).collect()));
+        doc
+    }
+}
+
+/// One in-progress stage visit (internal mirror of [`HopSpan`]).
+#[derive(Debug, Clone, Copy)]
+struct Hop {
+    stage: u16,
+    enq: f64,
+    disp: f64,
+    done: f64,
+    batch_id: u64,
+    batch_size: u32,
+}
+
+/// Per-query bookkeeping, indexed by qid (qids are dense trace indices).
+#[derive(Debug, Clone)]
+struct Track {
+    arrival: f64,
+    done: f64,
+    shed: bool,
+    hops: Vec<Hop>,
+}
+
+/// Fixed seed of the deterministic span reservoir: the same run always
+/// exports the same sampled queries, independent of trace length.
+const RESERVOIR_SEED: u64 = 0x0BE5_E7A1;
+
+/// The recording [`Probe`]. See the module docs for what it captures.
+pub struct RecordingProbe {
+    slo: f64,
+    cadence: f64,
+    sample_cap: usize,
+    rng: Rng,
+    n_stages: usize,
+    tracks: Vec<Track>,
+    reservoir: Vec<u32>,
+    seen: usize,
+    completed: usize,
+    shed: usize,
+    next_sample: f64,
+    last_sample_t: f64,
+    arrivals_since: usize,
+    series: Vec<SeriesPoint>,
+    instants: Vec<InstantEvent>,
+}
+
+impl RecordingProbe {
+    /// Default time-series cadence (simulated seconds between samples).
+    pub const DEFAULT_CADENCE: f64 = 1.0;
+    /// Default span-reservoir capacity (queries with full span detail).
+    pub const DEFAULT_SAMPLE_CAP: usize = 4096;
+
+    pub fn new(slo: f64) -> Self {
+        RecordingProbe {
+            slo,
+            cadence: Self::DEFAULT_CADENCE,
+            sample_cap: Self::DEFAULT_SAMPLE_CAP,
+            rng: Rng::new(RESERVOIR_SEED),
+            n_stages: 0,
+            tracks: Vec::new(),
+            reservoir: Vec::new(),
+            seen: 0,
+            completed: 0,
+            shed: 0,
+            next_sample: 0.0,
+            last_sample_t: 0.0,
+            arrivals_since: 0,
+            series: Vec::new(),
+            instants: Vec::new(),
+        }
+    }
+
+    /// Override the time-series cadence (seconds; must be positive).
+    pub fn with_cadence(mut self, cadence: f64) -> Self {
+        assert!(cadence > 0.0, "cadence must be positive");
+        self.cadence = cadence;
+        self
+    }
+
+    /// Override the span-reservoir capacity. A capacity at or above the
+    /// trace length keeps every query's spans.
+    pub fn with_sample_cap(mut self, cap: usize) -> Self {
+        self.sample_cap = cap;
+        self
+    }
+
+    fn hop_mut(&mut self, qid: u32, stage: usize) -> Option<&mut Hop> {
+        self.tracks[qid as usize]
+            .hops
+            .iter_mut()
+            .rev()
+            .find(|h| h.stage == stage as u16)
+    }
+
+    /// Consume the probe and derive the report (spans for the final
+    /// reservoir, the time-series, and the attribution table over all
+    /// completed queries).
+    pub fn finish(self) -> ProbeReport {
+        let mut attribution = MissAttribution {
+            missed: 0,
+            completed: self.completed,
+            shed: self.shed,
+            queueing: vec![0.0; self.n_stages],
+            service: vec![0.0; self.n_stages],
+            rpc: 0.0,
+            total_latency: 0.0,
+        };
+        for t in &self.tracks {
+            if !t.done.is_finite() {
+                continue;
+            }
+            let latency = t.done - t.arrival;
+            if latency <= self.slo {
+                continue;
+            }
+            attribution.missed += 1;
+            attribution.total_latency += latency;
+            let mut path_queue = 0.0;
+            let mut path_service = 0.0;
+            for &i in &critical_path(&t.hops) {
+                let h = &t.hops[i];
+                let q = h.disp - h.enq;
+                let s = h.done - h.disp;
+                attribution.queueing[h.stage as usize] += q;
+                attribution.service[h.stage as usize] += s;
+                path_queue += q;
+                path_service += s;
+            }
+            attribution.rpc += latency - path_queue - path_service;
+        }
+        let mut sampled = self.reservoir;
+        sampled.sort_unstable();
+        let spans = sampled
+            .into_iter()
+            .map(|qid| {
+                let t = &self.tracks[qid as usize];
+                QuerySpans {
+                    qid,
+                    arrival: t.arrival,
+                    done: t.done,
+                    shed: t.shed,
+                    hops: t
+                        .hops
+                        .iter()
+                        .map(|h| HopSpan {
+                            stage: h.stage,
+                            enqueued: h.enq,
+                            dispatched: h.disp,
+                            completed: h.done,
+                            batch_id: h.batch_id,
+                            batch_size: h.batch_size,
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        ProbeReport {
+            spans,
+            series: self.series,
+            instants: self.instants,
+            attribution,
+            arrivals: self.tracks.len(),
+            completed: self.completed,
+            shed: self.shed,
+        }
+    }
+}
+
+/// Reconstruct the critical path through one query's hops: start from
+/// the hop that completed last and repeatedly step to the latest hop
+/// that completed at or before the current hop's enqueue (its upstream
+/// dependency). Returns hop indices in root→completion order; empty
+/// when no hop completed. On tree pipelines with parallel branches this
+/// selects the chain that actually bounded the end-to-end latency.
+fn critical_path(hops: &[Hop]) -> Vec<usize> {
+    let mut path: Vec<usize> = Vec::new();
+    let mut cur = match (0..hops.len())
+        .filter(|&i| hops[i].done.is_finite())
+        .max_by(|&a, &b| hops[a].done.partial_cmp(&hops[b].done).unwrap().then(a.cmp(&b)))
+    {
+        Some(i) => i,
+        None => return path,
+    };
+    path.push(cur);
+    loop {
+        let enq = hops[cur].enq;
+        let prev = (0..hops.len())
+            .filter(|&i| {
+                i != cur && !path.contains(&i) && hops[i].done.is_finite() && hops[i].done <= enq
+            })
+            .max_by(|&a, &b| {
+                hops[a].done.partial_cmp(&hops[b].done).unwrap().then(a.cmp(&b))
+            });
+        match prev {
+            Some(p) => {
+                path.push(p);
+                cur = p;
+            }
+            None => break,
+        }
+    }
+    path.reverse();
+    path
+}
+
+impl Probe for RecordingProbe {
+    fn on_start(&mut self, n_stages: usize, n_queries: usize) {
+        self.n_stages = n_stages;
+        self.tracks.reserve(n_queries);
+    }
+
+    fn on_arrival(&mut self, qid: u32, t: f64) {
+        debug_assert_eq!(qid as usize, self.tracks.len(), "qids arrive densely");
+        self.tracks.push(Track { arrival: t, done: f64::NAN, shed: false, hops: Vec::new() });
+        self.arrivals_since += 1;
+        // Deterministic reservoir (Algorithm R with the fixed probe
+        // seed): every query is equally likely to keep full span detail,
+        // and the same run always samples the same qids.
+        self.seen += 1;
+        if self.reservoir.len() < self.sample_cap {
+            self.reservoir.push(qid);
+        } else if self.sample_cap > 0 {
+            let j = self.rng.usize(self.seen);
+            if j < self.sample_cap {
+                self.reservoir[j] = qid;
+            }
+        }
+    }
+
+    fn on_enqueue(&mut self, stage: usize, qid: u32, t: f64) {
+        self.tracks[qid as usize].hops.push(Hop {
+            stage: stage as u16,
+            enq: t,
+            disp: f64::NAN,
+            done: f64::NAN,
+            batch_id: 0,
+            batch_size: 0,
+        });
+    }
+
+    fn on_dispatch(&mut self, stage: usize, batch_id: u64, qids: &[u32], t: f64, _done: f64) {
+        let size = qids.len() as u32;
+        for &qid in qids {
+            if let Some(h) = self.hop_mut(qid, stage) {
+                if h.disp.is_nan() {
+                    h.disp = t;
+                    h.batch_id = batch_id;
+                    h.batch_size = size;
+                }
+            }
+        }
+    }
+
+    fn on_visit_done(&mut self, stage: usize, qid: u32, t: f64) {
+        if let Some(h) = self.hop_mut(qid, stage) {
+            if h.done.is_nan() {
+                h.done = t;
+            }
+        }
+    }
+
+    fn on_query_done(&mut self, qid: u32, t: f64) {
+        self.tracks[qid as usize].done = t;
+        self.completed += 1;
+    }
+
+    fn on_shed(&mut self, qid: u32, _t: f64) {
+        let track = &mut self.tracks[qid as usize];
+        if !track.shed {
+            track.shed = true;
+            self.shed += 1;
+        }
+    }
+
+    fn on_retry(&mut self, stage: usize, qid: u32, _t: f64) {
+        // The crashed batch's dispatch is void: the hop is back in the
+        // queue and re-dispatches later (queueing resumes accruing).
+        if let Some(h) = self.hop_mut(qid, stage) {
+            if h.done.is_nan() {
+                h.disp = f64::NAN;
+            }
+        }
+    }
+
+    fn on_fault(&mut self, kind: &str, stage: Option<usize>, t: f64) {
+        self.instants.push(InstantEvent {
+            time: t,
+            name: format!("fault:{kind}"),
+            detail: match stage {
+                Some(s) => format!("stage={s}"),
+                None => String::new(),
+            },
+        });
+    }
+
+    fn on_action(&mut self, action: &ControlAction, t: f64) {
+        let (name, detail) = match *action {
+            ControlAction::SetReplicas { stage, replicas } => {
+                ("tuner:set-replicas", format!("stage={stage} replicas={replicas}"))
+            }
+            ControlAction::Halt { duration } => ("tuner:halt", format!("duration={duration}")),
+        };
+        self.instants.push(InstantEvent { time: t, name: name.to_string(), detail });
+    }
+
+    fn wants_sample(&self, t: f64) -> bool {
+        t >= self.next_sample
+    }
+
+    fn on_sample(&mut self, t: f64, stages: &[StageSample]) {
+        let dt = t - self.last_sample_t;
+        let rate = if dt > 0.0 { self.arrivals_since as f64 / dt } else { f64::NAN };
+        for (i, s) in stages.iter().enumerate() {
+            self.series.push(SeriesPoint {
+                time: t,
+                stage: i as u16,
+                queue: s.queue,
+                busy: s.busy,
+                online: s.online,
+                arrival_rate: rate,
+            });
+        }
+        self.last_sample_t = t;
+        self.arrivals_since = 0;
+        self.next_sample = t + self.cadence;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hop(stage: u16, enq: f64, disp: f64, done: f64) -> Hop {
+        Hop { stage, enq, disp, done, batch_id: 1, batch_size: 1 }
+    }
+
+    #[test]
+    fn critical_path_follows_the_bounding_chain() {
+        // Root at stage 0 fans out to stages 1 and 2; stage 2 finishes
+        // last, so the path is 0 -> 2 regardless of hop push order.
+        let hops = vec![
+            hop(0, 0.0, 0.1, 0.5),
+            hop(1, 0.6, 0.6, 0.9),
+            hop(2, 0.6, 0.8, 1.4),
+        ];
+        assert_eq!(critical_path(&hops), vec![0, 2]);
+        // An undispatched hop is ignored; an empty track yields nothing.
+        let partial = vec![hop(0, 0.0, 0.1, 0.5), hop(1, 0.6, f64::NAN, f64::NAN)];
+        assert_eq!(critical_path(&partial), vec![0]);
+        assert!(critical_path(&[]).is_empty());
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_and_bounded() {
+        let run = |n: usize| {
+            let mut p = RecordingProbe::new(0.1).with_sample_cap(8);
+            p.on_start(1, n);
+            for q in 0..n {
+                p.on_arrival(q as u32, q as f64);
+            }
+            let mut r = p.reservoir.clone();
+            r.sort_unstable();
+            r
+        };
+        assert_eq!(run(100), run(100), "same run, same sample");
+        assert_eq!(run(100).len(), 8);
+        assert_eq!(run(5).len(), 5, "small traces keep everything");
+    }
+
+    #[test]
+    fn attribution_splits_queueing_service_and_rpc() {
+        let mut p = RecordingProbe::new(0.2);
+        p.on_start(2, 2);
+        // Query 0 misses: queued 0.3s at stage 0, served 0.2s, one RPC
+        // hop, then 0.1s queue + 0.1s service at stage 1.
+        p.on_arrival(0, 0.0);
+        p.on_enqueue(0, 0, 0.0);
+        p.on_dispatch(0, 1, &[0], 0.3, 0.5);
+        p.on_visit_done(0, 0, 0.5);
+        p.on_enqueue(1, 0, 0.6);
+        p.on_dispatch(1, 2, &[0], 0.7, 0.8);
+        p.on_visit_done(1, 0, 0.8);
+        p.on_query_done(0, 0.8);
+        // Query 1 hits the SLO: excluded from the table.
+        p.on_arrival(1, 1.0);
+        p.on_enqueue(0, 1, 1.0);
+        p.on_dispatch(0, 3, &[1], 1.0, 1.1);
+        p.on_visit_done(0, 1, 1.1);
+        p.on_query_done(1, 1.1);
+        let report = p.finish();
+        let a = &report.attribution;
+        assert_eq!(a.missed, 1);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.blame_stage(), Some(0));
+        assert!((a.queueing[0] - 0.3).abs() < 1e-12, "{}", a.queueing[0]);
+        assert!((a.service[0] - 0.2).abs() < 1e-12);
+        assert!((a.queueing[1] - 0.1).abs() < 1e-12);
+        assert!((a.service[1] - 0.1).abs() < 1e-12);
+        // The split accounts for the full latency by construction.
+        let path: f64 = a.queueing.iter().sum::<f64>() + a.service.iter().sum::<f64>();
+        assert!(((path + a.rpc) - a.total_latency).abs() < 1e-12);
+        // Completed query spans reproduce their latency bit-exactly.
+        let q0 = &report.spans[0];
+        assert_eq!(q0.latency().to_bits(), (0.8f64 - 0.0).to_bits());
+    }
+
+    #[test]
+    fn chrome_trace_is_sorted_and_well_formed() {
+        let mut p = RecordingProbe::new(0.05);
+        p.on_start(2, 1);
+        p.on_arrival(0, 0.0);
+        p.on_enqueue(0, 0, 0.0);
+        p.on_dispatch(0, 1, &[0], 0.2, 0.4);
+        p.on_visit_done(0, 0, 0.4);
+        p.on_query_done(0, 0.4);
+        p.on_action(&ControlAction::SetReplicas { stage: 1, replicas: 3 }, 0.1);
+        p.on_fault("crash", Some(0), 0.3);
+        let doc = p.finish().chrome_trace();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("trace must be valid JSON");
+        let events = parsed.req("traceEvents").as_arr().unwrap();
+        // 3 metadata + queue span + service span + action + fault.
+        assert_eq!(events.len(), 7, "{text}");
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut spans = 0;
+        let mut instants = 0;
+        for e in events {
+            let ts = e.req("ts").as_f64().unwrap();
+            assert!(ts >= last_ts, "timestamps must be monotone: {text}");
+            last_ts = ts;
+            match e.req("ph").as_str().unwrap() {
+                "X" => {
+                    assert!(e.req("dur").as_f64().unwrap() >= 0.0);
+                    spans += 1;
+                }
+                "i" => instants += 1,
+                "M" => {}
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+        assert_eq!(spans, 2);
+        assert_eq!(instants, 2);
+    }
+
+    #[test]
+    fn series_samples_at_cadence_with_arrival_rate() {
+        let mut p = RecordingProbe::new(0.1).with_cadence(1.0);
+        p.on_start(1, 4);
+        let snap = [StageSample { queue: 3, busy: 1, online: 2 }];
+        assert!(p.wants_sample(0.0), "first sample is due immediately");
+        p.on_sample(0.0, &snap);
+        assert!(!p.wants_sample(0.5));
+        p.on_arrival(0, 0.2);
+        p.on_arrival(1, 0.4);
+        assert!(p.wants_sample(1.25));
+        p.on_sample(1.25, &snap);
+        let report = p.finish();
+        assert_eq!(report.series.len(), 2);
+        let s = report.series[1];
+        assert_eq!(s.queue, 3);
+        assert_eq!(s.busy, 1);
+        assert!((s.arrival_rate - 2.0 / 1.25).abs() < 1e-12);
+        let rows = report.series_csv();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[1].starts_with("1.25,0,3,1,2,0.5,"), "{}", rows[1]);
+    }
+
+    #[test]
+    fn retry_voids_the_dispatch_and_shed_counts_once() {
+        let mut p = RecordingProbe::new(0.1);
+        p.on_start(1, 1);
+        p.on_arrival(0, 0.0);
+        p.on_enqueue(0, 0, 0.0);
+        p.on_dispatch(0, 1, &[0], 0.1, 0.3);
+        p.on_retry(0, 0, 0.2);
+        p.on_shed(0, 0.2);
+        p.on_shed(0, 0.2);
+        let report = p.finish();
+        assert_eq!(report.shed, 1);
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.arrivals, 1);
+        let h = &report.spans[0].hops[0];
+        assert!(h.dispatched.is_nan(), "retry must void the dispatch");
+        assert!(report.spans[0].shed);
+    }
+}

@@ -1,0 +1,124 @@
+//! A tiny leveled stderr logger (no deps, offline-friendly), unifying
+//! the previously ad-hoc `eprintln!` diagnostics so harness runs are
+//! quiet by default and debuggable on demand.
+//!
+//! The level is a process-global [`AtomicU8`], defaulting to [`Level::Warn`]
+//! and settable once at startup from `--verbose` / the `INFERLINE_LOG`
+//! environment variable ([`init`]); `error` is reserved for failures the
+//! user must see (gate violations, unusable inputs), `warn` for degraded
+//! but continuing runs, `info` for progress narration, `debug` for
+//! development tracing. Call sites use the `log_error!` / `log_warn!` /
+//! `log_info!` / `log_debug!` macros (exported at the crate root), which
+//! skip formatting entirely when the level is filtered out.
+//!
+//! CI-scraped *stdout* lines (e.g. the estimator-cache "warm-started
+//! with N entries" message) are deliberately not routed through here:
+//! they are machine-read output, not diagnostics.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+/// Quiet-by-default: errors and warnings only.
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Set the global level (normally via [`init`]; tests may call directly).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is `level` currently emitted? The macros consult this before
+/// formatting, so filtered calls cost one relaxed atomic load.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize the level from the environment: `INFERLINE_LOG` may name a
+/// level (`error` | `warn` | `info` | `debug`; unknown values are
+/// ignored), and `--verbose` raises whatever that produced to `Debug`.
+pub fn init(verbose: bool) {
+    if let Ok(v) = std::env::var("INFERLINE_LOG") {
+        match v.to_ascii_lowercase().as_str() {
+            "error" => set_level(Level::Error),
+            "warn" => set_level(Level::Warn),
+            "info" => set_level(Level::Info),
+            "debug" => set_level(Level::Debug),
+            _ => {}
+        }
+    }
+    if verbose {
+        set_level(Level::Debug);
+    }
+}
+
+/// Log at error level (stderr; always on short of tampering with
+/// [`set_level`] — `Error` is the floor).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log at warn level (stderr; on by default).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log at info level (stderr; off by default, on with `--verbose` or
+/// `INFERLINE_LOG=info`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log at debug level (stderr; development tracing).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_filter_monotonically() {
+        // NB: the level is process-global, so this test owns it for its
+        // duration and restores the default before returning.
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_level(Level::Warn);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod log;
 pub mod par;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,206 @@
+//! Conformance suite for the telemetry probe layer.
+//!
+//! The probe contract (`simulator::probe`) is that observation is free:
+//! a probe-less run takes zero probe branches, and an attached probe is
+//! read-only — it may record anything but can perturb nothing. This
+//! suite locks both halves down over the same grids the other
+//! conformance suites use (every pipeline shape, open-loop and
+//! controlled, fault-free and under a crash storm):
+//!
+//! * a [`NoopProbe`] run and a [`RecordingProbe`] run are bit-identical
+//!   to the probe-less engine on every query-visible outcome (latencies,
+//!   completions, horizon, per-stage stats, cost, fault counters);
+//! * the recorded artifacts themselves are deterministic: the same seed
+//!   produces byte-identical Chrome traces, time-series CSV rows and
+//!   attribution tables across repeated runs.
+
+use inferline::config::pipelines;
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::control::{simulate_controlled, simulate_controlled_probed};
+use inferline::simulator::faults::{FaultNode, FaultSpec};
+use inferline::simulator::probe::{NoopProbe, RecordingProbe};
+use inferline::simulator::{self, SimParams, SimResult};
+use inferline::tuner::{Tuner, TunerInputs};
+use inferline::workload::{scenarios, Trace};
+
+const SLO: f64 = 0.3;
+
+/// A flash crowd drives real queueing, retries under faults, and tuner
+/// actions in controlled runs — every probe hook fires.
+fn crowd_trace(seed: u64) -> Trace {
+    scenarios::flash_crowd_trace(90.0, 280.0, 10.0, 2.0, 8.0, 4.0, 1.0, 45.0, seed)
+}
+
+/// Assert two results agree bit-for-bit on everything a query observes.
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.latencies.len(), b.latencies.len(), "{ctx}: completion count");
+    for (i, (x, y)) in a.latencies.iter().zip(&b.latencies).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: latency #{i}");
+    }
+    assert_eq!(a.completions.len(), b.completions.len(), "{ctx}: completions");
+    for ((t1, l1), (t2, l2)) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(t1.to_bits(), t2.to_bits(), "{ctx}: completion time");
+        assert_eq!(l1.to_bits(), l2.to_bits(), "{ctx}: completion latency");
+    }
+    assert_eq!(a.horizon.to_bits(), b.horizon.to_bits(), "{ctx}: horizon");
+    assert_eq!(a.cost_dollars.to_bits(), b.cost_dollars.to_bits(), "{ctx}: cost");
+    assert_eq!(a.crashes, b.crashes, "{ctx}: crashes");
+    assert_eq!(a.retries, b.retries, "{ctx}: retries");
+    assert_eq!(a.shed, b.shed, "{ctx}: shed");
+    assert_eq!(a.stage_stats.len(), b.stage_stats.len(), "{ctx}: stage count");
+    for (i, (s1, s2)) in a.stage_stats.iter().zip(&b.stage_stats).enumerate() {
+        assert_eq!(s1.max_queue, s2.max_queue, "{ctx}: stage {i} max_queue");
+        assert_eq!(s1.batches, s2.batches, "{ctx}: stage {i} batches");
+        assert_eq!(s1.queries, s2.queries, "{ctx}: stage {i} queries");
+        assert_eq!(s1.busy_time.to_bits(), s2.busy_time.to_bits(), "{ctx}: stage {i} busy");
+        assert_eq!(s1.mean_batch.to_bits(), s2.mean_batch.to_bits(), "{ctx}: stage {i} batch");
+    }
+}
+
+/// Open-loop grid: on every pipeline shape, a `NoopProbe` run and a full
+/// `RecordingProbe` run must match the probe-less simulation bit for bit.
+#[test]
+fn probed_open_loop_is_bit_identical_on_every_pipeline() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    for spec in pipelines::all() {
+        let live = crowd_trace(31);
+        let config = Planner::new(&spec, &profiles).initialize(&live, SLO).unwrap();
+        let plain = simulator::simulate(&spec, &profiles, &config, &live, &params);
+        let mut noop = NoopProbe;
+        let nooped =
+            simulator::simulate_probed(&spec, &profiles, &config, &live, &params, None, &mut noop);
+        assert_bit_identical(&plain, &nooped, &format!("{}: noop probe", spec.name));
+        let mut rec = RecordingProbe::new(SLO).with_cadence(0.5);
+        let recorded =
+            simulator::simulate_probed(&spec, &profiles, &config, &live, &params, None, &mut rec);
+        assert_bit_identical(&plain, &recorded, &format!("{}: recording probe", spec.name));
+        let report = rec.finish();
+        assert_eq!(report.completed, plain.latencies.len(), "{}: span count", spec.name);
+        assert!(!report.series.is_empty(), "{}: no time-series points", spec.name);
+    }
+}
+
+/// Faulted grid: a crash storm with retries and shedding exercises the
+/// shed/retry/fault hooks; the probed runs must still be bit-identical,
+/// fault counters included.
+#[test]
+fn probed_faulted_run_is_bit_identical() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = pipelines::image_processing();
+    let live = crowd_trace(7);
+    let config = Planner::new(&spec, &profiles).initialize(&live, SLO).unwrap();
+    let storm = FaultSpec {
+        nodes: vec![FaultNode::CrashStorm {
+            stage: None,
+            start: 0.0,
+            end: live.duration(),
+            rate: 0.2,
+        }],
+        max_retries: 1,
+        shed_after: Some(0.5),
+    };
+    let plan = storm.compile(spec.n_stages(), 13);
+    let plain = simulator::simulate_with_faults(&spec, &profiles, &config, &live, &params, &plan);
+    assert!(plain.crashes > 0, "storm must apply crashes for the grid to mean anything");
+    let mut noop = NoopProbe;
+    let nooped = simulator::simulate_probed(
+        &spec,
+        &profiles,
+        &config,
+        &live,
+        &params,
+        Some(&plan),
+        &mut noop,
+    );
+    assert_bit_identical(&plain, &nooped, "faulted: noop probe");
+    let mut rec = RecordingProbe::new(SLO);
+    let recorded = simulator::simulate_probed(
+        &spec,
+        &profiles,
+        &config,
+        &live,
+        &params,
+        Some(&plan),
+        &mut rec,
+    );
+    assert_bit_identical(&plain, &recorded, "faulted: recording probe");
+    let report = rec.finish();
+    assert_eq!(report.shed, plain.shed as usize, "probe shed counter matches engine");
+    assert!(
+        report.instants.iter().any(|i| i.name.starts_with("fault:")),
+        "crash storm left no fault instants in the trace"
+    );
+}
+
+/// Controlled grid: with the real Tuner in the loop (scale-ups during
+/// the flash crowd land as probe instants), probed and plain controlled
+/// runs must be bit-identical.
+#[test]
+fn probed_controlled_run_is_bit_identical() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = pipelines::social_media();
+    let live = crowd_trace(17);
+    let sample = crowd_trace(18);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, SLO).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let mk_tuner =
+        || Tuner::new(TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st));
+    let mut plain_tuner = mk_tuner();
+    let plain = simulate_controlled(
+        &spec,
+        &profiles,
+        &plan.config,
+        &live,
+        &params,
+        &mut plain_tuner,
+    );
+    let mut probed_tuner = mk_tuner();
+    let mut rec = RecordingProbe::new(SLO);
+    let recorded = simulate_controlled_probed(
+        &spec,
+        &profiles,
+        &plan.config,
+        &live,
+        &params,
+        &mut probed_tuner,
+        None,
+        &mut rec,
+    );
+    assert_bit_identical(&plain, &recorded, "controlled: recording probe");
+    let report = rec.finish();
+    assert!(
+        report.instants.iter().any(|i| i.name.starts_with("tuner:")),
+        "flash crowd produced no tuner-action instants"
+    );
+}
+
+/// Determinism: two recording runs of the same cell produce byte-identical
+/// artifacts — Chrome trace, series CSV and attribution JSON.
+#[test]
+fn recorded_artifacts_are_bit_reproducible() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = pipelines::image_processing();
+    let live = crowd_trace(23);
+    let config = Planner::new(&spec, &profiles).initialize(&live, SLO).unwrap();
+    let run = || {
+        let mut rec = RecordingProbe::new(0.05).with_cadence(0.5);
+        simulator::simulate_probed(&spec, &profiles, &config, &live, &params, None, &mut rec);
+        rec.finish()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.chrome_trace().to_string(), b.chrome_trace().to_string());
+    assert_eq!(a.series_csv(), b.series_csv());
+    assert_eq!(a.attribution.to_json().to_string(), b.attribution.to_json().to_string());
+    // The tight SLO guarantees misses, so the attribution table is live.
+    assert!(a.attribution.missed > 0, "0.05s SLO on a flash crowd must miss");
+    assert!(a.attribution.blame_stage().is_some());
+    let blamed = a.attribution.blame_stage().unwrap();
+    let share = a.attribution.blame_share(blamed);
+    assert!(share > 0.0 && share <= 1.0, "blame share {share} out of range");
+}

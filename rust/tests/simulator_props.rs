@@ -447,6 +447,89 @@ fn all_shed_runs_are_never_proved_feasible() {
     });
 }
 
+/// Probe conservation on random pipelines under random chaos: the
+/// recording probe's counters must agree with the engine's — every
+/// arrival it saw either completed or was shed, never both, never
+/// neither — and its completion count matches the latency vector.
+#[test]
+fn probe_counters_conserve_queries_under_chaos() {
+    use inferline::simulator::probe::RecordingProbe;
+    prop::check("probe conservation", 25, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let fault_spec = random_fault_spec(rng, spec.stages.len());
+        let faults = fault_spec.compile(spec.stages.len(), rng.next_u64());
+        let trace =
+            gamma_trace(20.0 + rng.f64() * 60.0, 0.5 + rng.f64() * 2.0, 8.0, rng.next_u64());
+        let mut probe = RecordingProbe::new(0.3);
+        let result = simulator::simulate_probed(
+            &spec,
+            &profiles,
+            &config,
+            &trace,
+            &SimParams::default(),
+            Some(&faults),
+            &mut probe,
+        );
+        let report = probe.finish();
+        assert_eq!(report.arrivals, trace.len(), "probe missed arrivals");
+        assert_eq!(
+            report.completed + report.shed,
+            trace.len(),
+            "probe counters leak queries (crashes={})",
+            result.crashes
+        );
+        assert_eq!(report.completed, result.latencies.len(), "probe vs engine completions");
+        assert_eq!(report.shed as u64, result.shed, "probe vs engine sheds");
+    });
+}
+
+/// Span-chain exactness: with the reservoir sized to hold every query,
+/// the per-query span latency (`done - arrival`) reproduces the engine's
+/// latency vector bit for bit as a multiset (completion order differs
+/// from qid order, so compare bit-pattern counts, not sequences).
+#[test]
+fn probe_spans_reproduce_latencies_bit_exactly() {
+    use inferline::simulator::probe::RecordingProbe;
+    use std::collections::HashMap;
+    prop::check("span-chain latency exactness", 20, |rng| {
+        let (spec, profiles, config) = random_setup(rng);
+        let trace = gamma_trace(30.0 + rng.f64() * 60.0, 1.0, 6.0, rng.next_u64());
+        let mut probe = RecordingProbe::new(0.3).with_sample_cap(trace.len());
+        let result = simulator::simulate_probed(
+            &spec,
+            &profiles,
+            &config,
+            &trace,
+            &SimParams::default(),
+            None,
+            &mut probe,
+        );
+        let report = probe.finish();
+        let mut expected: HashMap<u64, isize> = HashMap::new();
+        for &l in &result.latencies {
+            *expected.entry(l.to_bits()).or_default() += 1;
+        }
+        let done: Vec<_> = report.spans.iter().filter(|s| !s.shed).collect();
+        assert_eq!(done.len(), result.latencies.len(), "cap covers every query");
+        for s in done {
+            let slot = expected.entry(s.latency().to_bits()).or_default();
+            *slot -= 1;
+            assert!(*slot >= 0, "span latency {} not produced by the engine", s.latency());
+            // Every completed span has a coherent hop chain: finite,
+            // ordered timestamps within the query's lifetime.
+            for h in &s.hops {
+                assert!(h.enqueued >= s.arrival, "hop enqueued before arrival");
+                if h.completed.is_finite() {
+                    assert!(h.dispatched >= h.enqueued, "dispatch before enqueue");
+                    assert!(h.completed >= h.dispatched, "completion before dispatch");
+                    assert!(h.completed <= s.done, "hop outlived the query");
+                }
+            }
+        }
+        assert!(expected.values().all(|&c| c == 0), "engine latencies missing from spans");
+    });
+}
+
 #[test]
 fn horizon_covers_trace() {
     prop::check("horizon bound", 20, |rng| {
