@@ -27,6 +27,7 @@ use crate::simulator::{self, SimParams};
 use crate::util::bench::{bench, black_box};
 use crate::util::json::Json;
 use crate::workload::gamma_trace;
+use crate::workload::stream::GammaSource;
 
 /// Run the estimator benchmark and write the JSON report to `out`.
 pub fn run(out: &Path, quick: bool) -> std::io::Result<()> {
@@ -326,6 +327,45 @@ pub fn collect(quick: bool, cache_file: &Path) -> Json {
     println!(
         "  -> event-core churn speedup {:.2}x over the reference heap",
         reference.mean_s / core.mean_s
+    );
+
+    // --- Streamed open loop vs materialized run. ---------------------------
+    // The same workload as the raw-throughput section, pulled through the
+    // chunked `ArrivalSource` path instead of a materialized trace
+    // (`GammaSource` with the long trace's parameters generates the
+    // identical arrival stream). Aggregates are bit-identical — asserted
+    // in tests/streaming_conformance.rs — so this section prices the
+    // streamed engine (lazy routing sampler, pull-refill, prefix
+    // compaction) and records the memory win: peak resident query states
+    // as a fraction of the horizon's total.
+    let rs = bench("estimator: long trace, streamed open loop", 1, samples, || {
+        let mut source = GammaSource::new(150.0, 1.0, sim_secs, 1);
+        black_box(
+            simulator::simulate_streamed(
+                &spec, &profiles, &warm_plan.config, &mut source, &params, 0.3, 4096,
+            )
+            .completed,
+        );
+    });
+    let mut source = GammaSource::new(150.0, 1.0, sim_secs, 1);
+    let streamed_summary = simulator::simulate_streamed(
+        &spec, &profiles, &warm_plan.config, &mut source, &params, 0.3, 4096,
+    );
+    let streamed_qps = long_trace.len() as f64 / rs.mean_s;
+    let resident = streamed_summary.peak_queries_resident as f64 / long_trace.len() as f64;
+    let mut st = Json::obj();
+    st.set("materialized_queries_per_sec", sim_qps);
+    st.set("streamed_queries_per_sec", streamed_qps);
+    st.set("overhead_ratio", r.mean_s / rs.mean_s);
+    st.set("peak_queries_resident", streamed_summary.peak_queries_resident);
+    st.set("resident_fraction", resident);
+    doc.set("streaming", st);
+    println!(
+        "  -> streamed throughput {:.2} M queries/sec ({:.2}x of materialized, \
+         {:.2}% of queries resident at peak)",
+        streamed_qps / 1e6,
+        r.mean_s / rs.mean_s,
+        resident * 100.0
     );
 
     doc

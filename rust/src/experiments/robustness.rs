@@ -116,6 +116,7 @@ const SCENARIO_FILES: &[(&str, &str)] = &[
         "outage-during-flash-crowd",
         include_str!("../../../scenarios/outage-during-flash-crowd.json"),
     ),
+    ("production-replay", include_str!("../../../scenarios/production-replay.json")),
 ];
 
 /// The scenario families, in report order. Position is part of the seed
@@ -136,6 +137,7 @@ pub const FAMILIES: &[&str] = &[
     "replica-crash-storm",
     "slow-stage-brownout",
     "outage-during-flash-crowd",
+    "production-replay",
 ];
 
 /// The parsed spec of one checked-in family (`None` for unknown names).

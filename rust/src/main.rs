@@ -4,6 +4,7 @@
 //!   plan        plan a pipeline configuration for a workload + SLO
 //!   profile     measure real CPU model profiles through PJRT
 //!   simulate    run the Estimator on a configuration
+//!   stream      run the constant-memory streamed Estimator on a scenario
 //!   serve       serve a trace on the physical plane (PJRT or calibrated)
 //!   experiment  regenerate a paper figure (fig3..fig14, headline, all)
 //!   trace       generate workload traces to files
@@ -108,6 +109,15 @@ COMMANDS:
               and writes a Perfetto-loadable Chrome trace-event file,
               --series-out the per-stage time-series CSV, and either
               flag prints the SLO-miss attribution blame table)
+  stream      --scenario <spec.json> --pipeline <name> [--slo <s>]
+              [--lambda <qps>] [--quick] [--seed <n>] [--chunk <n>]
+              [--planner inferline|cg-peak] [--max-rss-mb <mb>]
+              (streamed open loop: arrivals are pulled from the scenario
+              in bounded chunks and folded into aggregates, so memory
+              tracks the in-flight window, not the horizon — multi-hour
+              scenarios simulate without materializing the trace;
+              --max-rss-mb makes the process fail if its peak RSS
+              exceeded the ceiling, which is the CI long-horizon smoke)
   serve       --pipeline <name> --lambda <qps> --duration <s>
               [--backend pjrt|calibrated] [--artifacts <dir>] [--slo <s>]
   experiment  <fig3|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|headline|sweep|all>
@@ -153,6 +163,7 @@ fn main() -> ExitCode {
         "plan" => cmd_plan(&args),
         "profile" => cmd_profile(&args),
         "simulate" => cmd_simulate(&args),
+        "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "budget" => cmd_budget(&args),
@@ -428,6 +439,117 @@ fn cmd_simulate(args: &Args) -> bool {
                 return false;
             }
             println!("wrote {} ({} time-series points)", path.display(), report.series.len());
+        }
+    }
+    true
+}
+
+/// Peak resident-set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`; `None` off Linux). The streamed smoke gates on
+/// this — it is the one number that catches *any* accidental
+/// materialization, wherever it hides.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// `stream`: run the constant-memory streamed Estimator on a scenario
+/// spec. Arrivals come from the scenario's chunked arrival source
+/// (never materialized), provisioning comes from planning for nominal
+/// `--lambda` traffic — the robustness harness's "the operator planned
+/// for nominal; the scenario is what arrived" convention — and the run
+/// reports the aggregate summary plus its memory footprint.
+fn cmd_stream(args: &Args) -> bool {
+    let Some(spec_path) = args.get("scenario") else {
+        inferline::log_error!("--scenario <spec.json> is required");
+        return false;
+    };
+    let Some(spec) = get_pipeline(args) else { return false };
+    let profiles = load_profiles(args);
+    let slo = args.f64("slo", 0.35);
+    let lambda = args.f64("lambda", 100.0);
+    let chunk = args.f64("chunk", 4096.0) as usize;
+    let scenario_spec = match scenarios::ScenarioSpec::load(std::path::Path::new(spec_path)) {
+        Ok(s) => s,
+        Err(e) => {
+            inferline::log_error!("{e}");
+            return false;
+        }
+    };
+    let seed = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(scenario_spec.seed);
+    let scenario = scenario_spec.scenario_for(args.bool("quick"));
+    let mut source = match scenario.source(seed) {
+        Ok(s) => s,
+        Err(e) => {
+            inferline::log_error!("scenario {:?} failed to build: {e}", scenario_spec.name);
+            return false;
+        }
+    };
+    // CG-Peak is analytic (no simulation search), so the long-horizon CI
+    // smoke uses it to keep provisioning off the measured path; the
+    // default is the real InferLine planner.
+    let sample = gamma_trace(lambda, 1.0, 60.0, 42);
+    let config = match args.get("planner").unwrap_or("inferline") {
+        "cg-peak" => coarse::plan(&spec, &profiles, &sample, slo, CoarseTarget::Peak).config,
+        "inferline" => match Planner::new(&spec, &profiles).plan(&sample, slo) {
+            Ok(p) => p.config,
+            Err(e) => {
+                inferline::log_error!("{e}");
+                return false;
+            }
+        },
+        other => {
+            inferline::log_error!("unknown planner {other:?} (available: inferline, cg-peak)");
+            return false;
+        }
+    };
+    println!("config: {}", config.summary(&spec));
+    println!(
+        "streaming scenario {:?} (seed {seed}, chunk {chunk}) ...",
+        scenario_spec.name
+    );
+    let summary = simulator::simulate_streamed(
+        &spec,
+        &profiles,
+        &config,
+        source.as_mut(),
+        &SimParams::default(),
+        slo,
+        chunk,
+    );
+    println!(
+        "streamed {} queries over {:.0}s: mean latency {:.1} ms, max {:.1} ms, \
+         miss rate {:.3}%, cost ${:.2}",
+        summary.queries,
+        summary.horizon,
+        summary.mean_latency() * 1e3,
+        summary.max_latency * 1e3,
+        summary.miss_rate() * 100.0,
+        summary.cost_dollars
+    );
+    println!(
+        "resident: peak {} query records ({:.4}% of the stream)",
+        summary.peak_queries_resident,
+        summary.peak_queries_resident as f64 / summary.queries.max(1) as f64 * 100.0
+    );
+    let ceiling_mb = args.get("max-rss-mb").and_then(|v| v.parse::<f64>().ok());
+    match peak_rss_kb() {
+        Some(kb) => {
+            let mb = kb as f64 / 1024.0;
+            println!("peak RSS: {mb:.1} MiB");
+            if let Some(ceiling) = ceiling_mb {
+                if mb > ceiling {
+                    inferline::log_error!("peak RSS {mb:.1} MiB exceeds the {ceiling} MiB ceiling");
+                    return false;
+                }
+            }
+        }
+        None => {
+            if ceiling_mb.is_some() {
+                inferline::log_error!("--max-rss-mb needs /proc/self/status (Linux only)");
+                return false;
+            }
         }
     }
     true

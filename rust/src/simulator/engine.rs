@@ -12,13 +12,13 @@ use std::collections::VecDeque;
 
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;
-use crate::workload::Trace;
+use crate::workload::{ArrivalSource, Trace};
 
 use super::control::{ControlAction, ControlState, Controller};
 use super::event_core::{EventKind, EventQueue, SliceArena, UpHandle};
 use super::faults::{FaultAction, FaultEntry, FaultPlan};
 use super::probe::{Probe, StageSample};
-use super::routing::RoutingPlan;
+use super::routing::{RoutingPlan, RoutingSampler};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -116,6 +116,72 @@ impl SimResult {
             w_end += window;
         }
         out
+    }
+}
+
+/// Streamed-run completion aggregates: what the engine folds each
+/// completion into instead of pushing onto `SimResult`'s vectors.
+struct StreamAgg {
+    /// SLO the miss tally is counted against (fixed for the whole run —
+    /// streamed summaries cannot re-derive misses at another SLO).
+    slo: f64,
+    completed: u64,
+    misses: u64,
+    latency_sum: f64,
+    max_latency: f64,
+}
+
+/// Aggregate output of a streamed open-loop run ([`simulate_streamed`]).
+///
+/// Everything here is derivable from a materialized [`SimResult`] by
+/// folding its vectors in completion order — bit-exactly, which is what
+/// `tests/streaming_conformance.rs` asserts. Quantities that need the
+/// full latency vector (P99, miss-rate series) are deliberately absent:
+/// holding the vector is exactly what streaming avoids. (A fixed-memory
+/// quantile sketch is possible future work; the robustness/budget
+/// ledgers keep using materialized runs for P99.)
+#[derive(Debug, Clone)]
+pub struct StreamSummary {
+    /// Queries pulled from the arrival source.
+    pub queries: u64,
+    /// Queries completed (== `queries` in open loop: nothing sheds).
+    pub completed: u64,
+    /// Completions with end-to-end latency strictly over the SLO.
+    pub misses: u64,
+    /// Sum of end-to-end latencies, folded in completion order.
+    pub latency_sum: f64,
+    /// Largest end-to-end latency observed.
+    pub max_latency: f64,
+    /// Simulated time of the last processed arrival or event.
+    pub horizon: f64,
+    /// Open-loop cost: static config rate x horizon.
+    pub cost_dollars: f64,
+    /// Per-stage statistics (same shape as [`SimResult::stage_stats`]).
+    pub stage_stats: Vec<StageStats>,
+    /// Largest number of query records resident at once. With prefix
+    /// compaction this tracks the in-flight window, not the horizon —
+    /// the engine's working-set measure and the number the long-horizon
+    /// CI smoke bounds.
+    pub peak_queries_resident: usize,
+}
+
+impl StreamSummary {
+    /// Mean end-to-end latency (0.0 with no completions).
+    pub fn mean_latency(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.completed as f64
+        }
+    }
+
+    /// SLO miss rate over completed queries (0.0 with no completions).
+    pub fn miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.completed as f64
+        }
     }
 }
 
@@ -308,6 +374,15 @@ pub(super) struct Engine<'a> {
     batch_seq: u64,
     /// Queries not yet completed or shed (run-loop termination).
     outstanding: usize,
+    /// Streamed runs only: absolute qid of `queries[0]`. Compaction
+    /// drains the completed prefix of the query table and advances this
+    /// base, so `queries[qid - query_base]` keeps resolving absolute
+    /// qids. Always 0 in materialized runs — every index site subtracts
+    /// it, which is bit-exact there.
+    query_base: usize,
+    /// Streamed runs only: O(1) completion aggregates replacing the
+    /// per-query result vectors (`None` ⇔ the materialized path).
+    stream: Option<StreamAgg>,
     result: SimResult,
     // Cost accounting (controlled mode).
     last_cost_time: f64,
@@ -366,6 +441,8 @@ impl<'a> Engine<'a> {
             probe: None,
             batch_seq: 0,
             outstanding: 0,
+            query_base: 0,
+            stream: None,
             result: SimResult {
                 latencies: Vec::new(),
                 completions: Vec::new(),
@@ -481,7 +558,7 @@ impl<'a> Engine<'a> {
     /// latency at or under the SLO) unless the deadline sweep already
     /// counted them while they aged in a queue.
     fn shed_query(&mut self, qid: u32, now: f64) {
-        let q = &mut self.queries[qid as usize];
+        let q = &mut self.queries[qid as usize - self.query_base];
         if q.shed || q.remaining == 0 {
             return;
         }
@@ -513,7 +590,7 @@ impl<'a> Engine<'a> {
             None => return,
         };
         while let Some(&qid) = self.stages[stage].queue.front() {
-            let q = &self.queries[qid as usize];
+            let q = &self.queries[qid as usize - self.query_base];
             if q.shed {
                 self.stages[stage].queue.pop_front();
             } else if shed_after.is_some_and(|bound| now - q.arrival > bound) {
@@ -587,7 +664,7 @@ impl<'a> Engine<'a> {
                     // is disabled and hits are only counted at completion,
                     // never twice.
                     for &qid in self.arena.get(slice) {
-                        let q = &mut self.queries[qid as usize];
+                        let q = &mut self.queries[qid as usize - self.query_base];
                         if q.remaining == 1 && !q.hit_counted && done - q.arrival <= b.slo {
                             q.hit_counted = true;
                             if b.count_hit() {
@@ -638,7 +715,7 @@ impl<'a> Engine<'a> {
     /// is *not* done here — the BatchDone handler emits one coalesced
     /// Delivery record for the whole batch instead.
     fn complete_query_visit(&mut self, qid: u32, now: f64) {
-        let q = &mut self.queries[qid as usize];
+        let q = &mut self.queries[qid as usize - self.query_base];
         // A shed query may still ride along in batches that were formed
         // before it was dropped (or on parallel branches): its visits are
         // no-ops — it was already removed from every tally it can affect.
@@ -649,8 +726,24 @@ impl<'a> Engine<'a> {
         if q.remaining == 0 {
             let latency = now - q.arrival;
             let hit_counted = q.hit_counted;
-            self.result.latencies.push(latency);
-            self.result.completions.push((now, latency));
+            if let Some(agg) = &mut self.stream {
+                // Streamed runs fold completions into O(1) aggregates
+                // instead of per-query vectors. Completions arrive in
+                // the same order as the materialized run's, so the
+                // folded sums are bit-identical to folding that run's
+                // latency vector (asserted by the conformance suite).
+                agg.completed += 1;
+                if latency > agg.slo {
+                    agg.misses += 1;
+                }
+                agg.latency_sum += latency;
+                if latency > agg.max_latency {
+                    agg.max_latency = latency;
+                }
+            } else {
+                self.result.latencies.push(latency);
+                self.result.completions.push((now, latency));
+            }
             if let Some(b) = &mut self.budget {
                 // No *miss* counting here: the deadline sweep at this same
                 // `now` already counted every miss — `latency > slo` is
@@ -859,14 +952,14 @@ impl<'a> Engine<'a> {
             // Reverse iteration + push_front keeps the batch's original
             // order at the head of the queue.
             for &qid in qids.iter().rev() {
-                if self.queries[qid as usize].shed {
+                if self.queries[qid as usize - self.query_base].shed {
                     continue;
                 }
-                if self.queries[qid as usize].retries as u32 >= max_retries {
+                if self.queries[qid as usize - self.query_base].retries as u32 >= max_retries {
                     self.shed_query(qid, now);
                 } else {
-                    self.queries[qid as usize].retries =
-                        self.queries[qid as usize].retries.saturating_add(1);
+                    self.queries[qid as usize - self.query_base].retries =
+                        self.queries[qid as usize - self.query_base].retries.saturating_add(1);
                     self.result.retries += 1;
                     self.stages[s].queue.push_front(qid);
                     if let Some(p) = self.probe.as_deref_mut() {
@@ -886,6 +979,167 @@ impl<'a> Engine<'a> {
         let t = self.total_provisioned();
         self.result.replica_timeline.push((now, t));
         self.try_dispatch(s, now);
+    }
+
+    /// Handle one `BatchDone` event: retire or idle the replica, record
+    /// completions, and emit the coalesced `Delivery` record. Extracted
+    /// verbatim from the materialized run loop so the streamed loop
+    /// shares it (both loops dispatch the same event kinds).
+    fn on_batch_done(&mut self, stage: u16, slice: u32, now: f64) {
+        let s = stage as usize;
+        let doomed = match &mut self.faults {
+            Some(f) => match f.doomed.iter().position(|&d| d == slice) {
+                Some(pos) => {
+                    f.doomed.swap_remove(pos);
+                    true
+                }
+                None => false,
+            },
+            None => false,
+        };
+        if doomed {
+            // The replica crashed mid-batch: its queries were
+            // requeued (or shed) at crash time and the replica
+            // already left the stage bookkeeping, so the stale
+            // completion only returns the slice to the pool.
+            self.arena.free(slice);
+        } else {
+            if let Some(f) = &mut self.faults {
+                if let Some(pos) = f.inflight[s].iter().position(|&x| x == slice) {
+                    f.inflight[s].remove(pos);
+                }
+            }
+            {
+                let st = &mut self.stages[s];
+                if st.retire_debt > 0 {
+                    st.retire_debt -= 1;
+                    st.online -= 1;
+                } else {
+                    st.idle += 1;
+                }
+            }
+            // Completions are recorded at the batch's finish
+            // time; the routed hops land one RPC later through a
+            // single coalesced Delivery record reusing this very
+            // qid slice — unless nothing routes anywhere, in
+            // which case the slice goes straight back to the
+            // pool (an empty Delivery would keep controlled runs
+            // alive past their old termination point).
+            let spec = self.spec;
+            let qids = std::mem::take(self.arena.get_mut(slice));
+            let mut routes = false;
+            for &qid in &qids {
+                if !routes {
+                    let visited = self.queries[qid as usize - self.query_base].visited;
+                    for &c in &spec.stages[s].children {
+                        if visited & (1 << c) != 0 {
+                            routes = true;
+                            break;
+                        }
+                    }
+                }
+                self.complete_query_visit(qid, now);
+                if self.probe.is_some() && !self.queries[qid as usize - self.query_base].shed {
+                    let finished = self.queries[qid as usize - self.query_base].remaining == 0;
+                    if let Some(p) = self.probe.as_deref_mut() {
+                        p.on_visit_done(s, qid, now);
+                        if finished {
+                            p.on_query_done(qid, now);
+                        }
+                    }
+                }
+                if self.queries[qid as usize - self.query_base].remaining == 0 {
+                    self.outstanding -= 1;
+                }
+            }
+            *self.arena.get_mut(slice) = qids;
+            if routes {
+                self.events.push(now + self.rpc, EventKind::Delivery { stage, slice });
+            } else {
+                self.arena.free(slice);
+            }
+            self.try_dispatch(s, now);
+        }
+    }
+
+    /// Handle one `Delivery` event: replay the batch's routed hops.
+    /// Extracted verbatim from the materialized run loop (see
+    /// [`Self::on_batch_done`]); the `query_base` guard is the one
+    /// streaming-only addition, dead in materialized runs.
+    fn on_delivery(&mut self, stage: u16, slice: u32, now: f64) {
+        let s = stage as usize;
+        let spec = self.spec;
+        let qids = std::mem::take(self.arena.get_mut(slice));
+        // This one record stands in for the per-hop Enqueue
+        // records the old engine pushed back-to-back: they
+        // were seq-contiguous at a single time, so nothing
+        // could interleave between them, and replaying the
+        // hops qid-major, child-minor is order-identical.
+        // The budget-proof check between hops replicates the
+        // main loop's per-record check (the deadline sweep
+        // is a no-op at an unchanged `now`, so only the
+        // proof flags matter); the first hop is covered by
+        // the check the loop already ran for this record.
+        let mut first = true;
+        'hops: for &qid in &qids {
+            // Streamed runs only: a query that completed between this
+            // record's scheduling and now may have been compacted away
+            // (`query_base` moved past it). A completed query routes
+            // nowhere — were a child of `s` in its visit set, that
+            // visit would still be outstanding — so skipping the hop
+            // replay is a no-op; unreachable when `query_base` is 0.
+            if (qid as usize) < self.query_base {
+                continue;
+            }
+            if self.faults.is_some() && self.queries[qid as usize - self.query_base].shed {
+                // Shed queries route nowhere: dropping the hop
+                // here saves the downstream queue traffic the
+                // head-prune would discard anyway.
+                continue;
+            }
+            let visited = self.queries[qid as usize - self.query_base].visited;
+            for &c in &spec.stages[s].children {
+                if visited & (1 << c) == 0 {
+                    continue;
+                }
+                if !first && (self.aborted || self.accepted) {
+                    break 'hops;
+                }
+                first = false;
+                self.enqueue(c, qid, now);
+            }
+        }
+        *self.arena.get_mut(slice) = qids;
+        self.arena.free(slice);
+    }
+
+    /// Streamed runs only: drop the completed prefix of the query table
+    /// and advance `query_base` so absolute qids keep resolving. Called
+    /// at chunk boundaries (the prefix is longest right after a chunk
+    /// drains); the minimum batch amortizes the drain's memmove.
+    fn compact_queries(&mut self) {
+        const MIN_COMPACT: usize = 1024;
+        let k = self.queries.iter().take_while(|q| q.remaining == 0).count();
+        if k >= MIN_COMPACT {
+            self.queries.drain(..k);
+            self.query_base += k;
+        }
+    }
+
+    /// Fold per-stage stats into their result form (fills `mean_batch`).
+    fn finalize_stage_stats(&self) -> Vec<super::StageStats> {
+        self.stages
+            .iter()
+            .map(|s| {
+                let mut st = s.stats.clone();
+                st.mean_batch = if st.batches == 0 {
+                    0.0
+                } else {
+                    s.batch_size_sum as f64 / st.batches as f64
+                };
+                st
+            })
+            .collect()
     }
 
     /// Run to completion. `controller` is optional (open-loop Estimator
@@ -985,119 +1239,8 @@ impl<'a> Engine<'a> {
                 break;
             }
             match ev.kind {
-                EventKind::BatchDone { stage, slice } => {
-                    let s = stage as usize;
-                    let doomed = match &mut self.faults {
-                        Some(f) => match f.doomed.iter().position(|&d| d == slice) {
-                            Some(pos) => {
-                                f.doomed.swap_remove(pos);
-                                true
-                            }
-                            None => false,
-                        },
-                        None => false,
-                    };
-                    if doomed {
-                        // The replica crashed mid-batch: its queries were
-                        // requeued (or shed) at crash time and the replica
-                        // already left the stage bookkeeping, so the stale
-                        // completion only returns the slice to the pool.
-                        self.arena.free(slice);
-                    } else {
-                        if let Some(f) = &mut self.faults {
-                            if let Some(pos) = f.inflight[s].iter().position(|&x| x == slice) {
-                                f.inflight[s].remove(pos);
-                            }
-                        }
-                        {
-                            let st = &mut self.stages[s];
-                            if st.retire_debt > 0 {
-                                st.retire_debt -= 1;
-                                st.online -= 1;
-                            } else {
-                                st.idle += 1;
-                            }
-                        }
-                        // Completions are recorded at the batch's finish
-                        // time; the routed hops land one RPC later through a
-                        // single coalesced Delivery record reusing this very
-                        // qid slice — unless nothing routes anywhere, in
-                        // which case the slice goes straight back to the
-                        // pool (an empty Delivery would keep controlled runs
-                        // alive past their old termination point).
-                        let spec = self.spec;
-                        let qids = std::mem::take(self.arena.get_mut(slice));
-                        let mut routes = false;
-                        for &qid in &qids {
-                            if !routes {
-                                let visited = self.queries[qid as usize].visited;
-                                for &c in &spec.stages[s].children {
-                                    if visited & (1 << c) != 0 {
-                                        routes = true;
-                                        break;
-                                    }
-                                }
-                            }
-                            self.complete_query_visit(qid, now);
-                            if self.probe.is_some() && !self.queries[qid as usize].shed {
-                                let finished = self.queries[qid as usize].remaining == 0;
-                                if let Some(p) = self.probe.as_deref_mut() {
-                                    p.on_visit_done(s, qid, now);
-                                    if finished {
-                                        p.on_query_done(qid, now);
-                                    }
-                                }
-                            }
-                            if self.queries[qid as usize].remaining == 0 {
-                                self.outstanding -= 1;
-                            }
-                        }
-                        *self.arena.get_mut(slice) = qids;
-                        if routes {
-                            self.events.push(now + self.rpc, EventKind::Delivery { stage, slice });
-                        } else {
-                            self.arena.free(slice);
-                        }
-                        self.try_dispatch(s, now);
-                    }
-                }
-                EventKind::Delivery { stage, slice } => {
-                    let s = stage as usize;
-                    let spec = self.spec;
-                    let qids = std::mem::take(self.arena.get_mut(slice));
-                    // This one record stands in for the per-hop Enqueue
-                    // records the old engine pushed back-to-back: they
-                    // were seq-contiguous at a single time, so nothing
-                    // could interleave between them, and replaying the
-                    // hops qid-major, child-minor is order-identical.
-                    // The budget-proof check between hops replicates the
-                    // main loop's per-record check (the deadline sweep
-                    // is a no-op at an unchanged `now`, so only the
-                    // proof flags matter); the first hop is covered by
-                    // the check the loop already ran for this record.
-                    let mut first = true;
-                    'hops: for &qid in &qids {
-                        if self.faults.is_some() && self.queries[qid as usize].shed {
-                            // Shed queries route nowhere: dropping the hop
-                            // here saves the downstream queue traffic the
-                            // head-prune would discard anyway.
-                            continue;
-                        }
-                        let visited = self.queries[qid as usize].visited;
-                        for &c in &spec.stages[s].children {
-                            if visited & (1 << c) == 0 {
-                                continue;
-                            }
-                            if !first && (self.aborted || self.accepted) {
-                                break 'hops;
-                            }
-                            first = false;
-                            self.enqueue(c, qid, now);
-                        }
-                    }
-                    *self.arena.get_mut(slice) = qids;
-                    self.arena.free(slice);
-                }
+                EventKind::BatchDone { stage, slice } => self.on_batch_done(stage, slice, now),
+                EventKind::Delivery { stage, slice } => self.on_delivery(stage, slice, now),
                 EventKind::ReplicaUp { stage, slot } => {
                     // Retire the cancel slot; `false` means a scale-down
                     // cancelled this activation and never revived it —
@@ -1161,19 +1304,7 @@ impl<'a> Engine<'a> {
             }
         }
         self.accrue_cost(self.result.horizon);
-        self.result.stage_stats = self
-            .stages
-            .iter()
-            .map(|s| {
-                let mut st = s.stats.clone();
-                st.mean_batch = if st.batches == 0 {
-                    0.0
-                } else {
-                    s.batch_size_sum as f64 / st.batches as f64
-                };
-                st
-            })
-            .collect();
+        self.result.stage_stats = self.finalize_stage_stats();
         // A query lands in at most one of the two tallies (a counted hit
         // can never age past the deadline before its scheduled completion
         // event is processed), so the two thresholds cannot both be met.
@@ -1186,6 +1317,120 @@ impl<'a> Engine<'a> {
             BudgetVerdict::Completed
         };
         (self.result, verdict)
+    }
+
+    /// Streamed open-loop run: pull arrivals from `source` in chunks of
+    /// at most `chunk`, sample routing lazily, and fold completions into
+    /// a [`StreamSummary`] — memory stays O(in-flight window), never
+    /// O(trace).
+    ///
+    /// Equivalence with the materialized run loop, piece by piece: the
+    /// source yields the same arrival values in the same order as the
+    /// materialized trace (the workload-layer streaming contract); the
+    /// [`RoutingSampler`] yields the same visit sequence as
+    /// `RoutingPlan::build` (it *is* the plan builder); the arrival/heap
+    /// merge uses the identical `a <= e` tie-break; and the event arms
+    /// call the same extracted handlers. So every dispatch, completion
+    /// time, and stat lands bit-identically — asserted against
+    /// [`simulate`] by `tests/streaming_conformance.rs` across chunk
+    /// sizes including 1.
+    pub(super) fn run_streamed(
+        mut self,
+        source: &mut dyn ArrivalSource,
+        slo: f64,
+        chunk: usize,
+    ) -> StreamSummary {
+        assert!(chunk > 0, "chunk size must be positive");
+        debug_assert!(
+            self.budget.is_none() && self.faults.is_none() && self.probe.is_none(),
+            "streamed runs are plain open loop"
+        );
+        self.stream = Some(StreamAgg {
+            slo,
+            completed: 0,
+            misses: 0,
+            latency_sum: 0.0,
+            max_latency: 0.0,
+        });
+        let mut sampler = RoutingSampler::new(self.spec, self.params.routing_seed);
+        let mut buf: Vec<f64> = Vec::with_capacity(chunk);
+        let mut pos = 0usize;
+        let mut source_done = false;
+        let mut pulled: u64 = 0;
+        let mut peak_resident = 0usize;
+        loop {
+            if pos == buf.len() && !source_done {
+                buf.clear();
+                pos = 0;
+                if source.next_chunk(&mut buf, chunk) == 0 {
+                    source_done = true;
+                }
+                // A chunk boundary is the natural compaction point: the
+                // completed prefix is longest right after a chunk drains.
+                self.compact_queries();
+            }
+            // Same lazy merge as the materialized loop: chunk arrivals
+            // are time-sorted, ties break toward the arrival.
+            let arrival_time = buf.get(pos).copied();
+            let event_time = self.events.peek_time();
+            let take_arrival = match (arrival_time, event_time) {
+                (Some(a), Some(e)) => a <= e,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_arrival {
+                let now = arrival_time.unwrap();
+                pos += 1;
+                assert!(pulled <= u32::MAX as u64, "streamed run exceeds the u32 qid space");
+                let qid = pulled as u32;
+                pulled += 1;
+                let (visited, remaining) = sampler.next_visit();
+                self.queries.push(QueryState {
+                    arrival: now,
+                    visited,
+                    remaining,
+                    hit_counted: false,
+                    shed: false,
+                    retries: 0,
+                });
+                peak_resident = peak_resident.max(self.queries.len());
+                self.outstanding += 1;
+                let spec = self.spec;
+                for &r in &spec.roots {
+                    self.enqueue(r, qid, now);
+                }
+                self.result.horizon = now;
+                continue;
+            }
+            let ev = self.events.pop().unwrap();
+            let now = ev.time;
+            match ev.kind {
+                EventKind::BatchDone { stage, slice } => self.on_batch_done(stage, slice, now),
+                EventKind::Delivery { stage, slice } => self.on_delivery(stage, slice, now),
+                _ => unreachable!("open-loop streamed runs schedule only batch events"),
+            }
+            self.result.horizon = now;
+            // Unlike the materialized loop, `outstanding == 0` can occur
+            // mid-stream (a rate lull drains the pipeline); the run ends
+            // only once the source is dry too.
+            if self.outstanding == 0 && source_done && pos == buf.len() {
+                break;
+            }
+        }
+        let stage_stats = self.finalize_stage_stats();
+        let agg = self.stream.take().expect("streamed run lost its aggregates");
+        StreamSummary {
+            queries: pulled,
+            completed: agg.completed,
+            misses: agg.misses,
+            latency_sum: agg.latency_sum,
+            max_latency: agg.max_latency,
+            horizon: self.result.horizon,
+            cost_dollars: 0.0,
+            stage_stats,
+            peak_queries_resident: peak_resident,
+        }
     }
 }
 
@@ -1316,4 +1561,29 @@ pub fn simulate_probed(
         .run_ext(trace, config, None, None, None);
     result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
     result
+}
+
+/// Streamed open-loop simulation: [`simulate`] without the memory.
+/// Arrivals are pulled from an [`ArrivalSource`] in chunks of at most
+/// `chunk` and completions fold into a [`StreamSummary`], so neither the
+/// trace, the routing plan, nor the latency vectors are ever
+/// materialized — memory is O(in-flight window) on any horizon. The
+/// summary's aggregates are bit-identical to folding [`simulate`]'s
+/// result over the materialized equivalent of the source, for any chunk
+/// size >= 1 (asserted by `tests/streaming_conformance.rs`). `slo` only
+/// feeds the miss tally; it does not shed or abort anything.
+pub fn simulate_streamed(
+    spec: &PipelineSpec,
+    profiles: &ProfileSet,
+    config: &PipelineConfig,
+    source: &mut dyn ArrivalSource,
+    params: &SimParams,
+    slo: f64,
+    chunk: usize,
+) -> StreamSummary {
+    let mut summary =
+        Engine::new(spec, profiles, config, params).run_streamed(source, slo, chunk);
+    // Open loop: cost = static config rate x makespan.
+    summary.cost_dollars = config.cost_per_hour() * summary.horizon / 3600.0;
+    summary
 }

@@ -100,6 +100,20 @@
 //! latency into per-stage queueing vs service vs RPC — exported as a
 //! Chrome trace-event document (`inferline simulate --trace-out`) and
 //! CSV, and aggregated per cell by the robustness harness.
+//!
+//! ## Streamed open loop
+//!
+//! [`simulate_streamed`] is the constant-memory counterpart of
+//! [`simulate`]: arrivals are pulled from a
+//! [`crate::workload::ArrivalSource`] in bounded chunks, per-query
+//! routing is sampled lazily by a [`RoutingSampler`] (the same sequence
+//! `RoutingPlan::build` materializes), completed query records are
+//! compacted away, and completions fold into a [`StreamSummary`] of O(1)
+//! aggregates. Memory tracks the in-flight window instead of the
+//! horizon, so multi-hour traces that cannot be materialized still
+//! simulate — with aggregates bit-identical to folding the materialized
+//! run's result (`tests/streaming_conformance.rs`, plus the long-horizon
+//! bounded-RSS smoke in CI).
 
 pub mod control;
 mod engine;
@@ -110,9 +124,10 @@ mod routing;
 
 pub use engine::{
     simulate, simulate_budgeted, simulate_budgeted_with_faults, simulate_probed,
-    simulate_with_faults, simulate_with_routing, BudgetVerdict, SimParams, SimResult, StageStats,
+    simulate_streamed, simulate_with_faults, simulate_with_routing, BudgetVerdict, SimParams,
+    SimResult, StageStats, StreamSummary,
 };
-pub use routing::RoutingPlan;
+pub use routing::{RoutingPlan, RoutingSampler};
 
 use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;

@@ -36,10 +36,47 @@ pub struct RoutingPlan {
 impl RoutingPlan {
     /// Sample every query's visit set, exactly as the engine would when
     /// seeding arrivals without a plan: a base RNG seeded with
-    /// `routing_seed`, forked once per query in trace order.
+    /// `routing_seed`, forked once per query in trace order. Delegates
+    /// to [`RoutingSampler`] so the materialized plan and the lazy
+    /// streaming sampler share one sampling sequence by construction.
     pub fn build(spec: &PipelineSpec, trace: &Trace, routing_seed: u64) -> RoutingPlan {
+        let mut sampler = RoutingSampler::new(spec, routing_seed);
+        let visits = (0..trace.len()).map(|_| sampler.next_visit()).collect();
+        RoutingPlan { visits }
+    }
+
+    /// Number of queries the plan covers (must equal the trace length).
+    pub fn len(&self) -> usize {
+        self.visits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.visits.is_empty()
+    }
+}
+
+/// Lazy per-query routing: the streaming counterpart of
+/// [`RoutingPlan`]. A [`RoutingPlan`] pre-samples a whole trace (O(n)
+/// memory); a `RoutingSampler` derives the identical visit sequence
+/// from the same `routing_seed` one query at a time — the base RNG
+/// fork advances per query, so calling [`RoutingSampler::next_visit`]
+/// n times yields exactly `RoutingPlan::build(spec, trace_of_n, seed)`
+/// (asserted in this module's tests). Streamed arrivals are processed
+/// in qid order, which is what makes the sequential fork sound.
+pub struct RoutingSampler {
+    rng: Rng,
+    /// Pre-resolved (child, edge probability) lists per stage.
+    edges: Vec<Vec<(usize, f64)>>,
+    roots: Vec<usize>,
+    /// Reusable DFS stack.
+    stack: Vec<usize>,
+    /// Queries sampled so far == the next query's fork tag.
+    next: u64,
+}
+
+impl RoutingSampler {
+    pub fn new(spec: &PipelineSpec, routing_seed: u64) -> RoutingSampler {
         debug_assert!(spec.stages.len() <= 32, "visited bitmask limit");
-        let mut rng = Rng::new(routing_seed);
         // Pre-resolve edge probabilities once (avoids re-deriving the
         // conditional probabilities twice per query).
         let edges: Vec<Vec<(usize, f64)>> = spec
@@ -53,36 +90,33 @@ impl RoutingPlan {
                     .collect()
             })
             .collect();
-        let mut visits = Vec::with_capacity(trace.len());
-        // One reusable DFS stack for all queries.
-        let mut stack: Vec<usize> = Vec::with_capacity(spec.stages.len());
-        for i in 0..trace.len() {
-            let mut q_rng = rng.fork(i as u64);
-            let mut visited: u32 = 0;
-            let mut remaining: u8 = 0;
-            stack.clear();
-            stack.extend_from_slice(&spec.roots);
-            while let Some(s) = stack.pop() {
-                visited |= 1 << s;
-                remaining += 1;
-                for &(c, p) in &edges[s] {
-                    if p >= 1.0 || q_rng.bool(p) {
-                        stack.push(c);
-                    }
+        RoutingSampler {
+            rng: Rng::new(routing_seed),
+            edges,
+            roots: spec.roots.clone(),
+            stack: Vec::with_capacity(spec.stages.len()),
+            next: 0,
+        }
+    }
+
+    /// Sample the next query's (visited-stage bitmask, visit count).
+    pub fn next_visit(&mut self) -> (u32, u8) {
+        let mut q_rng = self.rng.fork(self.next);
+        self.next += 1;
+        let mut visited: u32 = 0;
+        let mut remaining: u8 = 0;
+        self.stack.clear();
+        self.stack.extend_from_slice(&self.roots);
+        while let Some(s) = self.stack.pop() {
+            visited |= 1 << s;
+            remaining += 1;
+            for &(c, p) in &self.edges[s] {
+                if p >= 1.0 || q_rng.bool(p) {
+                    self.stack.push(c);
                 }
             }
-            visits.push((visited, remaining));
         }
-        RoutingPlan { visits }
-    }
-
-    /// Number of queries the plan covers (must equal the trace length).
-    pub fn len(&self) -> usize {
-        self.visits.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.visits.is_empty()
+        (visited, remaining)
     }
 }
 
@@ -118,5 +152,17 @@ mod tests {
         let b = RoutingPlan::build(&spec, &trace, 2);
         // social-media has conditional stages, so some query must differ.
         assert_ne!(a.visits, b.visits);
+    }
+
+    #[test]
+    fn lazy_sampler_reproduces_the_materialized_plan() {
+        for spec in [pipelines::social_media(), pipelines::image_processing()] {
+            let trace = gamma_trace(80.0, 1.0, 15.0, 3);
+            let plan = RoutingPlan::build(&spec, &trace, 7);
+            let mut sampler = RoutingSampler::new(&spec, 7);
+            let lazy: Vec<(u32, u8)> =
+                (0..trace.len()).map(|_| sampler.next_visit()).collect();
+            assert_eq!(plan.visits, lazy);
+        }
     }
 }

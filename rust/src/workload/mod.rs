@@ -33,6 +33,12 @@ impl Trace {
     /// [`Trace::new`]'s debug assertion vanishes exactly where replayed
     /// traces are most likely to be malformed.
     pub fn try_new(arrivals: Vec<f64>) -> Result<Trace, String> {
+        // Finiteness first: NaN compares false to everything, so a NaN
+        // mid-trace would sail through the order scan and the error for
+        // mixed-bad inputs would name the wrong failure class/index.
+        if let Some(i) = arrivals.iter().position(|t| !t.is_finite()) {
+            return Err(format!("arrival {i} is not finite: {}", arrivals[i]));
+        }
         for (i, w) in arrivals.windows(2).enumerate() {
             if w[0] > w[1] {
                 return Err(format!(
@@ -42,9 +48,6 @@ impl Trace {
                     w[1]
                 ));
             }
-        }
-        if let Some(i) = arrivals.iter().position(|t| !t.is_finite()) {
-            return Err(format!("arrival {i} is not finite: {}", arrivals[i]));
         }
         Ok(Trace { arrivals })
     }
@@ -91,8 +94,15 @@ impl Trace {
     pub fn peak_rate(&self, window: f64) -> f64 {
         assert!(window > 0.0);
         let a = &self.arrivals;
-        if a.len() < 2 {
-            return self.mean_rate();
+        // Below 2 arrivals `mean_rate()` is NaN (no inter-arrival span),
+        // which would silently poison CG-Peak planning and every
+        // downstream cost/ratio comparison: an empty trace has no load,
+        // a single arrival is one query in the best window.
+        if a.is_empty() {
+            return 0.0;
+        }
+        if a.len() == 1 {
+            return 1.0 / window;
         }
         let mut lo = 0usize;
         let mut best = 0usize;
@@ -127,10 +137,15 @@ impl Trace {
     }
 
     /// Save as newline-delimited seconds (compact, diffable).
+    ///
+    /// Timestamps use Rust's shortest-roundtrip `Display` formatting, so
+    /// save→load reproduces every `f64` bit-exactly — fixed-precision
+    /// `{:.6}` would truncate and break the "replay ⇒ byte-identical
+    /// trace" determinism contract for file-backed scenarios.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         let mut out = String::with_capacity(self.arrivals.len() * 12);
         for t in &self.arrivals {
-            out.push_str(&format!("{t:.6}\n"));
+            out.push_str(&format!("{t}\n"));
         }
         std::fs::write(path, out)
     }
@@ -242,7 +257,11 @@ pub fn varying_trace(phases: &[Phase], seed: u64) -> Trace {
 }
 
 pub mod autoscale;
+pub mod production;
 pub mod scenarios;
+pub mod stream;
+
+pub use stream::{ArrivalSource, MaterializedSource};
 
 #[cfg(test)]
 mod tests {
@@ -326,10 +345,8 @@ mod tests {
         let path = dir.join("t.txt");
         tr.save(&path).unwrap();
         let back = Trace::load(&path).unwrap();
-        assert_eq!(back.len(), tr.len());
-        for (a, b) in back.arrivals.iter().zip(&tr.arrivals) {
-            assert!((a - b).abs() < 1e-5);
-        }
+        // Shortest-roundtrip formatting makes save→load bit-exact.
+        assert_eq!(back, tr);
     }
 
     #[test]
@@ -362,6 +379,34 @@ mod tests {
     }
 
     #[test]
+    fn try_new_reports_nan_as_non_finite_not_out_of_order() {
+        // NaN compares false to everything: before the fix the order
+        // scan ran first, silently passed the NaN, and a *later* real
+        // order violation was reported instead of the NaN itself.
+        let err = Trace::try_new(vec![1.0, f64::NAN, 2.0, 1.5]).unwrap_err();
+        assert!(err.contains("not finite"), "{err}");
+        assert!(err.contains("arrival 1"), "{err}");
+        // A clean out-of-order input still reports the order violation.
+        let err = Trace::try_new(vec![1.0, 3.0, 2.0]).unwrap_err();
+        assert!(err.contains("out of order"), "{err}");
+        assert!(err.contains("index 2"), "{err}");
+    }
+
+    #[test]
+    fn peak_rate_is_finite_for_degenerate_traces() {
+        // Empty: no load, not NaN.
+        assert_eq!(Trace::default().peak_rate(0.3), 0.0);
+        // Single arrival: one query in the best window.
+        let one = Trace::new(vec![5.0]);
+        assert_eq!(one.peak_rate(0.5), 2.0);
+        assert_eq!(one.peak_rate(2.0), 0.5);
+        // Regression shape: the old code delegated to mean_rate(),
+        // which is NaN below 2 samples.
+        assert!(one.peak_rate(0.3).is_finite());
+        assert!(Trace::default().peak_rate(0.3).is_finite());
+    }
+
+    #[test]
     fn save_load_roundtrip_preserves_order_and_length() {
         let tr = gamma_trace(120.0, 2.0, 20.0, 31);
         let dir = std::env::temp_dir().join("inferline-test-traces");
@@ -371,9 +416,27 @@ mod tests {
         let back = Trace::load(&path).unwrap();
         assert_eq!(back.len(), tr.len());
         assert!(back.arrivals.windows(2).all(|w| w[0] <= w[1]));
-        for (a, b) in back.arrivals.iter().zip(&tr.arrivals) {
-            assert!((a - b).abs() < 1e-5);
-        }
+        // Exact equality: the save format must roundtrip every bit.
+        assert_eq!(back.arrivals, tr.arrivals);
+    }
+
+    #[test]
+    fn save_roundtrips_awkward_floats_exactly() {
+        // Values chosen to break fixed-precision formatting: more than
+        // six significant fractional digits, and a subnormal-ish tiny
+        // gap between neighbours.
+        let tr = Trace::new(vec![
+            0.000_000_123_456_789,
+            1.0 / 3.0,
+            2.0 / 3.0,
+            1.0 + f64::EPSILON,
+            12_345.678_901_234_567,
+        ]);
+        let dir = std::env::temp_dir().join("inferline-test-traces");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("awkward.txt");
+        tr.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), tr);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Production-trace ingest: Azure-Functions-style per-minute invocation
+//! counts, fitted to a renewal process and resampled as arrivals.
+//!
+//! Public FaaS traces (the Azure Functions 2021 release is the
+//! canonical example) publish *per-minute invocation counts*, not
+//! timestamps. The `production` scenario kind turns such a series into
+//! a replayable arrival process the same way
+//! [`super::autoscale::synthesize`] re-synthesizes the paper's
+//! AutoScale workloads: each minute becomes a piecewise-constant rate
+//! segment and inter-arrivals are drawn from a Gamma renewal process at
+//! that rate (`cv` configurable, 1.0 = Poisson) via
+//! [`super::scenarios::rate_curve_trace`] — so the resampled trace is
+//! seed-deterministic, streams through the [`super::stream`] API
+//! without materializing, and preserves the minute-scale shape of the
+//! source workload.
+//!
+//! CSV schema (checked in under `scenarios/`, one optional header line):
+//!
+//! ```csv
+//! minute,invocations
+//! 0,4260
+//! 1,3360
+//! ```
+//!
+//! Minute indices must be consecutive from 0 (a gap in a per-minute
+//! trace is a data bug, not a zero). `path` values with a `builtin:`
+//! prefix resolve to fixtures compiled into the binary
+//! ([`BUILTIN_PREFIX`]), so the robustness harness and CI need no
+//! runtime file access.
+
+/// Prefix marking a compiled-in fixture instead of an on-disk CSV.
+pub const BUILTIN_PREFIX: &str = "builtin:";
+
+/// 240 minutes of an Azure-Functions-style per-minute invocation
+/// series: diurnal business ramp, lunchtime bulge, post-lunch dip and
+/// two short bursts (deterministically synthesized — the real 2021
+/// trace is multi-GB and cannot be vendored).
+const AZURE_2021_SAMPLE: &str = include_str!("../../../scenarios/azure_2021_sample.csv");
+
+/// Parse a per-minute invocation CSV into counts (index = minute).
+pub fn parse_minutes_csv(text: &str) -> Result<Vec<f64>, String> {
+    let mut counts: Vec<f64> = Vec::new();
+    let mut seen_data = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = idx + 1;
+        let mut fields = line.split(',');
+        let (minute, count) = match (fields.next(), fields.next(), fields.next()) {
+            (Some(m), Some(c), None) => (m.trim(), c.trim()),
+            _ => {
+                return Err(format!(
+                    "line {lineno}: expected \"minute,invocations\", got {line:?}"
+                ))
+            }
+        };
+        if !seen_data && minute.parse::<f64>().is_err() {
+            // One optional header line before the data.
+            continue;
+        }
+        seen_data = true;
+        let m: f64 = minute
+            .parse()
+            .map_err(|e| format!("line {lineno}: bad minute index {minute:?}: {e}"))?;
+        if m != counts.len() as f64 {
+            return Err(format!(
+                "line {lineno}: minute indices must be consecutive from 0: \
+                 expected {}, got {minute}",
+                counts.len()
+            ));
+        }
+        let c: f64 = count
+            .parse()
+            .map_err(|e| format!("line {lineno}: bad invocation count {count:?}: {e}"))?;
+        if !c.is_finite() || c < 0.0 {
+            return Err(format!(
+                "line {lineno}: invocation count must be finite and >= 0, got {count}"
+            ));
+        }
+        counts.push(c);
+    }
+    if counts.is_empty() {
+        return Err("trace has no data rows".into());
+    }
+    Ok(counts)
+}
+
+/// Load per-minute counts from a `builtin:` fixture or an on-disk CSV.
+pub fn load_minutes(path: &str) -> Result<Vec<f64>, String> {
+    if let Some(name) = path.strip_prefix(BUILTIN_PREFIX) {
+        let text = match name {
+            "azure-2021-sample" => AZURE_2021_SAMPLE,
+            other => {
+                return Err(format!(
+                    "unknown builtin production trace {other:?} \
+                     (expected \"azure-2021-sample\")"
+                ))
+            }
+        };
+        parse_minutes_csv(text).map_err(|e| format!("{path}: {e}"))
+    } else {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        parse_minutes_csv(&text).map_err(|e| format!("{path}: {e}"))
+    }
+}
+
+/// Convert per-minute counts to per-minute rates (QPS). With `max_qps`
+/// the series is peak-rescaled — the busiest minute maps to `max_qps`,
+/// the way [`super::autoscale::synthesize`] pins the paper workloads —
+/// otherwise the raw counts are used (count / 60 s).
+pub fn per_minute_rates(counts: &[f64], max_qps: Option<f64>) -> Result<Vec<f64>, String> {
+    assert!(!counts.is_empty());
+    match max_qps {
+        Some(m) => {
+            let peak = counts.iter().copied().fold(f64::MIN, f64::max);
+            if peak <= 0.0 {
+                return Err("cannot peak-rescale an all-zero trace".into());
+            }
+            Ok(counts.iter().map(|c| c / peak * m).collect())
+        }
+        None => Ok(counts.iter().map(|c| c / 60.0).collect()),
+    }
+}
+
+/// The piecewise-constant rate curve over the per-minute series: the
+/// rate of minute ⌊t/60⌋ (the last minute extends to the horizon edge).
+/// Shared by the materialized build and the streaming source so both
+/// evaluate bit-identical rates.
+pub fn rate_at(rates: &[f64], t: f64) -> f64 {
+    rates[((t / 60.0) as usize).min(rates.len() - 1)]
+}
+
+/// Resolve a `production` scenario node to its per-minute rate curve:
+/// load, truncate to `limit_minutes` if given, then rescale. Truncation
+/// happens *before* peak rescaling, so `max_qps` pins the peak of the
+/// served window, not of the untruncated file.
+pub fn resolve_rates(
+    path: &str,
+    max_qps: Option<f64>,
+    limit_minutes: Option<usize>,
+) -> Result<Vec<f64>, String> {
+    let mut counts = load_minutes(path)?;
+    if let Some(n) = limit_minutes {
+        counts.truncate(n);
+    }
+    per_minute_rates(&counts, max_qps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_csv_with_and_without_header() {
+        let with = parse_minutes_csv("minute,invocations\n0,120\n1,60\n2,0\n").unwrap();
+        let without = parse_minutes_csv("0,120\n1,60\n2,0\n").unwrap();
+        assert_eq!(with, vec![120.0, 60.0, 0.0]);
+        assert_eq!(with, without);
+    }
+
+    #[test]
+    fn rejects_malformed_csv() {
+        for (text, needle) in [
+            ("", "no data rows"),
+            ("minute,invocations\n", "no data rows"),
+            ("0,10\n2,20\n", "consecutive"),
+            ("0,10\n1\n", "expected"),
+            ("0,10\n1,2,3\n", "expected"),
+            ("0,10\n1,abc\n", "bad invocation count"),
+            ("0,10\n1,-5\n", ">= 0"),
+            ("0,10\n1,inf\n", "finite"),
+        ] {
+            let err = parse_minutes_csv(text).unwrap_err();
+            assert!(err.contains(needle), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn builtin_fixture_loads_and_is_plausible() {
+        let counts = load_minutes("builtin:azure-2021-sample").unwrap();
+        assert_eq!(counts.len(), 240);
+        let peak = counts.iter().copied().fold(f64::MIN, f64::max);
+        let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+        assert!(peak > 0.0 && mean > 0.0);
+        // Production shape: real variation, but not a single spike.
+        assert!(mean / peak > 0.3 && mean / peak < 0.9, "mean/peak {}", mean / peak);
+        assert!(load_minutes("builtin:nope").unwrap_err().contains("unknown builtin"));
+    }
+
+    #[test]
+    fn peak_rescale_pins_the_busiest_minute() {
+        let rates = per_minute_rates(&[30.0, 120.0, 60.0], Some(200.0)).unwrap();
+        assert_eq!(rates, vec![50.0, 200.0, 100.0]);
+        let raw = per_minute_rates(&[30.0, 120.0], None).unwrap();
+        assert_eq!(raw, vec![0.5, 2.0]);
+        assert!(per_minute_rates(&[0.0, 0.0], Some(100.0)).is_err());
+    }
+
+    #[test]
+    fn rate_curve_is_piecewise_constant_per_minute() {
+        let rates = vec![10.0, 20.0, 30.0];
+        assert_eq!(rate_at(&rates, 0.0), 10.0);
+        assert_eq!(rate_at(&rates, 59.999), 10.0);
+        assert_eq!(rate_at(&rates, 60.0), 20.0);
+        assert_eq!(rate_at(&rates, 125.0), 30.0);
+        // The last minute extends to any horizon overhang.
+        assert_eq!(rate_at(&rates, 10_000.0), 30.0);
+    }
+
+    #[test]
+    fn truncation_happens_before_peak_rescale() {
+        // Global peak (minute 2) lies outside the 2-minute window, so
+        // the window's own peak must map to max_qps.
+        let dir = std::env::temp_dir().join("inferline-production-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("counts.csv");
+        std::fs::write(&path, "0,50\n1,100\n2,400\n").unwrap();
+        let rates = resolve_rates(path.to_str().unwrap(), Some(200.0), Some(2)).unwrap();
+        assert_eq!(rates, vec![100.0, 200.0]);
+    }
+}

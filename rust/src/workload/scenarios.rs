@@ -55,6 +55,7 @@
 //! | `lognormal`    | `lambda`, `sigma`, `duration`                            |
 //! | `replay`       | `path`, `time_scale`? ⊕ `target_rate`?                   |
 //! | `autoscale`    | `workload` (big_spike\|instant_spike), `max_qps`, `time_scale`? ⊕ `target_rate`? |
+//! | `production`   | `path` (`builtin:…` or per-minute CSV), `cv`?, `max_qps`?, `limit_minutes`? |
 //! | `superpose`    | `of` [nodes]                                             |
 //! | `splice`       | `of` [nodes]                                             |
 //! | `thin`         | `p`, `of` node                                           |
@@ -161,6 +162,13 @@ pub fn mmpp_trace(rates: &[f64], dwell: &[f64], duration: f64, seed: u64) -> Tra
     Trace::new(arrivals)
 }
 
+/// The diurnal rate closure, shared by the materialized generator and
+/// the streaming source so both evaluate bit-identical rates.
+fn diurnal_rate(base: f64, amplitude: f64, period: f64) -> impl Fn(f64) -> f64 {
+    let omega = 2.0 * std::f64::consts::PI / period;
+    move |t| base * (1.0 + amplitude * (omega * t).sin())
+}
+
 /// Diurnal (sinusoidal) rate curve:
 /// λ(t) = base · (1 + amplitude · sin(2πt / period)), Gamma(cv)
 /// inter-arrivals. `amplitude` in [0, 1) keeps the rate positive.
@@ -173,13 +181,32 @@ pub fn diurnal_trace(
     seed: u64,
 ) -> Trace {
     assert!(base > 0.0 && (0.0..1.0).contains(&amplitude) && period > 0.0);
-    let omega = 2.0 * std::f64::consts::PI / period;
-    rate_curve_trace(
-        |t| base * (1.0 + amplitude * (omega * t).sin()),
-        cv,
-        duration,
-        seed,
-    )
+    rate_curve_trace(diurnal_rate(base, amplitude, period), cv, duration, seed)
+}
+
+/// The flash-crowd rate closure, shared by the materialized generator
+/// and the streaming source so both evaluate bit-identical rates.
+fn flash_crowd_rate(
+    base: f64,
+    peak: f64,
+    start: f64,
+    ramp: f64,
+    hold: f64,
+    decay: f64,
+) -> impl Fn(f64) -> f64 {
+    move |t| {
+        if t < start {
+            base
+        } else if t < start + ramp {
+            base + (peak - base) * (t - start) / ramp
+        } else if t < start + ramp + hold {
+            peak
+        } else if t < start + ramp + hold + decay {
+            peak - (peak - base) * (t - start - ramp - hold) / decay
+        } else {
+            base
+        }
+    }
 }
 
 /// Flash crowd: baseline `base` QPS, then a spike at `start` that ramps
@@ -200,19 +227,7 @@ pub fn flash_crowd_trace(
     assert!(base > 0.0 && peak > 0.0 && start >= 0.0);
     assert!(ramp >= 0.0 && hold >= 0.0 && decay >= 0.0);
     rate_curve_trace(
-        |t| {
-            if t < start {
-                base
-            } else if t < start + ramp {
-                base + (peak - base) * (t - start) / ramp
-            } else if t < start + ramp + hold {
-                peak
-            } else if t < start + ramp + hold + decay {
-                peak - (peak - base) * (t - start - ramp - hold) / decay
-            } else {
-                base
-            }
-        },
+        flash_crowd_rate(base, peak, start, ramp, hold, decay),
         cv,
         duration,
         seed,
@@ -373,6 +388,18 @@ pub enum Scenario {
     /// Unlike a `replay` file node it needs no on-disk trace, so
     /// checked-in scenario specs can reference the paper workloads.
     AutoScale { workload: String, max_qps: f64, time_scale: f64, target_rate: Option<f64> },
+    /// Production-trace replay ([`crate::workload::production`]): a
+    /// per-minute invocation CSV (Azure-Functions-style) fitted to a
+    /// piecewise-constant Gamma renewal process and resampled. `path`
+    /// is an on-disk CSV or a compiled-in `builtin:` fixture;
+    /// `max_qps` peak-rescales the series (after `limit_minutes`
+    /// truncation) the way the autoscale workloads are pinned.
+    Production {
+        path: String,
+        cv: f64,
+        max_qps: Option<f64>,
+        limit_minutes: Option<usize>,
+    },
     Superpose(Vec<Scenario>),
     Splice(Vec<Scenario>),
     Thin { p: f64, of: Box<Scenario> },
@@ -574,6 +601,29 @@ impl Scenario {
                 let (time_scale, target_rate) = replay_scaling(node, path, "autoscale")?;
                 Ok(Scenario::AutoScale { workload, max_qps, time_scale, target_rate })
             }
+            "production" => {
+                let file = req_str(node, "path", path)?;
+                let cv = opt_num(node, "cv", 1.0, path)?;
+                check(cv > 0.0, path, "production cv must be > 0")?;
+                let max_qps = opt_f64_at(node, "max_qps", path)?;
+                check(
+                    max_qps.map_or(true, |m| m > 0.0),
+                    path,
+                    "production max_qps must be > 0",
+                )?;
+                let limit = opt_f64_at(node, "limit_minutes", path)?;
+                check(
+                    limit.map_or(true, |l| l >= 1.0 && l.fract() == 0.0),
+                    path,
+                    "production limit_minutes must be a positive integer",
+                )?;
+                Ok(Scenario::Production {
+                    path: file,
+                    cv,
+                    max_qps,
+                    limit_minutes: limit.map(|l| l as usize),
+                })
+            }
             "superpose" => Ok(Scenario::Superpose(node_list(node, "of", path)?)),
             "splice" => Ok(Scenario::Splice(node_list(node, "of", path)?)),
             "thin" => {
@@ -632,6 +682,17 @@ impl Scenario {
                 let trace = super::autoscale::synthesize(&minutes, *max_qps, seed);
                 Ok(apply_replay_scaling(trace, *time_scale, *target_rate))
             }
+            Scenario::Production { path, cv, max_qps, limit_minutes } => {
+                let rates =
+                    super::production::resolve_rates(path, *max_qps, *limit_minutes)?;
+                let duration = rates.len() as f64 * 60.0;
+                Ok(rate_curve_trace(
+                    |t| super::production::rate_at(&rates, t),
+                    *cv,
+                    duration,
+                    seed,
+                ))
+            }
             Scenario::Superpose(parts) => {
                 let traces = parts
                     .iter()
@@ -660,15 +721,109 @@ impl Scenario {
         }
     }
 
+    /// The streaming form of [`Scenario::build`]: a chunked
+    /// [`ArrivalSource`](super::stream::ArrivalSource) whose
+    /// concatenated chunks are **bit-identical** to the materialized
+    /// trace for the same (self, seed), for any chunk-size sequence —
+    /// the determinism contract of [`super::stream`], enforced across
+    /// the whole checked-in scenario grid by
+    /// `rust/tests/streaming_conformance.rs`.
+    ///
+    /// Child seeds derive exactly as in `build` ([`child_seed`] with
+    /// the same tags), so a subtree streams the same bytes whether its
+    /// siblings are streamed or materialized. `replay`, `autoscale`
+    /// and `ramp_between` nodes materialize internally (fixed-horizon
+    /// replays, and a crossfade anchored on the `from` trace's last
+    /// arrival) and stream from the buffer; every other kind streams
+    /// in O(chunk) memory.
+    pub fn source(
+        &self,
+        seed: u64,
+    ) -> Result<Box<dyn super::stream::ArrivalSource>, String> {
+        use super::stream::{
+            GammaSource, LognormalSource, MaterializedSource, MmppSource, ParetoSource,
+            RateCurveSource, SpliceSource, SuperposeSource, ThinSource,
+        };
+        Ok(match self {
+            Scenario::Gamma { lambda, cv, duration } => {
+                Box::new(GammaSource::new(*lambda, *cv, *duration, seed))
+            }
+            Scenario::Mmpp { rates, dwell, duration } => {
+                Box::new(MmppSource::new(rates.clone(), dwell.clone(), *duration, seed))
+            }
+            Scenario::Diurnal { base, amplitude, period, cv, duration } => {
+                Box::new(RateCurveSource::new(
+                    Box::new(diurnal_rate(*base, *amplitude, *period)),
+                    *cv,
+                    *duration,
+                    seed,
+                ))
+            }
+            Scenario::FlashCrowd { base, peak, start, ramp, hold, decay, cv, duration } => {
+                Box::new(RateCurveSource::new(
+                    Box::new(flash_crowd_rate(*base, *peak, *start, *ramp, *hold, *decay)),
+                    *cv,
+                    *duration,
+                    seed,
+                ))
+            }
+            Scenario::Pareto { lambda, shape, duration } => {
+                Box::new(ParetoSource::new(*lambda, *shape, *duration, seed))
+            }
+            Scenario::Lognormal { lambda, sigma, duration } => {
+                Box::new(LognormalSource::new(*lambda, *sigma, *duration, seed))
+            }
+            Scenario::Production { path, cv, max_qps, limit_minutes } => {
+                let rates =
+                    super::production::resolve_rates(path, *max_qps, *limit_minutes)?;
+                let duration = rates.len() as f64 * 60.0;
+                Box::new(RateCurveSource::new(
+                    Box::new(move |t| super::production::rate_at(&rates, t)),
+                    *cv,
+                    duration,
+                    seed,
+                ))
+            }
+            // Fixed-horizon replays and the crossfade (anchored on the
+            // `from` trace's last arrival) materialize internally.
+            Scenario::Replay { .. }
+            | Scenario::AutoScale { .. }
+            | Scenario::RampBetween { .. } => {
+                Box::new(MaterializedSource::new(self.build(seed)?))
+            }
+            Scenario::Superpose(parts) => Box::new(SuperposeSource::new(
+                parts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| p.source(child_seed(seed, i as u64)))
+                    .collect::<Result<Vec<_>, _>>()?,
+            )),
+            Scenario::Splice(parts) => Box::new(SpliceSource::new(
+                parts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| p.source(child_seed(seed, i as u64)))
+                    .collect::<Result<Vec<_>, _>>()?,
+            )),
+            Scenario::Thin { p, of } => Box::new(ThinSource::new(
+                of.source(child_seed(seed, 0))?,
+                *p,
+                child_seed(seed, 1),
+            )),
+        })
+    }
+
     /// Compress the scenario's *schedule* by `factor` (< 1 shortens):
     /// every duration, period, phase boundary, dwell time and overlap is
     /// scaled while rates are left untouched, so a 600 s scenario at
     /// 100 QPS becomes a 120 s scenario at 100 QPS with the same shape.
     /// This is how quick (CI) mode derives its matrix from the
     /// checked-in full-mode specs. Replayed timelines
-    /// ([`Scenario::Replay`] / [`Scenario::AutoScale`]) keep their own
-    /// horizon — compressing them would multiply the rate instead — so
-    /// specs built on them declare an explicit `"quick"` node.
+    /// ([`Scenario::Replay`] / [`Scenario::AutoScale`] /
+    /// [`Scenario::Production`]) keep their own horizon — compressing
+    /// them would multiply the rate instead — so specs built on them
+    /// declare an explicit `"quick"` node (`production` nodes can
+    /// shorten via `limit_minutes`).
     pub fn scaled(&self, factor: f64) -> Scenario {
         assert!(factor > 0.0, "scale factor {factor}");
         match self {
@@ -707,7 +862,9 @@ impl Scenario {
                 sigma: *sigma,
                 duration: duration * factor,
             },
-            Scenario::Replay { .. } | Scenario::AutoScale { .. } => self.clone(),
+            Scenario::Replay { .. }
+            | Scenario::AutoScale { .. }
+            | Scenario::Production { .. } => self.clone(),
             Scenario::Superpose(parts) => {
                 Scenario::Superpose(parts.iter().map(|p| p.scaled(factor)).collect())
             }
@@ -1107,6 +1264,43 @@ mod tests {
             plain.scenario_for(true),
             Scenario::Gamma { lambda: 100.0, cv: 1.0, duration: 120.0 }
         );
+    }
+
+    #[test]
+    fn production_node_builds_resamples_and_rejects_malformed() {
+        let spec = ScenarioSpec::parse_str(
+            r#"{"scenario": {"kind": "production", "path": "builtin:azure-2021-sample",
+                "cv": 1.0, "max_qps": 140, "limit_minutes": 5}}"#,
+        )
+        .unwrap();
+        let a = spec.scenario.build(7).unwrap();
+        assert_eq!(a, spec.scenario.build(7).unwrap());
+        assert_ne!(a, spec.scenario.build(8).unwrap());
+        // 5 minutes of piecewise-constant resampling, peak pinned to
+        // 140 QPS over the served window.
+        assert!(a.duration() > 250.0 && a.duration() <= 300.0, "duration {}", a.duration());
+        assert!(a.mean_rate() > 50.0 && a.mean_rate() <= 160.0, "rate {}", a.mean_rate());
+        // Fixed-horizon kind: schedule scaling leaves it untouched.
+        assert_eq!(spec.scenario.scaled(0.2), spec.scenario);
+        for text in [
+            r#"{"scenario": {"kind": "production"}}"#,
+            r#"{"scenario": {"kind": "production", "path": "builtin:azure-2021-sample",
+                "cv": 0}}"#,
+            r#"{"scenario": {"kind": "production", "path": "builtin:azure-2021-sample",
+                "max_qps": -5}}"#,
+            r#"{"scenario": {"kind": "production", "path": "builtin:azure-2021-sample",
+                "limit_minutes": 2.5}}"#,
+            r#"{"scenario": {"kind": "production", "path": "builtin:azure-2021-sample",
+                "limit_minutes": 0}}"#,
+        ] {
+            assert!(ScenarioSpec::parse_str(text).is_err(), "{text}");
+        }
+        // Unknown builtins fail at build, naming the fixture.
+        let bad = ScenarioSpec::parse_str(
+            r#"{"scenario": {"kind": "production", "path": "builtin:nope"}}"#,
+        )
+        .unwrap();
+        assert!(bad.scenario.build(1).unwrap_err().contains("unknown builtin"));
     }
 
     #[test]

@@ -1,0 +1,631 @@
+//! Chunked, pull-based arrival sources: the streaming face of the
+//! workload layer.
+//!
+//! Every scenario generator in this crate is seed-deterministic, but
+//! until this module they all *materialized* — `Scenario::build`
+//! realizes the whole arrival process into one `Vec<f64>`, capping
+//! simulation horizons at what fits in memory. [`ArrivalSource`] removes
+//! that cap: a source produces arrivals in bounded chunks that the
+//! simulator's event loop pulls on demand
+//! (`simulator::simulate_streamed`), so a day-long production trace
+//! costs O(chunk) memory instead of O(queries).
+//!
+//! ## Determinism contract
+//!
+//! **spec + seed ⇒ byte-identical arrival stream, materialized or
+//! streamed.** For every scenario node, concatenating the chunks of
+//! [`Scenario::source`](super::scenarios::Scenario::source) reproduces
+//! [`Scenario::build`](super::scenarios::Scenario::build) bit for bit,
+//! for *any* sequence of chunk sizes (including size 1). The streaming
+//! sources guarantee this by consuming the scenario's RNG stream in
+//! exactly the order the materialized generators do — each leaf below is
+//! the incremental form of the corresponding generator loop in
+//! [`super::scenarios`], and each operator replicates the materialized
+//! operator's RNG-consumption and ordering semantics:
+//!
+//! * [`SuperposeSource`] merges child streams smallest-timestamp-first,
+//!   breaking ties toward the lowest child index — exactly the order a
+//!   stable `total_cmp` sort gives the concatenated child traces.
+//! * [`SpliceSource`] shifts each child by the last arrival emitted so
+//!   far (empty children leave the offset untouched), matching the
+//!   `fold(concat)` in `scenarios::splice`.
+//! * [`ThinSource`] draws one Bernoulli per *input* arrival whether or
+//!   not it survives, like `scenarios::thin`.
+//!
+//! Three scenario kinds materialize internally and stream from the
+//! buffer: `ramp_between` (its crossfade window hangs off the *last*
+//! arrival of the `from` trace, which is unknowable before exhausting
+//! it), `replay` (bounded by the on-disk file it loads) and `autoscale`
+//! (a fixed ~1 h paper workload). They still satisfy the contract —
+//! only their memory is O(trace), documented here rather than hidden.
+//!
+//! The chunk-size invariance means a conformance suite can drive both
+//! representations over the whole checked-in scenario grid and assert
+//! `Vec<f64>` equality (`rust/tests/streaming_conformance.rs`), which is
+//! what keeps the two code paths from drifting.
+
+use crate::util::rng::Rng;
+
+use super::Trace;
+
+/// A pull-based, chunked arrival stream: timestamps in seconds from 0,
+/// nondecreasing across the whole stream.
+///
+/// `next_chunk` appends up to `max` arrivals to `out` and returns how
+/// many it appended; `0` means the stream is exhausted (and every later
+/// call must also return `0`). Callers own the buffer, so a long-horizon
+/// consumer can reuse one allocation for the entire run.
+pub trait ArrivalSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize;
+}
+
+/// Drain a source to a [`Trace`] by repeated `chunk`-sized pulls — the
+/// bridge back to the materialized world, used by the conformance tests
+/// and by tooling that wants a concrete trace from a streaming spec.
+pub fn drain(src: &mut dyn ArrivalSource, chunk: usize) -> Trace {
+    assert!(chunk > 0, "drain chunk size must be > 0");
+    let mut arrivals = Vec::new();
+    while src.next_chunk(&mut arrivals, chunk) > 0 {}
+    Trace::new(arrivals)
+}
+
+/// Shared chunk-filling loop: step the closure until the chunk is full
+/// or the stream ends.
+fn fill(out: &mut Vec<f64>, max: usize, mut step: impl FnMut() -> Option<f64>) -> usize {
+    let start = out.len();
+    while out.len() - start < max {
+        match step() {
+            Some(t) => out.push(t),
+            None => break,
+        }
+    }
+    out.len() - start
+}
+
+/// An already-materialized trace served through the streaming API.
+#[derive(Debug, Clone)]
+pub struct MaterializedSource {
+    arrivals: Vec<f64>,
+    pos: usize,
+}
+
+impl MaterializedSource {
+    pub fn new(trace: Trace) -> Self {
+        MaterializedSource { arrivals: trace.arrivals, pos: 0 }
+    }
+}
+
+impl ArrivalSource for MaterializedSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        let n = max.min(self.arrivals.len() - self.pos);
+        out.extend_from_slice(&self.arrivals[self.pos..self.pos + n]);
+        self.pos += n;
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leaf sources: incremental forms of the materialized generators.
+// ---------------------------------------------------------------------------
+
+/// Streaming [`super::gamma_trace`]: stationary Gamma renewals at rate
+/// λ with the given CV.
+pub struct GammaSource {
+    rng: Rng,
+    lambda: f64,
+    cv: f64,
+    duration: f64,
+    t: f64,
+    done: bool,
+}
+
+impl GammaSource {
+    pub fn new(lambda: f64, cv: f64, duration: f64, seed: u64) -> Self {
+        assert!(lambda > 0.0 && cv > 0.0 && duration > 0.0);
+        GammaSource { rng: Rng::new(seed), lambda, cv, duration, t: 0.0, done: false }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        self.t += self.rng.interarrival(self.lambda, self.cv);
+        if self.t > self.duration {
+            self.done = true;
+            return None;
+        }
+        Some(self.t)
+    }
+}
+
+impl ArrivalSource for GammaSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+/// Streaming [`super::scenarios::rate_curve_trace`]: non-homogeneous
+/// Gamma renewals whose instantaneous rate is `rate(t)` evaluated at the
+/// current arrival time, floored at the same small positive value.
+pub struct RateCurveSource {
+    rate: Box<dyn Fn(f64) -> f64>,
+    rng: Rng,
+    cv: f64,
+    duration: f64,
+    t: f64,
+    done: bool,
+}
+
+impl RateCurveSource {
+    pub fn new(rate: Box<dyn Fn(f64) -> f64>, cv: f64, duration: f64, seed: u64) -> Self {
+        assert!(cv > 0.0 && duration > 0.0);
+        RateCurveSource { rate, rng: Rng::new(seed), cv, duration, t: 0.0, done: false }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        let lambda = (self.rate)(self.t).max(1e-3);
+        self.t += self.rng.interarrival(lambda, self.cv);
+        if self.t > self.duration {
+            self.done = true;
+            return None;
+        }
+        Some(self.t)
+    }
+}
+
+impl ArrivalSource for RateCurveSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+/// Streaming [`super::scenarios::mmpp_trace`]: the same regime state
+/// machine, suspended between chunks. Regime boundaries, per-regime
+/// Poisson arrivals and the uniform state jump draw from the RNG in
+/// exactly the materialized order (the jump is drawn at the end of every
+/// regime, including the one that hits `duration`).
+pub struct MmppSource {
+    rates: Vec<f64>,
+    dwell: Vec<f64>,
+    duration: f64,
+    rng: Rng,
+    state: usize,
+    /// Start of the next regime (== end of the previous one).
+    t: f64,
+    /// Candidate arrival time inside the current regime.
+    a: f64,
+    /// End of the current regime, valid while `in_regime`.
+    end: f64,
+    in_regime: bool,
+    done: bool,
+}
+
+impl MmppSource {
+    pub fn new(rates: Vec<f64>, dwell: Vec<f64>, duration: f64, seed: u64) -> Self {
+        assert!(
+            !rates.is_empty() && rates.len() == dwell.len(),
+            "mmpp needs matching non-empty rates/dwell"
+        );
+        assert!(rates.iter().all(|&r| r > 0.0) && dwell.iter().all(|&d| d > 0.0));
+        assert!(duration > 0.0);
+        MmppSource {
+            rates,
+            dwell,
+            duration,
+            rng: Rng::new(seed),
+            state: 0,
+            t: 0.0,
+            a: 0.0,
+            end: 0.0,
+            in_regime: false,
+            done: false,
+        }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        loop {
+            if !self.in_regime {
+                if self.t >= self.duration {
+                    self.done = true;
+                    return None;
+                }
+                let sojourn = self.rng.exp(1.0 / self.dwell[self.state]);
+                self.end = (self.t + sojourn).min(self.duration);
+                self.a = self.t;
+                self.in_regime = true;
+            }
+            self.a += self.rng.exp(self.rates[self.state]);
+            if self.a >= self.end {
+                self.t = self.end;
+                self.in_regime = false;
+                if self.rates.len() > 1 {
+                    let mut next = self.rng.usize(self.rates.len() - 1);
+                    if next >= self.state {
+                        next += 1;
+                    }
+                    self.state = next;
+                }
+                continue;
+            }
+            return Some(self.a);
+        }
+    }
+}
+
+impl ArrivalSource for MmppSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+/// Streaming [`super::scenarios::pareto_trace`]: Pareto renewals with
+/// shape α > 1 and scale chosen for mean rate λ.
+pub struct ParetoSource {
+    rng: Rng,
+    xm: f64,
+    shape: f64,
+    duration: f64,
+    t: f64,
+    done: bool,
+}
+
+impl ParetoSource {
+    pub fn new(lambda: f64, shape: f64, duration: f64, seed: u64) -> Self {
+        assert!(lambda > 0.0 && shape > 1.0 && duration > 0.0);
+        let xm = (shape - 1.0) / (shape * lambda);
+        ParetoSource { rng: Rng::new(seed), xm, shape, duration, t: 0.0, done: false }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        self.t += self.xm / self.rng.f64_open().powf(1.0 / self.shape);
+        if self.t > self.duration {
+            self.done = true;
+            return None;
+        }
+        Some(self.t)
+    }
+}
+
+impl ArrivalSource for ParetoSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+/// Streaming [`super::scenarios::lognormal_trace`]: lognormal renewals
+/// with log-σ `sigma` and log-μ chosen for mean rate λ.
+pub struct LognormalSource {
+    rng: Rng,
+    mu: f64,
+    sigma: f64,
+    duration: f64,
+    t: f64,
+    done: bool,
+}
+
+impl LognormalSource {
+    pub fn new(lambda: f64, sigma: f64, duration: f64, seed: u64) -> Self {
+        assert!(lambda > 0.0 && sigma > 0.0 && duration > 0.0);
+        let mu = -lambda.ln() - sigma * sigma / 2.0;
+        LognormalSource { rng: Rng::new(seed), mu, sigma, duration, t: 0.0, done: false }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        self.t += (self.mu + self.sigma * self.rng.normal()).exp();
+        if self.t > self.duration {
+            self.done = true;
+            return None;
+        }
+        Some(self.t)
+    }
+}
+
+impl ArrivalSource for LognormalSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operator sources.
+// ---------------------------------------------------------------------------
+
+/// Per-child peek buffer for the operator sources: pulls from the inner
+/// source in bounded batches so an operator never forces a child to
+/// materialize.
+struct Buffered {
+    src: Box<dyn ArrivalSource>,
+    buf: Vec<f64>,
+    pos: usize,
+    done: bool,
+}
+
+/// Refill batch for operator-internal buffers; bounds operator memory at
+/// O(children · REFILL) regardless of stream length.
+const REFILL: usize = 1024;
+
+impl Buffered {
+    fn new(src: Box<dyn ArrivalSource>) -> Self {
+        Buffered { src, buf: Vec::new(), pos: 0, done: false }
+    }
+
+    fn peek(&mut self) -> Option<f64> {
+        if self.pos == self.buf.len() && !self.done {
+            self.buf.clear();
+            self.pos = 0;
+            if self.src.next_chunk(&mut self.buf, REFILL) == 0 {
+                self.done = true;
+            }
+        }
+        self.buf.get(self.pos).copied()
+    }
+
+    fn advance(&mut self) {
+        self.pos += 1;
+    }
+}
+
+/// Streaming [`super::scenarios::superpose`]: k-way merge of child
+/// streams. Ties go to the lowest child index, which together with
+/// per-child FIFO order reproduces the stable `total_cmp` sort of the
+/// concatenated child traces byte for byte.
+pub struct SuperposeSource {
+    children: Vec<Buffered>,
+}
+
+impl SuperposeSource {
+    pub fn new(children: Vec<Box<dyn ArrivalSource>>) -> Self {
+        SuperposeSource { children: children.into_iter().map(Buffered::new).collect() }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..self.children.len() {
+            if let Some(t) = self.children[i].peek() {
+                let better = match best {
+                    None => true,
+                    Some((_, bt)) => t.total_cmp(&bt).is_lt(),
+                };
+                if better {
+                    best = Some((i, t));
+                }
+            }
+        }
+        let (i, t) = best?;
+        self.children[i].advance();
+        Some(t)
+    }
+}
+
+impl ArrivalSource for SuperposeSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+/// Streaming [`super::scenarios::splice`]: children played back-to-back,
+/// each shifted to start where the stream so far ended. An empty child
+/// leaves the offset untouched, exactly like the materialized
+/// `fold(concat)` starting from the empty trace.
+pub struct SpliceSource {
+    children: Vec<Buffered>,
+    idx: usize,
+    offset: f64,
+    /// Last arrival emitted so far (0.0 before the first), the offset
+    /// base for the next child.
+    last: f64,
+}
+
+impl SpliceSource {
+    pub fn new(children: Vec<Box<dyn ArrivalSource>>) -> Self {
+        SpliceSource {
+            children: children.into_iter().map(Buffered::new).collect(),
+            idx: 0,
+            offset: 0.0,
+            last: 0.0,
+        }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        while self.idx < self.children.len() {
+            match self.children[self.idx].peek() {
+                Some(t) => {
+                    self.children[self.idx].advance();
+                    let shifted = t + self.offset;
+                    self.last = shifted;
+                    return Some(shifted);
+                }
+                None => {
+                    self.offset = self.last;
+                    self.idx += 1;
+                }
+            }
+        }
+        None
+    }
+}
+
+impl ArrivalSource for SpliceSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+/// Streaming [`super::scenarios::thin`]: Bernoulli thinning that draws
+/// one `rng.bool(p)` per *input* arrival in input order, whether or not
+/// the arrival survives — the same RNG consumption as the materialized
+/// filter.
+pub struct ThinSource {
+    inner: Buffered,
+    rng: Rng,
+    p: f64,
+}
+
+impl ThinSource {
+    pub fn new(inner: Box<dyn ArrivalSource>, p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "thin probability {p}");
+        ThinSource { inner: Buffered::new(inner), rng: Rng::new(seed), p }
+    }
+
+    fn step(&mut self) -> Option<f64> {
+        loop {
+            let t = self.inner.peek()?;
+            self.inner.advance();
+            if self.rng.bool(self.p) {
+                return Some(t);
+            }
+        }
+    }
+}
+
+impl ArrivalSource for ThinSource {
+    fn next_chunk(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        fill(out, max, || self.step())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenarios::{
+        lognormal_trace, mmpp_trace, pareto_trace, rate_curve_trace, splice, superpose, thin,
+    };
+    use super::super::{gamma_trace, Trace};
+    use super::*;
+
+    fn drain_sizes(mut make: impl FnMut() -> Box<dyn ArrivalSource>, expect: &Trace) {
+        for chunk in [1usize, 3, 1024] {
+            let got = drain(make().as_mut(), chunk);
+            assert_eq!(&got, expect, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn gamma_source_matches_generator_bit_for_bit() {
+        let expect = gamma_trace(80.0, 1.3, 20.0, 7);
+        drain_sizes(|| Box::new(GammaSource::new(80.0, 1.3, 20.0, 7)), &expect);
+    }
+
+    #[test]
+    fn rate_curve_source_matches_generator_bit_for_bit() {
+        let curve = |t: f64| 50.0 + 30.0 * (t / 7.0).sin();
+        let expect = rate_curve_trace(curve, 1.0, 25.0, 11);
+        drain_sizes(
+            || Box::new(RateCurveSource::new(Box::new(curve), 1.0, 25.0, 11)),
+            &expect,
+        );
+    }
+
+    #[test]
+    fn mmpp_source_matches_generator_bit_for_bit() {
+        let rates = vec![20.0, 300.0, 80.0];
+        let dwell = vec![5.0, 2.0, 4.0];
+        let expect = mmpp_trace(&rates, &dwell, 60.0, 3);
+        drain_sizes(
+            || Box::new(MmppSource::new(rates.clone(), dwell.clone(), 60.0, 3)),
+            &expect,
+        );
+    }
+
+    #[test]
+    fn heavy_tail_sources_match_generators_bit_for_bit() {
+        let expect = pareto_trace(100.0, 1.6, 30.0, 9);
+        drain_sizes(|| Box::new(ParetoSource::new(100.0, 1.6, 30.0, 9)), &expect);
+        let expect = lognormal_trace(100.0, 1.5, 30.0, 9);
+        drain_sizes(|| Box::new(LognormalSource::new(100.0, 1.5, 30.0, 9)), &expect);
+    }
+
+    #[test]
+    fn materialized_source_roundtrips() {
+        let tr = gamma_trace(40.0, 1.0, 10.0, 5);
+        drain_sizes(|| Box::new(MaterializedSource::new(tr.clone())), &tr);
+        // Exhaustion is sticky.
+        let mut src = MaterializedSource::new(tr);
+        let mut buf = Vec::new();
+        while src.next_chunk(&mut buf, 64) > 0 {}
+        assert_eq!(src.next_chunk(&mut buf, 64), 0);
+    }
+
+    #[test]
+    fn superpose_source_matches_operator_bit_for_bit() {
+        let a = gamma_trace(50.0, 1.0, 30.0, 1);
+        let b = gamma_trace(70.0, 2.0, 30.0, 2);
+        let c = pareto_trace(40.0, 1.8, 30.0, 3);
+        let expect = superpose(&[a.clone(), b.clone(), c.clone()]);
+        drain_sizes(
+            || {
+                Box::new(SuperposeSource::new(vec![
+                    Box::new(MaterializedSource::new(a.clone())),
+                    Box::new(MaterializedSource::new(b.clone())),
+                    Box::new(MaterializedSource::new(c.clone())),
+                ]))
+            },
+            &expect,
+        );
+    }
+
+    #[test]
+    fn superpose_source_breaks_ties_like_a_stable_sort() {
+        // Duplicate timestamps across children: stable sort of the
+        // concatenation keeps child-0 copies ahead of child-1 copies.
+        let a = Trace::new(vec![1.0, 2.0, 2.0]);
+        let b = Trace::new(vec![1.0, 2.0, 3.0]);
+        let expect = superpose(&[a.clone(), b.clone()]);
+        drain_sizes(
+            || {
+                Box::new(SuperposeSource::new(vec![
+                    Box::new(MaterializedSource::new(a.clone())),
+                    Box::new(MaterializedSource::new(b.clone())),
+                ]))
+            },
+            &expect,
+        );
+    }
+
+    #[test]
+    fn splice_source_matches_operator_including_empty_children() {
+        let a = gamma_trace(80.0, 1.0, 10.0, 19);
+        let empty = Trace::default();
+        let b = gamma_trace(20.0, 1.0, 10.0, 23);
+        let expect = splice(&[a.clone(), empty.clone(), b.clone()]);
+        drain_sizes(
+            || {
+                Box::new(SpliceSource::new(vec![
+                    Box::new(MaterializedSource::new(a.clone())),
+                    Box::new(MaterializedSource::new(empty.clone())),
+                    Box::new(MaterializedSource::new(b.clone())),
+                ]))
+            },
+            &expect,
+        );
+    }
+
+    #[test]
+    fn thin_source_matches_operator_bit_for_bit() {
+        let tr = gamma_trace(100.0, 1.0, 20.0, 13);
+        for p in [0.0, 0.5, 1.0] {
+            let expect = thin(&tr, p, 17);
+            drain_sizes(
+                || {
+                    Box::new(ThinSource::new(
+                        Box::new(MaterializedSource::new(tr.clone())),
+                        p,
+                        17,
+                    ))
+                },
+                &expect,
+            );
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Streaming conformance: the chunked pull-based arrival path must be
+//! bit-identical to the materialized path, end to end.
+//!
+//! Two layers are locked down:
+//!
+//! 1. **Workload layer**: for every checked-in scenario family (the
+//!    whole `scenarios/` grid, both modes) and any chunk size —
+//!    including the pathological 1 — draining the family's
+//!    [`ArrivalSource`] reproduces `Scenario::build` exactly, arrival
+//!    by arrival. This is the spec + seed ⇒ byte-identical-stream
+//!    contract of `workload::stream`.
+//! 2. **Simulator layer**: a streamed open-loop run
+//!    ([`simulate_streamed`]) folds completions into aggregates that
+//!    equal — bit-exactly, not approximately — the same folds over the
+//!    materialized [`simulate`] result, for conditional-routing and
+//!    linear pipelines alike, across chunk sizes, whether the arrivals
+//!    come from a replayed trace or a live generator.
+//!
+//! Plus the memory property the whole refactor exists for: resident
+//! query state tracks the in-flight window, not the horizon.
+
+use inferline::config::pipelines;
+use inferline::experiments::robustness::{self, FAMILIES};
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::simulator::{self, SimParams, SimResult, StreamSummary};
+use inferline::workload::stream::{drain, ArrivalSource, GammaSource, MaterializedSource};
+use inferline::workload::{gamma_trace, Trace};
+
+/// Every scenario family in the checked-in matrix streams bit-identically
+/// to its materialized build — both modes, multiple seeds, chunk sizes
+/// down to 1 (the worst case for any buffering bug) and past the
+/// internal refill size.
+#[test]
+fn every_family_streams_bit_identically() {
+    for family in FAMILIES {
+        let spec = robustness::family_spec(family).unwrap();
+        for quick in [true, false] {
+            let scenario = spec.scenario_for(quick);
+            for seed in [spec.seed, 7] {
+                let built = scenario.build(seed).unwrap();
+                for chunk in [1usize, 3, 1024] {
+                    let mut source = scenario
+                        .source(seed)
+                        .unwrap_or_else(|e| panic!("{family}: {e}"));
+                    let streamed = drain(source.as_mut(), chunk);
+                    assert_eq!(
+                        streamed.arrivals, built.arrivals,
+                        "{family} (quick={quick}, seed={seed}, chunk={chunk}): \
+                         streamed arrivals diverge from the materialized build"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fold a materialized result into the aggregate form a streamed run
+/// produces, in completion order (the order the engine would fold in).
+fn fold(result: &SimResult, n_queries: u64, slo: f64) -> StreamSummary {
+    let mut misses = 0u64;
+    let mut latency_sum = 0.0f64;
+    let mut max_latency = 0.0f64;
+    for &l in &result.latencies {
+        if l > slo {
+            misses += 1;
+        }
+        latency_sum += l;
+        if l > max_latency {
+            max_latency = l;
+        }
+    }
+    StreamSummary {
+        queries: n_queries,
+        completed: result.latencies.len() as u64,
+        misses,
+        latency_sum,
+        max_latency,
+        horizon: result.horizon,
+        cost_dollars: result.cost_dollars,
+        stage_stats: result.stage_stats.clone(),
+        peak_queries_resident: 0,
+    }
+}
+
+fn assert_summary_matches(streamed: &StreamSummary, expected: &StreamSummary, what: &str) {
+    assert_eq!(streamed.queries, expected.queries, "{what}: queries");
+    assert_eq!(streamed.completed, expected.completed, "{what}: completed");
+    assert_eq!(streamed.misses, expected.misses, "{what}: misses");
+    assert_eq!(streamed.latency_sum, expected.latency_sum, "{what}: latency_sum");
+    assert_eq!(streamed.max_latency, expected.max_latency, "{what}: max_latency");
+    assert_eq!(streamed.horizon, expected.horizon, "{what}: horizon");
+    assert_eq!(streamed.cost_dollars, expected.cost_dollars, "{what}: cost");
+    assert_eq!(streamed.stage_stats.len(), expected.stage_stats.len(), "{what}: stages");
+    for (i, (s, e)) in streamed.stage_stats.iter().zip(&expected.stage_stats).enumerate() {
+        assert_eq!(s.max_queue, e.max_queue, "{what}: stage {i} max_queue");
+        assert_eq!(s.batches, e.batches, "{what}: stage {i} batches");
+        assert_eq!(s.queries, e.queries, "{what}: stage {i} queries");
+        assert_eq!(s.busy_time, e.busy_time, "{what}: stage {i} busy_time");
+        assert_eq!(s.mean_batch, e.mean_batch, "{what}: stage {i} mean_batch");
+    }
+}
+
+/// A streamed simulation's aggregates equal the materialized run's,
+/// bit-exactly, on a conditional-routing pipeline (social-media — the
+/// lazy routing sampler must reproduce the plan) and a linear one, for
+/// both a replayed materialized source and a live generator source, at
+/// chunk sizes 1 (maximal interleaving of pulls) and 4096.
+#[test]
+fn streamed_simulation_matches_materialized_fold() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let slo = 0.35;
+    let (lambda, cv, duration, seed) = (120.0, 2.0, 30.0, 11);
+    for spec in [pipelines::social_media(), pipelines::image_processing()] {
+        let trace = gamma_trace(lambda, cv, duration, seed);
+        let config = Planner::new(&spec, &profiles).initialize(&trace, slo).unwrap();
+        let result = simulator::simulate(&spec, &profiles, &config, &trace, &params);
+        // Open loop, no faults: every query completes.
+        assert_eq!(result.latencies.len(), trace.len(), "{}: incomplete run", spec.name);
+        let expected = fold(&result, trace.len() as u64, slo);
+        for chunk in [1usize, 4096] {
+            let mut sources: Vec<(&str, Box<dyn ArrivalSource>)> = vec![
+                ("replayed", Box::new(MaterializedSource::new(trace.clone()))),
+                ("generated", Box::new(GammaSource::new(lambda, cv, duration, seed))),
+            ];
+            for (kind, source) in &mut sources {
+                let streamed = simulator::simulate_streamed(
+                    &spec,
+                    &profiles,
+                    &config,
+                    source.as_mut(),
+                    &params,
+                    slo,
+                    chunk,
+                );
+                let what = format!("{} ({kind}, chunk {chunk})", spec.name);
+                assert_summary_matches(&streamed, &expected, &what);
+                assert!(
+                    streamed.peak_queries_resident <= trace.len(),
+                    "{what}: residency above trace length"
+                );
+            }
+        }
+    }
+}
+
+/// The point of streaming: resident query state tracks the in-flight
+/// window, not the horizon. A long feasible run must complete with a
+/// peak residency far below the total query count (the long-horizon CI
+/// smoke asserts the same property at multi-hour scale via peak RSS).
+#[test]
+fn streamed_residency_tracks_the_window_not_the_horizon() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = pipelines::image_processing();
+    let sample = gamma_trace(200.0, 1.0, 30.0, 42);
+    let config = Planner::new(&spec, &profiles).initialize(&sample, 0.35).unwrap();
+    let mut source = GammaSource::new(200.0, 1.0, 600.0, 5);
+    let summary = simulator::simulate_streamed(
+        &spec,
+        &profiles,
+        &config,
+        &mut source,
+        &params,
+        0.35,
+        4096,
+    );
+    assert!(summary.queries > 100_000, "expected a long stream, got {}", summary.queries);
+    assert_eq!(summary.completed, summary.queries);
+    assert!(
+        summary.peak_queries_resident < summary.queries as usize / 5,
+        "peak residency {} of {} queries: compaction is not keeping up",
+        summary.peak_queries_resident,
+        summary.queries
+    );
+}
+
+/// The replayed-trace source round-trips `Trace` exactly (also pins the
+/// `MaterializedSource` re-export from `workload`).
+#[test]
+fn materialized_source_roundtrips_via_reexport() {
+    let trace = gamma_trace(80.0, 1.0, 5.0, 3);
+    let mut src = inferline::workload::MaterializedSource::new(trace.clone());
+    let back: Trace = drain(&mut src, 7);
+    assert_eq!(back.arrivals, trace.arrivals);
+}
