@@ -368,5 +368,33 @@ pub fn collect(quick: bool, cache_file: &Path) -> Json {
         resident * 100.0
     );
 
+    // --- Fleet planning: tenant-population scaling. ------------------------
+    // Joint fleet plans/sec at two population sizes, each sample on a
+    // fresh estimator cache. The population collapses to a few dozen
+    // distinct planning problems through the fleet memo, so the pair
+    // prices the memoization + packing + dedup layers — near-flat
+    // scaling is the expected shape. (The perf ledger compares a fixed
+    // metric list, so this section rides along informationally.)
+    let fleet_secs = if quick { 20.0 } else { 40.0 };
+    let mut fleet = Json::obj();
+    for n in [10usize, 100] {
+        let population = crate::fleet::synth_tenants(n, 5, fleet_secs);
+        let fleet_spec = crate::fleet::FleetSpec {
+            tenants: population.into_iter().map(|t| t.tenant).collect(),
+            inventory: crate::hardware::Inventory::unbounded(),
+        };
+        let rb = bench(&format!("fleet: plan() {n} tenants"), 0, samples, || {
+            let planner = crate::fleet::FleetPlanner::new(&profiles)
+                .with_shared_cache(EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY));
+            black_box(planner.plan(&fleet_spec).expect("fleet plan").total_cost_per_hour);
+        });
+        let mut entry = Json::obj();
+        entry.set("plan_mean_s", rb.mean_s);
+        entry.set("plans_per_sec", 1.0 / rb.mean_s);
+        fleet.set(&format!("tenants_{n}"), entry);
+        println!("  -> fleet {n} tenants: {:.2} plans/sec", 1.0 / rb.mean_s);
+    }
+    doc.set("fleet", fleet);
+
     doc
 }

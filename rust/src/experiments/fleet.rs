@@ -1,0 +1,314 @@
+//! Fleet provisioning experiment: plan synthetic tenant populations at
+//! 10 → 100 → 1000 tenants against a shared inventory, then serve every
+//! tenant's planned configuration against its live scenario family.
+//!
+//! Reported per scale (`results/fleet.json`, format [`REPORT_FORMAT`]):
+//! total fleet $/hr with and without prefix-stage sharing, the sharing
+//! savings, per-tier device usage, per-tenant SLO miss rates under live
+//! traffic, and a constrained-inventory replan (GPU capacity capped
+//! below the unbounded fleet's demand) exercising the packer's local
+//! repair. The whole report is a deterministic function of the seed —
+//! the same `(seed, quick)` pair always writes the same bytes. Quick
+//! mode (CI) stops at 100 tenants and serves compressed schedules.
+
+use std::sync::Arc;
+
+use crate::fleet::{synth_tenants, FleetPlan, FleetPlanner, FleetSpec, SynthTenant};
+use crate::hardware::{Hardware, Inventory};
+use crate::planner::EstimatorCache;
+use crate::profiler::analytic::paper_profiles;
+use crate::simulator::{simulate, SimParams};
+use crate::util::json::Json;
+use crate::util::par::{default_workers, parallel_map_indexed};
+use crate::workload::scenarios;
+
+use super::common::{csv_num, Ctx};
+use super::robustness::family_scenario;
+
+/// Format tag of `fleet.json`.
+pub const REPORT_FORMAT: &str = "inferline-fleet-v1";
+
+/// Tenant scales of the sweep (paper-style order-of-magnitude steps).
+pub const SCALES: [usize; 3] = [10, 100, 1000];
+
+/// Seed stream for per-tenant live traces (disjoint from the synth
+/// generator's 900/1000+ tags and the robustness harness's streams).
+const LIVE_TAG: u64 = 10_000;
+
+/// Fraction of the unbounded fleet's GPU demand the constrained replan
+/// is allowed (caps the costlier tier the fleet actually leans on).
+const CONSTRAIN_FRACTION: f64 = 0.75;
+
+/// One tenant's serving outcome.
+struct TenantOutcome {
+    miss_rate: f64,
+}
+
+/// One scale's planning + serving results.
+struct ScaleResult {
+    n: usize,
+    plan: FleetPlan,
+    outcomes: Vec<TenantOutcome>,
+    /// (capped tier, cap, repairs, total $/hr) on success, error text
+    /// otherwise.
+    constrained: Result<(Hardware, usize, usize, f64), String>,
+}
+
+fn run_scale(
+    n: usize,
+    seed: u64,
+    quick: bool,
+    cache: &Arc<EstimatorCache>,
+) -> Result<ScaleResult, String> {
+    let profiles = paper_profiles();
+    let sample_secs = if quick { 25.0 } else { 60.0 };
+    let population = synth_tenants(n, seed, sample_secs);
+    let spec = FleetSpec {
+        tenants: population.iter().map(|t| t.tenant.clone()).collect(),
+        inventory: Inventory::unbounded(),
+    };
+    let planner = FleetPlanner::new(&profiles).with_shared_cache(Arc::clone(cache));
+    let plan = planner.plan(&spec).map_err(|e| e.to_string())?;
+
+    // Constrained replan: cap the tier the unbounded fleet uses most
+    // (by device count) below its demand, forcing local repair.
+    let (cap_tier, _) = Hardware::ALL
+        .into_iter()
+        .map(|hw| (hw, plan.usage[hw.index()]))
+        .max_by_key(|&(hw, used)| (used, std::cmp::Reverse(hw.index())))
+        .expect("three tiers");
+    let demand = plan.usage[cap_tier.index()];
+    let cap = ((demand as f64 * CONSTRAIN_FRACTION) as usize).max(1);
+    let constrained_spec = FleetSpec {
+        tenants: spec.tenants.clone(),
+        inventory: Inventory::unbounded().with_count(cap_tier, Some(cap)),
+    };
+    let constrained = planner
+        .plan(&constrained_spec)
+        .map(|p| (cap_tier, cap, p.repairs, p.total_cost_per_hour))
+        .map_err(|e| e.to_string());
+
+    // Serve every tenant's (unbounded) planned configuration against its
+    // live scenario family, each with its own arrival seed.
+    let outcomes = parallel_map_indexed(n, default_workers(), |i| {
+        let SynthTenant { tenant, family, .. } = &population[i];
+        let live = family_scenario(family, quick)
+            .expect("synth families are checked-in robustness families")
+            .build(scenarios::child_seed(seed, LIVE_TAG + i as u64))
+            .expect("checked-in scenario builds");
+        let result = simulate(
+            &tenant.spec,
+            &profiles,
+            &plan.tenants[i].plan.config,
+            &live,
+            &SimParams::default(),
+        );
+        TenantOutcome { miss_rate: result.miss_rate(tenant.slo) }
+    });
+    Ok(ScaleResult { n, plan, outcomes, constrained })
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for x in xs {
+        sum += x;
+        n += 1;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Encode the sweep as the canonical machine-readable report. Key order
+/// is canonical (`Json::Obj` is a `BTreeMap`) and every value is a
+/// deterministic function of the seed, so the byte stream is too.
+fn report_json(seed: u64, quick: bool, results: &[(usize, SweepOutcome)]) -> Json {
+    let mut doc = Json::obj();
+    doc.set("format", REPORT_FORMAT).set("seed", seed as usize).set("quick", quick);
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|(n, outcome)| {
+            let mut o = Json::obj();
+            o.set("tenants", *n);
+            match outcome {
+                Ok(r) => encode_scale(&mut o, r),
+                Err(e) => {
+                    o.set("error", e.as_str());
+                }
+            }
+            o
+        })
+        .collect();
+    doc.set("scales", Json::Arr(rows));
+    doc
+}
+
+type SweepOutcome = Result<ScaleResult, String>;
+
+fn encode_scale(o: &mut Json, r: &ScaleResult) {
+    let p = &r.plan;
+    let mean_miss = mean(r.outcomes.iter().map(|t| t.miss_rate));
+    let worst_miss = r.outcomes.iter().map(|t| t.miss_rate).fold(f64::NAN, f64::max);
+    o.set("unshared_cost_per_hour", p.unshared_cost_per_hour)
+        .set("total_cost_per_hour", p.total_cost_per_hour)
+        .set("savings_per_hour", p.savings_per_hour)
+        .set(
+            "savings_fraction",
+            Json::num_or_null(p.savings_per_hour / p.unshared_cost_per_hour),
+        )
+        .set("shared_stages", p.shared.len())
+        .set(
+            "shared_replicas_saved",
+            p.shared.iter().map(|g| g.saved_replicas()).sum::<usize>(),
+        )
+        .set("repairs", p.repairs)
+        .set("mean_miss_rate", Json::num_or_null(mean_miss))
+        .set("worst_miss_rate", Json::num_or_null(worst_miss));
+    let mut usage = Json::obj();
+    for hw in Hardware::ALL {
+        usage.set(hw.id(), p.usage[hw.index()]);
+    }
+    o.set("usage", usage);
+    let mut con = Json::obj();
+    match &r.constrained {
+        Ok((tier, cap, repairs, total)) => {
+            con.set("capped_tier", tier.id())
+                .set("cap", *cap)
+                .set("repairs", *repairs)
+                .set("total_cost_per_hour", *total);
+        }
+        Err(e) => {
+            con.set("error", e.as_str());
+        }
+    }
+    o.set("constrained", con);
+    // Full per-tenant detail stays readable at small scales; the
+    // aggregates above cover the 1000-tenant row.
+    if r.n <= 100 {
+        let detail: Vec<Json> = p
+            .tenants
+            .iter()
+            .zip(&r.outcomes)
+            .map(|(t, out)| {
+                let mut row = Json::obj();
+                row.set("tenant", t.tenant.as_str())
+                    .set("cost_per_hour", t.plan.cost_per_hour)
+                    .set("effective_cost_per_hour", t.effective_cost_per_hour)
+                    .set("miss_rate", Json::num_or_null(out.miss_rate));
+                row
+            })
+            .collect();
+        o.set("tenants_detail", Json::Arr(detail));
+    }
+}
+
+/// CLI entry point: sweep the tenant scales, print a table, write
+/// `fleet.csv` and `fleet.json` into the results dir.
+pub fn run(ctx: &Ctx, seed: u64) -> bool {
+    crate::util::bench::figure_header(
+        "Fleet",
+        "joint provisioning of tenant populations over a shared inventory",
+    );
+    let cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+    super::common::warm_cache(ctx, &cache);
+    let scales = if ctx.quick { &SCALES[..2] } else { &SCALES[..] };
+    let results: Vec<(usize, SweepOutcome)> = scales
+        .iter()
+        .map(|&n| (n, run_scale(n, seed, ctx.quick, &cache)))
+        .collect();
+    super::common::persist_cache(ctx, &cache);
+    let mut rows = Vec::new();
+    for (n, outcome) in &results {
+        match outcome {
+            Ok(r) => {
+                let p = &r.plan;
+                let mean_miss = mean(r.outcomes.iter().map(|t| t.miss_rate));
+                println!(
+                    "  {:>5} tenants  ${:>9.2}/hr shared (${:>9.2} unshared, save ${:>7.2} = \
+                     {:>4.1}%)  {} shared stages  mean miss {:>5.2}%",
+                    n,
+                    p.total_cost_per_hour,
+                    p.unshared_cost_per_hour,
+                    p.savings_per_hour,
+                    100.0 * p.savings_per_hour / p.unshared_cost_per_hour,
+                    p.shared.len(),
+                    mean_miss * 100.0,
+                );
+                match &r.constrained {
+                    Ok((tier, cap, repairs, total)) => println!(
+                        "  {:>5}          constrained: {} capped at {cap} → {repairs} repairs, \
+                         ${total:.2}/hr",
+                        "",
+                        tier.id(),
+                    ),
+                    Err(e) => println!("  {:>5}          constrained: {e}", ""),
+                }
+                rows.push(format!(
+                    "{n},{},{},{},{}",
+                    csv_num(p.unshared_cost_per_hour),
+                    csv_num(p.total_cost_per_hour),
+                    csv_num(p.savings_per_hour),
+                    csv_num(mean_miss),
+                ));
+            }
+            Err(e) => {
+                println!("  {n:>5} tenants  {e}");
+                rows.push(format!("{n},,,,"));
+            }
+        }
+    }
+    ctx.write_csv(
+        "fleet.csv",
+        "tenants,unshared_cost_per_hour,total_cost_per_hour,savings_per_hour,mean_miss_rate",
+        &rows,
+    );
+    println!("  wrote {}", ctx.results_dir.join("fleet.csv").display());
+    let doc = report_json(seed, ctx.quick, &results);
+    let path = ctx.results_dir.join("fleet.json");
+    match std::fs::write(&path, doc.to_string()) {
+        Ok(()) => {
+            println!("  wrote {}", path.display());
+            results.iter().all(|(_, outcome)| outcome.is_ok())
+        }
+        Err(e) => {
+            crate::log_warn!("could not write {}: {e}", path.display());
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_is_byte_identical_per_seed() {
+        let cache_a = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+        let cache_b = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+        let a = report_json(5, true, &[(4, run_scale(4, 5, true, &cache_a))]);
+        let b = report_json(5, true, &[(4, run_scale(4, 5, true, &cache_b))]);
+        assert_eq!(a.to_string(), b.to_string());
+        let c = report_json(6, true, &[(4, run_scale(4, 6, true, &cache_b))]);
+        assert_ne!(a.to_string(), c.to_string(), "seed must reach the report");
+    }
+
+    #[test]
+    fn scale_result_has_consistent_accounting() {
+        let cache = EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY);
+        let r = run_scale(6, 11, true, &cache).expect("small fleet plans");
+        let p = &r.plan;
+        assert_eq!(r.outcomes.len(), 6);
+        assert!(p.savings_per_hour >= 0.0);
+        let effective: f64 = p.tenants.iter().map(|t| t.effective_cost_per_hour).sum();
+        assert!(
+            (effective - p.total_cost_per_hour).abs() < 1e-6,
+            "routing credit must conserve cost: {effective} vs {}",
+            p.total_cost_per_hour
+        );
+        for t in &r.outcomes {
+            assert!((0.0..=1.0).contains(&t.miss_rate));
+        }
+    }
+}

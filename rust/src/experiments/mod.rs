@@ -11,6 +11,7 @@ pub mod budgets;
 pub mod common;
 pub mod estbench;
 pub mod figures;
+pub mod fleet;
 pub mod robustness;
 pub mod sweep;
 

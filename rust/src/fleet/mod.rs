@@ -1,0 +1,531 @@
+//! Fleet-scale multi-pipeline planning over a finite accelerator
+//! inventory (ROADMAP open item 1).
+//!
+//! Everything below this module plans *one* pipeline against an
+//! implicitly unbounded device pool; production means many tenant
+//! pipelines competing for the same accelerators. A [`FleetSpec`] names
+//! N tenants — each a pipeline, an SLO and a planning sample trace —
+//! plus one shared [`Inventory`] of per-tier device counts, and
+//! [`FleetPlanner::plan`] provisions them jointly in three deterministic
+//! phases:
+//!
+//! 1. **Per-tenant planning under inventory tiers.** Each tenant runs
+//!    the ordinary [`Planner`] (Algorithms 1+2) restricted to the tiers
+//!    the inventory offers, in tenant order, sharing one
+//!    [`EstimatorCache`]. Identical (pipeline, sample, SLO) tenants are
+//!    memoized — planning is deterministic, so the memo returns exactly
+//!    the plan a fresh search would.
+//! 2. **Greedy bin-pack + local repair.** Per-tier device demand is the
+//!    sum of every tenant's replicas on that tier. While some finite
+//!    tier is oversubscribed, the *binding* tier (largest overflow, ties
+//!    toward the cheaper tier) sheds its heaviest tenant (ties toward
+//!    the lower tenant index): that tenant is re-planned with the tier
+//!    excluded from its search ([`Inventory`] count 0). Each repair adds
+//!    one (tenant, tier) exclusion, so the loop terminates after at most
+//!    `tenants × tiers` re-plans; if the shed tenant cannot be planned
+//!    on the remaining tiers, the fleet is infeasible and
+//!    [`FleetError::Infeasible`] names the binding tier with its demand
+//!    and capacity.
+//! 3. **Prefix-stage deduplication.** Tenants whose pipelines *start*
+//!    with the same model chain (scale factor exactly 1 along the
+//!    chain — every query visits, so arrival rates add) and whose plans
+//!    agree on (hardware, batch) for a chain position are served by one
+//!    merged stage, as in Loki-style shared-pipeline serving. The merge
+//!    is utilization-preserving: with per-tenant utilization
+//!    `u_t = λ_t / (r_t · thpt(hw, batch))`, the merged stage keeps the
+//!    *worst* tenant's utilization `u = max_t u_t` and provisions
+//!    `max(max_t r_t, ⌈Σ_t λ_t / (thpt · u)⌉)` replicas — provably
+//!    never more than `Σ_t r_t` (each tenant's traffic fits in its own
+//!    share at utilization `u`) and never fewer than any single
+//!    tenant's count, so savings are non-negative and a merged stage is
+//!    no more loaded than the worst unmerged one was. The capacity
+//!    check of phase 2 runs on *unmerged* demand, which deduplication
+//!    only reduces tier-by-tier, so the deployed fleet always fits.
+//!
+//! **Routing credit:** a merged stage's cost is split between its
+//! tenants in proportion to offered load (`λ_t / Σλ`), and each
+//! tenant's [`TenantPlan::effective_cost_per_hour`] is its own
+//! unshared cost plus its credits — summing effective costs recovers
+//! the fleet total exactly.
+//!
+//! **Conformance invariant:** sharing requires ≥ 2 tenants in a group
+//! and phase 2 only acts on oversubscribed finite tiers, so a 1-tenant
+//! fleet on an unbounded inventory reproduces `Planner::plan`
+//! bit-identically (`tests/fleet.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::{PipelineConfig, PipelineSpec};
+use crate::hardware::{Hardware, Inventory};
+use crate::planner::{EstimatorCache, Plan, PlanError, Planner};
+use crate::profiler::ProfileSet;
+use crate::workload::Trace;
+
+pub mod synth;
+
+pub use synth::{synth_tenants, SynthTenant};
+
+/// One tenant pipeline of the fleet.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Unique tenant name (reported in errors and artifacts).
+    pub name: String,
+    pub spec: PipelineSpec,
+    /// End-to-end P99 latency objective (seconds).
+    pub slo: f64,
+    /// Planning sample trace (the nominal workload the tenant is
+    /// provisioned for).
+    pub sample: Trace,
+}
+
+/// N tenants sharing one device inventory.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub tenants: Vec<Tenant>,
+    pub inventory: Inventory,
+}
+
+/// Errors fleet planning can report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetError {
+    /// Demand for one tier exceeds its capacity and local repair could
+    /// not move any more tenants off it.
+    Infeasible {
+        /// The binding tier.
+        tier: Hardware,
+        /// Devices the per-tenant plans need on that tier.
+        demand: usize,
+        /// Devices the inventory offers on that tier.
+        capacity: usize,
+    },
+    /// A tenant could not be planned at all (its own SLO is infeasible
+    /// on the tiers the inventory offers it).
+    Plan {
+        tenant: String,
+        error: PlanError,
+    },
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Infeasible { tier, demand, capacity } => write!(
+                f,
+                "fleet infeasible: tier {tier} needs {demand} devices but the inventory has \
+                 {capacity}"
+            ),
+            FleetError::Plan { tenant, error } => {
+                write!(f, "tenant {tenant}: {error}")
+            }
+        }
+    }
+}
+
+/// One tenant's slice of the fleet plan.
+#[derive(Debug, Clone)]
+pub struct TenantPlan {
+    pub tenant: String,
+    /// The per-pipeline plan (configuration, estimated P99, telemetry).
+    pub plan: Plan,
+    /// $/hr attributed to this tenant after prefix-sharing routing
+    /// credit: unshared stages at inventory prices plus a
+    /// load-proportional share of each merged stage.
+    pub effective_cost_per_hour: f64,
+    /// Tiers local repair excluded from this tenant's search.
+    pub excluded: Vec<Hardware>,
+}
+
+/// A merged prefix stage serving several tenants.
+#[derive(Debug, Clone)]
+pub struct SharedStage {
+    /// `/`-joined model chain from the root up to this stage — the
+    /// group identity (tenants share a stage only when everything
+    /// upstream of it is shared too).
+    pub prefix: String,
+    /// Position in the shared prefix chain (0 = root).
+    pub depth: usize,
+    pub hw: Hardware,
+    pub batch: usize,
+    /// Tenant indices served by this merged stage.
+    pub tenants: Vec<usize>,
+    /// Replicas of the merged stage (utilization-preserving rule).
+    pub replicas: usize,
+    /// Sum of the tenants' own per-plan replicas for this stage.
+    pub replicas_unshared: usize,
+}
+
+impl SharedStage {
+    /// Devices saved by the merge (always ≥ 0).
+    pub fn saved_replicas(&self) -> usize {
+        self.replicas_unshared - self.replicas
+    }
+}
+
+/// The jointly provisioned fleet.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Per-tenant plans, in `FleetSpec::tenants` order.
+    pub tenants: Vec<TenantPlan>,
+    /// Merged prefix stages, in deterministic group order.
+    pub shared: Vec<SharedStage>,
+    /// Σ per-tenant configuration cost at inventory prices (no
+    /// sharing).
+    pub unshared_cost_per_hour: f64,
+    /// Fleet cost after prefix-stage deduplication.
+    pub total_cost_per_hour: f64,
+    /// `unshared - total` (≥ 0 by the merge rule).
+    pub savings_per_hour: f64,
+    /// Deployed device count per tier after deduplication, in
+    /// [`Hardware::ALL`] order.
+    pub usage: [usize; 3],
+    /// Tenant re-plans performed by local repair.
+    pub repairs: usize,
+}
+
+/// Plans a [`FleetSpec`]: the per-tenant [`Planner`] under inventory
+/// constraints, greedy packing with local repair, then prefix
+/// deduplication. See the module docs for the algorithm and its
+/// determinism/termination arguments.
+pub struct FleetPlanner<'a> {
+    profiles: &'a ProfileSet,
+    threads: usize,
+    cache: Arc<EstimatorCache>,
+}
+
+impl<'a> FleetPlanner<'a> {
+    pub fn new(profiles: &'a ProfileSet) -> Self {
+        FleetPlanner {
+            profiles,
+            threads: crate::util::par::default_workers(),
+            cache: EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY),
+        }
+    }
+
+    /// Worker threads for each tenant's candidate evaluation.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Share an [`EstimatorCache`] across fleets (and with the caller).
+    pub fn with_shared_cache(mut self, cache: Arc<EstimatorCache>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    fn plan_tenant(&self, tenant: &Tenant, inventory: Inventory) -> Result<Plan, FleetError> {
+        Planner::new(&tenant.spec, self.profiles)
+            .with_threads(self.threads)
+            .with_shared_cache(Arc::clone(&self.cache))
+            .with_inventory(inventory)
+            .plan(&tenant.sample, tenant.slo)
+            .map_err(|error| FleetError::Plan { tenant: tenant.name.clone(), error })
+    }
+
+    /// Phase 1+2: per-tenant plans under the inventory, with local
+    /// repair until every finite tier fits. Returns the plans and each
+    /// tenant's exclusion list.
+    #[allow(clippy::type_complexity)]
+    fn plan_and_pack(
+        &self,
+        fleet: &FleetSpec,
+    ) -> Result<(Vec<Plan>, Vec<Vec<Hardware>>, usize), FleetError> {
+        let n = fleet.tenants.len();
+        let mut excluded: Vec<Vec<Hardware>> = vec![Vec::new(); n];
+        // Identical tenants (same pipeline, sample, SLO, exclusions)
+        // resolve to one memoized search: planning is deterministic, so
+        // this changes nothing but wall-clock at 1000-tenant scale.
+        let mut memo: BTreeMap<(u64, Vec<u8>), Plan> = BTreeMap::new();
+        let mut plans: Vec<Plan> = Vec::with_capacity(n);
+        for (i, t) in fleet.tenants.iter().enumerate() {
+            let plan = self.memoized_plan(&mut memo, t, &fleet.inventory, &excluded[i])?;
+            plans.push(plan);
+        }
+        let mut repairs = 0usize;
+        loop {
+            let demand = tier_demand(&plans);
+            // Binding tier: largest overflow, ties toward the cheaper
+            // tier (ALL order).
+            let mut binding: Option<(Hardware, usize, usize)> = None;
+            for hw in Hardware::ALL {
+                let Some(cap) = fleet.inventory.count(hw) else { continue };
+                let d = demand[hw.index()];
+                if d > cap {
+                    let over = d - cap;
+                    let best = binding.map_or(0, |(_, bd, bc)| bd - bc);
+                    if over > best {
+                        binding = Some((hw, d, cap));
+                    }
+                }
+            }
+            let Some((tier, demand_t, capacity)) = binding else { break };
+            // Heaviest user of the binding tier; ties toward the lower
+            // tenant index. A tenant excluded from the tier uses none
+            // of it, so no (tenant, tier) pair repeats — termination.
+            let mut victim: Option<(usize, usize)> = None;
+            for (i, p) in plans.iter().enumerate() {
+                let used: usize = p
+                    .config
+                    .stages
+                    .iter()
+                    .filter(|s| s.hw == tier)
+                    .map(|s| s.replicas)
+                    .sum();
+                if used > 0 && victim.map_or(true, |(_, u)| used > u) {
+                    victim = Some((i, used));
+                }
+            }
+            let Some((vi, _)) = victim else {
+                // Over capacity with no movable user should be
+                // impossible (demand is the sum of users), but never
+                // panic on inventory math: report the binding tier.
+                return Err(FleetError::Infeasible { tier, demand: demand_t, capacity });
+            };
+            excluded[vi].push(tier);
+            repairs += 1;
+            match self.memoized_plan(&mut memo, &fleet.tenants[vi], &fleet.inventory, &excluded[vi])
+            {
+                Ok(p) => plans[vi] = p,
+                // The shed tenant fits nowhere else: the binding tier
+                // is genuinely oversubscribed.
+                Err(_) => {
+                    return Err(FleetError::Infeasible { tier, demand: demand_t, capacity })
+                }
+            }
+        }
+        Ok((plans, excluded, repairs))
+    }
+
+    fn memoized_plan(
+        &self,
+        memo: &mut BTreeMap<(u64, Vec<u8>), Plan>,
+        tenant: &Tenant,
+        inventory: &Inventory,
+        excluded: &[Hardware],
+    ) -> Result<Plan, FleetError> {
+        let mut inv = inventory.clone();
+        for &hw in excluded {
+            inv = inv.with_count(hw, Some(0));
+        }
+        let key = (
+            tenant_fingerprint(tenant),
+            excluded.iter().map(|hw| hw.index() as u8).collect::<Vec<u8>>(),
+        );
+        if let Some(plan) = memo.get(&key) {
+            return Ok(plan.clone());
+        }
+        let plan = self.plan_tenant(tenant, inv)?;
+        memo.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Plan the whole fleet. Deterministic: the same spec produces the
+    /// same plan, bit for bit.
+    pub fn plan(&self, fleet: &FleetSpec) -> Result<FleetPlan, FleetError> {
+        let (plans, excluded, repairs) = self.plan_and_pack(fleet)?;
+        let inv = &fleet.inventory;
+
+        // Phase 3: group shareable prefix stages. Key = (depth, model
+        // chain, framework, hardware, batch); BTreeMap iteration makes
+        // group order deterministic.
+        let mut groups: BTreeMap<(usize, String, u8, u32), Vec<(usize, usize)>> = BTreeMap::new();
+        for (ti, t) in fleet.tenants.iter().enumerate() {
+            let chain = prefix_chain(&t.spec);
+            let mut path = String::new();
+            for (depth, &stage) in chain.iter().enumerate() {
+                if depth > 0 {
+                    path.push('/');
+                }
+                path.push_str(t.spec.framework.id());
+                path.push(':');
+                path.push_str(&t.spec.stages[stage].model);
+                let sc = plans[ti].config.stages[stage];
+                let key = (depth, path.clone(), sc.hw.index() as u8, sc.batch as u32);
+                groups.entry(key).or_default().push((ti, stage));
+            }
+        }
+
+        let mut shared = Vec::new();
+        // Per-tenant cost delta from sharing: subtract own replicas,
+        // add the load-proportional credit.
+        let mut credit = vec![0.0f64; fleet.tenants.len()];
+        let mut saved_per_tier = [0usize; 3];
+        for ((depth, path, hw_idx, batch), members) in groups {
+            if members.len() < 2 {
+                continue;
+            }
+            let hw = Hardware::ALL[hw_idx as usize];
+            let batch = batch as usize;
+            let model = path.rsplit(':').next().unwrap_or(&path).to_string();
+            let prof = self.profiles.get(&model).get(hw).expect("planned stage has a profile");
+            let thpt = prof.throughput(batch);
+            let mut sum_lam = 0.0f64;
+            let mut sum_r = 0usize;
+            let mut max_r = 0usize;
+            let mut worst_u = 0.0f64;
+            for &(ti, stage) in &members {
+                let lam = fleet.tenants[ti].sample.mean_rate();
+                let r = plans[ti].config.stages[stage].replicas;
+                sum_lam += lam;
+                sum_r += r;
+                max_r = max_r.max(r);
+                worst_u = worst_u.max(lam / (r as f64 * thpt));
+            }
+            // Utilization-preserving merge (module docs): keep the
+            // worst member's utilization. A degenerate utilization
+            // (zero-rate samples) falls back to the unmerged total.
+            let merged = if worst_u > 0.0 && thpt > 0.0 {
+                let u = worst_u.min(1.0);
+                let raw = (sum_lam / (thpt * u) - 1e-9).ceil().max(1.0) as usize;
+                raw.max(max_r).min(sum_r)
+            } else {
+                sum_r
+            };
+            saved_per_tier[hw.index()] += sum_r - merged;
+            let device = inv.cost_per_hour(hw);
+            let merged_cost = merged as f64 * device;
+            for &(ti, stage) in &members {
+                let lam = fleet.tenants[ti].sample.mean_rate();
+                let own = plans[ti].config.stages[stage].replicas as f64 * device;
+                let share = if sum_lam > 0.0 { lam / sum_lam } else { 1.0 / members.len() as f64 };
+                credit[ti] += share * merged_cost - own;
+            }
+            shared.push(SharedStage {
+                prefix: path,
+                depth,
+                hw,
+                batch,
+                tenants: members.iter().map(|&(ti, _)| ti).collect(),
+                replicas: merged,
+                replicas_unshared: sum_r,
+            });
+        }
+
+        let mut usage = tier_demand(&plans);
+        for (i, saved) in saved_per_tier.iter().enumerate() {
+            usage[i] -= *saved;
+        }
+        let unshared_cost_per_hour: f64 =
+            plans.iter().map(|p| config_cost(inv, &p.config)).sum();
+        let savings_per_hour: f64 = shared
+            .iter()
+            .map(|g| g.saved_replicas() as f64 * inv.cost_per_hour(g.hw))
+            .sum();
+        let total_cost_per_hour = unshared_cost_per_hour - savings_per_hour;
+        let tenants = fleet
+            .tenants
+            .iter()
+            .zip(plans)
+            .zip(excluded)
+            .enumerate()
+            .map(|(i, ((t, plan), excl))| TenantPlan {
+                tenant: t.name.clone(),
+                effective_cost_per_hour: config_cost(inv, &plan.config) + credit[i],
+                plan,
+                excluded: excl,
+            })
+            .collect();
+        Ok(FleetPlan {
+            tenants,
+            shared,
+            unshared_cost_per_hour,
+            total_cost_per_hour,
+            savings_per_hour,
+            usage,
+            repairs,
+        })
+    }
+}
+
+/// Stage indices of the shareable prefix: from the single root, every
+/// stage on the unbranched scale-factor-1 spine (every query visits, so
+/// tenant arrival rates add under sharing). Multi-root pipelines and
+/// conditional stages share nothing.
+fn prefix_chain(spec: &PipelineSpec) -> Vec<usize> {
+    let mut chain = Vec::new();
+    if spec.roots.len() != 1 {
+        return chain;
+    }
+    let mut cur = spec.roots[0];
+    loop {
+        if (spec.stages[cur].scale_factor - 1.0).abs() > 1e-12 {
+            break;
+        }
+        chain.push(cur);
+        match spec.stages[cur].children.as_slice() {
+            [only] => cur = *only,
+            _ => break,
+        }
+    }
+    chain
+}
+
+/// Per-tier device demand of unmerged per-tenant plans, in
+/// [`Hardware::ALL`] order.
+fn tier_demand(plans: &[Plan]) -> [usize; 3] {
+    let mut demand = [0usize; 3];
+    for p in plans {
+        for s in &p.config.stages {
+            demand[s.hw.index()] += s.replicas;
+        }
+    }
+    demand
+}
+
+/// Configuration cost at *inventory* prices (identical to
+/// `PipelineConfig::cost_per_hour` when the inventory keeps catalog
+/// prices).
+fn config_cost(inv: &Inventory, config: &PipelineConfig) -> f64 {
+    config.stages.iter().map(|s| s.replicas as f64 * inv.cost_per_hour(s.hw)).sum()
+}
+
+/// Fingerprint identifying a tenant's planning problem: pipeline shape,
+/// sample trace and SLO. Used only to memoize identical tenants within
+/// one fleet plan.
+fn tenant_fingerprint(t: &Tenant) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut mix = |bits: u64| {
+        h ^= bits;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    };
+    for b in t.spec.name.bytes() {
+        mix(b as u64);
+    }
+    mix(t.spec.framework.rpc_overhead().to_bits());
+    mix(t.spec.stages.len() as u64);
+    for s in &t.spec.stages {
+        for b in s.model.bytes() {
+            mix(b as u64);
+        }
+        mix(s.scale_factor.to_bits());
+        for &c in &s.children {
+            mix(c as u64);
+        }
+    }
+    mix(t.slo.to_bits());
+    mix(t.sample.arrivals.len() as u64);
+    for a in &t.sample.arrivals {
+        mix(a.to_bits());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::pipelines;
+
+    #[test]
+    fn prefix_chain_shapes() {
+        // image-processing: unbranched s=1 spine — both stages share.
+        let img = pipelines::image_processing();
+        assert_eq!(prefix_chain(&img), vec![0, 1]);
+        // video-monitoring: root fans out — only the root shares.
+        let video = pipelines::video_monitoring();
+        assert_eq!(prefix_chain(&video), vec![0]);
+        // tf-cascade: the child is conditional (s < 1) — root only.
+        let tf = pipelines::tf_cascade();
+        assert_eq!(prefix_chain(&tf), vec![0]);
+    }
+}

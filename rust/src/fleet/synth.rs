@@ -1,0 +1,117 @@
+//! Synthetic tenant-population generator for fleet experiments.
+//!
+//! Real fleets are populations, not hand-written lists: many tenants
+//! running a few pipeline archetypes at a few traffic classes. The
+//! generator draws tenant i's (pipeline, traffic class, SLO, live
+//! scenario family) from [`child_seed`]`(seed, TENANT_TAG + i)`, so a
+//! population is fully determined by `(n, seed)` — the same pair always
+//! yields the same fleet, bit for bit, and growing `n` only appends.
+//!
+//! Planning samples are shared per traffic class (one Gamma trace per
+//! λ), which both mirrors how capacity classes are provisioned in
+//! practice and lets [`super::FleetPlanner`] collapse the population to
+//! at most `pipelines × λ-classes × SLO-classes` distinct planning
+//! problems.
+
+use crate::config::pipelines;
+use crate::workload::scenarios::child_seed;
+use crate::workload::{gamma_trace, Trace};
+
+use super::Tenant;
+
+/// Traffic classes (mean arrival rate, queries/s).
+pub const LAMBDAS: [f64; 4] = [60.0, 100.0, 150.0, 220.0];
+
+/// SLO classes (end-to-end P99, seconds).
+pub const SLOS: [f64; 3] = [0.25, 0.35, 0.5];
+
+/// Fault-free live scenario families a tenant's served traffic is drawn
+/// from (names resolve via the robustness matrix at the experiment
+/// layer; the generator only tags tenants).
+pub const LIVE_FAMILIES: [&str; 6] =
+    ["steady", "bursty-mmpp", "diurnal", "flash-crowd", "heavy-tail-pareto", "cv-shift"];
+
+/// Seed-stream tags (disjoint from the robustness harness's 7/100+/200+
+/// streams by construction — `child_seed` mixes the tag into the seed).
+const TENANT_TAG: u64 = 1_000;
+const SAMPLE_TAG: u64 = 900;
+
+/// A generated tenant plus the draw metadata experiments report on.
+#[derive(Debug, Clone)]
+pub struct SynthTenant {
+    pub tenant: Tenant,
+    /// Traffic-class mean rate the tenant was provisioned for.
+    pub lambda: f64,
+    /// Live scenario family tag (member of [`LIVE_FAMILIES`]).
+    pub family: &'static str,
+}
+
+/// Generate `n` tenants from `seed`. `sample_secs` is the planning
+/// sample duration (quick runs use a short sample, exactly like the
+/// robustness harness).
+pub fn synth_tenants(n: usize, seed: u64, sample_secs: f64) -> Vec<SynthTenant> {
+    let specs = pipelines::all();
+    let samples: Vec<Trace> = LAMBDAS
+        .iter()
+        .enumerate()
+        .map(|(i, &lambda)| {
+            gamma_trace(lambda, 1.0, sample_secs, child_seed(seed, SAMPLE_TAG + i as u64))
+        })
+        .collect();
+    (0..n)
+        .map(|i| {
+            let h = child_seed(seed, TENANT_TAG + i as u64);
+            let spec = &specs[(h % specs.len() as u64) as usize];
+            let lam_idx = ((h >> 16) % LAMBDAS.len() as u64) as usize;
+            let slo = SLOS[((h >> 32) % SLOS.len() as u64) as usize];
+            let family = LIVE_FAMILIES[((h >> 48) % LIVE_FAMILIES.len() as u64) as usize];
+            SynthTenant {
+                tenant: Tenant {
+                    name: format!("t{i:04}-{}", spec.name),
+                    spec: spec.clone(),
+                    slo,
+                    sample: samples[lam_idx].clone(),
+                },
+                lambda: LAMBDAS[lam_idx],
+                family,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_is_deterministic_and_prefix_stable() {
+        let a = synth_tenants(20, 42, 10.0);
+        let b = synth_tenants(20, 42, 10.0);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant.name, y.tenant.name);
+            assert_eq!(x.tenant.slo, y.tenant.slo);
+            assert_eq!(x.tenant.sample, y.tenant.sample);
+            assert_eq!(x.family, y.family);
+        }
+        // Growing n appends: the first 20 of 40 are the same tenants.
+        let big = synth_tenants(40, 42, 10.0);
+        for (x, y) in a.iter().zip(&big) {
+            assert_eq!(x.tenant.name, y.tenant.name);
+        }
+    }
+
+    #[test]
+    fn classes_are_all_represented_at_scale() {
+        let pop = synth_tenants(200, 7, 10.0);
+        for &lambda in &LAMBDAS {
+            assert!(pop.iter().any(|t| t.lambda == lambda), "no tenant in class λ={lambda}");
+        }
+        for &slo in &SLOS {
+            assert!(pop.iter().any(|t| t.tenant.slo == slo), "no tenant with SLO {slo}");
+        }
+        for family in LIVE_FAMILIES {
+            assert!(pop.iter().any(|t| t.family == family), "no tenant in family {family}");
+        }
+    }
+}

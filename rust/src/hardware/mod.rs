@@ -12,6 +12,29 @@
 //! are real but stage *performance* on each tier comes from the profile
 //! layer (empirical for CPU via PJRT, analytic for the accelerator tiers —
 //! see DESIGN.md §3).
+//!
+//! # Inventory
+//!
+//! [`Inventory`] turns the catalog into a *capacity* model: how many
+//! devices of each tier the deployment actually owns, and what each one
+//! costs per hour. The historical single-pipeline path assumed an
+//! unbounded pool — [`Inventory::unbounded()`] (also [`Default`])
+//! preserves exactly those semantics, so every pre-fleet call site keeps
+//! today's behaviour bit for bit. Semantics used by the planner and the
+//! fleet packer:
+//!
+//! * a tier with count `None` is unbounded, a tier with `Some(n)` owns
+//!   exactly `n` devices, and a tier with `Some(0)` is *absent*:
+//!   [`Inventory::tiers()`] skips it, which is how the fleet's local
+//!   repair excludes a binding tier when re-planning a tenant;
+//! * the single-pipeline `Planner` consults only tier *membership*
+//!   (`tiers()` / `has()`) — positive finite counts are enforced one
+//!   level up by the fleet packer, which tallies device demand across
+//!   all tenants and reports `FleetError::Infeasible` naming the
+//!   binding tier when demand exceeds capacity;
+//! * per-tier `$`/hr defaults to the catalog price; overriding it (e.g.
+//!   reserved-instance discounts) affects fleet-level cost accounting
+//!   only — the per-pipeline greedy search still optimises catalog cost.
 
 use std::fmt;
 
@@ -60,11 +83,102 @@ impl Hardware {
     pub fn from_id(id: &str) -> Option<Hardware> {
         Hardware::ALL.iter().copied().find(|h| h.id() == id)
     }
+
+    /// Position of this tier in [`Hardware::ALL`] — the stable index used
+    /// by cache keys and fingerprints.
+    pub fn index(self) -> usize {
+        match self {
+            Hardware::Cpu => 0,
+            Hardware::GpuK80 => 1,
+            Hardware::GpuV100 => 2,
+        }
+    }
 }
 
 impl fmt::Display for Hardware {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.id())
+    }
+}
+
+/// A finite (or unbounded) pool of devices per hardware tier.
+///
+/// See the module docs for the full semantics. `count == None` means
+/// unbounded, `Some(0)` means the tier is absent (excluded from
+/// [`Inventory::tiers()`]), and per-tier `$`/hr defaults to the catalog
+/// price from [`Hardware::cost_per_hour`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Inventory {
+    counts: [Option<usize>; 3],
+    costs: [f64; 3],
+}
+
+impl Inventory {
+    /// The historical assumption: every tier available, no capacity
+    /// limit, catalog prices. Also the [`Default`].
+    pub fn unbounded() -> Self {
+        Inventory {
+            counts: [None; 3],
+            costs: [
+                Hardware::Cpu.cost_per_hour(),
+                Hardware::GpuK80.cost_per_hour(),
+                Hardware::GpuV100.cost_per_hour(),
+            ],
+        }
+    }
+
+    /// A fully bounded pool: exactly `cpu`/`k80`/`v100` devices per tier
+    /// (0 removes the tier from the search entirely).
+    pub fn bounded(cpu: usize, k80: usize, v100: usize) -> Self {
+        Inventory { counts: [Some(cpu), Some(k80), Some(v100)], ..Inventory::unbounded() }
+    }
+
+    /// Set one tier's device count (`None` = unbounded, `Some(0)` =
+    /// absent). Builder-style.
+    pub fn with_count(mut self, hw: Hardware, count: Option<usize>) -> Self {
+        self.counts[hw.index()] = count;
+        self
+    }
+
+    /// Override one tier's `$`/hr (fleet-level accounting only; the
+    /// per-pipeline search still prices by the catalog). Builder-style.
+    pub fn with_cost_per_hour(mut self, hw: Hardware, cost: f64) -> Self {
+        assert!(cost.is_finite() && cost >= 0.0, "tier cost must be finite and non-negative");
+        self.costs[hw.index()] = cost;
+        self
+    }
+
+    /// Device count for a tier: `None` = unbounded.
+    pub fn count(&self, hw: Hardware) -> Option<usize> {
+        self.counts[hw.index()]
+    }
+
+    /// `$`/hr for one device of this tier under this inventory.
+    pub fn cost_per_hour(&self, hw: Hardware) -> f64 {
+        self.costs[hw.index()]
+    }
+
+    /// Whether the tier exists in this inventory at all (count ≠ 0).
+    pub fn has(&self, hw: Hardware) -> bool {
+        self.counts[hw.index()] != Some(0)
+    }
+
+    /// Available tiers, cheapest first — the replacement for iterating
+    /// `Hardware::ALL` directly when searching placements.
+    pub fn tiers(&self) -> impl Iterator<Item = Hardware> + '_ {
+        Hardware::ALL.into_iter().filter(|hw| self.has(*hw))
+    }
+
+    /// True when no tier has a finite count (today's pre-fleet
+    /// semantics).
+    pub fn is_unbounded(&self) -> bool {
+        self.counts.iter().all(|c| c.is_none())
+    }
+}
+
+impl Default for Inventory {
+    fn default() -> Self {
+        Inventory::unbounded()
     }
 }
 
@@ -104,5 +218,46 @@ mod tests {
             assert_eq!(Hardware::from_id(hw.id()), Some(hw));
         }
         assert_eq!(Hardware::from_id("tpu"), None);
+    }
+
+    #[test]
+    fn index_matches_all_order() {
+        for (i, hw) in Hardware::ALL.into_iter().enumerate() {
+            assert_eq!(hw.index(), i);
+        }
+    }
+
+    #[test]
+    fn unbounded_inventory_keeps_catalog_semantics() {
+        let inv = Inventory::default();
+        assert!(inv.is_unbounded());
+        assert_eq!(inv.tiers().collect::<Vec<_>>(), Hardware::ALL.to_vec());
+        for hw in Hardware::ALL {
+            assert!(inv.has(hw));
+            assert_eq!(inv.count(hw), None);
+            assert_eq!(inv.cost_per_hour(hw).to_bits(), hw.cost_per_hour().to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_count_tier_is_absent() {
+        let inv = Inventory::unbounded().with_count(Hardware::GpuK80, Some(0));
+        assert!(!inv.has(Hardware::GpuK80));
+        assert_eq!(inv.tiers().collect::<Vec<_>>(), vec![Hardware::Cpu, Hardware::GpuV100]);
+        assert!(!inv.is_unbounded());
+    }
+
+    #[test]
+    fn bounded_counts_and_cost_override() {
+        let inv = Inventory::bounded(64, 8, 2).with_cost_per_hour(Hardware::GpuK80, 0.35);
+        assert_eq!(inv.count(Hardware::Cpu), Some(64));
+        assert_eq!(inv.count(Hardware::GpuK80), Some(8));
+        assert_eq!(inv.count(Hardware::GpuV100), Some(2));
+        assert!((inv.cost_per_hour(Hardware::GpuK80) - 0.35).abs() < 1e-12);
+        // Other tiers keep catalog prices.
+        assert_eq!(
+            inv.cost_per_hour(Hardware::Cpu).to_bits(),
+            Hardware::Cpu.cost_per_hour().to_bits()
+        );
     }
 }

@@ -15,7 +15,10 @@
 //!   detect arrival-process deviations across timescales and re-scale
 //!   individual stages within seconds (§5).
 //!
-//! [`baselines`] implements the paper's comparison points (coarse-grained
+//! [`fleet`] lifts the Planner to many tenant pipelines jointly
+//! provisioned against one finite accelerator inventory, with
+//! shared-prefix stage deduplication. [`baselines`] implements the
+//! paper's comparison points (coarse-grained
 //! CG-Mean/CG-Peak planning, the AutoScale reactive tuner, DS2), and
 //! [`serving`] is a Clipper-like physical serving plane that executes the
 //! real AOT-compiled models through PJRT ([`runtime`]) with centralized
@@ -24,6 +27,7 @@
 pub mod baselines;
 pub mod config;
 pub mod experiments;
+pub mod fleet;
 pub mod hardware;
 pub mod planner;
 pub mod profiler;

@@ -67,6 +67,20 @@ impl Args {
         self.get(key).is_some_and(|v| v != "false")
     }
 
+    /// Reject flags the command does not define: a typo'd flag must not
+    /// silently fall back to a default and masquerade as the requested
+    /// run. Prints the offending flag and the usage text; the caller
+    /// exits nonzero. The global `--verbose` is always accepted.
+    fn reject_unknown(&self, cmd: &str, allowed: &[&str]) -> bool {
+        for key in self.flags.keys() {
+            if key != "verbose" && !allowed.contains(&key.as_str()) {
+                inferline::log_error!("unknown flag --{key} for {cmd:?}\n{USAGE}");
+                return false;
+            }
+        }
+        true
+    }
+
     /// Resolve the estimator-cache persistence flags: `--no-cache` wins,
     /// `--cache <path>` names a file, a bare `--cache` (and, when
     /// `default_on` — the sweep/robustness experiments — no flag at all)
@@ -128,6 +142,11 @@ COMMANDS:
               (closed-loop Planner+Tuner scenario matrix vs the coarse
               baselines -> robustness.json + robustness_baselines.csv;
               the matrix is the checked-in scenarios/*.json specs)
+  experiment  fleet [--quick] [--seed <n>] [--cache <file>|--no-cache]
+              (joint provisioning of 10/100/1000-tenant populations over
+              a shared accelerator inventory, with prefix-stage sharing
+              and a constrained-inventory replan -> fleet.json +
+              fleet.csv; see the fleet module docs for the rules)
   budget      check|update [--report <robustness.json>] [--budgets <BUDGETS.json>]
               (check: compare a robustness report against the checked-in
               per-scenario SLO budget ledger, exit nonzero on regression;
@@ -149,6 +168,7 @@ Pipelines: image-processing, video-monitoring, social-media, tf-cascade
 
 Global flags: --verbose raises diagnostics to debug level; the
 INFERLINE_LOG env var (error|warn|info|debug) sets it explicitly.
+Flags a command does not define are rejected, not ignored.
 ";
 
 fn main() -> ExitCode {
@@ -170,6 +190,9 @@ fn main() -> ExitCode {
         "bench" => cmd_bench(&args),
         "trace" => cmd_trace(&args),
         "pipelines" => {
+            if !args.reject_unknown("pipelines", &[]) {
+                return ExitCode::FAILURE;
+            }
             for p in pipelines::all() {
                 println!(
                     "{:<18} {} stages, framework {}",
@@ -222,6 +245,20 @@ fn get_pipeline(args: &Args) -> Option<inferline::config::PipelineSpec> {
 }
 
 fn cmd_plan(args: &Args) -> bool {
+    let allowed = [
+        "pipeline",
+        "slo",
+        "lambda",
+        "cv",
+        "sample-duration",
+        "profiles",
+        "compare-cg",
+        "cache",
+        "no-cache",
+    ];
+    if !args.reject_unknown("plan", &allowed) {
+        return false;
+    }
     let Some(spec) = get_pipeline(args) else { return false };
     let profiles = load_profiles(args);
     let slo = args.f64("slo", 0.15);
@@ -281,6 +318,9 @@ fn cmd_plan(args: &Args) -> bool {
 }
 
 fn cmd_profile(args: &Args) -> bool {
+    if !args.reject_unknown("profile", &["artifacts", "out", "max-batch"]) {
+        return false;
+    }
     let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
@@ -323,6 +363,21 @@ fn cmd_profile(args: &Args) -> bool {
 }
 
 fn cmd_simulate(args: &Args) -> bool {
+    let allowed = [
+        "pipeline",
+        "slo",
+        "lambda",
+        "cv",
+        "duration",
+        "faults",
+        "seed",
+        "trace-out",
+        "series-out",
+        "profiles",
+    ];
+    if !args.reject_unknown("simulate", &allowed) {
+        return false;
+    }
     let Some(spec) = get_pipeline(args) else { return false };
     let profiles = load_profiles(args);
     let slo = args.f64("slo", 0.15);
@@ -461,6 +516,21 @@ fn peak_rss_kb() -> Option<u64> {
 /// for nominal; the scenario is what arrived" convention — and the run
 /// reports the aggregate summary plus its memory footprint.
 fn cmd_stream(args: &Args) -> bool {
+    let allowed = [
+        "scenario",
+        "pipeline",
+        "slo",
+        "lambda",
+        "quick",
+        "seed",
+        "chunk",
+        "planner",
+        "max-rss-mb",
+        "profiles",
+    ];
+    if !args.reject_unknown("stream", &allowed) {
+        return false;
+    }
     let Some(spec_path) = args.get("scenario") else {
         inferline::log_error!("--scenario <spec.json> is required");
         return false;
@@ -556,6 +626,10 @@ fn cmd_stream(args: &Args) -> bool {
 }
 
 fn cmd_serve(args: &Args) -> bool {
+    let allowed = ["pipeline", "lambda", "duration", "slo", "backend", "artifacts", "profiles"];
+    if !args.reject_unknown("serve", &allowed) {
+        return false;
+    }
     let Some(spec) = get_pipeline(args) else { return false };
     let profiles = load_profiles(args);
     let lambda = args.f64("lambda", 20.0);
@@ -616,39 +690,52 @@ fn cmd_serve(args: &Args) -> bool {
     result.latencies.len() == n
 }
 
+/// Parse `--seed` for the report-writing experiments: exact u64 (the
+/// reports are bit-reproducible per seed; parse as u64, not via f64, so
+/// every value round-trips), below 2^53 (report and budget-ledger seeds
+/// are JSON numbers, and only such integers round-trip exactly). `None`
+/// — after an error message — on a malformed or oversized value: a
+/// typo'd seed must not silently fall back to the default and
+/// masquerade as a run at the requested seed.
+fn report_seed(args: &Args) -> Option<u64> {
+    let seed: u64 = match args.get("seed") {
+        None => 42,
+        Some(v) => match v.parse() {
+            Ok(s) => s,
+            Err(_) => {
+                inferline::log_error!("--seed {v:?} is not an unsigned integer");
+                return None;
+            }
+        },
+    };
+    if seed >= (1u64 << 53) {
+        inferline::log_error!(
+            "--seed {seed} exceeds 2^53 and cannot round-trip through the report"
+        );
+        return None;
+    }
+    Some(seed)
+}
+
 fn cmd_experiment(args: &Args) -> bool {
+    if !args.reject_unknown("experiment", &["quick", "seed", "cache", "no-cache"]) {
+        return false;
+    }
     let Some(name) = args.positional.first() else {
         inferline::log_error!("experiment id required: {:?}", inferline::experiments::ALL_FIGURES);
         return false;
     };
     let quick = args.bool("quick");
     if name == "robustness" {
-        // Separately dispatched so the seed flag reaches the harness (the
-        // report is bit-reproducible per seed; parse as u64, not via f64,
-        // so every seed value round-trips exactly).
-        let seed: u64 = match args.get("seed") {
-            None => 42,
-            // A typo'd seed must not silently fall back to the default
-            // and masquerade as a run at the requested seed.
-            Some(v) => match v.parse() {
-                Ok(s) => s,
-                Err(_) => {
-                    inferline::log_error!("--seed {v:?} is not an unsigned integer");
-                    return false;
-                }
-            },
-        };
-        // Report and budget-ledger seeds are JSON numbers (f64): only
-        // integers below 2^53 round-trip exactly, and the budget gate
-        // pins budgets to an exact seed.
-        if seed >= (1u64 << 53) {
-            inferline::log_error!(
-                "--seed {seed} exceeds 2^53 and cannot round-trip through the report"
-            );
-            return false;
-        }
+        // Separately dispatched so the seed flag reaches the harness.
+        let Some(seed) = report_seed(args) else { return false };
         let ctx = inferline::experiments::Ctx::new(quick).with_cache(args.cache_path(true));
         return inferline::experiments::robustness::run(&ctx, seed);
+    }
+    if name == "fleet" {
+        let Some(seed) = report_seed(args) else { return false };
+        let ctx = inferline::experiments::Ctx::new(quick).with_cache(args.cache_path(true));
+        return inferline::experiments::fleet::run(&ctx, seed);
     }
     if name == "sweep" {
         // Separately dispatched so the cache flags reach the harness:
@@ -673,6 +760,9 @@ fn cmd_experiment(args: &Args) -> bool {
 /// re-baselining workflow). `check` is the CI gate: nonzero exit on any
 /// violated scenario budget.
 fn cmd_budget(args: &Args) -> bool {
+    if !args.reject_unknown("budget", &["report", "budgets"]) {
+        return false;
+    }
     let report = PathBuf::from(args.get("report").unwrap_or("results/robustness.json"));
     let budgets = PathBuf::from(args.get("budgets").unwrap_or("BUDGETS.json"));
     match args.positional.first().map(String::as_str) {
@@ -686,6 +776,9 @@ fn cmd_budget(args: &Args) -> bool {
 }
 
 fn cmd_bench(args: &Args) -> bool {
+    if !args.reject_unknown("bench", &["out", "quick", "current", "baseline"]) {
+        return false;
+    }
     let what = args.positional.first().map(String::as_str).unwrap_or("estimator");
     match what {
         "estimator" => {
@@ -720,6 +813,9 @@ fn cmd_bench(args: &Args) -> bool {
 }
 
 fn cmd_trace(args: &Args) -> bool {
+    if !args.reject_unknown("trace", &["kind", "out", "lambda", "cv", "duration", "seed"]) {
+        return false;
+    }
     let out = PathBuf::from(args.get("out").unwrap_or("trace.txt"));
     if args.positional.first().map(String::as_str) == Some("scenario") {
         return cmd_trace_scenario(args, &out);

@@ -63,7 +63,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::config::{PipelineConfig, PipelineSpec, StageConfig};
-use crate::profiler::{ProfileSet, BATCH_CANDIDATES};
+use crate::hardware::{Hardware, Inventory};
+use crate::profiler::{ModelProfile, ProfileSet, BATCH_CANDIDATES};
 use crate::simulator::{self, RoutingPlan, SimParams};
 use crate::util::json::Json;
 use crate::workload::Trace;
@@ -218,11 +219,7 @@ fn profiles_fingerprint(profiles: &ProfileSet) -> u64 {
     for (model, mp) in &profiles.models {
         h.mix_str(model);
         for (hw, prof) in &mp.per_hw {
-            let hw_idx = crate::hardware::Hardware::ALL
-                .iter()
-                .position(|&cand| cand == *hw)
-                .unwrap_or(0) as u64;
-            h.mix(hw_idx);
+            h.mix(hw.index() as u64);
             for &(batch, latency) in &prof.points {
                 h.mix(batch as u64);
                 h.mix(latency.to_bits());
@@ -236,13 +233,7 @@ fn cache_key(fp: u64, config: &PipelineConfig) -> CacheKey {
     let stages = config
         .stages
         .iter()
-        .map(|s| {
-            let hw = crate::hardware::Hardware::ALL
-                .iter()
-                .position(|&h| h == s.hw)
-                .unwrap_or(0) as u8;
-            (hw, s.batch as u32, s.replicas as u32)
-        })
+        .map(|s| (s.hw.index() as u8, s.batch as u32, s.replicas as u32))
         .collect();
     (fp, stages)
 }
@@ -610,7 +601,7 @@ impl EstimatorCache {
                     }
                     nums[j] = x as u32;
                 }
-                if nums[0] as usize >= crate::hardware::Hardware::ALL.len() {
+                if nums[0] as usize >= Hardware::ALL.len() {
                     return Err(fail("unknown hardware tier"));
                 }
                 if nums[1] == 0 || nums[2] == 0 {
@@ -734,6 +725,13 @@ pub struct Planner<'a> {
     /// feasibility. Decisions and plans are bit-identical with it off;
     /// disabling is for benchmarking and regression tests.
     pub fast_path: bool,
+    /// Hardware tiers the search may place replicas on. The default
+    /// [`Inventory::unbounded()`] reproduces the historical semantics
+    /// bit-identically; the single-pipeline search consults tier
+    /// *membership* only (`Some(0)` counts exclude a tier), while
+    /// positive finite counts are enforced by the fleet packer
+    /// ([`crate::fleet`]).
+    inventory: Inventory,
     cache: Arc<EstimatorCache>,
     counters: SearchCounters,
     /// Fingerprint of everything that shapes simulated outcomes besides
@@ -750,6 +748,7 @@ impl<'a> Planner<'a> {
             params: SimParams::default(),
             threads,
             fast_path: true,
+            inventory: Inventory::unbounded(),
             cache: EstimatorCache::shared(EstimatorCache::DEFAULT_CAPACITY),
             counters: SearchCounters::default(),
             context_fp: spec_fingerprint(spec)
@@ -780,6 +779,16 @@ impl<'a> Planner<'a> {
     /// Toggle the Estimator fast path (reference semantics when off).
     pub fn with_fast_path(mut self, fast_path: bool) -> Self {
         self.fast_path = fast_path;
+        self
+    }
+
+    /// Restrict the search to the tiers present in `inventory`
+    /// ([`Inventory::tiers()`]): Algorithm 1 picks the best *available*
+    /// hardware and Algorithm 2 only downgrades onto available tiers.
+    /// With the default unbounded inventory every tier is available and
+    /// plans are bit-identical to the pre-inventory planner.
+    pub fn with_inventory(mut self, inventory: Inventory) -> Self {
+        self.inventory = inventory;
         self
     }
 
@@ -874,22 +883,43 @@ impl<'a> Planner<'a> {
         self.feasible_fp(self.fingerprint(trace), config, trace, slo)
     }
 
+    /// Algorithm 1's `BestHardware` restricted to the inventory: the
+    /// lowest-latency *available* profiled tier (ties toward the cheaper
+    /// one — the same ordering as [`ModelProfile::best_hardware`], so an
+    /// unbounded inventory picks identically).
+    fn best_available_hardware(
+        &self,
+        model: &str,
+        mp: &ModelProfile,
+    ) -> Result<Hardware, PlanError> {
+        mp.per_hw
+            .iter()
+            .filter(|(hw, _)| self.inventory.has(**hw))
+            .min_by(|(ha, pa), (hb, pb)| {
+                pa.latency(1)
+                    .partial_cmp(&pb.latency(1))
+                    .unwrap()
+                    .then(ha.cost_per_hour().partial_cmp(&hb.cost_per_hour()).unwrap())
+            })
+            .map(|(hw, _)| *hw)
+            .ok_or_else(|| {
+                PlanError::Infeasible(format!(
+                    "no hardware tier in the inventory has a profile for model {model:?}"
+                ))
+            })
+    }
+
     /// Algorithm 1: find an initial feasible configuration (or fail).
     pub fn initialize(&self, trace: &Trace, slo: f64) -> Result<PipelineConfig, PlanError> {
         let fp = self.fingerprint(trace);
-        // Lines 2-5: batch = 1, replicas = 1, lowest-latency hardware.
-        let mut config = PipelineConfig {
-            stages: self
-                .spec
-                .stages
-                .iter()
-                .map(|s| StageConfig {
-                    hw: self.profiles.get(&s.model).best_hardware(),
-                    batch: 1,
-                    replicas: 1,
-                })
-                .collect(),
-        };
+        // Lines 2-5: batch = 1, replicas = 1, lowest-latency hardware
+        // among the tiers the inventory offers.
+        let mut stages = Vec::with_capacity(self.spec.stages.len());
+        for s in &self.spec.stages {
+            let hw = self.best_available_hardware(&s.model, self.profiles.get(&s.model))?;
+            stages.push(StageConfig { hw, batch: 1, replicas: 1 });
+        }
+        let mut config = PipelineConfig { stages };
         // Lines 6-7: if even the pure service time exceeds the SLO the
         // constraint is infeasible with the available hardware.
         let st = simulator::service_time(self.spec, self.profiles, &config);
@@ -1136,7 +1166,7 @@ impl<'a> Planner<'a> {
         fp: u64,
         config: &PipelineConfig,
         stage: usize,
-        lower: crate::hardware::Hardware,
+        lower: Hardware,
         current_cost: f64,
         trace: &Trace,
         slo: f64,
@@ -1186,7 +1216,10 @@ impl<'a> Planner<'a> {
         let model = &self.spec.stages[stage].model;
         let mp = self.profiles.get(model);
         let current_cost = config.cost_per_hour();
-        for lower in mp.downgrades_from(c.hw) {
+        // Downgrade targets are the cheaper profiled tiers *present in the
+        // inventory* — with the default unbounded inventory this is exactly
+        // `downgrades_from`, so pre-fleet plans are bit-identical.
+        for lower in mp.downgrades_from(c.hw).into_iter().filter(|hw| self.inventory.has(*hw)) {
             self.prewarm_downgrade_tier(fp, config, stage, lower, current_cost, trace, slo);
             // Freeze other stages; re-initialize this stage on `lower`.
             let mut cand = config.clone();

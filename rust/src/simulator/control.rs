@@ -15,7 +15,7 @@ use crate::config::{PipelineConfig, PipelineSpec};
 use crate::profiler::ProfileSet;
 use crate::workload::Trace;
 
-use super::engine::{Engine, SimParams, SimResult};
+use super::engine::{SimParams, SimResult, SimRun};
 use super::faults::FaultPlan;
 use super::probe::Probe;
 
@@ -65,7 +65,7 @@ pub fn simulate_controlled(
     params: &SimParams,
     controller: &mut dyn Controller,
 ) -> SimResult {
-    Engine::new(spec, profiles, initial, params).run(trace, initial, Some(controller))
+    SimRun::new(spec, profiles, initial, params).controller(controller).run(trace).0
 }
 
 /// [`simulate_controlled`] with a fault plan injected (see
@@ -83,9 +83,11 @@ pub fn simulate_controlled_with_faults(
     controller: &mut dyn Controller,
     faults: &FaultPlan,
 ) -> SimResult {
-    Engine::new(spec, profiles, initial, params)
-        .with_faults(Some(faults))
-        .run(trace, initial, Some(controller))
+    SimRun::new(spec, profiles, initial, params)
+        .controller(controller)
+        .faults(faults)
+        .run(trace)
+        .0
 }
 
 /// [`simulate_controlled`] — optionally fault-injected — with a
@@ -104,10 +106,12 @@ pub fn simulate_controlled_probed(
     faults: Option<&FaultPlan>,
     probe: &mut dyn Probe,
 ) -> SimResult {
-    Engine::new(spec, profiles, initial, params)
-        .with_faults(faults)
-        .with_probe(Some(probe))
-        .run(trace, initial, Some(controller))
+    SimRun::new(spec, profiles, initial, params)
+        .controller(controller)
+        .faults(faults)
+        .probe(probe)
+        .run(trace)
+        .0
 }
 
 /// A controller that never acts (for A/B comparisons of "Planner only").

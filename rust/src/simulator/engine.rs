@@ -1142,17 +1142,6 @@ impl<'a> Engine<'a> {
             .collect()
     }
 
-    /// Run to completion. `controller` is optional (open-loop Estimator
-    /// when `None`).
-    pub(super) fn run(
-        self,
-        trace: &Trace,
-        config_hw: &PipelineConfig,
-        controller: Option<&mut dyn Controller>,
-    ) -> SimResult {
-        self.run_ext(trace, config_hw, controller, None, None).0
-    }
-
     /// Full-control entry point: optional shared routing plan, optional
     /// early-abort/fast-accept budget. Returns the (possibly partial)
     /// result and the budget verdict. Budgets are only meaningful
@@ -1434,6 +1423,167 @@ impl<'a> Engine<'a> {
     }
 }
 
+/// Builder-style entry point unifying the whole `simulate_*` family.
+///
+/// Every public simulation mode is one [`SimRun`] with zero or more
+/// options attached:
+///
+/// ```ignore
+/// // Open-loop Estimator run (== `simulate`):
+/// let result = SimRun::new(&spec, &profiles, &config, &params).run(&trace).0;
+/// // Budgeted feasibility probe under a fault plan:
+/// let (result, verdict) = SimRun::new(&spec, &profiles, &config, &params)
+///     .faults(&plan)
+///     .budget(slo)
+///     .run(&trace);
+/// // Tuner in the loop with telemetry:
+/// let result = SimRun::new(&spec, &profiles, &config, &params)
+///     .controller(&mut tuner)
+///     .probe(&mut rec)
+///     .run(&trace)
+///     .0;
+/// ```
+///
+/// The legacy free functions ([`simulate`], [`simulate_budgeted`], …
+/// and the `simulate_controlled*` family in [`super::control`]) are thin
+/// delegating wrappers over this builder, and every combination they
+/// expressed is bit-identical through it (asserted by
+/// `tests/probe_conformance.rs`).
+///
+/// Mode semantics, inherited from the engine:
+///
+/// * `.budget(slo)` arms early-abort/fast-accept feasibility proofs and
+///   is meaningful open-loop only — combining it with `.controller(..)`
+///   is a contract violation (debug-asserted, like the engine itself).
+/// * `.run()` prices open-loop runs statically (config $/hr × makespan);
+///   controlled runs keep the engine's cost integral over the replica
+///   timeline.
+/// * `.run_streamed(..)` is the O(in-flight-window) open-loop path and
+///   accepts no other option (hard assert): routing is sampled lazily,
+///   and budgets/faults/probes are materialized-run features.
+pub struct SimRun<'a> {
+    spec: &'a PipelineSpec,
+    profiles: &'a ProfileSet,
+    config: &'a PipelineConfig,
+    params: &'a SimParams,
+    routing: Option<&'a RoutingPlan>,
+    faults: Option<&'a FaultPlan>,
+    probe: Option<&'a mut dyn Probe>,
+    controller: Option<&'a mut dyn Controller>,
+    budget_slo: Option<f64>,
+}
+
+impl<'a> SimRun<'a> {
+    /// A plain open-loop run of `config` (the paper's Estimator); attach
+    /// options, then call [`run`](Self::run) or
+    /// [`run_streamed`](Self::run_streamed).
+    pub fn new(
+        spec: &'a PipelineSpec,
+        profiles: &'a ProfileSet,
+        config: &'a PipelineConfig,
+        params: &'a SimParams,
+    ) -> Self {
+        SimRun {
+            spec,
+            profiles,
+            config,
+            params,
+            routing: None,
+            faults: None,
+            probe: None,
+            controller: None,
+            budget_slo: None,
+        }
+    }
+
+    /// Share a precomputed [`RoutingPlan`] (same spec, trace and routing
+    /// seed). Bit-identical with or without; skips per-query sampling.
+    pub fn routing(mut self, plan: impl Into<Option<&'a RoutingPlan>>) -> Self {
+        self.routing = plan.into();
+        self
+    }
+
+    /// Inject a compiled [`FaultPlan`]. An empty plan is bit-identical
+    /// to no plan at all (the no-fault invariant).
+    pub fn faults(mut self, plan: impl Into<Option<&'a FaultPlan>>) -> Self {
+        self.faults = plan.into();
+        self
+    }
+
+    /// Attach a read-only [`Probe`]; the result stays bit-identical to
+    /// the probe-less run.
+    pub fn probe(mut self, probe: &'a mut dyn Probe) -> Self {
+        self.probe = Some(probe);
+        self
+    }
+
+    /// Close the loop with a [`Controller`] ticking every
+    /// `params.control_interval`.
+    pub fn controller(mut self, controller: &'a mut dyn Controller) -> Self {
+        self.controller = Some(controller);
+        self
+    }
+
+    /// Arm the early-abort/fast-accept feasibility budget for this SLO
+    /// (open-loop only; see [`simulate_budgeted`] for the proof bounds).
+    pub fn budget(mut self, slo: f64) -> Self {
+        self.budget_slo = Some(slo);
+        self
+    }
+
+    /// Run over a materialized trace. The [`BudgetVerdict`] is
+    /// `Completed` unless [`budget`](Self::budget) was armed.
+    pub fn run(self, trace: &Trace) -> (SimResult, BudgetVerdict) {
+        let SimRun {
+            spec,
+            profiles,
+            config,
+            params,
+            routing,
+            faults,
+            probe,
+            controller,
+            budget_slo,
+        } = self;
+        let open_loop = controller.is_none();
+        let budget = budget_slo.map(|slo| AbortBudget { slo });
+        let (mut result, verdict) = Engine::new(spec, profiles, config, params)
+            .with_faults(faults)
+            .with_probe(probe)
+            .run_ext(trace, config, controller, routing, budget);
+        if open_loop {
+            // Open loop: cost = static config rate x makespan. Controlled
+            // runs keep the engine's cost integral over replica changes.
+            result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
+        }
+        (result, verdict)
+    }
+
+    /// Run pulling arrivals from an [`ArrivalSource`] in chunks of at
+    /// most `chunk`; see [`simulate_streamed`] for the equivalence
+    /// contract. Only a bare open-loop builder may stream.
+    pub fn run_streamed(
+        self,
+        source: &mut dyn ArrivalSource,
+        slo: f64,
+        chunk: usize,
+    ) -> StreamSummary {
+        assert!(
+            self.routing.is_none()
+                && self.faults.is_none()
+                && self.probe.is_none()
+                && self.controller.is_none()
+                && self.budget_slo.is_none(),
+            "streamed runs are plain open loop: attach no routing/faults/probe/controller/budget"
+        );
+        let mut summary = Engine::new(self.spec, self.profiles, self.config, self.params)
+            .run_streamed(source, slo, chunk);
+        // Open loop: cost = static config rate x makespan.
+        summary.cost_dollars = self.config.cost_per_hour() * summary.horizon / 3600.0;
+        summary
+    }
+}
+
 /// Open-loop simulation: the paper's Estimator (§4.2). Simulates the whole
 /// trace through the given static configuration and returns every query's
 /// end-to-end latency.
@@ -1459,11 +1609,7 @@ pub fn simulate_with_routing(
     params: &SimParams,
     routing: Option<&RoutingPlan>,
 ) -> SimResult {
-    let (mut result, _) =
-        Engine::new(spec, profiles, config, params).run_ext(trace, config, None, routing, None);
-    // Open loop: cost = static config rate x makespan.
-    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
-    result
+    SimRun::new(spec, profiles, config, params).routing(routing).run(trace).0
 }
 
 /// Budgeted open-loop simulation for feasibility checks, symmetric in
@@ -1485,15 +1631,7 @@ pub fn simulate_budgeted(
     params: &SimParams,
     routing: Option<&RoutingPlan>,
 ) -> (SimResult, BudgetVerdict) {
-    let (mut result, verdict) = Engine::new(spec, profiles, config, params).run_ext(
-        trace,
-        config,
-        None,
-        routing,
-        Some(AbortBudget { slo }),
-    );
-    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
-    (result, verdict)
+    SimRun::new(spec, profiles, config, params).routing(routing).budget(slo).run(trace)
 }
 
 /// [`simulate`] with a fault plan injected (see [`super::faults`]). With
@@ -1509,11 +1647,7 @@ pub fn simulate_with_faults(
     params: &SimParams,
     faults: &FaultPlan,
 ) -> SimResult {
-    let (mut result, _) = Engine::new(spec, profiles, config, params)
-        .with_faults(Some(faults))
-        .run_ext(trace, config, None, None, None);
-    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
-    result
+    SimRun::new(spec, profiles, config, params).faults(faults).run(trace).0
 }
 
 /// [`simulate_budgeted`] with a fault plan injected. The dispatch-time
@@ -1534,11 +1668,11 @@ pub fn simulate_budgeted_with_faults(
     routing: Option<&RoutingPlan>,
     faults: &FaultPlan,
 ) -> (SimResult, BudgetVerdict) {
-    let (mut result, verdict) = Engine::new(spec, profiles, config, params)
-        .with_faults(Some(faults))
-        .run_ext(trace, config, None, routing, Some(AbortBudget { slo }));
-    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
-    (result, verdict)
+    SimRun::new(spec, profiles, config, params)
+        .routing(routing)
+        .faults(faults)
+        .budget(slo)
+        .run(trace)
 }
 
 /// [`simulate`] — optionally fault-injected — with a [`Probe`] observing
@@ -1555,12 +1689,7 @@ pub fn simulate_probed(
     faults: Option<&FaultPlan>,
     probe: &mut dyn Probe,
 ) -> SimResult {
-    let (mut result, _) = Engine::new(spec, profiles, config, params)
-        .with_faults(faults)
-        .with_probe(Some(probe))
-        .run_ext(trace, config, None, None, None);
-    result.cost_dollars = config.cost_per_hour() * result.horizon / 3600.0;
-    result
+    SimRun::new(spec, profiles, config, params).faults(faults).probe(probe).run(trace).0
 }
 
 /// Streamed open-loop simulation: [`simulate`] without the memory.
@@ -1581,9 +1710,5 @@ pub fn simulate_streamed(
     slo: f64,
     chunk: usize,
 ) -> StreamSummary {
-    let mut summary =
-        Engine::new(spec, profiles, config, params).run_streamed(source, slo, chunk);
-    // Open loop: cost = static config rate x makespan.
-    summary.cost_dollars = config.cost_per_hour() * summary.horizon / 3600.0;
-    summary
+    SimRun::new(spec, profiles, config, params).run_streamed(source, slo, chunk)
 }

@@ -114,6 +114,18 @@
 //! simulate — with aggregates bit-identical to folding the materialized
 //! run's result (`tests/streaming_conformance.rs`, plus the long-horizon
 //! bounded-RSS smoke in CI).
+//!
+//! ## Entry points
+//!
+//! [`SimRun`] is the unified builder over every simulation mode: start
+//! from `(spec, profiles, config, params)`, attach any combination of
+//! `.routing(..)`, `.faults(..)`, `.probe(..)`, `.controller(..)` and
+//! `.budget(..)`, then `.run(trace)` (or `.run_streamed(..)` for the
+//! bare open-loop streamed path). The historical free functions
+//! ([`simulate`], [`simulate_budgeted`], [`simulate_with_faults`],
+//! [`simulate_probed`], [`control::simulate_controlled`], …) survive as
+//! thin delegating wrappers, and `tests/probe_conformance.rs` asserts
+//! each wrapper is bit-identical to its builder spelling.
 
 pub mod control;
 mod engine;
@@ -125,7 +137,7 @@ mod routing;
 pub use engine::{
     simulate, simulate_budgeted, simulate_budgeted_with_faults, simulate_probed,
     simulate_streamed, simulate_with_faults, simulate_with_routing, BudgetVerdict, SimParams,
-    SimResult, StageStats, StreamSummary,
+    SimResult, SimRun, StageStats, StreamSummary,
 };
 pub use routing::{RoutingPlan, RoutingSampler};
 

@@ -1,0 +1,282 @@
+//! Conformance and behavior suite for fleet-scale planning
+//! (`inferline::fleet`) and the planner's inventory restriction.
+//!
+//! The load-bearing invariant is conformance: a 1-tenant fleet on an
+//! unbounded inventory is `Planner::plan`, bit for bit — the fleet
+//! layer may only *add* behavior (packing, repair, sharing), never
+//! perturb the single-pipeline search it is built on. The rest of the
+//! suite locks down the packer's typed infeasibility, the
+//! prefix-sharing accounting identities, and determinism of the whole
+//! fleet plan.
+
+use inferline::config::pipelines;
+use inferline::fleet::{synth_tenants, FleetError, FleetPlanner, FleetSpec, Tenant};
+use inferline::hardware::{Hardware, Inventory};
+use inferline::planner::Planner;
+use inferline::profiler::analytic::paper_profiles;
+use inferline::workload::gamma_trace;
+
+fn one_tenant_fleet(name: &str, lambda: f64, slo: f64, seed: u64) -> FleetSpec {
+    let spec = pipelines::by_name(name).expect("checked-in pipeline");
+    FleetSpec {
+        tenants: vec![Tenant {
+            name: format!("solo-{name}"),
+            spec,
+            slo,
+            sample: gamma_trace(lambda, 1.0, 30.0, seed),
+        }],
+        inventory: Inventory::unbounded(),
+    }
+}
+
+#[test]
+fn one_tenant_unbounded_fleet_is_planner_plan_bit_identical() {
+    let profiles = paper_profiles();
+    for (name, lambda, slo) in [
+        ("image-processing", 120.0, 0.3),
+        ("video-monitoring", 80.0, 0.35),
+        ("social-media", 100.0, 0.35),
+        ("tf-cascade", 150.0, 0.25),
+    ] {
+        let fleet = one_tenant_fleet(name, lambda, slo, 7);
+        let solo = Planner::new(&fleet.tenants[0].spec, &profiles)
+            .plan(&fleet.tenants[0].sample, slo)
+            .expect("solo plan");
+        let plan = FleetPlanner::new(&profiles).plan(&fleet).expect("fleet plan");
+        assert_eq!(plan.tenants.len(), 1);
+        let t = &plan.tenants[0];
+        assert_eq!(t.plan.config, solo.config, "{name}: config");
+        assert_eq!(
+            t.plan.cost_per_hour.to_bits(),
+            solo.cost_per_hour.to_bits(),
+            "{name}: cost"
+        );
+        assert_eq!(
+            t.plan.estimated_p99.to_bits(),
+            solo.estimated_p99.to_bits(),
+            "{name}: estimated p99"
+        );
+        assert_eq!(t.plan.iterations, solo.iterations, "{name}: iterations");
+        assert_eq!(t.plan.actions_taken, solo.actions_taken, "{name}: actions");
+        // No peer to share with, nothing to repair: the fleet layer
+        // must be invisible.
+        assert!(plan.shared.is_empty(), "{name}: shared stages");
+        assert_eq!(plan.repairs, 0, "{name}: repairs");
+        assert!(t.excluded.is_empty(), "{name}: exclusions");
+        assert_eq!(
+            plan.total_cost_per_hour.to_bits(),
+            solo.cost_per_hour.to_bits(),
+            "{name}: fleet total"
+        );
+        assert_eq!(t.effective_cost_per_hour.to_bits(), solo.cost_per_hour.to_bits());
+        assert_eq!(plan.savings_per_hour, 0.0, "{name}: savings");
+    }
+}
+
+#[test]
+fn planner_inventory_unbounded_is_default_bit_identical() {
+    let profiles = paper_profiles();
+    let spec = pipelines::social_media();
+    let sample = gamma_trace(120.0, 1.0, 30.0, 3);
+    let a = Planner::new(&spec, &profiles).plan(&sample, 0.35).expect("default");
+    let b = Planner::new(&spec, &profiles)
+        .with_inventory(Inventory::unbounded())
+        .plan(&sample, 0.35)
+        .expect("explicit unbounded");
+    assert_eq!(a.config, b.config);
+    assert_eq!(a.cost_per_hour.to_bits(), b.cost_per_hour.to_bits());
+    assert_eq!(a.estimated_p99.to_bits(), b.estimated_p99.to_bits());
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.actions_taken, b.actions_taken);
+}
+
+#[test]
+fn planner_respects_tier_exclusions() {
+    let profiles = paper_profiles();
+    let spec = pipelines::tf_cascade();
+    let sample = gamma_trace(60.0, 1.0, 30.0, 5);
+    // CPU-only inventory: every stage must land on CPU.
+    let cpu_only = Inventory::unbounded()
+        .with_count(Hardware::GpuK80, Some(0))
+        .with_count(Hardware::GpuV100, Some(0));
+    let plan = Planner::new(&spec, &profiles)
+        .with_inventory(cpu_only)
+        .plan(&sample, 0.5)
+        .expect("cpu-only plan");
+    for s in &plan.config.stages {
+        assert_eq!(s.hw, Hardware::Cpu);
+    }
+    // A GPU-only inventory must keep the search off the CPU entirely.
+    let gpu_only = Inventory::unbounded().with_count(Hardware::Cpu, Some(0));
+    let gpu_plan = Planner::new(&spec, &profiles)
+        .with_inventory(gpu_only)
+        .plan(&sample, 0.5)
+        .expect("gpu-only plan");
+    for s in &gpu_plan.config.stages {
+        assert_ne!(s.hw, Hardware::Cpu);
+    }
+}
+
+#[test]
+fn oversubscribed_inventory_is_typed_infeasible_naming_the_tier() {
+    let profiles = paper_profiles();
+    // One V100 for a fleet that needs several devices, and no other
+    // tier to repair onto.
+    let mut fleet = one_tenant_fleet("image-processing", 150.0, 0.3, 11);
+    fleet.inventory = Inventory::bounded(0, 0, 1);
+    let err = FleetPlanner::new(&profiles).plan(&fleet).expect_err("must not fit");
+    match err {
+        FleetError::Infeasible { tier, demand, capacity } => {
+            assert_eq!(tier, Hardware::GpuV100);
+            assert_eq!(capacity, 1);
+            assert!(demand > capacity, "demand {demand} vs capacity {capacity}");
+        }
+        other => panic!("expected Infeasible, got {other}"),
+    }
+}
+
+#[test]
+fn repair_moves_tenants_off_a_capped_tier() {
+    let profiles = paper_profiles();
+    // Plan unbounded first to learn the fleet's natural tier usage.
+    let population = synth_tenants(8, 21, 20.0);
+    let tenants: Vec<Tenant> = population.into_iter().map(|t| t.tenant).collect();
+    let unbounded = FleetPlanner::new(&profiles)
+        .plan(&FleetSpec { tenants: tenants.clone(), inventory: Inventory::unbounded() })
+        .expect("unbounded fleet");
+    let (tier, used) = Hardware::ALL
+        .into_iter()
+        .map(|hw| (hw, unbounded.usage[hw.index()]))
+        .max_by_key(|&(_, used)| used)
+        .expect("three tiers");
+    assert!(used > 1, "fleet should use devices on its busiest tier");
+    // Halve the busiest tier: local repair must re-plan someone and the
+    // constrained fleet must respect the cap.
+    let cap = used / 2;
+    let constrained = FleetPlanner::new(&profiles)
+        .plan(&FleetSpec {
+            tenants,
+            inventory: Inventory::unbounded().with_count(tier, Some(cap)),
+        })
+        .expect("repairable fleet");
+    assert!(constrained.repairs > 0, "cap below usage must force repairs");
+    assert!(
+        constrained.usage[tier.index()] <= cap,
+        "constrained usage {} exceeds cap {cap}",
+        constrained.usage[tier.index()]
+    );
+    assert!(
+        constrained.tenants.iter().any(|t| t.excluded.contains(&tier)),
+        "some tenant must have been moved off {tier}"
+    );
+    // Moving off the preferred tier can only cost more (or equal).
+    assert!(constrained.total_cost_per_hour >= unbounded.total_cost_per_hour - 1e-9);
+}
+
+#[test]
+fn prefix_sharing_saves_and_conserves_cost() {
+    let profiles = paper_profiles();
+    // Two image-processing tenants with identical plans share their
+    // whole 2-stage prefix chain.
+    let mut tenants = Vec::new();
+    for i in 0..2 {
+        let mut fleet = one_tenant_fleet("image-processing", 100.0, 0.3, 13);
+        fleet.tenants[0].name = format!("twin-{i}");
+        tenants.push(fleet.tenants.remove(0));
+    }
+    let plan = FleetPlanner::new(&profiles)
+        .plan(&FleetSpec { tenants, inventory: Inventory::unbounded() })
+        .expect("twin fleet");
+    assert!(!plan.shared.is_empty(), "identical prefixes must merge");
+    for g in &plan.shared {
+        assert_eq!(g.tenants.len(), 2);
+        let per_tenant_max = plan
+            .tenants
+            .iter()
+            .map(|t| t.plan.config.stages[g.depth].replicas)
+            .max()
+            .unwrap();
+        assert!(
+            g.replicas >= per_tenant_max && g.replicas <= g.replicas_unshared,
+            "merged {} outside [{per_tenant_max}, {}]",
+            g.replicas,
+            g.replicas_unshared
+        );
+    }
+    assert!(plan.savings_per_hour >= 0.0);
+    assert!(
+        (plan.unshared_cost_per_hour - plan.savings_per_hour - plan.total_cost_per_hour).abs()
+            < 1e-9
+    );
+    // Routing credit conserves the fleet total exactly.
+    let effective: f64 = plan.tenants.iter().map(|t| t.effective_cost_per_hour).sum();
+    assert!(
+        (effective - plan.total_cost_per_hour).abs() < 1e-6,
+        "effective {effective} vs total {}",
+        plan.total_cost_per_hour
+    );
+    // Identical twins split the merged stages evenly.
+    let d = (plan.tenants[0].effective_cost_per_hour - plan.tenants[1].effective_cost_per_hour)
+        .abs();
+    assert!(d < 1e-9, "twins should pay the same: delta {d}");
+}
+
+#[test]
+fn tenants_on_different_hardware_do_not_merge() {
+    let profiles = paper_profiles();
+    // Same pipeline, very different load: plans can differ in batch or
+    // hardware at some depth; groups only form where (hw, batch) agree,
+    // so every shared group must be internally consistent.
+    let mut fleet_a = one_tenant_fleet("tf-cascade", 40.0, 0.5, 17);
+    let fleet_b = one_tenant_fleet("tf-cascade", 220.0, 0.25, 19);
+    fleet_a.tenants.extend(fleet_b.tenants);
+    let plan = FleetPlanner::new(&profiles)
+        .plan(&FleetSpec { tenants: fleet_a.tenants, inventory: Inventory::unbounded() })
+        .expect("mixed fleet");
+    for g in &plan.shared {
+        for &ti in &g.tenants {
+            let sc = plan.tenants[ti].plan.config.stages[g.depth];
+            assert_eq!(sc.hw, g.hw, "group member hardware mismatch");
+            assert_eq!(sc.batch, g.batch, "group member batch mismatch");
+        }
+    }
+}
+
+#[test]
+fn fleet_plan_is_deterministic() {
+    let profiles = paper_profiles();
+    let make = || {
+        let tenants = synth_tenants(10, 33, 20.0).into_iter().map(|t| t.tenant).collect();
+        FleetPlanner::new(&profiles)
+            .plan(&FleetSpec { tenants, inventory: Inventory::unbounded() })
+            .expect("synth fleet")
+    };
+    let (a, b) = (make(), make());
+    assert_eq!(a.tenants.len(), b.tenants.len());
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.tenant, y.tenant);
+        assert_eq!(x.plan.config, y.plan.config);
+        assert_eq!(
+            x.effective_cost_per_hour.to_bits(),
+            y.effective_cost_per_hour.to_bits()
+        );
+    }
+    assert_eq!(a.total_cost_per_hour.to_bits(), b.total_cost_per_hour.to_bits());
+    assert_eq!(a.savings_per_hour.to_bits(), b.savings_per_hour.to_bits());
+    assert_eq!(a.usage, b.usage);
+    assert_eq!(a.shared.len(), b.shared.len());
+    for (g, h) in a.shared.iter().zip(&b.shared) {
+        assert_eq!(g.prefix, h.prefix);
+        assert_eq!(g.replicas, h.replicas);
+        assert_eq!(g.tenants, h.tenants);
+    }
+}
+
+#[test]
+fn zero_count_tier_is_skipped_by_tiers_iterator() {
+    let inv = Inventory::unbounded().with_count(Hardware::GpuK80, Some(0));
+    let tiers: Vec<Hardware> = inv.tiers().collect();
+    assert_eq!(tiers, vec![Hardware::Cpu, Hardware::GpuV100]);
+    assert!(!inv.has(Hardware::GpuK80));
+    assert!(inv.has(Hardware::Cpu));
+}

@@ -13,15 +13,24 @@
 //! * the recorded artifacts themselves are deterministic: the same seed
 //!   produces byte-identical Chrome traces, time-series CSV rows and
 //!   attribution tables across repeated runs.
+//!
+//! Since the entry-point unification, every `simulate*` free function is
+//! a thin wrapper over the [`SimRun`] builder. The suite therefore also
+//! locks down builder-vs-wrapper bit-identity for all nine wrappers
+//! (open-loop, routed, budgeted, faulted, probed, controlled, streamed),
+//! so neither path can drift from the other.
 
 use inferline::config::pipelines;
 use inferline::planner::Planner;
 use inferline::profiler::analytic::paper_profiles;
-use inferline::simulator::control::{simulate_controlled, simulate_controlled_probed};
+use inferline::simulator::control::{
+    simulate_controlled, simulate_controlled_probed, simulate_controlled_with_faults,
+};
 use inferline::simulator::faults::{FaultNode, FaultSpec};
 use inferline::simulator::probe::{NoopProbe, RecordingProbe};
-use inferline::simulator::{self, SimParams, SimResult};
+use inferline::simulator::{self, RoutingPlan, SimParams, SimResult, SimRun, StreamSummary};
 use inferline::tuner::{Tuner, TunerInputs};
+use inferline::workload::stream::GammaSource;
 use inferline::workload::{scenarios, Trace};
 
 const SLO: f64 = 0.3;
@@ -203,4 +212,209 @@ fn recorded_artifacts_are_bit_reproducible() {
     let blamed = a.attribution.blame_stage().unwrap();
     let share = a.attribution.blame_share(blamed);
     assert!(share > 0.0 && share <= 1.0, "blame share {share} out of range");
+}
+
+/// Assert two stream summaries agree bit-for-bit.
+fn assert_stream_bit_identical(a: &StreamSummary, b: &StreamSummary, ctx: &str) {
+    assert_eq!(a.queries, b.queries, "{ctx}: queries");
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.misses, b.misses, "{ctx}: misses");
+    assert_eq!(a.latency_sum.to_bits(), b.latency_sum.to_bits(), "{ctx}: latency sum");
+    assert_eq!(a.max_latency.to_bits(), b.max_latency.to_bits(), "{ctx}: max latency");
+    assert_eq!(a.horizon.to_bits(), b.horizon.to_bits(), "{ctx}: horizon");
+    assert_eq!(a.cost_dollars.to_bits(), b.cost_dollars.to_bits(), "{ctx}: cost");
+    assert_eq!(a.stage_stats.len(), b.stage_stats.len(), "{ctx}: stage count");
+    for (i, (s1, s2)) in a.stage_stats.iter().zip(&b.stage_stats).enumerate() {
+        assert_eq!(s1.max_queue, s2.max_queue, "{ctx}: stage {i} max_queue");
+        assert_eq!(s1.batches, s2.batches, "{ctx}: stage {i} batches");
+        assert_eq!(s1.queries, s2.queries, "{ctx}: stage {i} queries");
+        assert_eq!(s1.busy_time.to_bits(), s2.busy_time.to_bits(), "{ctx}: stage {i} busy");
+        assert_eq!(s1.mean_batch.to_bits(), s2.mean_batch.to_bits(), "{ctx}: stage {i} batch");
+    }
+}
+
+/// Open-loop wrappers vs the builder, on every pipeline shape: `simulate`,
+/// `simulate_with_routing`, `simulate_budgeted`, `simulate_with_faults`,
+/// `simulate_budgeted_with_faults` and `simulate_probed` must each be
+/// bit-identical to the equivalent [`SimRun`] chain.
+#[test]
+fn sim_run_builder_matches_open_loop_wrappers_bit_identically() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    for spec in pipelines::all() {
+        let live = crowd_trace(41);
+        let config = Planner::new(&spec, &profiles).initialize(&live, SLO).unwrap();
+        let routing = RoutingPlan::build(&spec, &live, params.routing_seed);
+        let storm = FaultSpec {
+            nodes: vec![FaultNode::CrashStorm {
+                stage: None,
+                start: 0.0,
+                end: live.duration(),
+                rate: 0.1,
+            }],
+            max_retries: 1,
+            shed_after: Some(0.5),
+        };
+        let faults = storm.compile(spec.n_stages(), 29);
+
+        let w = simulator::simulate(&spec, &profiles, &config, &live, &params);
+        let b = SimRun::new(&spec, &profiles, &config, &params).run(&live).0;
+        assert_bit_identical(&w, &b, &format!("{}: simulate", spec.name));
+
+        let w = simulator::simulate_with_routing(
+            &spec,
+            &profiles,
+            &config,
+            &live,
+            &params,
+            Some(&routing),
+        );
+        let b = SimRun::new(&spec, &profiles, &config, &params).routing(&routing).run(&live).0;
+        assert_bit_identical(&w, &b, &format!("{}: simulate_with_routing", spec.name));
+
+        let (w, wv) = simulator::simulate_budgeted(
+            &spec,
+            &profiles,
+            &config,
+            &live,
+            SLO,
+            &params,
+            Some(&routing),
+        );
+        let (b, bv) = SimRun::new(&spec, &profiles, &config, &params)
+            .routing(&routing)
+            .budget(SLO)
+            .run(&live);
+        assert_bit_identical(&w, &b, &format!("{}: simulate_budgeted", spec.name));
+        assert_eq!(wv, bv, "{}: budget verdict", spec.name);
+
+        let w = simulator::simulate_with_faults(&spec, &profiles, &config, &live, &params, &faults);
+        let b = SimRun::new(&spec, &profiles, &config, &params).faults(&faults).run(&live).0;
+        assert_bit_identical(&w, &b, &format!("{}: simulate_with_faults", spec.name));
+
+        let (w, wv) = simulator::simulate_budgeted_with_faults(
+            &spec,
+            &profiles,
+            &config,
+            &live,
+            SLO,
+            &params,
+            Some(&routing),
+            &faults,
+        );
+        let (b, bv) = SimRun::new(&spec, &profiles, &config, &params)
+            .routing(&routing)
+            .faults(&faults)
+            .budget(SLO)
+            .run(&live);
+        assert_bit_identical(&w, &b, &format!("{}: simulate_budgeted_with_faults", spec.name));
+        assert_eq!(wv, bv, "{}: faulted budget verdict", spec.name);
+
+        let mut wp = RecordingProbe::new(SLO);
+        let w = simulator::simulate_probed(
+            &spec,
+            &profiles,
+            &config,
+            &live,
+            &params,
+            Some(&faults),
+            &mut wp,
+        );
+        let mut bp = RecordingProbe::new(SLO);
+        let b = SimRun::new(&spec, &profiles, &config, &params)
+            .faults(&faults)
+            .probe(&mut bp)
+            .run(&live)
+            .0;
+        assert_bit_identical(&w, &b, &format!("{}: simulate_probed", spec.name));
+    }
+}
+
+/// Controlled and streamed wrappers vs the builder: `simulate_controlled`,
+/// `simulate_controlled_with_faults`, `simulate_controlled_probed` and
+/// `simulate_streamed` must each match the equivalent [`SimRun`] chain,
+/// with a fresh (identically seeded) Tuner or arrival source per run.
+#[test]
+fn sim_run_builder_matches_controlled_and_streamed_wrappers() {
+    let profiles = paper_profiles();
+    let params = SimParams::default();
+    let spec = pipelines::social_media();
+    let live = crowd_trace(43);
+    let sample = crowd_trace(44);
+    let plan = Planner::new(&spec, &profiles).plan(&sample, SLO).unwrap();
+    let st = simulator::service_time(&spec, &profiles, &plan.config);
+    let mk_tuner =
+        || Tuner::new(TunerInputs::from_plan(&spec, &profiles, &plan.config, &sample, st));
+    let storm = FaultSpec {
+        nodes: vec![FaultNode::CrashStorm {
+            stage: None,
+            start: 0.0,
+            end: live.duration(),
+            rate: 0.1,
+        }],
+        max_retries: 1,
+        shed_after: Some(0.5),
+    };
+    let faults = storm.compile(spec.n_stages(), 37);
+
+    let mut t = mk_tuner();
+    let w = simulate_controlled(&spec, &profiles, &plan.config, &live, &params, &mut t);
+    let mut t = mk_tuner();
+    let b = SimRun::new(&spec, &profiles, &plan.config, &params).controller(&mut t).run(&live).0;
+    assert_bit_identical(&w, &b, "simulate_controlled");
+
+    let mut t = mk_tuner();
+    let w = simulate_controlled_with_faults(
+        &spec,
+        &profiles,
+        &plan.config,
+        &live,
+        &params,
+        &mut t,
+        &faults,
+    );
+    let mut t = mk_tuner();
+    let b = SimRun::new(&spec, &profiles, &plan.config, &params)
+        .controller(&mut t)
+        .faults(&faults)
+        .run(&live)
+        .0;
+    assert_bit_identical(&w, &b, "simulate_controlled_with_faults");
+
+    let mut t = mk_tuner();
+    let mut wp = RecordingProbe::new(SLO);
+    let w = simulate_controlled_probed(
+        &spec,
+        &profiles,
+        &plan.config,
+        &live,
+        &params,
+        &mut t,
+        Some(&faults),
+        &mut wp,
+    );
+    let mut t = mk_tuner();
+    let mut bp = RecordingProbe::new(SLO);
+    let b = SimRun::new(&spec, &profiles, &plan.config, &params)
+        .controller(&mut t)
+        .faults(&faults)
+        .probe(&mut bp)
+        .run(&live)
+        .0;
+    assert_bit_identical(&w, &b, "simulate_controlled_probed");
+
+    let mut source = GammaSource::new(120.0, 1.0, 40.0, 9);
+    let w = simulator::simulate_streamed(
+        &spec,
+        &profiles,
+        &plan.config,
+        &mut source,
+        &params,
+        SLO,
+        512,
+    );
+    let mut source = GammaSource::new(120.0, 1.0, 40.0, 9);
+    let b = SimRun::new(&spec, &profiles, &plan.config, &params)
+        .run_streamed(&mut source, SLO, 512);
+    assert_stream_bit_identical(&w, &b, "simulate_streamed");
 }
